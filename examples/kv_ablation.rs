@@ -1,0 +1,55 @@
+//! KV-compaction ablation (§3.9, Eqs 29–33): sweep the compaction
+//! strategies at a fixed design point and report footprint, memory
+//! ceiling and realized throughput — the mechanism behind Eq 33's
+//! "relaxes the memory ceiling".
+//!
+//! Pure analytical pipeline (no PJRT needed).
+//! Run: cargo run --release --example kv_ablation
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{Action, Env};
+use silicon_rl::kv::{self, KvStrategy};
+
+fn main() {
+    let strategies: [(&str, KvStrategy); 6] = [
+        ("FP16 full", KvStrategy::Full),
+        ("INT8 quant", KvStrategy::Quantized { bits: 8 }),
+        ("INT4 quant", KvStrategy::Quantized { bits: 4 }),
+        ("window 1024", KvStrategy::Window { tokens: 1024 }),
+        ("INT8 + win 1024", KvStrategy::QuantizedWindow { bits: 8, tokens: 1024 }),
+        ("paged 64KB", KvStrategy::Paged { page_kb: 64 }),
+    ];
+
+    let kvc = silicon_rl::ir::llama::build().kv.unwrap();
+    println!(
+        "Llama 3.1 8B @ 3nm, L=2048 — KV base: {} KB/token, {} MB total\n",
+        kv::bytes_per_token(&kvc) / 1024.0,
+        kv::total_bytes(&kvc, 2048, KvStrategy::Full) / (1024.0 * 1024.0),
+    );
+    println!(
+        "{:<16} {:>7} {:>10} {:>14} {:>12} {:>10}",
+        "strategy", "kappa", "kv_MB", "mem_ceiling", "tok/s", "binding"
+    );
+    for (name, s) in strategies {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Group;
+        cfg.kv_strategy = s;
+        let mut env = Env::new(&cfg, 3);
+        let mut a = Action::neutral();
+        a.cont[22] = 0.8; // realistic streaming
+        let out = env.eval_action(&a);
+        println!(
+            "{:<16} {:>7.1} {:>10.0} {:>14.0} {:>12.0} {:>10?}",
+            name,
+            kv::compaction_factor(s, 2048),
+            kv::total_bytes(&kvc, 2048, s) / (1024.0 * 1024.0),
+            out.ppa.ceilings.memory,
+            out.ppa.tokens_per_s,
+            out.ppa.ceilings.binding(),
+        );
+    }
+    println!(
+        "\npaper example check (Eq 32): INT8 + 1024-window at L=2048 -> kappa = {} (paper: 4x, 256->64 MB)",
+        kv::compaction_factor(KvStrategy::QuantizedWindow { bits: 8, tokens: 1024 }, 2048)
+    );
+}

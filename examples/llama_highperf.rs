@@ -1,0 +1,94 @@
+//! End-to-end driver (DESIGN.md deliverable b / EXPERIMENTS.md §E2E):
+//! the full three-layer system on the paper's headline workload.
+//!
+//! Runs Algorithm 1 — SAC actor/critics/world-model executing as
+//! AOT-compiled HLO through the PJRT CPU runtime, the analytical PPA
+//! evaluation in Rust — for Llama 3.1 8B FP16 in high-performance mode
+//! across process nodes, then regenerates the paper's Tables 10/11/12/17
+//! /18 and the Fig 3 convergence CSV from the run.
+//!
+//! Usage: cargo run --release --example llama_highperf [-- key=value ...]
+//!   defaults: nodes=3,14,28 episodes=600 warmup=256 (a laptop-scale
+//!   version of the paper's 7-node x 4,613-episode run; pass
+//!   nodes=3,5,7,10,14,22,28 episodes=4613 for the full sweep)
+
+use std::path::Path;
+
+use silicon_rl::artifacts_out;
+use silicon_rl::config::RunConfig;
+use silicon_rl::report::{self, NodeSummary};
+use silicon_rl::rl::{self, SacAgent};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.nodes_nm = vec![3, 14, 28];
+    cfg.rl.episodes_per_node = 600;
+    cfg.rl.warmup_steps = 256;
+    cfg.out_dir = "out/llama_highperf".into();
+    for a in std::env::args().skip(1) {
+        if let Some((k, v)) = a.split_once('=') {
+            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+        }
+    }
+
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "PJRT platform: {} | {} entrypoints | mode: {}",
+        runtime.platform(),
+        runtime.manifest.entrypoints.len(),
+        cfg.mode.name
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+
+    let out_dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+    let mut results = Vec::new();
+    for &nm in &cfg.nodes_nm {
+        let t0 = std::time::Instant::now();
+        let r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        let dt = t0.elapsed().as_secs_f64();
+        if let Some(b) = &r.best {
+            let o = &b.outcome;
+            println!(
+                "{nm:>2}nm: {:>8.0} tok/s  {:>7.1} W  {:>6.0} mm2  mesh {:>2}x{:<2}  score {:.3}  pareto {:>3}  [{:.0} ms/episode]",
+                o.ppa.tokens_per_s,
+                o.ppa.power.total() / 1000.0,
+                o.ppa.area.total(),
+                o.decoded.mesh.width,
+                o.decoded.mesh.height,
+                o.reward.score,
+                r.pareto.len(),
+                dt * 1000.0 / r.total_episodes as f64,
+            );
+            artifacts_out::write_node_artifacts(out_dir, nm, o)?;
+        }
+        report::convergence_csv(&r.episodes)
+            .write_csv(&out_dir.join(format!("fig3_convergence_{nm}nm.csv")))?;
+        results.push(r);
+    }
+
+    let rows: Vec<NodeSummary> =
+        results.iter().filter_map(NodeSummary::from_result).collect();
+    for t in [
+        report::nodes_table(&rows),
+        report::power_breakdown(&rows),
+        report::efficiency_table(&rows),
+        report::run_stats(&results, cfg.mode.name),
+        report::industry_comparison(rows.first()),
+    ] {
+        println!("\n{}", t.to_text());
+    }
+    if rows.len() >= 2 {
+        let best = rows.iter().min_by(|a, b| a.ppa_score.total_cmp(&b.ppa_score)).unwrap();
+        let worst = rows.last().unwrap();
+        println!("{}", report::cross_node_compare(best, worst).to_text());
+    }
+    if rows.len() >= 3 {
+        println!("{}", report::scaling_analysis(&rows).to_text());
+    }
+    println!("artifacts + CSVs in {}", out_dir.display());
+    Ok(())
+}

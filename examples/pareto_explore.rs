@@ -1,0 +1,67 @@
+//! Pareto-frontier exploration (§3.10 "Pareto-based final selection" and
+//! §5.5's designer-tool future work): run a search at one node, dump the
+//! non-dominated frontier, and show how different PPA weight profiles
+//! select different operating points from the SAME frontier.
+//!
+//! Uses the random-search proposal mechanism so it runs without PJRT
+//! artifacts (the frontier logic is identical under SAC).
+//!
+//! Usage: cargo run --release --example pareto_explore [-- key=value ...]
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::ppa::PpaWeights;
+use silicon_rl::rl::baselines;
+use silicon_rl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::default();
+    cfg.rl.episodes_per_node = 250;
+    for a in std::env::args().skip(1) {
+        if let Some((k, v)) = a.split_once('=') {
+            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+        }
+    }
+    let nm = *cfg.nodes_nm.first().unwrap_or(&3);
+    let mut rng = Rng::new(cfg.seed);
+
+    println!("exploring {nm}nm with {} episodes...", cfg.rl.episodes_per_node);
+    let result = baselines::random_search(&cfg, nm, &mut rng);
+    println!(
+        "{} feasible / {} episodes -> {} non-dominated frontier points\n",
+        result.feasible_count,
+        result.total_episodes,
+        result.pareto.len()
+    );
+
+    println!(
+        "{:>10} {:>12} {:>10} {:>10} {:>8}",
+        "perf_gops", "power_mw", "area_mm2", "tok/s", "episode"
+    );
+    let mut pts: Vec<_> = result.pareto.frontier().to_vec();
+    pts.sort_by(|a, b| a.power_mw.total_cmp(&b.power_mw));
+    for p in &pts {
+        println!(
+            "{:>10.0} {:>12.0} {:>10.0} {:>10.0} {:>8}",
+            p.perf_gops, p.power_mw, p.area_mm2, p.tokens_per_s, p.episode
+        );
+    }
+
+    println!("\nscalarized selection under different weight profiles:");
+    for (name, w) in [
+        ("high-performance (0.4/0.4/0.2)", PpaWeights::HIGH_PERF),
+        ("low-power        (0.2/0.6/0.2)", PpaWeights::LOW_POWER),
+        ("area-priority    (0.2/0.2/0.6)", PpaWeights { perf: 0.2, power: 0.2, area: 0.6 }),
+        ("throughput-max   (0.9/0.05/0.05)", PpaWeights { perf: 0.9, power: 0.05, area: 0.05 }),
+    ] {
+        if let Some(sel) = result.pareto.select(&w) {
+            println!(
+                "  {name}: {:>8.0} GOps  {:>8.1} W  {:>7.0} mm2  (episode {})",
+                sel.perf_gops,
+                sel.power_mw / 1000.0,
+                sel.area_mm2,
+                sel.episode
+            );
+        }
+    }
+    Ok(())
+}

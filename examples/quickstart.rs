@@ -1,0 +1,58 @@
+//! Quickstart: evaluate a handful of candidate ASIC configurations for
+//! Llama 3.1 8B at 3nm through the full analytical pipeline (partition →
+//! heterogeneous derivation → PPA → reward) — no RL, no PJRT artifacts
+//! needed. Run: `cargo run --release --example quickstart`
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{Action, Env};
+use silicon_rl::report;
+
+fn main() {
+    let mut cfg = RunConfig::default();
+    cfg.granularity = Granularity::Group;
+
+    // Table 9: workload statistics straight from the graph generator
+    let graph = cfg.workload.build();
+    println!("{}", report::model_stats(&graph).to_text());
+
+    let mut env = Env::new(&cfg, 3);
+    println!(
+        "optimizing for {}nm (budget: {:.1} W, {:.0} mm2)\n",
+        env.node.nm,
+        env.budget.power_budget_mw / 1000.0,
+        env.budget.area_budget_mm2
+    );
+
+    // candidate sweep: VLEN x partitioning aggressiveness
+    println!(
+        "{:>6} {:>10} {:>10} {:>9} {:>9} {:>8} {:>9}",
+        "vlen", "mesh", "tok/s", "power_W", "area_mm2", "score", "feasible"
+    );
+    for (vlen_u, rho_u) in [(-1.0, 0.0), (-0.5, 0.0), (0.0, 0.0), (0.5, 0.5), (1.0, 1.0)] {
+        let mut a = Action::neutral();
+        a.cont[2] = vlen_u; // VLEN
+        a.cont[19] = rho_u; // matmul partition delta
+        a.cont[22] = 0.8; // input streaming
+        let out = env.eval_action(&a);
+        println!(
+            "{:>6} {:>10} {:>10.0} {:>9.1} {:>9.0} {:>8.3} {:>9}",
+            out.decoded.avg.vlen_bits,
+            format!("{}x{}", out.decoded.mesh.width, out.decoded.mesh.height),
+            out.ppa.tokens_per_s,
+            out.ppa.power.total() / 1000.0,
+            out.ppa.area.total(),
+            out.reward.score,
+            out.reward.feasible,
+        );
+    }
+
+    println!("\nceilings of the last design (Eq 24 binding analysis):");
+    let out = env.eval_action(&Action::neutral());
+    println!(
+        "  compute {:>12.0} tok/s\n  memory  {:>12.0} tok/s\n  noc     {:>12.0} tok/s  -> binding: {:?}",
+        out.ppa.ceilings.compute,
+        out.ppa.ceilings.memory,
+        out.ppa.ceilings.noc,
+        out.ppa.ceilings.binding()
+    );
+}

@@ -1,0 +1,75 @@
+//! SmolVLM low-power validation (§4.12, Table 19): the same RL
+//! formulation, low-power profile (weights 0.2/0.6/0.2, 10 MHz clock,
+//! INT4+windowed KV), across all 7 process nodes.
+//!
+//! Usage: cargo run --release --example smolvlm_lowpower [-- key=value ...]
+//!   defaults: all 7 nodes, 400 episodes/node.
+
+use std::path::Path;
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::report::{self, NodeSummary};
+use silicon_rl::rl::{self, SacAgent};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = RunConfig::smolvlm_low_power();
+    cfg.rl.episodes_per_node = 400;
+    cfg.rl.warmup_steps = 256;
+    cfg.out_dir = "out/smolvlm_lowpower".into();
+    for a in std::env::args().skip(1) {
+        if let Some((k, v)) = a.split_once('=') {
+            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+        }
+    }
+
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+
+    let out_dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+    println!("SmolVLM low-power sweep ({} episodes/node)\n", cfg.rl.episodes_per_node);
+    println!(
+        "{:>5} {:>7} {:>6} {:>9} {:>9} {:>7} {:>7} {:>7}",
+        "node", "mesh", "MHz", "power_mW", "area_mm2", "tok/s", "score", "leak%"
+    );
+    let mut results = Vec::new();
+    for &nm in &cfg.nodes_nm {
+        let r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        if let Some(b) = &r.best {
+            let o = &b.outcome;
+            println!(
+                "{:>4}nm {:>7} {:>6.0} {:>9.2} {:>9.1} {:>7.1} {:>7.3} {:>6.0}%",
+                nm,
+                format!("{}x{}", o.decoded.mesh.width, o.decoded.mesh.height),
+                o.decoded.avg.clock_mhz,
+                o.ppa.power.total(),
+                o.ppa.area.total(),
+                o.ppa.tokens_per_s,
+                o.reward.score,
+                100.0 * o.ppa.power.leakage / o.ppa.power.total(),
+            );
+            silicon_rl::artifacts_out::write_node_artifacts(out_dir, nm, o)?;
+        } else {
+            println!("{nm:>4}nm: no feasible configuration");
+        }
+        results.push(r);
+    }
+
+    let rows: Vec<NodeSummary> =
+        results.iter().filter_map(NodeSummary::from_result).collect();
+    let t19 = report::nodes_table(&rows);
+    t19.write_csv(&out_dir.join("table19_smolvlm.csv"))?;
+    println!("\n{}", t19.to_text());
+
+    // paper's headline claims for this run
+    let under_13 = rows.iter().filter(|r| r.power.total() < 13.0).count();
+    println!(
+        "{} / {} nodes under 13 mW (paper: all 7 at 10 MHz, leakage-dominated)",
+        under_13,
+        rows.len()
+    );
+    Ok(())
+}

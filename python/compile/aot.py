@@ -1,0 +1,217 @@
+# AOT lowering: every L2 entry point -> artifacts/*.hlo.txt + manifest.json.
+#
+# Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+# >= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+# (the version the published `xla` 0.1.6 rust crate links) rejects
+# (`proto.id() <= INT_MAX`). The text parser reassigns ids and round-trips
+# cleanly. Lowered with return_tuple=True; the rust side unwraps the tuple.
+#
+# The manifest makes the rust runtime fully table-driven:
+#   entrypoints.<name>.inputs/outputs — flattened (name, shape, dtype) in
+#     the exact positional order of the lowered computation;
+#   stores — every named persistent array (params, Adam moments, targets,
+#     log_alpha, step counters) with shape + init recipe, so parameter
+#     initialization happens in rust under rust-owned seeds;
+#   hyper — the Table-6 hyperparameters baked into the HLO.
+#
+# Naming convention consumed by rust/src/runtime:
+#   input "state/<k>"  -> parameter store (prefix stripped)
+#   input "batch/<k>"  -> per-call tensor
+#   anything else      -> per-call tensor (pure-forward entry points also
+#     list bare store names like "actor/W1", looked up directly)
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+
+
+def _zeros(shapes):
+    return {k: jnp.zeros(v, F32) for k, v in shapes.items()}
+
+
+def _path_name(path):
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _flat_specs(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        assert leaf.dtype == jnp.float32, f"{_path_name(path)}: {leaf.dtype}"
+        out.append(
+            {"name": _path_name(path), "shape": [int(d) for d in leaf.shape],
+             "dtype": "f32"}
+        )
+    return out
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Example (zero) pytrees describing each entry point's signature
+def sac_state_example():
+    actor = _zeros(M.actor_shapes())
+    c1, c2 = _zeros(M.critic_shapes()), _zeros(M.critic_shapes())
+    z = lambda tree: jax.tree_util.tree_map(jnp.zeros_like, tree)
+    scalar = jnp.zeros((), F32)
+    return {
+        "actor": actor, "actor_m": z(actor), "actor_v": z(actor),
+        "c1": c1, "c1_m": z(c1), "c1_v": z(c1),
+        "c2": c2, "c2_m": z(c2), "c2_v": z(c2),
+        "t1": z(c1), "t2": z(c2),
+        "log_alpha": scalar, "la_m": scalar, "la_v": scalar,
+        "step": scalar,
+    }
+
+
+def sac_batch_example(B):
+    h = M.HYPER
+    return {
+        "s": jnp.zeros((B, h["state_dim"]), F32),
+        "a": jnp.zeros((B, h["act_dim"]), F32),
+        "ad": jnp.zeros((B, h["disc_dim"]), F32),
+        "r": jnp.zeros((B,), F32),
+        "s2": jnp.zeros((B, h["state_dim"]), F32),
+        "done": jnp.zeros((B,), F32),
+        "w": jnp.zeros((B,), F32),
+        "eps_cur": jnp.zeros((B, h["act_dim"]), F32),
+        "eps_next": jnp.zeros((B, h["act_dim"]), F32),
+    }
+
+
+def wm_state_example():
+    wm = _zeros(M.wm_shapes())
+    z = jax.tree_util.tree_map(jnp.zeros_like, wm)
+    return {"wm": wm, "wm_m": z, "wm_v": jax.tree_util.tree_map(jnp.zeros_like, wm),
+            "step": jnp.zeros((), F32)}
+
+
+def sur_state_example():
+    sur = _zeros(M.sur_shapes())
+    z = lambda: jax.tree_util.tree_map(jnp.zeros_like, sur)
+    return {"sur": sur, "sur_m": z(), "sur_v": z(), "step": jnp.zeros((), F32)}
+
+
+def entrypoints():
+    h = M.HYPER
+    B, K = h["batch"], h["mpc_batch"]
+    sd, ad = h["state_dim"], h["act_dim"]
+    eps = []
+
+    def fwd_batch(b, with_a, extra=None):
+        d = {"s": jnp.zeros((b, sd), F32)}
+        if with_a:
+            d["a"] = jnp.zeros((b, ad), F32)
+        if extra:
+            d.update(extra)
+        return d
+
+    actor = _zeros(M.actor_shapes())
+    wm = {"wm": _zeros(M.wm_shapes())}
+    sur = {"sur": _zeros(M.sur_shapes())}
+    for b in (1, K, B):
+        eps.append((f"actor_fwd_b{b}", M.actor_fwd,
+                    {"actor": actor, **fwd_batch(b, False)}))
+    for b in (K, B):
+        eps.append((f"wm_fwd_b{b}", M.wm_fwd, {**wm, **fwd_batch(b, True)}))
+    eps.append((f"sur_fwd_b{K}", M.sur_fwd, {**sur, **fwd_batch(K, True)}))
+    eps.append(("sac_update", M.sac_update,
+                {"state": sac_state_example(), "batch": sac_batch_example(B)}))
+    eps.append(("wm_update", M.wm_update,
+                {"state": wm_state_example(),
+                 "batch": {"s": jnp.zeros((B, sd), F32),
+                           "a": jnp.zeros((B, ad), F32),
+                           "s2": jnp.zeros((B, sd), F32)}}))
+    eps.append(("sur_update", M.sur_update,
+                {"state": sur_state_example(),
+                 "batch": {"s": jnp.zeros((B, sd), F32),
+                           "a": jnp.zeros((B, ad), F32),
+                           "ppa": jnp.zeros((B, 3), F32)}}))
+    return eps
+
+
+# ---------------------------------------------------------------------------
+# Store init recipes (consumed by rust/src/nn/store.rs)
+def store_inits():
+    """name -> {shape, init} for every persistent array."""
+    inits = {}
+
+    def add_net(prefix, shapes, with_adam=True):
+        for k, shp in shapes.items():
+            init = "he" if k.startswith("W") else "zeros"
+            inits[f"{prefix}/{k}"] = {"shape": list(shp), "init": init}
+            if with_adam:
+                inits[f"{prefix}_m/{k}"] = {"shape": list(shp), "init": "zeros"}
+                inits[f"{prefix}_v/{k}"] = {"shape": list(shp), "init": "zeros"}
+
+    add_net("actor", M.actor_shapes())
+    add_net("c1", M.critic_shapes())
+    add_net("c2", M.critic_shapes())
+    for tgt, src in (("t1", "c1"), ("t2", "c2")):
+        for k, shp in M.critic_shapes().items():
+            inits[f"{tgt}/{k}"] = {"shape": list(shp), "init": f"copy:{src}/{k}"}
+    # log alpha starts at ln(0.2): initial entropy coefficient 0.2 (Table 6)
+    inits["log_alpha"] = {"shape": [], "init": "const:-1.6094379"}
+    inits["la_m"] = {"shape": [], "init": "zeros"}
+    inits["la_v"] = {"shape": [], "init": "zeros"}
+    inits["step"] = {"shape": [], "init": "zeros"}
+    add_net("wm", M.wm_shapes())
+    add_net("sur", M.sur_shapes())
+    return inits
+
+
+def main():
+    ap = argparse.ArgumentParser(description="AOT-lower L2 models to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single entrypoint")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"hyper": M.HYPER, "stores": store_inits(), "entrypoints": {}}
+    for name, fn, example in entrypoints():
+        if args.only and name != args.only:
+            continue
+        out_shapes = jax.eval_shape(fn, example)
+        lowered = jax.jit(fn).lower(example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["entrypoints"][name] = {
+            "file": fname,
+            "inputs": _flat_specs(example),
+            "outputs": _flat_specs(out_shapes),
+        }
+        print(f"lowered {name}: {len(text)} chars, "
+              f"{len(manifest['entrypoints'][name]['inputs'])} inputs, "
+              f"{len(manifest['entrypoints'][name]['outputs'])} outputs")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['entrypoints'])} entrypoints")
+
+
+if __name__ == "__main__":
+    main()

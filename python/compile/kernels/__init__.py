@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spot (fused linear+GELU).
+from .fused_mlp import linear  # noqa: F401
+from .ref import gelu_ref, linear_ref  # noqa: F401

@@ -1,0 +1,128 @@
+# L1 — Pallas fused linear(+GELU) kernel.
+#
+# This is the compute hot-spot of the paper's RL stack: every dense layer of
+# the SAC actor, twin critics, world model and PPA surrogate goes through
+# `linear()` below, so the B=256 `sac_update` step is ~30 instances of this
+# kernel (forward *and* backward, via the custom VJP).
+#
+# TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+# into (bm × bn) blocks; each grid cell keeps an (bm × K) activation panel
+# and a (K × bn) weight panel resident in VMEM and accumulates in f32 on the
+# MXU, fusing the bias add and tanh-GELU epilogue so the pre-activation
+# never round-trips to HBM. Block dims are multiples of 8 (sublane) and the
+# lane dim targets 128. interpret=True is mandatory here — the CPU PJRT
+# plugin cannot execute Mosaic custom-calls — so VMEM/MXU behaviour is
+# estimated, not measured (EXPERIMENTS.md §Perf).
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import gelu_grad_ref
+
+_GELU_C = 0.7978845608028654
+
+# VMEM budget (bytes) a single grid cell may use for x-panel + w-panel +
+# accumulator. Real TPU VMEM is ~16 MiB; stay well under half to leave room
+# for double-buffering the next panels.
+_VMEM_BUDGET = 6 * 1024 * 1024
+
+
+def _round_up(v, m):
+    return ((v + m - 1) // m) * m
+
+
+def _pick_blocks(m, n, k):
+    """Choose (bm, bn) output-tile dims under the VMEM budget.
+
+    bm is a multiple of 8 (sublanes), bn a multiple of 128 (lanes) when the
+    problem is large enough; tiny dims are padded up instead of tiled.
+
+    Perf iteration (EXPERIMENTS.md §Perf L1): caps raised 128 -> 256.
+    The networks' largest instances (256x256x256) fit a single grid cell
+    well inside the VMEM budget; fewer grid cells cut per-cell dispatch
+    overhead in the interpret-lowered HLO and map to fewer, fuller MXU
+    passes on real TPU.
+    """
+    bm = min(256, _round_up(m, 8))
+    bn = min(256, _round_up(n, 128))
+    # shrink bm if the x panel + w panel + acc would blow the budget
+    while bm > 8 and 4 * (bm * k + k * bn + bm * bn) > _VMEM_BUDGET:
+        bm //= 2
+    return bm, bn
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """One (bm × bn) output tile: f32 MXU accumulate + fused epilogue."""
+    acc = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    acc = acc + b_ref[...].astype(jnp.float32)
+    if act == "gelu":
+        acc = 0.5 * acc * (1.0 + jnp.tanh(_GELU_C * (acc + 0.044715 * acc ** 3)))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _matmul_bias(x, w, b, act):
+    """Pallas-tiled y = act(x @ w + b); pads ragged dims, crops the result."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bn = _pick_blocks(m, n, k)
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n))) if np_ != n else w
+    bp = (jnp.pad(b, (0, np_ - n)) if np_ != n else b).reshape(1, np_)
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear(x, w, b, act="none"):
+    """act(x @ w + b) through the Pallas kernel, differentiable.
+
+    The custom VJP keeps the backward matmuls (dx = g·wᵀ, dw = xᵀ·g) on the
+    same kernel, so the whole SAC update — forward and backward — runs
+    through L1.
+    """
+    return _matmul_bias(x, w, b, act)
+
+
+def _linear_fwd(x, w, b, act):
+    pre = _matmul_bias(x, w, b, "none")
+    if act == "gelu":
+        out = 0.5 * pre * (1.0 + jnp.tanh(_GELU_C * (pre + 0.044715 * pre ** 3)))
+    else:
+        out = pre
+    return out, (x, w, pre)
+
+
+def _zeros_bias(n, dtype):
+    return jnp.zeros((n,), dtype)
+
+
+def _linear_bwd(act, res, g):
+    x, w, pre = res
+    if act == "gelu":
+        g = g * gelu_grad_ref(pre)
+    dx = _matmul_bias(g, w.T, _zeros_bias(w.shape[0], g.dtype), "none")
+    dw = _matmul_bias(x.T, g, _zeros_bias(g.shape[1], g.dtype), "none")
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)

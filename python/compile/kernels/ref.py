@@ -1,0 +1,35 @@
+# Pure-jnp correctness oracle for the Pallas fused-linear kernel.
+#
+# Every network in model.py routes its dense layers through
+# kernels.fused_mlp.linear; this module is the independent reference the
+# pytest suite compares against (allclose over a hypothesis shape sweep).
+import jax.numpy as jnp
+
+# tanh-approximate GELU constant: sqrt(2/pi)
+_GELU_C = 0.7978845608028654
+
+
+def gelu_ref(x):
+    """tanh-approximate GELU, matching the kernel's epilogue exactly."""
+    x32 = x.astype(jnp.float32)
+    y = 0.5 * x32 * (1.0 + jnp.tanh(_GELU_C * (x32 + 0.044715 * x32 ** 3)))
+    return y.astype(x.dtype)
+
+
+def gelu_grad_ref(x):
+    """d/dx of tanh-approximate GELU (used by the custom VJP)."""
+    x32 = x.astype(jnp.float32)
+    t = jnp.tanh(_GELU_C * (x32 + 0.044715 * x32 ** 3))
+    dt = (1.0 - t ** 2) * _GELU_C * (1.0 + 3 * 0.044715 * x32 ** 2)
+    return (0.5 * (1.0 + t) + 0.5 * x32 * dt).astype(x.dtype)
+
+
+def linear_ref(x, w, b, act="none"):
+    """Reference y = act(x @ w + b) with f32 accumulation."""
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    y = y + b.astype(jnp.float32)
+    if act == "gelu":
+        y = 0.5 * y * (1.0 + jnp.tanh(_GELU_C * (y + 0.044715 * y ** 3)))
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y.astype(x.dtype)

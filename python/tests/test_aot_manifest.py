@@ -1,0 +1,88 @@
+# AOT manifest contract: the rust runtime is table-driven off
+# artifacts/manifest.json; these tests pin the contract.
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_entrypoint_inventory():
+    m = _manifest()
+    expected = {
+        "actor_fwd_b1", "actor_fwd_b64", "actor_fwd_b256",
+        "wm_fwd_b64", "wm_fwd_b256", "sur_fwd_b64",
+        "sac_update", "wm_update", "sur_update",
+    }
+    assert set(m["entrypoints"]) == expected
+    for name, ep in m["entrypoints"].items():
+        assert os.path.exists(os.path.join(ART, ep["file"])), name
+        assert ep["inputs"] and ep["outputs"], name
+
+
+def test_sac_update_io_names_round_trip():
+    m = _manifest()
+    ep = m["entrypoints"]["sac_update"]
+    in_state = {i["name"] for i in ep["inputs"] if i["name"].startswith("state/")}
+    out_state = {o["name"] for o in ep["outputs"] if o["name"].startswith("state/")}
+    # every persistent input is produced as an output (store write-back)
+    assert in_state == out_state
+    batch = {i["name"] for i in ep["inputs"] if i["name"].startswith("batch/")}
+    assert batch == {
+        "batch/s", "batch/a", "batch/ad", "batch/r", "batch/s2", "batch/done",
+        "batch/w", "batch/eps_cur", "batch/eps_next",
+    }
+    metrics = {o["name"] for o in ep["outputs"] if o["name"].startswith("metrics/")}
+    assert "metrics/td_abs" in metrics
+
+
+def test_store_inits_cover_all_state_inputs():
+    m = _manifest()
+    stores = m["stores"]
+    for epn in ("sac_update", "wm_update", "sur_update"):
+        for i in m["entrypoints"][epn]["inputs"]:
+            if i["name"].startswith("state/"):
+                key = i["name"][len("state/"):]
+                assert key in stores, f"{epn}: {key} missing from stores"
+                assert stores[key]["shape"] == i["shape"]
+    # copy-inits reference existing keys
+    for k, v in stores.items():
+        if v["init"].startswith("copy:"):
+            assert v["init"][5:] in stores, k
+
+
+def test_actor_fwd_shapes():
+    m = _manifest()
+    ep = m["entrypoints"]["actor_fwd_b1"]
+    outs = {o["name"]: o["shape"] for o in ep["outputs"]}
+    assert outs["mu"] == [1, 30]
+    assert outs["log_std"] == [1, 30]
+    assert outs["disc_logits"] == [1, 20]
+    assert outs["gates"] == [1, 4]
+
+
+def test_manifest_hyper_matches_module():
+    m = _manifest()
+    for k, v in m["hyper"].items():
+        got = M.HYPER[k]
+        if isinstance(got, tuple):
+            got = list(got)
+        assert got == v, k
+
+
+def test_store_inits_have_valid_recipes():
+    for k, v in aot.store_inits().items():
+        assert v["init"] == "zeros" or v["init"] == "he" \
+            or v["init"].startswith("copy:") or v["init"].startswith("const:"), k

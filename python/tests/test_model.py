@@ -1,0 +1,198 @@
+# L2 correctness: actor/critic/world-model/surrogate semantics and the
+# full SAC/WM/surrogate update steps (run in-process through the same
+# pallas-backed layers that get AOT-lowered).
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+H = M.HYPER
+
+
+def _init_net(shapes, seed):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, shp in shapes.items():
+        if k.startswith("W"):
+            fan_in = shp[0]
+            out[k] = jnp.asarray(
+                rng.standard_normal(shp) * np.sqrt(2.0 / fan_in), jnp.float32
+            )
+        else:
+            out[k] = jnp.zeros(shp, jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="module")
+def actor():
+    return _init_net(M.actor_shapes(), 0)
+
+
+@pytest.fixture(scope="module")
+def sac_state():
+    z = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)
+    actor = _init_net(M.actor_shapes(), 1)
+    c1, c2 = _init_net(M.critic_shapes(), 2), _init_net(M.critic_shapes(), 3)
+    scalar = jnp.zeros((), jnp.float32)
+    return {
+        "actor": actor, "actor_m": z(actor), "actor_v": z(actor),
+        "c1": c1, "c1_m": z(c1), "c1_v": z(c1),
+        "c2": c2, "c2_m": z(c2), "c2_v": z(c2),
+        "t1": jax.tree_util.tree_map(jnp.array, c1),
+        "t2": jax.tree_util.tree_map(jnp.array, c2),
+        "log_alpha": jnp.asarray(np.log(0.2), jnp.float32),
+        "la_m": scalar, "la_v": scalar, "step": scalar,
+    }
+
+
+def _batch(B, seed=0):
+    rng = np.random.default_rng(seed)
+    r = lambda *shp: jnp.asarray(rng.standard_normal(shp), jnp.float32)
+    ad = np.zeros((B, 4, 5), np.float32)
+    ad[np.arange(B)[:, None], np.arange(4)[None, :], rng.integers(0, 5, (B, 4))] = 1
+    return {
+        "s": r(B, H["state_dim"]),
+        "a": jnp.tanh(r(B, H["act_dim"])),
+        "ad": jnp.asarray(ad.reshape(B, 20)),
+        "r": r(B),
+        "s2": r(B, H["state_dim"]),
+        "done": jnp.zeros((B,), jnp.float32),
+        "w": jnp.ones((B,), jnp.float32),
+        "eps_cur": r(B, H["act_dim"]),
+        "eps_next": r(B, H["act_dim"]),
+    }
+
+
+def test_actor_forward_shapes_and_ranges(actor):
+    B = 9
+    s = jnp.asarray(np.random.default_rng(4).standard_normal((B, 52)), jnp.float32)
+    mu, ls, dl, gates = M.actor_forward(actor, s)
+    assert mu.shape == (B, 30) and ls.shape == (B, 30)
+    assert dl.shape == (B, 20) and gates.shape == (B, 4)
+    # Eq 5: log-std clamped to [-20, 2]
+    assert float(ls.min()) >= -20.0 and float(ls.max()) <= 2.0
+    # MoE gates are a softmax (Eq 54)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), np.ones(B), rtol=1e-5)
+    # expert means are tanh-bounded so the mixture mean is too (Eq 4)
+    assert float(jnp.abs(mu).max()) <= 1.0
+
+
+def test_squashed_sample_bounds_and_logprob(actor):
+    B = 33
+    rng = np.random.default_rng(5)
+    s = jnp.asarray(rng.standard_normal((B, 52)), jnp.float32)
+    mu, ls, _, _ = M.actor_forward(actor, s)
+    eps = jnp.asarray(rng.standard_normal((B, 30)), jnp.float32)
+    a, logp = M.sample_squashed(mu, ls, eps)
+    # tanh may saturate to exactly +/-1.0 in f32; never beyond
+    assert float(jnp.abs(a).max()) <= 1.0
+    assert bool(jnp.all(jnp.isfinite(logp)))
+    # zero-noise sample recovers tanh(mu)
+    a0, _ = M.sample_squashed(mu, ls, jnp.zeros_like(eps))
+    np.testing.assert_allclose(np.asarray(a0), np.asarray(jnp.tanh(mu)), rtol=1e-5)
+
+
+def test_critic_forward_shape(sac_state):
+    B = 5
+    rng = np.random.default_rng(6)
+    s = jnp.asarray(rng.standard_normal((B, 52)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((B, 30)), jnp.float32)
+    q = M.critic_forward(sac_state["c1"], s, a)
+    assert q.shape == (B,)
+
+
+def test_wm_residual_prediction_is_near_identity_at_init():
+    wm = {k: jnp.zeros(v, jnp.float32) for k, v in M.wm_shapes().items()}
+    B = 4
+    rng = np.random.default_rng(7)
+    s = jnp.asarray(rng.standard_normal((B, 52)), jnp.float32)
+    a = jnp.asarray(rng.standard_normal((B, 30)), jnp.float32)
+    # zero-init world model predicts delta 0 -> identity (Eq 69 residual)
+    np.testing.assert_allclose(np.asarray(M.wm_forward(wm, s, a)), np.asarray(s),
+                               atol=1e-6)
+
+
+def test_sac_update_moves_params_and_targets_slowly(sac_state):
+    B = 32  # small batch for test speed; lowered artifact uses 256
+    out = M.sac_update({"state": sac_state, "batch": _batch(B)})
+    st2, metrics = out["state"], out["metrics"]
+    # params moved
+    dw = float(jnp.abs(st2["actor"]["W1"] - sac_state["actor"]["W1"]).max())
+    assert dw > 0.0
+    # Polyak targets moved by ~tau of the online delta (Eq 46 targets)
+    dt = float(jnp.abs(st2["t1"]["Wa"] - sac_state["t1"]["Wa"]).max())
+    dq = float(jnp.abs(st2["c1"]["Wa"] - sac_state["c1"]["Wa"]).max())
+    assert dt < dq
+    assert metrics["td_abs"].shape == (B,)
+    assert bool(jnp.all(jnp.isfinite(metrics["td_abs"])))
+    for k in ("critic_loss", "actor_loss", "alpha_loss", "alpha", "entropy"):
+        assert np.isfinite(float(metrics[k])), k
+    assert float(st2["step"]) == 1.0
+
+
+def test_sac_update_respects_per_weights(sac_state):
+    B = 16
+    b = _batch(B)
+    zero_w = dict(b, w=jnp.zeros((B,), jnp.float32))
+    out = M.sac_update({"state": sac_state, "batch": zero_w})
+    # zero importance weights => critic gradient is zero => critic unchanged
+    np.testing.assert_allclose(
+        np.asarray(out["state"]["c1"]["Wa"]), np.asarray(sac_state["c1"]["Wa"]),
+        atol=1e-7,
+    )
+
+
+def test_wm_update_reduces_loss():
+    st = {
+        "wm": _init_net(M.wm_shapes(), 8),
+        "wm_m": {k: jnp.zeros(v, jnp.float32) for k, v in M.wm_shapes().items()},
+        "wm_v": {k: jnp.zeros(v, jnp.float32) for k, v in M.wm_shapes().items()},
+        "step": jnp.zeros((), jnp.float32),
+    }
+    rng = np.random.default_rng(9)
+    batch = {
+        "s": jnp.asarray(rng.standard_normal((64, 52)), jnp.float32),
+        "a": jnp.asarray(rng.standard_normal((64, 30)), jnp.float32),
+    }
+    batch["s2"] = batch["s"] + 0.05  # constant delta: learnable fast
+    step = jax.jit(M.wm_update)
+    losses = []
+    for _ in range(400):
+        out = step({"state": st, "batch": batch})
+        st = out["state"]
+        losses.append(float(out["metrics"]["loss"]))
+    assert losses[-1] < losses[0] * 0.5, losses[:3] + losses[-3:]
+
+
+def test_sur_update_reduces_loss():
+    st = {
+        "sur": _init_net(M.sur_shapes(), 10),
+        "sur_m": {k: jnp.zeros(v, jnp.float32) for k, v in M.sur_shapes().items()},
+        "sur_v": {k: jnp.zeros(v, jnp.float32) for k, v in M.sur_shapes().items()},
+        "step": jnp.zeros((), jnp.float32),
+    }
+    rng = np.random.default_rng(11)
+    batch = {
+        "s": jnp.asarray(rng.standard_normal((64, 52)), jnp.float32),
+        "a": jnp.asarray(rng.standard_normal((64, 30)), jnp.float32),
+        "ppa": jnp.asarray(np.tile([0.5, -0.2, 0.1], (64, 1)), jnp.float32),
+    }
+    step = jax.jit(M.sur_update)
+    losses = []
+    for _ in range(400):
+        out = step({"state": st, "batch": batch})
+        st = out["state"]
+        losses.append(float(out["metrics"]["loss"]))
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_hyper_matches_paper_tables():
+    # Table 2/3/6 headline dimensions
+    assert H["state_dim"] == 52 and H["full_state_dim"] == 73
+    assert H["act_dim"] == 30 and H["disc_dim"] == 20
+    assert H["hidden"] == 256 and H["batch"] == 256
+    assert H["target_entropy"] == -30.0
+    assert H["tau"] == 0.005 and H["gamma"] == 0.99
+    assert H["wm_hidden"] == (128, 64) and H["mpc_batch"] == 64

@@ -1,0 +1,64 @@
+//! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): the per-episode
+//! evaluation cost — placement, heterogeneous derivation, PPA — across
+//! placement granularities and mesh sizes. The paper quotes ~10 ms per
+//! full PPA evaluation; `group` granularity must land at or under that
+//! on this single-core testbed.
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{Action, Env};
+use silicon_rl::hazard::Mitigation;
+use silicon_rl::ir::llama;
+use silicon_rl::partition::{self, PartitionKnobs};
+use silicon_rl::util::bench::Bencher;
+use silicon_rl::util::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    println!("== bench_eval: episode evaluation hot path ==");
+
+    // full eval_action at several mesh scales (group granularity)
+    for nm in [3u32, 28] {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Group;
+        let mut env = Env::new(&cfg, nm);
+        let mut rng = Rng::new(1);
+        b.bench(&format!("eval_action/group/{nm}nm"), || {
+            let mut a = Action::neutral();
+            for v in a.cont.iter_mut() {
+                *v = rng.uniform_in(-1.0, 1.0);
+            }
+            env.eval_action(&a).ppa.tokens_per_s
+        });
+    }
+
+    // op-granularity (paper-faithful O(N_ops x N_cores)) at 3nm
+    {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Op;
+        let mut env = Env::new(&cfg, 3);
+        b.bench("eval_action/op/3nm", || {
+            env.eval_action(&Action::neutral()).ppa.tokens_per_s
+        });
+    }
+
+    // placement alone, sweeping mesh size (the O(N_ops x N_cores) core)
+    let g = llama::build();
+    let units = partition::groups::units_from_groups(&g);
+    let mit = Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 };
+    for side in [8u32, 16, 32, 48] {
+        let mesh = silicon_rl::arch::MeshConfig::new(side, side);
+        let knobs = PartitionKnobs::default();
+        b.bench(&format!("place_units/group/{side}x{side}"), || {
+            partition::place_units(&units, &mesh, &knobs, &mit).n_units
+        });
+    }
+
+    // graph generation + grouping (one-time setup costs)
+    b.bench("llama_graph_build", || llama::build().ops.len());
+    b.bench("units_from_groups", || {
+        partition::groups::units_from_groups(&g).len()
+    });
+
+    b.write_csv("out/bench/bench_eval.csv");
+    println!("csv: out/bench/bench_eval.csv");
+}

@@ -1,0 +1,123 @@
+//! Regenerates the paper's per-node evaluation — Tables 10/11/12/13/15/16
+//! /17/18/19 and the Fig 3–12 data series — by running the full
+//! Algorithm 1 (SAC over PJRT artifacts) per process node for both
+//! workloads, at a CI-scale episode budget.
+//!
+//! Episode budget: SILICON_RL_BENCH_EPISODES (default 1000; the paper used
+//! 4,613/node — pass the full budget for a faithful run). Shape, not
+//! absolute tok/s, is the claim at reduced budgets.
+
+use std::path::Path;
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::report::{self, NodeSummary};
+use silicon_rl::rl::{self, SacAgent};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn episodes() -> usize {
+    std::env::var("SILICON_RL_BENCH_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000)
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_nodes: artifacts not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    let out = Path::new("out/bench");
+    std::fs::create_dir_all(out)?;
+    let eps = episodes();
+
+    // ---------------- Llama 3.1 8B, high-performance (Tables 10-18)
+    let mut cfg = RunConfig::default();
+    cfg.rl.episodes_per_node = eps;
+    cfg.rl.warmup_steps = 256.min(eps / 2 + 1);
+    let runtime = Runtime::load(&dir)?;
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+
+    println!("== bench_nodes: Llama 3.1 8B high-performance, {eps} episodes/node ==");
+    let mut results = Vec::new();
+    for &nm in &cfg.nodes_nm.clone() {
+        let t0 = std::time::Instant::now();
+        let r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {nm:>2}nm done in {dt:>6.1}s ({:.1} ms/episode, {} feasible)",
+            dt * 1000.0 / eps as f64,
+            r.feasible_count
+        );
+        report::convergence_csv(&r.episodes)
+            .write_csv(&out.join(format!("fig3_convergence_{nm}nm.csv")))?;
+        results.push(r);
+    }
+
+    let rows: Vec<NodeSummary> =
+        results.iter().filter_map(NodeSummary::from_result).collect();
+    let t10 = report::nodes_table(&rows);
+    let t12 = report::power_breakdown(&rows);
+    let t13 = report::scaling_analysis(&rows);
+    let t18 = report::efficiency_table(&rows);
+    println!("\n{}", t10.to_text());
+    println!("{}", t12.to_text());
+    println!("{}", t13.to_text());
+    println!("{}", t18.to_text());
+    t10.write_csv(&out.join("table10_nodes.csv"))?;
+    t12.write_csv(&out.join("table12_power.csv"))?;
+    t13.write_csv(&out.join("table13_scaling.csv"))?;
+    t18.write_csv(&out.join("table18_efficiency.csv"))?;
+
+    if let Some(best) = results.iter().filter(|r| r.best.is_some()).min_by(|a, b| {
+        a.best_outcome().reward.score.total_cmp(&b.best_outcome().reward.score)
+    }) {
+        let o = best.best_outcome();
+        let t15 = report::tile_regions(&o.decoded.mesh, &o.tiles);
+        let t16 = report::tile_param_summary(&o.tiles);
+        println!("{}", t15.to_text());
+        println!("{}", t16.to_text());
+        t15.write_csv(&out.join("table15_regions.csv"))?;
+        t16.write_csv(&out.join("table16_tiles.csv"))?;
+    }
+    if rows.len() >= 2 {
+        // high-performance mode compares the highest-throughput node
+        // (3nm in the paper) against the oldest node
+        let best = rows
+            .iter()
+            .max_by(|a, b| a.tokens_per_s.total_cmp(&b.tokens_per_s))
+            .unwrap();
+        let worst = rows.iter().max_by_key(|r| r.nm).unwrap();
+        let t17 = report::cross_node_compare(best, worst);
+        println!("{}", t17.to_text());
+        t17.write_csv(&out.join("table17_compare.csv"))?;
+    }
+    println!("{}", report::industry_comparison(rows.first()).to_text());
+
+    // ---------------- SmolVLM, low-power (Table 19)
+    let mut cfg_lp = RunConfig::smolvlm_low_power();
+    cfg_lp.rl.episodes_per_node = eps;
+    cfg_lp.rl.warmup_steps = 256.min(eps / 2 + 1);
+    let runtime = Runtime::load(&dir)?;
+    let mut agent = SacAgent::new(runtime, cfg_lp.rl, &mut rng)?;
+    println!("== bench_nodes: SmolVLM low-power, {eps} episodes/node ==");
+    let mut lp_results = Vec::new();
+    for &nm in &cfg_lp.nodes_nm.clone() {
+        let r = rl::run_node(&cfg_lp, nm, &mut agent, &mut rng)?;
+        lp_results.push(r);
+    }
+    let lp_rows: Vec<NodeSummary> =
+        lp_results.iter().filter_map(NodeSummary::from_result).collect();
+    let t19 = report::nodes_table(&lp_rows);
+    println!("\n{}", t19.to_text());
+    t19.write_csv(&out.join("table19_smolvlm.csv"))?;
+    let under13 = lp_rows.iter().filter(|r| r.power.total() < 13.0).count();
+    println!(
+        "SmolVLM: {under13}/{} nodes under 13 mW (paper: 7/7)",
+        lp_rows.len()
+    );
+    println!("CSVs in {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! L2/L1 runtime benchmarks (EXPERIMENTS.md §Perf): latency/throughput of
+//! the AOT-compiled HLO entrypoints through the PJRT CPU client — actor
+//! inference (B=1), the fused SAC update (B=256, ~30 Pallas-kernel
+//! instances fwd+bwd), world-model rollout (B=64) and a full MPC refine
+//! (K×H = 64×5 forwards). Skips cleanly when artifacts are not built.
+
+use std::path::Path;
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::env::SAC_STATE_DIM;
+use silicon_rl::rl::{SacAgent, Transition};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::bench::Bencher;
+use silicon_rl::util::Rng;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let runtime = Runtime::load(&dir).expect("runtime");
+    let mut rng = Rng::new(1);
+    let cfg = RunConfig::default().rl;
+    let mut agent = SacAgent::new(runtime, cfg, &mut rng).expect("agent");
+
+    // populate replay so update/wm/sur paths have data
+    for i in 0..300 {
+        let mut t = Transition {
+            s: [0.0; SAC_STATE_DIM],
+            a_cont: [0.0; 30],
+            a_disc: [0.0; 20],
+            r: (i % 5) as f32 * 0.2,
+            s2: [0.0; SAC_STATE_DIM],
+            done: 0.0,
+            ppa: [0.4, 0.5, 0.3],
+        };
+        for v in t.s.iter_mut().chain(t.s2.iter_mut()) {
+            *v = rng.uniform() as f32;
+        }
+        for v in t.a_cont.iter_mut() {
+            *v = rng.uniform_in(-0.9, 0.9) as f32;
+        }
+        t.a_disc[rng.below(5)] = 1.0;
+        agent.push_transition(t);
+    }
+
+    let mut b = Bencher::default();
+    println!("== bench_runtime: PJRT entrypoint performance ==");
+
+    let s = [0.3f32; SAC_STATE_DIM];
+    b.bench("actor_fwd_b1 (policy latency)", || {
+        agent.act(&s, true, &mut rng).unwrap()
+    });
+
+    b.bench("sac_update (B=256 fused HLO)", || {
+        agent.update(&mut rng).unwrap()
+    });
+
+    b.bench("wm_update (B=256)", || {
+        agent.train_world_model(&mut rng).unwrap()
+    });
+
+    b.bench("sur_update (B=256)", || {
+        agent.train_surrogate(&mut rng).unwrap()
+    });
+
+    let base = agent.act(&s, false, &mut rng).unwrap();
+    b.bench("mpc_refine (K=64, H=5)", || {
+        agent.mpc_refine(&s, &base, &mut rng).unwrap()
+    });
+
+    b.write_csv("out/bench/bench_runtime.csv");
+    println!("csv: out/bench/bench_runtime.csv");
+}

@@ -1,0 +1,71 @@
+//! Table 21 — search-strategy comparison at 3nm: SAC (ours) vs random
+//! search vs grid search under the same episode budget and evaluation
+//! pipeline. The paper's claim shape: SAC finds a better score, much
+//! higher throughput, and many more feasible configurations.
+//!
+//! Budget: SILICON_RL_BENCH_EPISODES (default 1000; paper used ~4,600).
+
+use std::path::Path;
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::report;
+use silicon_rl::rl::{self, baselines, SacAgent};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let eps = std::env::var("SILICON_RL_BENCH_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1000);
+    let mut cfg = RunConfig::default();
+    cfg.rl.episodes_per_node = eps;
+    cfg.rl.warmup_steps = 256.min(eps / 2 + 1);
+    let nm = 3;
+
+    println!("== bench_search: Table 21 at {nm}nm, {eps} episodes each ==");
+    let mut rng = Rng::new(cfg.seed);
+
+    let t0 = std::time::Instant::now();
+    let rand_r = baselines::random_search(&cfg, nm, &mut rng.fork(1));
+    println!("random search: {:.1}s", t0.elapsed().as_secs_f64());
+
+    let t0 = std::time::Instant::now();
+    let grid_r = baselines::grid_search(&cfg, nm, &mut rng.fork(2));
+    println!("grid search:   {:.1}s", t0.elapsed().as_secs_f64());
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let sac_r = if dir.join("manifest.json").exists() {
+        let runtime = Runtime::load(&dir)?;
+        let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+        let t0 = std::time::Instant::now();
+        let r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        println!("SAC:           {:.1}s", t0.elapsed().as_secs_f64());
+        Some(r)
+    } else {
+        println!("SAC: skipped (artifacts not built)");
+        None
+    };
+
+    let mut entries: Vec<(&str, &rl::NodeResult)> =
+        vec![("Random Search", &rand_r), ("Grid Search", &grid_r)];
+    if let Some(r) = &sac_r {
+        entries.push(("SAC (ours)", r));
+    }
+    let t = report::search_comparison(&entries);
+    println!("\n{}", t.to_text());
+    std::fs::create_dir_all("out/bench")?;
+    t.write_csv(Path::new("out/bench/table21_search.csv"))?;
+
+    if let Some(sac) = &sac_r {
+        let sac_tok = sac.best.as_ref().map(|b| b.outcome.ppa.tokens_per_s).unwrap_or(0.0);
+        let rand_tok =
+            rand_r.best.as_ref().map(|b| b.outcome.ppa.tokens_per_s).unwrap_or(1.0);
+        println!(
+            "SAC vs random: {:.2}x throughput, {:.2}x feasible configs (paper: 3.5x, 9.1x)",
+            sac_tok / rand_tok,
+            sac.feasible_count as f64 / rand_r.feasible_count.max(1) as f64
+        );
+    }
+    Ok(())
+}

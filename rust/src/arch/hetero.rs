@@ -1,0 +1,172 @@
+//! Post-RL heterogeneous per-TCC derivation (§3.3).
+//!
+//! "The RL agent optimizes *average* TCC parameters. A post-RL derivation
+//! step then computes per-TCC heterogeneous values for FETCH_SIZE, VLEN,
+//! DMEM, IMEM, and WMEM based on each tile's workload characteristics
+//! (compute load, hazard density, weight footprint). Only STANUM and the
+//! NoC-level DFLIT_WIDTH remain uniform."
+//!
+//! Tiles hosting memory-heavy operators (attention projections, MLP
+//! layers) receive larger WMEM and wider SIMD; lighter tiles receive
+//! smaller allocations to save area and power (§3.3, §4.10.1).
+
+use super::{MeshConfig, ParamRanges, TccParams, TileConfig};
+
+/// Per-tile workload characteristics produced by the partitioner.
+#[derive(Debug, Clone, Default)]
+pub struct TileLoad {
+    /// FLOPs per token assigned to this tile.
+    pub flops: f64,
+    /// Weight bytes resident on this tile.
+    pub weight_bytes: f64,
+    /// Activation working set (≈ 2× the largest live tensor slice, for
+    /// double buffering) needing DMEM residency.
+    pub act_bytes: f64,
+    /// KV-cache slice assigned to this tile (Eq 27); spills to WMEM at a
+    /// latency cost when it does not fit DMEM (§3.9).
+    pub kv_bytes: f64,
+    /// Static instructions assigned (IMEM sizing).
+    pub instrs: f64,
+    /// Hazard density in [0,1] (RAW/WAR/WAW per instruction).
+    pub hazard_density: f64,
+}
+
+/// Derive quantized per-tile configurations from the RL-selected averages
+/// and the placement's per-tile loads.
+pub fn derive_tiles(
+    mesh: &MeshConfig,
+    avg: &TccParams,
+    loads: &[TileLoad],
+    ranges: &ParamRanges,
+) -> Vec<TileConfig> {
+    assert_eq!(loads.len(), mesh.cores());
+    let n = loads.len() as f64;
+    let mean_flops = (loads.iter().map(|l| l.flops).sum::<f64>() / n).max(1.0);
+    let mean_instr = (loads.iter().map(|l| l.instrs).sum::<f64>() / n).max(1.0);
+
+    loads
+        .iter()
+        .enumerate()
+        .map(|(t, l)| {
+            // compute-share modulation in [0.5, 2.0]: heavier tiles get
+            // wider SIMD and deeper fetch
+            let share = (l.flops / mean_flops).clamp(0.25, 4.0).sqrt();
+            // hazard-heavy tiles get deeper fetch to hide stalls (§5.1
+            // "hazard-aware optimization")
+            let fetch_mod = share * (1.0 + l.hazard_density);
+            let fetch = ranges.fetch.quantize(avg.fetch as f64 * fetch_mod);
+            let vlen = ranges.vlen_bits.quantize(avg.vlen_bits as f64 * share);
+            // WMEM: the placed weight footprint padded 5% for alignment,
+            // rounded UP to the next bank size so capacity holds the
+            // placement (Eq 14); the per-tile cap can still force an
+            // overflow the reward penalizes (Eq 40)
+            let wmem =
+                ranges.wmem_kb.quantize_up(l.weight_bytes * 1.05 / 1024.0);
+            // DMEM: activation working set (rounded up), at least the RL
+            // average scaled by the compute share. Growth is capped at 4x
+            // the RL average — activations beyond that stream from
+            // producers at a latency cost (η_util pressure term) instead
+            // of inflating SRAM leakage.
+            let act_kb = (l.act_bytes / 1024.0).min(4.0 * avg.dmem_kb as f64);
+            let dmem = ranges
+                .dmem_kb
+                .quantize_up((avg.dmem_kb as f64 * share).max(act_kb));
+            let imem = ranges
+                .imem_kb
+                .quantize(avg.imem_kb as f64 * (l.instrs / mean_instr).clamp(0.25, 4.0));
+            TileConfig {
+                tile: t,
+                x: t as u32 % mesh.width,
+                y: t as u32 / mesh.width,
+                fetch,
+                vlen_bits: vlen,
+                stanum: avg.stanum, // uniform by design (§3.3)
+                dmem_kb: dmem,
+                wmem_kb: wmem,
+                imem_kb: imem,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::ParamRanges;
+
+    fn mk_loads(n: usize) -> Vec<TileLoad> {
+        (0..n)
+            .map(|i| TileLoad {
+                flops: 1e6 * (1.0 + (i % 7) as f64),
+                weight_bytes: 4.0e6 * (1.0 + (i % 3) as f64),
+                act_bytes: 32.0 * 1024.0,
+                kv_bytes: 0.0,
+                instrs: 1000.0 * (1.0 + (i % 5) as f64),
+                hazard_density: 0.1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn heavier_tiles_get_wider_simd() {
+        let mesh = MeshConfig::new(4, 4);
+        let avg = TccParams::default_for(1000.0);
+        let mut loads = mk_loads(16);
+        loads[3].flops = 1e9; // hot tile
+        loads[5].flops = 1e3; // cold tile
+        let tiles = derive_tiles(&mesh, &avg, &loads, &ParamRanges::paper());
+        assert!(tiles[3].vlen_bits > tiles[5].vlen_bits);
+        assert!(tiles[3].fetch >= tiles[5].fetch);
+    }
+
+    #[test]
+    fn wmem_tracks_placed_weights() {
+        let mesh = MeshConfig::new(2, 2);
+        let avg = TccParams::default_for(1000.0);
+        let mut loads = mk_loads(4);
+        loads[0].weight_bytes = 64.0 * 1024.0 * 1024.0; // 64 MB
+        loads[1].weight_bytes = 1.0 * 1024.0 * 1024.0;
+        let tiles = derive_tiles(&mesh, &avg, &loads, &ParamRanges::paper());
+        assert!(tiles[0].wmem_kb >= 64 * 1024);
+        assert!(tiles[1].wmem_kb < tiles[0].wmem_kb);
+        // floor respected
+        assert!(tiles.iter().all(|t| t.wmem_kb >= 256));
+    }
+
+    #[test]
+    fn stanum_uniform_across_tiles() {
+        let mesh = MeshConfig::new(3, 3);
+        let avg = TccParams::default_for(500.0);
+        let tiles = derive_tiles(&mesh, &avg, &mk_loads(9), &ParamRanges::paper());
+        assert!(tiles.iter().all(|t| t.stanum == avg.stanum));
+    }
+
+    #[test]
+    fn all_values_quantized_within_table7() {
+        let mesh = MeshConfig::new(5, 4);
+        let avg = TccParams::default_for(250.0);
+        let tiles = derive_tiles(&mesh, &avg, &mk_loads(20), &ParamRanges::paper());
+        for t in &tiles {
+            assert!(t.fetch.is_power_of_two() && (1..=16).contains(&t.fetch));
+            assert!(t.vlen_bits.is_power_of_two());
+            assert!((128..=2048).contains(&t.vlen_bits));
+            assert!(t.dmem_kb.is_power_of_two());
+            assert!(t.imem_kb.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn variation_emerges_from_nonuniform_load() {
+        // §3.3: FETCH/VLEN vary up to 93.8% across tiles
+        let mesh = MeshConfig::new(6, 6);
+        let avg = TccParams::default_for(1000.0);
+        let mut loads = mk_loads(36);
+        for (i, l) in loads.iter_mut().enumerate() {
+            l.flops = 1e5 * (1.0 + i as f64).powi(2);
+        }
+        let tiles = derive_tiles(&mesh, &avg, &loads, &ParamRanges::paper());
+        let vmin = tiles.iter().map(|t| t.vlen_bits).min().unwrap();
+        let vmax = tiles.iter().map(|t| t.vlen_bits).max().unwrap();
+        assert!(vmax >= 4 * vmin, "vlen spread {vmin}..{vmax}");
+    }
+}

@@ -1,0 +1,214 @@
+//! Architecture configuration: the 2D TCC mesh, per-TCC microarchitecture
+//! parameters (Table 7), hardware quantization, and the post-RL
+//! heterogeneous per-tile derivation of §3.3.
+
+pub mod hetero;
+pub mod ranges;
+
+
+
+pub use hetero::{derive_tiles, TileLoad};
+pub use ranges::{ParamRanges, Quantizer};
+
+/// Mesh / sub-cluster topology (discrete action targets, Table 3 group 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MeshConfig {
+    pub width: u32,
+    pub height: u32,
+    /// Sub-cluster grid overlay (SC topology, Table 2 dims 67–69):
+    /// tiles are grouped into sc_x × sc_y clusters with express links
+    /// between cluster routers.
+    pub sc_x: u32,
+    pub sc_y: u32,
+}
+
+impl MeshConfig {
+    pub fn new(width: u32, height: u32) -> Self {
+        MeshConfig { width, height, sc_x: 2, sc_y: 2 }
+    }
+
+    pub fn cores(&self) -> usize {
+        (self.width * self.height) as usize
+    }
+
+    /// Mean hop count h̄ = (M+N)/3 (Eq 19).
+    pub fn mean_hops(&self) -> f64 {
+        (self.width + self.height) as f64 / 3.0
+    }
+
+    /// Manhattan distance between two tile indices.
+    pub fn hop_distance(&self, a: usize, b: usize) -> u32 {
+        let (ax, ay) = (a as u32 % self.width, a as u32 / self.width);
+        let (bx, by) = (b as u32 % self.width, b as u32 / self.width);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// Mesh centrality of a tile in [0,1]: 1 at the exact center,
+    /// 0 at the corners (placement score term, §3.5 step 4).
+    pub fn centrality(&self, tile: usize) -> f64 {
+        let (x, y) = (tile as u32 % self.width, tile as u32 / self.width);
+        let cx = (self.width - 1) as f64 / 2.0;
+        let cy = (self.height - 1) as f64 / 2.0;
+        let d = (x as f64 - cx).abs() + (y as f64 - cy).abs();
+        let dmax = cx + cy;
+        if dmax <= 0.0 { 1.0 } else { 1.0 - d / dmax }
+    }
+}
+
+/// Average (mesh-wide) TCC parameters selected by the RL agent — the
+/// "Continuous TCC Params" action group (Table 3 dims 4–18). Values are
+/// already quantized to hardware-supported points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TccParams {
+    pub fetch: u32,
+    pub stanum: u32,
+    pub vlen_bits: u32,
+    pub dmem_kb: u32,
+    pub wmem_kb: u32,
+    pub imem_kb: u32,
+    /// NoC flit width (chip-level uniform, Table 7).
+    pub dflit_bits: u32,
+    pub xr_wp: u32,
+    pub vr_wp: u32,
+    pub xdpnum: u32,
+    pub vdpnum: u32,
+    pub clock_mhz: f64,
+    /// Weight/activation precision: 0 = FP16 (paper's evaluated setting),
+    /// 1 = INT8 (doubles effective lanes).
+    pub precision: Precision,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Fp16,
+    Int8,
+}
+
+impl TccParams {
+    /// FP16 vector lanes = VLEN/16 (Eq 21's VLEN_i/16 term).
+    pub fn lanes(&self) -> f64 {
+        let base = self.vlen_bits as f64 / 16.0;
+        match self.precision {
+            Precision::Fp16 => base,
+            Precision::Int8 => base * 2.0,
+        }
+    }
+
+    /// A throughput-reasonable default (mid-range Table 7).
+    pub fn default_for(clock_mhz: f64) -> Self {
+        TccParams {
+            fetch: 4,
+            stanum: 4,
+            vlen_bits: 1024,
+            dmem_kb: 64,
+            wmem_kb: 8192,
+            imem_kb: 8,
+            dflit_bits: 2048,
+            xr_wp: 2,
+            vr_wp: 2,
+            xdpnum: 2,
+            vdpnum: 2,
+            clock_mhz,
+            precision: Precision::Fp16,
+        }
+    }
+}
+
+/// Fully derived per-tile configuration (§3.3 heterogeneous derivation;
+/// the JSON artifacts of §4.10 serialize these).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileConfig {
+    pub tile: usize,
+    pub x: u32,
+    pub y: u32,
+    pub fetch: u32,
+    pub vlen_bits: u32,
+    pub stanum: u32,
+    pub dmem_kb: u32,
+    pub wmem_kb: u32,
+    pub imem_kb: u32,
+}
+
+impl TileConfig {
+    pub fn lanes(&self) -> f64 {
+        self.vlen_bits as f64 / 16.0
+    }
+
+    pub fn sram_mb(&self) -> f64 {
+        (self.dmem_kb + self.imem_kb) as f64 / 1024.0
+    }
+}
+
+/// Mesh region classification used by Table 15 / Fig 11.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Edge,
+    Inner,
+    Center,
+}
+
+pub fn region_of(mesh: &MeshConfig, tile: usize) -> Region {
+    let (x, y) = (tile as u32 % mesh.width, tile as u32 / mesh.width);
+    let on_edge = x == 0 || y == 0 || x == mesh.width - 1 || y == mesh.height - 1;
+    if on_edge {
+        return Region::Edge;
+    }
+    let c = mesh.centrality(tile);
+    if c >= 0.7 {
+        Region::Center
+    } else {
+        Region::Inner
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mesh_geometry() {
+        let m = MeshConfig::new(41, 42);
+        assert_eq!(m.cores(), 1722);
+        assert!((m.mean_hops() - 83.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hop_distance_manhattan() {
+        let m = MeshConfig::new(4, 4);
+        assert_eq!(m.hop_distance(0, 15), 6); // (0,0) -> (3,3)
+        assert_eq!(m.hop_distance(5, 5), 0);
+        assert_eq!(m.hop_distance(1, 2), 1);
+    }
+
+    #[test]
+    fn centrality_center_vs_corner() {
+        let m = MeshConfig::new(5, 5);
+        assert!((m.centrality(12) - 1.0).abs() < 1e-12); // (2,2)
+        assert!(m.centrality(0) < 0.01); // corner
+    }
+
+    #[test]
+    fn lanes_fp16_vs_int8() {
+        let mut p = TccParams::default_for(1000.0);
+        p.vlen_bits = 2048;
+        assert_eq!(p.lanes(), 128.0);
+        p.precision = Precision::Int8;
+        assert_eq!(p.lanes(), 256.0);
+    }
+
+    #[test]
+    fn regions_partition_the_mesh() {
+        let m = MeshConfig::new(10, 10);
+        let mut counts = [0usize; 3];
+        for t in 0..m.cores() {
+            match region_of(&m, t) {
+                Region::Edge => counts[0] += 1,
+                Region::Inner => counts[1] += 1,
+                Region::Center => counts[2] += 1,
+            }
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 100);
+        assert_eq!(counts[0], 36); // perimeter of 10x10
+        assert!(counts[2] > 0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Table 7 — per-TCC parameter ranges and hardware quantization.
+//!
+//! "Bounds are architectural limits; the RL agent selects continuous
+//! values within these bounds, which are then quantized to
+//! hardware-supported discrete values."
+
+
+
+use crate::util::clip;
+
+/// Closed range with a quantization policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantizer {
+    pub min: f64,
+    pub max: f64,
+    pub policy: QuantPolicy,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantPolicy {
+    /// Round to nearest integer.
+    Integer,
+    /// Round to the nearest power of two (memory banks, VLEN, flits).
+    PowerOfTwo,
+}
+
+impl Quantizer {
+    pub const fn new(min: f64, max: f64, policy: QuantPolicy) -> Self {
+        Quantizer { min, max, policy }
+    }
+
+    /// Map a normalized action value in [-1, 1] onto the range
+    /// (log-uniform for power-of-two parameters) and quantize.
+    pub fn from_unit(&self, u: f64) -> u32 {
+        let u = clip(u, -1.0, 1.0) * 0.5 + 0.5; // -> [0,1]
+        let v = match self.policy {
+            QuantPolicy::Integer => self.min + u * (self.max - self.min),
+            QuantPolicy::PowerOfTwo => {
+                (self.min.ln() + u * (self.max.ln() - self.min.ln())).exp()
+            }
+        };
+        self.quantize(v)
+    }
+
+    /// Quantize an absolute value UP to the next hardware point (for
+    /// capacity sizing: memory must hold what placement assigned).
+    pub fn quantize_up(&self, v: f64) -> u32 {
+        let v = clip(v, self.min, self.max);
+        match self.policy {
+            QuantPolicy::Integer => v.ceil() as u32,
+            QuantPolicy::PowerOfTwo => {
+                let p = (v.ln() / 2f64.ln()).ceil();
+                clip(2f64.powf(p), self.min, self.max) as u32
+            }
+        }
+    }
+
+    /// Quantize an absolute value to the nearest hardware point.
+    pub fn quantize(&self, v: f64) -> u32 {
+        let v = clip(v, self.min, self.max);
+        match self.policy {
+            QuantPolicy::Integer => v.round() as u32,
+            QuantPolicy::PowerOfTwo => {
+                let l = v.ln() / 2f64.ln();
+                let p = l.round();
+                let q = 2f64.powf(p);
+                clip(q, self.min, self.max) as u32
+            }
+        }
+    }
+}
+
+/// The full Table 7 range set.
+#[derive(Debug, Clone, Copy)]
+pub struct ParamRanges {
+    pub fetch: Quantizer,
+    pub stanum: Quantizer,
+    pub vlen_bits: Quantizer,
+    pub dmem_kb: Quantizer,
+    /// WMEM is "256 – adaptive"; the max here is a generous per-tile cap
+    /// (Table 16 observes up to ~72 MB on weight-heavy tiles).
+    pub wmem_kb: Quantizer,
+    pub imem_kb: Quantizer,
+    pub dflit_bits: Quantizer,
+    pub xr_wp: Quantizer,
+    pub vr_wp: Quantizer,
+    pub xdpnum: Quantizer,
+    pub vdpnum: Quantizer,
+}
+
+impl ParamRanges {
+    pub fn paper() -> Self {
+        use QuantPolicy::*;
+        ParamRanges {
+            fetch: Quantizer::new(1.0, 16.0, PowerOfTwo),
+            stanum: Quantizer::new(1.0, 32.0, Integer),
+            vlen_bits: Quantizer::new(128.0, 2048.0, PowerOfTwo),
+            // Table 7 says 16–512 KB but Table 16 reports 1024 KB tiles;
+            // we honour the observed artifact range.
+            dmem_kb: Quantizer::new(16.0, 1024.0, PowerOfTwo),
+            wmem_kb: Quantizer::new(256.0, 131_072.0, PowerOfTwo),
+            imem_kb: Quantizer::new(1.0, 128.0, PowerOfTwo),
+            dflit_bits: Quantizer::new(64.0, 8192.0, PowerOfTwo),
+            xr_wp: Quantizer::new(1.0, 16.0, Integer),
+            vr_wp: Quantizer::new(1.0, 16.0, Integer),
+            xdpnum: Quantizer::new(1.0, 16.0, Integer),
+            vdpnum: Quantizer::new(1.0, 16.0, Integer),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_quantization_hits_hardware_points() {
+        let q = Quantizer::new(128.0, 2048.0, QuantPolicy::PowerOfTwo);
+        assert_eq!(q.quantize(1000.0), 1024);
+        assert_eq!(q.quantize(1536.0), 2048); // ln-space midpoint rounds up
+        assert_eq!(q.quantize(120.0), 128);
+        assert_eq!(q.quantize(9999.0), 2048);
+    }
+
+    #[test]
+    fn integer_quantization_clamps() {
+        let q = Quantizer::new(1.0, 32.0, QuantPolicy::Integer);
+        assert_eq!(q.quantize(0.2), 1);
+        assert_eq!(q.quantize(31.7), 32);
+        assert_eq!(q.quantize(100.0), 32);
+        assert_eq!(q.quantize(7.4), 7);
+    }
+
+    #[test]
+    fn from_unit_covers_range_ends() {
+        let q = Quantizer::new(1.0, 16.0, QuantPolicy::PowerOfTwo);
+        assert_eq!(q.from_unit(-1.0), 1);
+        assert_eq!(q.from_unit(1.0), 16);
+        // midpoint of log range [1,16] is 4
+        assert_eq!(q.from_unit(0.0), 4);
+    }
+
+    #[test]
+    fn paper_ranges_match_table7() {
+        let r = ParamRanges::paper();
+        assert_eq!((r.fetch.min, r.fetch.max), (1.0, 16.0));
+        assert_eq!((r.stanum.min, r.stanum.max), (1.0, 32.0));
+        assert_eq!((r.vlen_bits.min, r.vlen_bits.max), (128.0, 2048.0));
+        assert_eq!((r.imem_kb.min, r.imem_kb.max), (1.0, 128.0));
+        assert_eq!((r.dflit_bits.min, r.dflit_bits.max), (64.0, 8192.0));
+        assert_eq!(r.wmem_kb.min, 256.0);
+    }
+}

@@ -1,0 +1,149 @@
+//! Generated design artifacts (§4.10: "This section uses only generated
+//! artifact data ... rendered directly from the same JSON files").
+//!
+//! For each optimized node we emit:
+//! * `tcc_config_<nm>nm.json` — per-TCC heterogeneous configurations
+//!   (the paper's per-tile JSON artifacts feeding Fig 10/11/12a),
+//! * `run_<nm>nm.json` — the selected configuration + PPA summary
+//!   (stand-in for RTL emission: the paper's own §4.10 analysis consumes
+//!   exactly these JSON artifacts, not the RTL).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::arch::{region_of, MeshConfig, TileConfig};
+use crate::env::EvalOutcome;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Serialize per-TCC configurations.
+pub fn tiles_to_json(mesh: &MeshConfig, tiles: &[TileConfig]) -> Json {
+    let tiles_json: Vec<Json> = tiles
+        .iter()
+        .map(|t| {
+            obj(vec![
+                ("tile", num(t.tile as f64)),
+                ("x", num(t.x as f64)),
+                ("y", num(t.y as f64)),
+                ("region", s(&format!("{:?}", region_of(mesh, t.tile)))),
+                ("fetch", num(t.fetch as f64)),
+                ("vlen_bits", num(t.vlen_bits as f64)),
+                ("stanum", num(t.stanum as f64)),
+                ("dmem_kb", num(t.dmem_kb as f64)),
+                ("wmem_kb", num(t.wmem_kb as f64)),
+                ("imem_kb", num(t.imem_kb as f64)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("mesh_width", num(mesh.width as f64)),
+        ("mesh_height", num(mesh.height as f64)),
+        ("sc_x", num(mesh.sc_x as f64)),
+        ("sc_y", num(mesh.sc_y as f64)),
+        ("tiles", arr(tiles_json)),
+    ])
+}
+
+/// Serialize the selected configuration + PPA summary for one node.
+pub fn outcome_to_json(nm: u32, out: &EvalOutcome) -> Json {
+    let p = &out.ppa.power;
+    obj(vec![
+        ("node_nm", num(nm as f64)),
+        ("mesh", s(&format!("{}x{}", out.decoded.mesh.width, out.decoded.mesh.height))),
+        ("cores", num(out.decoded.mesh.cores() as f64)),
+        ("clock_mhz", num(out.decoded.avg.clock_mhz)),
+        ("tokens_per_s", num(out.ppa.tokens_per_s)),
+        ("perf_gops", num(out.ppa.perf_gops)),
+        ("area_mm2", num(out.ppa.area.total())),
+        ("ppa_score", num(out.reward.score)),
+        ("feasible", Json::Bool(out.reward.feasible)),
+        (
+            "power_mw",
+            obj(vec![
+                ("compute", num(p.compute)),
+                ("sram", num(p.sram)),
+                ("rom_read", num(p.rom_read)),
+                ("noc", num(p.noc)),
+                ("leakage", num(p.leakage)),
+                ("total", num(p.total())),
+            ]),
+        ),
+        (
+            "ceilings_tok_s",
+            obj(vec![
+                ("compute", num(out.ppa.ceilings.compute)),
+                ("memory", num(out.ppa.ceilings.memory)),
+                ("noc", num(finite_or(out.ppa.ceilings.noc, -1.0))),
+            ]),
+        ),
+    ])
+}
+
+fn finite_or(v: f64, fallback: f64) -> f64 {
+    if v.is_finite() {
+        v
+    } else {
+        fallback
+    }
+}
+
+/// Write both artifacts for one optimized node into `dir`.
+pub fn write_node_artifacts(dir: &Path, nm: u32, out: &EvalOutcome) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let tiles = tiles_to_json(&out.decoded.mesh, &out.tiles);
+    std::fs::write(
+        dir.join(format!("tcc_config_{nm}nm.json")),
+        tiles.to_string_pretty(),
+    )?;
+    std::fs::write(
+        dir.join(format!("run_{nm}nm.json")),
+        outcome_to_json(nm, out).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Granularity, RunConfig};
+    use crate::env::{Action, Env};
+
+    fn outcome() -> EvalOutcome {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Group;
+        let mut env = Env::new(&cfg, 3);
+        env.eval_action(&Action::neutral())
+    }
+
+    #[test]
+    fn tile_json_round_trips() {
+        let out = outcome();
+        let j = tiles_to_json(&out.decoded.mesh, &out.tiles);
+        let text = j.to_string_pretty();
+        let parsed = Json::parse(&text).unwrap();
+        let tiles = parsed.get("tiles").unwrap().as_arr().unwrap();
+        assert_eq!(tiles.len(), out.decoded.mesh.cores());
+        assert!(tiles[0].get("wmem_kb").unwrap().as_f64().unwrap() > 0.0);
+        assert!(tiles[0].get("region").unwrap().as_str().is_some());
+    }
+
+    #[test]
+    fn run_json_has_ppa_fields() {
+        let out = outcome();
+        let j = outcome_to_json(3, &out);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("node_nm").unwrap().as_f64(), Some(3.0));
+        assert!(parsed.get("power_mw").unwrap().get("total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(parsed.get("ceilings_tok_s").unwrap().get("compute").is_some());
+    }
+
+    #[test]
+    fn artifacts_written_to_disk() {
+        let out = outcome();
+        let dir = std::env::temp_dir().join("silicon_rl_artifact_test");
+        write_node_artifacts(&dir, 3, &out).unwrap();
+        assert!(dir.join("tcc_config_3nm.json").exists());
+        assert!(dir.join("run_3nm.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

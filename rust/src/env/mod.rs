@@ -1,0 +1,407 @@
+//! The MDP environment (§3.1): action → configuration → partitioning →
+//! heterogeneous derivation → analytical PPA → reward → next state.
+//!
+//! One [`Env`] instance optimizes one (workload, process-node) pair, as in
+//! Algorithm 1's inner loop. `eval_action` is the "codegen + simulation"
+//! step the paper quotes at ~10 ms — the episode hot path.
+
+pub mod action;
+pub mod reward;
+pub mod state;
+
+pub use action::{Action, DecodedAction, ACT_DIM, DISC_DIM, DISC_OPTIONS, N_DISC};
+pub use reward::RewardTerms;
+pub use state::{FULL_STATE_DIM, SAC_STATE_DIM};
+
+use crate::arch::{self, MeshConfig, ParamRanges, TileConfig};
+use crate::config::{Granularity, ModeConfig, NodeBudget, RunConfig};
+use crate::hazard::Mitigation;
+use crate::ir::stats::WorkloadStats;
+use crate::ir::Graph;
+use crate::kv::{self, KvStrategy};
+use crate::node::{NodeSpec, NodeTable};
+use crate::partition::{self, Placement, Unit};
+use crate::ppa::{self, DesignPoint, PpaResult};
+
+/// Full outcome of evaluating one action (one episode body).
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub decoded: DecodedAction,
+    pub tiles: Vec<TileConfig>,
+    pub placement: Placement,
+    pub ppa: PpaResult,
+    pub reward: RewardTerms,
+    pub full_state: [f64; FULL_STATE_DIM],
+    /// Constraint-projection shrink steps applied (Eq 68).
+    pub proj_steps: u32,
+}
+
+pub struct Env {
+    pub graph: Graph,
+    pub units: Vec<Unit>,
+    pub wstats: WorkloadStats,
+    pub node: NodeSpec,
+    pub budget: NodeBudget,
+    pub mode: ModeConfig,
+    pub ranges: ParamRanges,
+    pub kv_strategy: KvStrategy,
+    pub seq_len: u32,
+    pub batch_size: u32,
+    /// Current mesh — the discrete action deltas walk this (Algorithm 1).
+    pub mesh: MeshConfig,
+}
+
+impl Env {
+    pub fn new(cfg: &RunConfig, nm: u32) -> Self {
+        let graph = cfg.workload.build();
+        let units = match cfg.granularity {
+            Granularity::Op => partition::units_from_ops(&graph),
+            Granularity::Group => partition::groups::units_from_groups(&graph),
+        };
+        let wstats = crate::ir::stats::compute(&graph);
+        let table = NodeTable::paper();
+        let node = table.get(nm).unwrap_or_else(|| panic!("unknown node {nm}nm")).clone();
+        let budget = *cfg.mode.budget(nm);
+        let mesh = initial_mesh(&graph, &cfg.mode);
+        Env {
+            graph,
+            units,
+            wstats,
+            node,
+            budget,
+            mode: cfg.mode.clone(),
+            ranges: ParamRanges::paper(),
+            kv_strategy: cfg.kv_strategy,
+            seq_len: cfg.workload.seq_len(),
+            batch_size: 3, // paper's Llama evaluation batch (Table 9)
+            mesh,
+        }
+    }
+
+    /// Evaluate a raw action: the full §3.5 + §3.6–3.9 + §3.10 pipeline.
+    /// Advances the environment's mesh to the (projected) action's mesh.
+    pub fn eval_action(&mut self, a: &Action) -> EvalOutcome {
+        // 1. decode + constraint projection (Eq 68)
+        let decoded = action::decode(
+            a,
+            &self.mesh,
+            &self.node,
+            &self.mode,
+            &self.ranges,
+            self.kv_strategy,
+            self.seq_len,
+        );
+        let total_weights = self.graph.total_weight_bytes();
+        let (decoded, proj_steps) =
+            action::project(decoded, &self.node, &self.budget, total_weights);
+
+        // 2. operator partitioning + placement (§3.5)
+        let mit = Mitigation {
+            stanum: decoded.avg.stanum,
+            fetch: decoded.avg.fetch,
+            xr_wp: decoded.avg.xr_wp,
+            vr_wp: decoded.avg.vr_wp,
+        };
+        let mut placement =
+            partition::place_units(&self.units, &decoded.mesh, &decoded.knobs, &mit);
+
+        // 3. KV-cache distribution across active tiles (Eq 27)
+        let kv_total = match self.graph.kv {
+            Some(kvc) => kv::total_bytes(&kvc, self.seq_len, decoded.kv_strategy),
+            None => 0.0,
+        };
+        partition::distribute_kv(&mut placement.loads, kv_total);
+
+        // 4. heterogeneous per-TCC derivation (§3.3)
+        let tiles =
+            arch::derive_tiles(&decoded.mesh, &decoded.avg, &placement.loads, &self.ranges);
+
+        // 5. assemble the design point for the analytical models
+        let d = self.design_point(&decoded, &placement, &tiles, total_weights);
+
+        // 6. analytical PPA (Eqs 21-24, 62-64)
+        let ppa_result = ppa::evaluate(&d, &self.node);
+
+        // 7. feasibility + reward (Eqs 34-44)
+        let mem_overflow = wmem_overflow(&tiles, &placement);
+        let dmem_ok = dmem_feasible(&tiles, &placement, &decoded);
+        let rterms = reward::compute(
+            &self.mode.weights,
+            &self.budget,
+            &reward::RewardInputs {
+                perf_gops: ppa_result.perf_gops,
+                power_mw: ppa_result.power.total(),
+                area_mm2: ppa_result.area.total(),
+                mem_overflow_bytes: mem_overflow,
+                dmem_ok,
+                hazard_score: placement.hazards.score(),
+            },
+        );
+
+        // 8. next state (Table 2)
+        let full_state = state::encode_full(&state::StateInputs {
+            workload: &self.wstats,
+            mesh: &decoded.mesh,
+            avg: &decoded.avg,
+            node: &self.node,
+            budget: &self.budget,
+            placement: &placement,
+            dmem_split: &decoded.dmem_split,
+            ppa: Some(&ppa_result),
+            hazards: &placement.hazards,
+            kv_strategy: decoded.kv_strategy,
+            seq_len: self.seq_len,
+            weight_total_bytes: total_weights,
+            batch_size: self.batch_size,
+        });
+
+        // 9. the mesh walk (Algorithm 1 line 8)
+        self.mesh = decoded.mesh;
+
+        EvalOutcome {
+            decoded,
+            tiles,
+            placement,
+            ppa: ppa_result,
+            reward: rterms,
+            full_state,
+            proj_steps,
+        }
+    }
+
+    fn design_point(
+        &self,
+        decoded: &DecodedAction,
+        placement: &Placement,
+        tiles: &[TileConfig],
+        total_weights: f64,
+    ) -> DesignPoint {
+        let (sum_lanes, sum_lanes_capped) = DesignPoint::lane_sums(tiles);
+        let sram_mb: f64 = tiles.iter().map(|t| t.sram_mb()).sum();
+
+        // pipeline utilization η_util (Eq 63): hazards + memory pressure
+        // + KV spill-to-WMEM latency (§3.9)
+        let hazard = placement.hazards.density();
+        let pressure_excess = mean_pressure_excess(tiles, placement);
+        let spill = kv_spill_fraction(tiles, placement, decoded);
+        let eta_util =
+            (1.0 - 0.35 * hazard - 0.15 * pressure_excess - 0.2 * spill).clamp(0.3, 1.0);
+
+        // per-token memory traffic: full weight sweep + compacted KV
+        // (Eq 33) + cross-tile activations
+        let kv_traffic = match self.graph.kv {
+            Some(kvc) => kv::bytes_per_token(&kvc)
+                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
+            None => 0.0,
+        };
+        let mem_bytes_per_token =
+            total_weights + kv_traffic + placement.traffic.cross_tile_bytes;
+
+        // aggregate bandwidth: two ROM/SRAM ports of VLEN width per tile
+        let f_hz = decoded.avg.clock_mhz * 1e6;
+        let sum_bw_eff: f64 = tiles
+            .iter()
+            .map(|t| 2.0 * (t.vlen_bits as f64 / 8.0) * f_hz)
+            .sum();
+
+        DesignPoint {
+            mesh: decoded.mesh,
+            clock_mhz: decoded.avg.clock_mhz,
+            dflit_bits: decoded.avg.dflit_bits,
+            sum_lanes,
+            sum_lanes_capped,
+            sram_mb,
+            weight_bytes: total_weights,
+            traffic: placement.traffic.clone(),
+            eta_parallel: placement.eta_parallel(),
+            eta_util,
+            alpha_spec: decoded.alpha_spec,
+            flops_per_token: self.graph.flops_per_token_model(),
+            mem_bytes_per_token,
+            sum_bw_eff,
+            activity: decoded.activity,
+        }
+    }
+}
+
+/// Initial mesh m₀(n) of Algorithm 1: sized so the model's weights fit at
+/// mid-range WMEM, clamped to sensible walk-start bounds.
+pub fn initial_mesh(graph: &Graph, mode: &ModeConfig) -> MeshConfig {
+    let weights_mb = graph.total_weight_bytes() / (1024.0 * 1024.0);
+    if mode.clock_mhz_fixed.is_some() {
+        // low-power: start tiny
+        return MeshConfig { width: 2, height: 2, sc_x: 1, sc_y: 1 };
+    }
+    // high-performance: start with ~16 MB of weights per tile
+    let cores = (weights_mb / 16.0).ceil().max(4.0);
+    let side = (cores.sqrt().ceil() as u32).clamp(2, 64);
+    MeshConfig::new(side, side)
+}
+
+fn wmem_overflow(tiles: &[TileConfig], placement: &Placement) -> f64 {
+    let used: Vec<f64> = placement.loads.iter().map(|l| l.weight_bytes).collect();
+    crate::mem::wmem_overflow_bytes(tiles, &used)
+}
+
+/// Eq 27 feasibility: activation working sets must fit the DMEM
+/// input+scratch partitions (≤5% violating tiles tolerated). KV overflow
+/// is NOT an infeasibility — it spills to WMEM at a latency cost (§3.9),
+/// handled by [`kv_spill_fraction`] throttling η_util.
+fn dmem_feasible(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> bool {
+    let mut violations = 0usize;
+    let mut active = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        active += 1;
+        let dmem_bytes = t.dmem_kb as f64 * 1024.0;
+        let usable = dmem_bytes * (d.dmem_split.input_frac + d.dmem_split.scratch_frac());
+        // 4x headroom: moderate overflow streams from producers at a
+        // latency cost (η_util pressure); only hopeless tiles violate
+        if l.act_bytes > usable * 4.0 {
+            violations += 1;
+        }
+    }
+    active == 0 || (violations as f64) / (active as f64) <= 0.05
+}
+
+/// Fraction of active tiles whose KV slice does not fit the DMEM input
+/// partition next to the activations — those slices spill to WMEM and pay
+/// the slower-tier latency (§3.9), throttling η_util.
+fn kv_spill_fraction(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> f64 {
+    let mut spilled = 0usize;
+    let mut active = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        active += 1;
+        let dmem_in = t.dmem_kb as f64 * 1024.0 * d.dmem_split.input_frac;
+        if l.kv_bytes + l.act_bytes * 0.5 > dmem_in {
+            spilled += 1;
+        }
+    }
+    if active == 0 {
+        0.0
+    } else {
+        spilled as f64 / active as f64
+    }
+}
+
+fn mean_pressure_excess(tiles: &[TileConfig], placement: &Placement) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        let p = crate::mem::pressure(
+            l.weight_bytes,
+            t.wmem_kb as f64 * 1024.0,
+            l.act_bytes + l.kv_bytes,
+            t.dmem_kb as f64 * 1024.0,
+        );
+        sum += (p - 1.0).max(0.0);
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    fn small_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.granularity = Granularity::Group;
+        c
+    }
+
+    #[test]
+    fn eval_neutral_action_is_finite_and_consistent() {
+        let mut env = Env::new(&small_cfg(), 3);
+        let out = env.eval_action(&Action::neutral());
+        assert!(out.ppa.tokens_per_s.is_finite() && out.ppa.tokens_per_s > 0.0);
+        assert!(out.ppa.power.total() > 0.0);
+        assert!(out.ppa.area.total() > 0.0);
+        assert!(out.reward.total.is_finite());
+        assert!(out.full_state.iter().all(|v| v.is_finite()));
+        assert_eq!(out.tiles.len(), out.decoded.mesh.cores());
+    }
+
+    #[test]
+    fn mesh_walks_with_deltas() {
+        let mut env = Env::new(&small_cfg(), 7);
+        let w0 = env.mesh.width;
+        let mut a = Action::neutral();
+        a.deltas = [2, 2, 0, 0];
+        env.eval_action(&a);
+        // projection may shrink, but without violation the walk is +2
+        assert!(env.mesh.width >= w0, "{} -> {}", w0, env.mesh.width);
+    }
+
+    #[test]
+    fn smolvlm_low_power_under_budget_at_3nm() {
+        let mut cfg = RunConfig::smolvlm_low_power();
+        cfg.granularity = Granularity::Group;
+        let mut env = Env::new(&cfg, 3);
+        // a power-aware action: small DMEM/IMEM (the RL converges here;
+        // this pins the reachable operating point of Table 19)
+        let mut a = Action::neutral();
+        a.cont[3] = -1.0; // min DMEM
+        a.cont[5] = -0.5; // small IMEM
+        a.cont[19] = 1.0; // spread matmuls wide: smaller per-tile slices
+        let out = env.eval_action(&a);
+        // §4.12: a small mesh at 10 MHz lands in the low-mW regime even
+        // for this hand-built action; the RL search drives it < 13 mW
+        // (validated by bench_nodes' SmolVLM sweep)
+        assert!(
+            out.ppa.power.total() < 16.0,
+            "power {} mW",
+            out.ppa.power.total()
+        );
+        // leakage-dominated at 3nm (paper: 97%)
+        let leak_share = out.ppa.power.leakage / out.ppa.power.total();
+        assert!(leak_share > 0.7, "leak share {leak_share}");
+        assert_eq!(out.decoded.avg.clock_mhz, 10.0);
+    }
+
+    #[test]
+    fn initial_mesh_scales_with_workload() {
+        let llama = crate::ir::llama::build();
+        let smol = crate::ir::smolvlm::build();
+        let hp = ModeConfig::high_performance();
+        let m_l = initial_mesh(&llama, &hp);
+        let m_s = initial_mesh(&smol, &hp);
+        assert!(m_l.cores() > m_s.cores());
+    }
+
+    #[test]
+    fn reward_improves_when_perf_grows_within_budget() {
+        // bigger vlen within budget should not lower reward's perf term
+        let mut env = Env::new(&small_cfg(), 3);
+        let mut small = Action::neutral();
+        small.cont[2] = -1.0; // min vlen
+        let r_small = env.eval_action(&small);
+        let mut env2 = Env::new(&small_cfg(), 3);
+        let mut big = Action::neutral();
+        big.cont[2] = 0.5;
+        let r_big = env2.eval_action(&big);
+        assert!(r_big.ppa.perf_gops > r_small.ppa.perf_gops);
+    }
+
+    #[test]
+    fn state_dims_match_table2() {
+        let mut env = Env::new(&small_cfg(), 3);
+        let out = env.eval_action(&Action::neutral());
+        assert_eq!(out.full_state.len(), 73);
+        let sub = state::sac_subset(&out.full_state);
+        assert_eq!(sub.len(), 52);
+    }
+}

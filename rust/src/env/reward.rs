@@ -1,0 +1,216 @@
+//! Reward function (§3.10, Eqs 34–44 and Table 4).
+//!
+//!   R = α·P_norm − β·P_power − γ·A_norm + B_feasible
+//!       − P_violation − P_memory − P_hazard
+
+use crate::config::NodeBudget;
+use crate::ppa::score::{ppa_score, NormRanges, PpaWeights};
+
+/// Score magnitude s_mag (Table 4's feasibility bonus scale). Kept small
+/// relative to the PPA terms so the Eq 38 power-margin bonus cannot
+/// dominate the performance objective in high-performance mode.
+pub const S_MAG: f64 = 0.25;
+/// λ_mem of Eq 40 (per GB of overflow).
+pub const LAMBDA_MEM: f64 = 0.5;
+/// λ_hazard of Eq 41.
+pub const LAMBDA_HAZARD: f64 = 0.1;
+
+/// Reward terms, kept separate for logging / Table 4 verification.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RewardTerms {
+    pub p_norm: f64,
+    pub p_power: f64,
+    pub a_norm: f64,
+    pub b_feasible: f64,
+    pub p_violation: f64,
+    pub p_memory: f64,
+    pub p_hazard: f64,
+    pub total: f64,
+    pub feasible: bool,
+    /// Lower-is-better composite PPA score (Table 10 column).
+    pub score: f64,
+}
+
+/// Inputs to the reward computation for one evaluated design.
+#[derive(Debug, Clone, Copy)]
+pub struct RewardInputs {
+    pub perf_gops: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+    /// WMEM overflow in bytes (Eq 14 violation; 0 when feasible).
+    pub mem_overflow_bytes: f64,
+    /// DMEM/KV feasibility (Eq 27): true when KV + activations fit.
+    pub dmem_ok: bool,
+    /// Hazard score in [0,1] (Eq 41's TotalHazardScore).
+    pub hazard_score: f64,
+}
+
+/// Normalization ranges from the node budget (§3.10: "derived from
+/// process node characteristics and constraints").
+pub fn ranges_from_budget(b: &NodeBudget) -> NormRanges {
+    NormRanges {
+        perf_min: 0.0,
+        perf_max: b.perf_max_gops,
+        power_min: 0.0,
+        power_max: b.power_budget_mw,
+        area_min: 0.0,
+        area_max: b.area_budget_mm2,
+    }
+}
+
+pub fn compute(w: &PpaWeights, budget: &NodeBudget, inp: &RewardInputs) -> RewardTerms {
+    let ranges = ranges_from_budget(budget);
+    let (alpha, beta, gamma) = w.normalized();
+    let (p_norm, p_power, a_norm) =
+        ranges.normalize(inp.perf_gops, inp.power_mw, inp.area_mm2);
+
+    // --- feasibility: power & area within budget, memory constraints met
+    let power_ok = inp.power_mw <= budget.power_budget_mw;
+    let area_ok = inp.area_mm2 <= budget.area_budget_mm2;
+    let mem_ok = inp.mem_overflow_bytes <= 0.0 && inp.dmem_ok;
+    let feasible = power_ok && area_ok && mem_ok;
+
+    // Eq 38: B = s_mag (1 + m_pwr), m_pwr = (P_budget - P)/P_budget
+    let b_feasible = if feasible {
+        let m_pwr = (budget.power_budget_mw - inp.power_mw) / budget.power_budget_mw;
+        S_MAG * (1.0 + m_pwr)
+    } else {
+        0.0
+    };
+
+    // Eq 39: cubic power-violation penalty
+    let p_violation = if !power_ok {
+        let v = (inp.power_mw - budget.power_budget_mw) / budget.power_budget_mw;
+        S_MAG * (1.0 + v) * v * v
+    } else if !area_ok {
+        // area violation shaped the same way (constraint set of Eq 68)
+        let v = (inp.area_mm2 - budget.area_budget_mm2) / budget.area_budget_mm2;
+        S_MAG * (1.0 + v) * v * v
+    } else {
+        0.0
+    };
+
+    // Eq 40: linear memory-overuse penalty (per GB)
+    let p_memory = LAMBDA_MEM * (inp.mem_overflow_bytes / 1e9).max(0.0)
+        + if inp.dmem_ok { 0.0 } else { 0.25 };
+
+    // Eq 41
+    let p_hazard = LAMBDA_HAZARD * inp.hazard_score.clamp(0.0, 1.0);
+
+    let total = alpha * p_norm - beta * p_power - gamma * a_norm + b_feasible
+        - p_violation
+        - p_memory
+        - p_hazard;
+
+    let score = ppa_score(w, &ranges, inp.perf_gops, inp.power_mw, inp.area_mm2);
+
+    RewardTerms {
+        p_norm,
+        p_power,
+        a_norm,
+        b_feasible,
+        p_violation,
+        p_memory,
+        p_hazard,
+        total,
+        feasible,
+        score,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn budget() -> NodeBudget {
+        NodeBudget {
+            nm: 3,
+            power_budget_mw: 50_000.0,
+            area_budget_mm2: 700.0,
+            perf_max_gops: 3_000_000.0,
+        }
+    }
+
+    fn feasible_inputs() -> RewardInputs {
+        RewardInputs {
+            perf_gops: 400_000.0,
+            power_mw: 45_000.0,
+            area_mm2: 650.0,
+            mem_overflow_bytes: 0.0,
+            dmem_ok: true,
+            hazard_score: 0.1,
+        }
+    }
+
+    #[test]
+    fn feasible_gets_bonus_infeasible_does_not() {
+        let w = PpaWeights::HIGH_PERF;
+        let ok = compute(&w, &budget(), &feasible_inputs());
+        assert!(ok.feasible && ok.b_feasible > S_MAG);
+        let mut bad = feasible_inputs();
+        bad.power_mw = 60_000.0;
+        let r = compute(&w, &budget(), &bad);
+        assert!(!r.feasible && r.b_feasible == 0.0 && r.p_violation > 0.0);
+        assert!(r.total < ok.total);
+    }
+
+    #[test]
+    fn violation_penalty_is_cubic_eq39() {
+        let w = PpaWeights::HIGH_PERF;
+        let mut a = feasible_inputs();
+        a.power_mw = 55_000.0; // v = 0.1
+        let mut b = feasible_inputs();
+        b.power_mw = 60_000.0; // v = 0.2
+        let ra = compute(&w, &budget(), &a);
+        let rb = compute(&w, &budget(), &b);
+        // (1+0.2)*0.04 / (1+0.1)*0.01 ≈ 4.36x
+        let ratio = rb.p_violation / ra.p_violation;
+        assert!((ratio - (1.2 * 0.04) / (1.1 * 0.01)).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn memory_overflow_penalized_linearly_eq40() {
+        let w = PpaWeights::HIGH_PERF;
+        let mut a = feasible_inputs();
+        a.mem_overflow_bytes = 2e9;
+        let r = compute(&w, &budget(), &a);
+        assert!((r.p_memory - 1.0).abs() < 1e-12);
+        assert!(!r.feasible);
+    }
+
+    #[test]
+    fn higher_perf_higher_reward() {
+        let w = PpaWeights::HIGH_PERF;
+        let lo = compute(&w, &budget(), &feasible_inputs());
+        let mut hi_in = feasible_inputs();
+        hi_in.perf_gops *= 2.0;
+        let hi = compute(&w, &budget(), &hi_in);
+        assert!(hi.total > lo.total);
+        assert!(hi.score < lo.score); // lower-is-better score improves too
+    }
+
+    #[test]
+    fn reward_in_typical_table4_range() {
+        let r = compute(&PpaWeights::HIGH_PERF, &budget(), &feasible_inputs());
+        assert!(r.total > -5.0 && r.total < 3.0, "total {}", r.total);
+    }
+
+    #[test]
+    fn power_margin_increases_bonus_eq38() {
+        let w = PpaWeights::HIGH_PERF;
+        let mut frugal = feasible_inputs();
+        frugal.power_mw = 10_000.0;
+        let rf = compute(&w, &budget(), &frugal);
+        let rn = compute(&w, &budget(), &feasible_inputs());
+        assert!(rf.b_feasible > rn.b_feasible);
+    }
+
+    #[test]
+    fn hazard_penalty_scaled_eq41() {
+        let w = PpaWeights::HIGH_PERF;
+        let mut h = feasible_inputs();
+        h.hazard_score = 1.0;
+        let r = compute(&w, &budget(), &h);
+        assert!((r.p_hazard - LAMBDA_HAZARD).abs() < 1e-12);
+    }
+}

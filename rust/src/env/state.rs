@@ -1,0 +1,274 @@
+//! State representation (Table 2): the full 73-dim vector and the 52-dim
+//! optimized subset the SAC actor consumes.
+//!
+//! Every feature is normalized to roughly [0, 1] so the MLP actor sees a
+//! well-conditioned input. The paper does not enumerate which 21 features
+//! are dropped for the 52-dim subset; we drop redundant/static ones
+//! (precision one-hots, port counts, duplicated node id, LLM-config
+//! constants) — the list is pinned in [`SAC_DROPPED`].
+
+use crate::arch::{MeshConfig, TccParams};
+use crate::config::NodeBudget;
+use crate::hazard::HazardStats;
+use crate::ir::stats::WorkloadStats;
+use crate::kv::KvStrategy;
+use crate::mem::DmemSplit;
+use crate::node::NodeSpec;
+use crate::noc::NocModel;
+use crate::partition::Placement;
+use crate::ppa::PpaResult;
+
+pub const FULL_STATE_DIM: usize = 73;
+pub const SAC_STATE_DIM: usize = 52;
+
+/// The 21 feature indices excluded from the SAC subset.
+pub const SAC_DROPPED: [usize; 21] = [
+    10, // imem config (derived per-tile anyway)
+    12, 13, 14, 15, // register/dispatch port counts
+    16, // precision flag (duplicated by dims 59-64)
+    20, // node nm (constant within a node's optimization run)
+    36, // general-partition ratio (≈ constant)
+    44, // per-TCC hazard std
+    49, // sub-matmul knob echo
+    55, // active-fraction duplicate
+    58, // per-tile KV echo
+    59, 60, 61, 62, 63, 64, // precision distribution one-hots
+    70, 71, 72, // LLM config (fixed per run)
+];
+
+/// Everything the encoder reads. Assembled once per episode.
+pub struct StateInputs<'a> {
+    pub workload: &'a WorkloadStats,
+    pub mesh: &'a MeshConfig,
+    pub avg: &'a TccParams,
+    pub node: &'a NodeSpec,
+    pub budget: &'a NodeBudget,
+    pub placement: &'a Placement,
+    pub dmem_split: &'a DmemSplit,
+    pub ppa: Option<&'a PpaResult>,
+    pub hazards: &'a HazardStats,
+    pub kv_strategy: KvStrategy,
+    pub seq_len: u32,
+    pub weight_total_bytes: f64,
+    pub batch_size: u32,
+}
+
+/// Encode the full 73-dim state vector (Table 2 layout).
+pub fn encode_full(inp: &StateInputs) -> [f64; FULL_STATE_DIM] {
+    let mut s = [0.0f64; FULL_STATE_DIM];
+    let w = inp.workload;
+    let mesh = inp.mesh;
+    let avg = inp.avg;
+    let cores = mesh.cores() as f64;
+
+    // --- 0-4 workload
+    s[0] = (w.instr_count.max(1.0).log10() / 10.0).min(1.0);
+    s[1] = (w.ilp / 64.0).min(1.0);
+    s[2] = w.mem_intensity.min(4.0) / 4.0;
+    s[3] = w.vector_util;
+    s[4] = w.matmul_ratio;
+
+    // --- 5-25 configuration (21 dims)
+    s[5] = mesh.width as f64 / 64.0;
+    s[6] = mesh.height as f64 / 64.0;
+    s[7] = mesh.sc_x as f64 / 8.0;
+    s[8] = mesh.sc_y as f64 / 8.0;
+    s[9] = avg.fetch as f64 / 16.0;
+    s[10] = avg.imem_kb as f64 / 128.0;
+    s[11] = avg.stanum as f64 / 32.0;
+    s[12] = avg.xr_wp as f64 / 16.0;
+    s[13] = avg.vr_wp as f64 / 16.0;
+    s[14] = avg.xdpnum as f64 / 16.0;
+    s[15] = avg.vdpnum as f64 / 16.0;
+    s[16] = match avg.precision {
+        crate::arch::Precision::Fp16 => 0.0,
+        crate::arch::Precision::Int8 => 1.0,
+    };
+    s[17] = avg.vlen_bits as f64 / 2048.0;
+    s[18] = avg.dmem_kb as f64 / 1024.0;
+    s[19] = (avg.wmem_kb as f64 / 131_072.0).min(1.0);
+    s[20] = inp.node.nm as f64 / 28.0;
+    s[21] = avg.dflit_bits as f64 / 8192.0;
+    s[22] = cores / 4096.0;
+    s[23] = (inp.weight_total_bytes / (16.0 * (1u64 << 30) as f64)).min(1.0);
+    s[24] = avg.clock_mhz / inp.node.fmax_mhz;
+    s[25] = (inp.placement.n_units as f64 / 8192.0).min(1.0);
+
+    // --- 26-28 DMEM partitioning
+    s[26] = inp.dmem_split.input_frac;
+    s[27] = inp.dmem_split.output_frac;
+    s[28] = inp.dmem_split.scratch_frac();
+
+    // --- 29-32 load distribution
+    let ls = &inp.placement.load_stats;
+    s[29] = ((ls.variance.max(1.0)).log10() / 20.0).min(1.0);
+    s[30] = if ls.max_min_ratio.is_finite() { (ls.max_min_ratio / 10.0).min(1.0) } else { 1.0 };
+    s[31] = ls.balance;
+    s[32] = (ls.mean.max(1.0).log10() / 12.0).min(1.0);
+
+    // --- 33-36 op partitioning (Eq 10-13 realized ratios)
+    s[33] = inp.placement.class_rho[0];
+    s[34] = inp.placement.class_rho[1];
+    s[35] = inp.placement.class_rho[2];
+    s[36] = inp.placement.class_rho.iter().sum::<f64>() / 3.0;
+
+    // --- 37-40 global hazards
+    let hz = inp.hazards;
+    let per_i = |x: f64| if hz.instrs > 0.0 { (x / hz.instrs).min(1.0) } else { 0.0 };
+    s[37] = per_i(hz.raw);
+    s[38] = per_i(hz.war);
+    s[39] = per_i(hz.waw);
+    s[40] = hz.density();
+
+    // --- 41-44 per-TCC hazard aggregates (weighted by per-tile instrs)
+    let (mut hmin, mut hmax, mut hsum, mut hsq) = (f64::INFINITY, 0.0f64, 0.0, 0.0);
+    let mean_instr =
+        inp.placement.loads.iter().map(|l| l.instrs).sum::<f64>() / cores.max(1.0);
+    for l in &inp.placement.loads {
+        let d = hz.density() * (l.instrs / mean_instr.max(1.0)).min(2.0);
+        hmin = hmin.min(d);
+        hmax = hmax.max(d);
+        hsum += d;
+        hsq += d * d;
+    }
+    let hmean = hsum / cores.max(1.0);
+    s[41] = hmean.min(1.0);
+    s[42] = hmax.min(1.0);
+    s[43] = if hmin.is_finite() { hmin.min(1.0) } else { 0.0 };
+    s[44] = (hsq / cores.max(1.0) - hmean * hmean).max(0.0).sqrt().min(1.0);
+
+    // --- 45 frequency
+    s[45] = avg.clock_mhz / inp.node.fmax_mhz;
+
+    // --- 46-49 streaming / pipeline
+    s[46] = inp.placement.traffic.cross_tile_bytes.max(1.0).log10() / 12.0;
+    s[47] = (inp.placement.traffic.mean_hops() / 40.0).min(1.0);
+    s[48] = (avg.fetch as f64 * avg.vdpnum as f64 / 64.0).min(1.0);
+    s[49] = (inp.placement.traffic.n_transfers as f64 / 1e5).min(1.0);
+
+    // --- 50-54 PPA observation (surrogate feedback)
+    if let Some(p) = inp.ppa {
+        s[50] = (p.power.total() / inp.budget.power_budget_mw).min(2.0) / 2.0;
+        s[51] = (p.perf_gops / inp.budget.perf_max_gops).min(1.0);
+        s[52] = (p.area.total() / inp.budget.area_budget_mm2).min(2.0) / 2.0;
+        s[53] = (p.tokens_per_s.max(1.0).log10() / 6.0).min(1.0);
+        s[54] = (p.perf_gops / p.power.total().max(1e-9) / 20.0).min(1.0);
+    }
+
+    // --- 55-58 workload partition statistics
+    let active = inp.placement.loads.iter().filter(|l| l.flops > 0.0).count() as f64;
+    s[55] = active / cores.max(1.0);
+    let wmax = inp.placement.loads.iter().map(|l| l.weight_bytes).fold(0.0, f64::max);
+    s[56] = if wmax > 0.0 {
+        inp.placement.loads.iter().map(|l| l.weight_bytes).sum::<f64>()
+            / (wmax * cores.max(1.0))
+    } else {
+        0.0
+    };
+    s[57] = ls.balance;
+    s[58] = (inp.placement.loads.iter().map(|l| l.act_bytes).fold(0.0, f64::max)
+        / (1024.0 * 1024.0))
+        .min(1.0);
+
+    // --- 59-64 precision distribution (fp32, fp16, bf16, fp8, int8, mixed)
+    match avg.precision {
+        crate::arch::Precision::Fp16 => s[60] = 1.0,
+        crate::arch::Precision::Int8 => s[63] = 1.0,
+    }
+
+    // --- 65-66 instruction type ratios
+    s[65] = w.scalar_ratio;
+    s[66] = w.vector_ratio;
+
+    // --- 67-69 SC topology
+    let noc = NocModel { mesh: *mesh, dflit_bits: avg.dflit_bits, clock_mhz: avg.clock_mhz };
+    s[67] = active / 4096.0;
+    s[68] = (noc.mean_hops_effective() / 40.0).min(1.0);
+    s[69] = (noc.mean_latency_s() * 1e7).min(1.0);
+
+    // --- 70-72 LLM config
+    s[70] = inp.batch_size as f64 / 8.0;
+    s[71] = match inp.kv_strategy {
+        KvStrategy::Full => 0.0,
+        KvStrategy::Quantized { .. } => 0.25,
+        KvStrategy::Window { .. } => 0.5,
+        KvStrategy::QuantizedWindow { .. } => 0.75,
+        KvStrategy::Paged { .. } => 1.0,
+    };
+    s[72] = 1.0 / crate::kv::compaction_factor(inp.kv_strategy, inp.seq_len);
+
+    s
+}
+
+/// Index of a full-state feature within the 52-dim SAC subset, or None
+/// if dropped. Used by the MPC planner to read the PPA-observation dims
+/// (50–54) out of world-model predicted states.
+pub fn subset_index(full_idx: usize) -> Option<usize> {
+    if SAC_DROPPED.contains(&full_idx) {
+        return None;
+    }
+    Some(full_idx - SAC_DROPPED.iter().filter(|&&d| d < full_idx).count())
+}
+
+/// Project the full state onto the 52-dim SAC subset.
+pub fn sac_subset(full: &[f64; FULL_STATE_DIM]) -> [f32; SAC_STATE_DIM] {
+    let mut out = [0.0f32; SAC_STATE_DIM];
+    let mut j = 0;
+    for (i, &v) in full.iter().enumerate() {
+        if !SAC_DROPPED.contains(&i) {
+            out[j] = v as f32;
+            j += 1;
+        }
+    }
+    debug_assert_eq!(j, SAC_STATE_DIM);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropped_list_is_consistent() {
+        assert_eq!(SAC_DROPPED.len(), FULL_STATE_DIM - SAC_STATE_DIM);
+        let mut sorted = SAC_DROPPED.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 21, "duplicate indices in SAC_DROPPED");
+        assert!(sorted.iter().all(|&i| i < FULL_STATE_DIM));
+    }
+
+    #[test]
+    fn subset_index_round_trips() {
+        let mut full = [0.0f64; FULL_STATE_DIM];
+        for (i, v) in full.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        let sub = sac_subset(&full);
+        for i in 0..FULL_STATE_DIM {
+            match subset_index(i) {
+                Some(j) => assert_eq!(sub[j] as usize, i),
+                None => assert!(SAC_DROPPED.contains(&i)),
+            }
+        }
+        // PPA observation dims survive the subset (MPC depends on them)
+        for i in 50..=54 {
+            assert!(subset_index(i).is_some(), "dim {i} dropped");
+        }
+    }
+
+    #[test]
+    fn subset_extraction_preserves_order() {
+        let mut full = [0.0f64; FULL_STATE_DIM];
+        for (i, v) in full.iter_mut().enumerate() {
+            *v = i as f64;
+        }
+        let sub = sac_subset(&full);
+        assert_eq!(sub.len(), 52);
+        // first kept index is 0, values strictly increasing
+        assert_eq!(sub[0], 0.0);
+        for w in sub.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

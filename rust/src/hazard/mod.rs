@@ -1,0 +1,158 @@
+//! Data-hazard modeling (state dims 37–44, reward term Eq 41).
+//!
+//! The paper feeds global and per-TCC RAW/WAR/WAW statistics into the
+//! state vector so the policy is biased "away from stall-heavy
+//! configurations" (§5.1). We estimate hazard densities from each op's
+//! instruction mix and the microarchitecture's capacity to hide them:
+//! reservation stations (STANUM) resolve RAW chains, register write
+//! ports relieve WAR/WAW pressure, and deeper FETCH exposes more
+//! in-flight instructions (slightly raising all three).
+
+use crate::ir::{Op, OpKind};
+
+/// Raw per-kind hazard propensities (hazards per instruction before
+/// microarchitectural mitigation). Long dependent chains (norm, softmax,
+/// rope) are RAW-heavy; matmuls with many independent MACs are not.
+fn base_rates(kind: OpKind) -> (f64, f64, f64) {
+    match kind {
+        OpKind::MatMul | OpKind::Conv => (0.08, 0.03, 0.02),
+        OpKind::Norm | OpKind::Softmax | OpKind::Reduce => (0.35, 0.08, 0.05),
+        OpKind::Rope | OpKind::Elementwise => (0.25, 0.06, 0.04),
+        OpKind::KvUpdate | OpKind::Embed => (0.12, 0.10, 0.08),
+        OpKind::Reshape | OpKind::Other => (0.05, 0.02, 0.02),
+    }
+}
+
+/// RAW/WAR/WAW statistics for one instruction stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HazardStats {
+    pub raw: f64,
+    pub war: f64,
+    pub waw: f64,
+    /// Instructions the stats were accumulated over.
+    pub instrs: f64,
+}
+
+impl HazardStats {
+    pub fn accumulate(&mut self, other: &HazardStats) {
+        self.raw += other.raw;
+        self.war += other.war;
+        self.waw += other.waw;
+        self.instrs += other.instrs;
+    }
+
+    /// Hazards per instruction in [0,1] — the density used by the
+    /// heterogeneous FETCH derivation and the state encoder.
+    pub fn density(&self) -> f64 {
+        if self.instrs <= 0.0 {
+            return 0.0;
+        }
+        ((self.raw + self.war + self.waw) / self.instrs).min(1.0)
+    }
+
+    /// TotalHazardScore of Eq 41, normalized to [0,1].
+    pub fn score(&self) -> f64 {
+        self.density()
+    }
+}
+
+/// Microarchitecture parameters that mitigate hazards.
+#[derive(Debug, Clone, Copy)]
+pub struct Mitigation {
+    pub stanum: u32,
+    pub fetch: u32,
+    pub xr_wp: u32,
+    pub vr_wp: u32,
+}
+
+/// Estimate hazards for `op` on a TCC with the given mitigation.
+pub fn estimate_op(op: &Op, m: &Mitigation) -> HazardStats {
+    let (raw0, war0, waw0) = base_rates(op.kind);
+    // reservation stations hide RAW latency: 1 station leaves it all,
+    // 32 stations hide ~90%
+    let raw_hide = 1.0 / (1.0 + (m.stanum as f64 - 1.0) * 0.28);
+    // write ports relieve WAR/WAW (renaming pressure)
+    let ports = (m.xr_wp + m.vr_wp) as f64;
+    let wx_hide = 1.0 / (1.0 + (ports - 2.0).max(0.0) * 0.20);
+    // wider fetch exposes more in-flight hazards
+    let fetch_amp = 1.0 + (m.fetch as f64).log2() * 0.06;
+    HazardStats {
+        raw: op.instrs * raw0 * raw_hide * fetch_amp,
+        war: op.instrs * war0 * wx_hide * fetch_amp,
+        waw: op.instrs * waw0 * wx_hide * fetch_amp,
+        instrs: op.instrs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Op;
+
+    fn op(kind: OpKind, instrs: f64) -> Op {
+        Op {
+            id: 0,
+            kind,
+            layer: 0,
+            flops: 0.0,
+            weight_bytes: 0.0,
+            out_bytes: 0.0,
+            inputs: vec![],
+            instrs,
+        }
+    }
+
+    fn mit(stanum: u32, fetch: u32, ports: u32) -> Mitigation {
+        Mitigation { stanum, fetch, xr_wp: ports, vr_wp: ports }
+    }
+
+    #[test]
+    fn more_stations_fewer_raw_hazards() {
+        let o = op(OpKind::Norm, 1000.0);
+        let few = estimate_op(&o, &mit(1, 4, 2));
+        let many = estimate_op(&o, &mit(32, 4, 2));
+        assert!(many.raw < few.raw * 0.25, "{} vs {}", many.raw, few.raw);
+    }
+
+    #[test]
+    fn more_ports_fewer_war_waw() {
+        let o = op(OpKind::KvUpdate, 1000.0);
+        let few = estimate_op(&o, &mit(4, 4, 1));
+        let many = estimate_op(&o, &mit(4, 4, 8));
+        assert!(many.war < few.war);
+        assert!(many.waw < few.waw);
+    }
+
+    #[test]
+    fn wider_fetch_amplifies() {
+        let o = op(OpKind::Elementwise, 1000.0);
+        let narrow = estimate_op(&o, &mit(4, 1, 2));
+        let wide = estimate_op(&o, &mit(4, 16, 2));
+        assert!(wide.raw > narrow.raw);
+    }
+
+    #[test]
+    fn chain_ops_hazard_heavier_than_matmul() {
+        let m = mit(4, 4, 2);
+        let mm = estimate_op(&op(OpKind::MatMul, 1000.0), &m);
+        let norm = estimate_op(&op(OpKind::Norm, 1000.0), &m);
+        assert!(norm.density() > mm.density());
+    }
+
+    #[test]
+    fn density_bounded_unit() {
+        let m = mit(1, 16, 1);
+        let s = estimate_op(&op(OpKind::Softmax, 10.0), &m);
+        assert!(s.density() <= 1.0 && s.density() >= 0.0);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let m = mit(4, 4, 2);
+        let mut acc = HazardStats::default();
+        acc.accumulate(&estimate_op(&op(OpKind::Norm, 500.0), &m));
+        acc.accumulate(&estimate_op(&op(OpKind::MatMul, 500.0), &m));
+        assert_eq!(acc.instrs, 1000.0);
+        assert!(acc.raw > 0.0);
+    }
+}

@@ -1,0 +1,217 @@
+//! Workload IR — the operator graph the compiler partitions onto the mesh.
+//!
+//! The paper ingests ONNX (Llama 3.1 8B Instruct FP16: 7,489 graph
+//! operators, 291 weight tensors, 14.96 GB; SmolVLM: 0.48 GB). We have no
+//! ONNX models in this environment, so [`llama`] and [`smolvlm`] generate
+//! graphs with the paper's exact statistics from the published
+//! architectures (DESIGN.md §4 substitution table) — the optimizer only
+//! consumes per-op FLOPs/bytes/dependencies and aggregate statistics, all
+//! of which are architecture-derived.
+
+pub mod llama;
+pub mod smolvlm;
+pub mod stats;
+
+
+
+/// Operator kind; determines the partitioning class of §3.5 (Eq 10) and
+/// the instruction mix used for hazard statistics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Dense matrix multiply (projections, attention scores, LM head).
+    MatMul,
+    /// Convolution (vision encoders).
+    Conv,
+    /// Normalization (RMSNorm / LayerNorm micro-ops).
+    Norm,
+    Softmax,
+    /// Rotary position embedding micro-ops.
+    Rope,
+    /// Pointwise arithmetic (add/mul/silu/gelu...).
+    Elementwise,
+    /// Shape plumbing (reshape/transpose/concat/split); ~zero FLOPs.
+    Reshape,
+    /// KV-cache append (bandwidth, no FLOPs).
+    KvUpdate,
+    /// Embedding gather.
+    Embed,
+    Reduce,
+    Other,
+}
+
+impl OpKind {
+    /// Partitioning class of Eq 10: MatMul / Conv / general.
+    pub fn partition_class(self) -> PartitionClass {
+        match self {
+            OpKind::MatMul => PartitionClass::MatMul,
+            OpKind::Conv => PartitionClass::Conv,
+            _ => PartitionClass::General,
+        }
+    }
+
+    /// Fraction of this op's instructions that are vector (vs scalar);
+    /// feeds state dims 65–66 (Table 2 "Instruction Type").
+    pub fn vector_fraction(self) -> f64 {
+        match self {
+            OpKind::MatMul | OpKind::Conv => 0.95,
+            OpKind::Norm | OpKind::Softmax | OpKind::Reduce => 0.80,
+            OpKind::Elementwise | OpKind::Rope => 0.85,
+            OpKind::KvUpdate | OpKind::Embed => 0.60,
+            OpKind::Reshape | OpKind::Other => 0.10,
+        }
+    }
+}
+
+/// §3.5 operation classes for the RL-controlled partitioning ratios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionClass {
+    MatMul,
+    Conv,
+    General,
+}
+
+pub type OpId = u32;
+
+/// One graph operator with per-decoded-token costs.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: OpKind,
+    /// Transformer layer index, or -1 for global (embed/head) ops.
+    pub layer: i32,
+    /// FLOPs per decoded token (multiply-accumulate = 2 FLOPs).
+    pub flops: f64,
+    /// Resident weight bytes (FP16) this op owns in WMEM.
+    pub weight_bytes: f64,
+    /// Activation bytes produced per token (tensor-interface pressure).
+    pub out_bytes: f64,
+    /// Producer operators whose outputs this op consumes.
+    pub inputs: Vec<OpId>,
+    /// Static instruction count estimate (for hazard/IMEM modeling).
+    pub instrs: f64,
+}
+
+/// A whole workload graph.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub ops: Vec<Op>,
+    /// Number of distinct weight (initializer) tensors — Table 8's 291.
+    pub weight_tensors: usize,
+    /// Graph interface tensors (Table 8's 66 / 65).
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+    /// Transformer config needed by the KV model (Eq 25).
+    pub kv: Option<KvConfig>,
+    /// Total parameter count (for FLOPs-per-token, Eq 21 denominator).
+    pub params: f64,
+    /// Decode-active FLOP fraction φ_decode (≈0.97 for GQA models).
+    pub phi_decode: f64,
+}
+
+/// KV-cache relevant architecture constants (Eq 25).
+#[derive(Debug, Clone, Copy)]
+pub struct KvConfig {
+    pub n_layers: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    /// Bytes per element of the KV cache (2 for FP16).
+    pub elem_bytes: u32,
+}
+
+impl Graph {
+    pub fn total_weight_bytes(&self) -> f64 {
+        self.ops.iter().map(|o| o.weight_bytes).sum()
+    }
+
+    pub fn total_flops_per_token(&self) -> f64 {
+        self.ops.iter().map(|o| o.flops).sum()
+    }
+
+    pub fn total_instrs(&self) -> f64 {
+        self.ops.iter().map(|o| o.instrs).sum()
+    }
+
+    /// FLOPs per generated token per the paper's throughput model:
+    /// 2 · P_total · φ_decode (§3.8).
+    pub fn flops_per_token_model(&self) -> f64 {
+        2.0 * self.params * self.phi_decode
+    }
+
+    /// Validate structural invariants (DAG, edges in range, costs finite).
+    pub fn validate(&self) -> Result<(), String> {
+        for op in &self.ops {
+            for &inp in &op.inputs {
+                if inp >= op.id {
+                    return Err(format!(
+                        "op {} consumes {} (not topologically ordered)",
+                        op.id, inp
+                    ));
+                }
+            }
+            if !op.flops.is_finite() || op.flops < 0.0 {
+                return Err(format!("op {} has bad flops {}", op.id, op.flops));
+            }
+            if !op.weight_bytes.is_finite() || op.weight_bytes < 0.0 {
+                return Err(format!("op {} has bad weight bytes", op.id));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_classes() {
+        assert_eq!(OpKind::MatMul.partition_class(), PartitionClass::MatMul);
+        assert_eq!(OpKind::Conv.partition_class(), PartitionClass::Conv);
+        assert_eq!(OpKind::Softmax.partition_class(), PartitionClass::General);
+    }
+
+    #[test]
+    fn vector_fraction_in_unit_interval() {
+        for k in [
+            OpKind::MatMul,
+            OpKind::Conv,
+            OpKind::Norm,
+            OpKind::Softmax,
+            OpKind::Rope,
+            OpKind::Elementwise,
+            OpKind::Reshape,
+            OpKind::KvUpdate,
+            OpKind::Embed,
+            OpKind::Reduce,
+            OpKind::Other,
+        ] {
+            let f = k.vector_fraction();
+            assert!((0.0..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn validate_catches_forward_edges() {
+        let g = Graph {
+            name: "bad".into(),
+            ops: vec![Op {
+                id: 0,
+                kind: OpKind::Other,
+                layer: -1,
+                flops: 0.0,
+                weight_bytes: 0.0,
+                out_bytes: 0.0,
+                inputs: vec![5],
+                instrs: 0.0,
+            }],
+            weight_tensors: 0,
+            n_inputs: 0,
+            n_outputs: 0,
+            kv: None,
+            params: 0.0,
+            phi_decode: 1.0,
+        };
+        assert!(g.validate().is_err());
+    }
+}

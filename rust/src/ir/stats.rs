@@ -1,0 +1,127 @@
+//! Aggregate workload statistics feeding the state vector (Table 2 dims
+//! 0–4, 59–66) and the model-characteristics report (Table 9).
+
+use super::{Graph, OpKind, PartitionClass};
+
+#[derive(Debug, Clone)]
+pub struct WorkloadStats {
+    /// Total static instruction count (Table 9: 597 M for Llama).
+    pub instr_count: f64,
+    /// Instruction-level parallelism estimate: ops per critical-path step.
+    pub ilp: f64,
+    /// Memory intensity: bytes moved per FLOP.
+    pub mem_intensity: f64,
+    /// Vector utilization: vector instruction fraction weighted by instrs.
+    pub vector_util: f64,
+    /// Fraction of FLOPs in MatMul ops (state dim 4).
+    pub matmul_ratio: f64,
+    /// Comm-to-computation ratio ρ_comm (Eq 20).
+    pub rho_comm: f64,
+    /// FLOP share per partition class (drives Eq 10 effectiveness).
+    pub class_flops: [f64; 3],
+    /// Scalar/vector instruction ratios (state dims 65–66).
+    pub scalar_ratio: f64,
+    pub vector_ratio: f64,
+}
+
+/// Critical-path length (longest chain) via one topological sweep.
+pub fn critical_path_len(g: &Graph) -> usize {
+    let mut depth = vec![0usize; g.ops.len()];
+    let mut max_d = 0;
+    for op in &g.ops {
+        let d = op
+            .inputs
+            .iter()
+            .map(|&i| depth[i as usize] + 1)
+            .max()
+            .unwrap_or(0);
+        depth[op.id as usize] = d;
+        max_d = max_d.max(d);
+    }
+    max_d + 1
+}
+
+pub fn compute(g: &Graph) -> WorkloadStats {
+    let instr_count = g.total_instrs();
+    let total_flops = g.total_flops_per_token().max(1.0);
+    let total_bytes: f64 = g
+        .ops
+        .iter()
+        .map(|o| o.out_bytes + o.weight_bytes.min(o.weight_bytes)) // weights read once/token
+        .sum();
+    let cp = critical_path_len(g).max(1);
+    let ilp = g.ops.len() as f64 / cp as f64;
+
+    let mut vec_instr = 0.0;
+    let mut class_flops = [0.0f64; 3];
+    let mut edge_bytes = 0.0;
+    for op in &g.ops {
+        vec_instr += op.instrs * op.kind.vector_fraction();
+        let c = match op.kind.partition_class() {
+            PartitionClass::MatMul => 0,
+            PartitionClass::Conv => 1,
+            PartitionClass::General => 2,
+        };
+        class_flops[c] += op.flops;
+        // Eq 20 numerator: tensor bytes crossing graph edges
+        edge_bytes += op.out_bytes * op.inputs.len().max(1) as f64;
+    }
+    let matmul_flops: f64 = g
+        .ops
+        .iter()
+        .filter(|o| o.kind == OpKind::MatMul)
+        .map(|o| o.flops)
+        .sum();
+
+    WorkloadStats {
+        instr_count,
+        ilp,
+        mem_intensity: total_bytes / total_flops,
+        vector_util: vec_instr / instr_count.max(1.0),
+        matmul_ratio: matmul_flops / total_flops,
+        rho_comm: edge_bytes / total_flops,
+        class_flops,
+        scalar_ratio: 1.0 - vec_instr / instr_count.max(1.0),
+        vector_ratio: vec_instr / instr_count.max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::{llama, smolvlm};
+
+    #[test]
+    fn llama_stats_shape() {
+        let g = llama::build();
+        let s = super::compute(&g);
+        assert!(s.matmul_ratio > 0.9, "matmul ratio {}", s.matmul_ratio);
+        assert!(s.ilp > 1.0, "ilp {}", s.ilp);
+        assert!(s.vector_util > 0.3 && s.vector_util < 1.0);
+        assert!(s.rho_comm > 0.0 && s.rho_comm < 1.0);
+        assert!((s.scalar_ratio + s.vector_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn llama_is_memory_dominated() {
+        // §4.3: "strongly memory-dominated" — weight bytes per token are
+        // on the same order as FLOPs (FP16 read per MAC pair).
+        let g = llama::build();
+        let s = super::compute(&g);
+        assert!(s.mem_intensity > 0.5, "intensity {}", s.mem_intensity);
+    }
+
+    #[test]
+    fn smolvlm_has_conv_flops() {
+        let g = smolvlm::build();
+        let s = super::compute(&g);
+        assert!(s.class_flops[1] > 0.0, "conv flops missing");
+    }
+
+    #[test]
+    fn critical_path_is_reasonable() {
+        let g = llama::build();
+        let cp = super::critical_path_len(&g);
+        // 32 layers x ~50 sequential micro-ops each
+        assert!(cp > 500 && cp < 7489, "cp {cp}");
+    }
+}

@@ -1,0 +1,144 @@
+//! KV-cache management and compaction (§3.9): footprint (Eqs 25–26), DMEM
+//! pressure (Eqs 27–28), quantized / sliding-window / paged compaction
+//! (Eqs 29–32), and the throughput-model traffic relief (Eq 33).
+
+
+
+use crate::ir::KvConfig;
+
+/// KV compaction strategy selected by the compiler (LLM Config state
+/// dims 70–72 carry the chosen strategy + compression).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KvStrategy {
+    /// Full-precision contiguous cache.
+    Full,
+    /// Quantized cache (Eq 29): INT8 or INT4 with per-head scales.
+    Quantized { bits: u8 },
+    /// Sliding-window eviction (Eq 30) with mean window W̄.
+    Window { tokens: u32 },
+    /// Quantized + windowed (the κ of Eq 32 multiplies).
+    QuantizedWindow { bits: u8, tokens: u32 },
+    /// Paged allocation (Eq 31) — same footprint, less fragmentation.
+    Paged { page_kb: u32 },
+}
+
+/// Eq 25: bytes per token = 2 · n_L · n_kv · d_h · elem_bytes.
+pub fn bytes_per_token(kv: &KvConfig) -> f64 {
+    2.0 * kv.n_layers as f64 * kv.n_kv_heads as f64 * kv.head_dim as f64
+        * kv.elem_bytes as f64
+}
+
+/// Eq 32: compaction factor κ = (b_orig/b_quant) · (L/W̄).
+pub fn compaction_factor(strategy: KvStrategy, seq_len: u32) -> f64 {
+    match strategy {
+        KvStrategy::Full | KvStrategy::Paged { .. } => 1.0,
+        KvStrategy::Quantized { bits } => 16.0 / bits as f64,
+        KvStrategy::Window { tokens } => {
+            seq_len as f64 / (tokens.min(seq_len) as f64)
+        }
+        KvStrategy::QuantizedWindow { bits, tokens } => {
+            (16.0 / bits as f64) * (seq_len as f64 / tokens.min(seq_len) as f64)
+        }
+    }
+}
+
+/// Eq 26 with compaction: total KV footprint at sequence length L.
+pub fn total_bytes(kv: &KvConfig, seq_len: u32, strategy: KvStrategy) -> f64 {
+    seq_len as f64 * bytes_per_token(kv) / compaction_factor(strategy, seq_len)
+}
+
+/// Eq 31: page count for paged allocation.
+pub fn n_pages(kv: &KvConfig, seq_len: u32, page_kb: u32) -> u64 {
+    let total = total_bytes(kv, seq_len, KvStrategy::Full);
+    (total / (page_kb as f64 * 1024.0)).ceil() as u64
+}
+
+/// Eq 27 LHS: required DMEM-input bytes per KV-hosting tile.
+pub fn dmem_in_required(
+    kv: &KvConfig,
+    seq_len: u32,
+    strategy: KvStrategy,
+    n_active_tiles: usize,
+    act_input_bytes: f64,
+) -> f64 {
+    total_bytes(kv, seq_len, strategy) / n_active_tiles.max(1) as f64 + act_input_bytes
+}
+
+/// Eq 33: per-token memory traffic after compaction.
+pub fn compacted_traffic(bytes_per_tok: f64, kv: &KvConfig, strategy: KvStrategy, seq_len: u32) -> f64 {
+    let kappa = compaction_factor(strategy, seq_len);
+    bytes_per_tok - (1.0 - 1.0 / kappa) * bytes_per_token(kv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn llama_kv() -> KvConfig {
+        KvConfig { n_layers: 32, n_kv_heads: 8, head_dim: 128, elem_bytes: 2 }
+    }
+
+    #[test]
+    fn eq25_gives_128kb_per_token() {
+        assert_eq!(bytes_per_token(&llama_kv()), 131072.0);
+    }
+
+    #[test]
+    fn eq26_gives_256mb_at_2048() {
+        let total = total_bytes(&llama_kv(), 2048, KvStrategy::Full);
+        assert_eq!(total, 268_435_456.0); // 256 MiB
+    }
+
+    #[test]
+    fn int8_halves_int4_quarters() {
+        let kv = llama_kv();
+        let full = total_bytes(&kv, 2048, KvStrategy::Full);
+        assert_eq!(total_bytes(&kv, 2048, KvStrategy::Quantized { bits: 8 }), full / 2.0);
+        assert_eq!(total_bytes(&kv, 2048, KvStrategy::Quantized { bits: 4 }), full / 4.0);
+    }
+
+    #[test]
+    fn paper_example_kappa_4x() {
+        // §3.9: INT8 + 1024-token window at L=2048 gives κ=4 (256→64 MB)
+        let k = compaction_factor(
+            KvStrategy::QuantizedWindow { bits: 8, tokens: 1024 },
+            2048,
+        );
+        assert_eq!(k, 4.0);
+        let total = total_bytes(&llama_kv(), 2048, KvStrategy::QuantizedWindow { bits: 8, tokens: 1024 });
+        assert_eq!(total, 67_108_864.0); // 64 MiB
+    }
+
+    #[test]
+    fn window_larger_than_seq_is_noop() {
+        assert_eq!(compaction_factor(KvStrategy::Window { tokens: 4096 }, 2048), 1.0);
+    }
+
+    #[test]
+    fn paging_preserves_footprint() {
+        let kv = llama_kv();
+        assert_eq!(
+            total_bytes(&kv, 2048, KvStrategy::Paged { page_kb: 64 }),
+            total_bytes(&kv, 2048, KvStrategy::Full)
+        );
+        // 256 MiB / 64 KiB pages = 4096 pages
+        assert_eq!(n_pages(&kv, 2048, 64), 4096);
+    }
+
+    #[test]
+    fn eq33_traffic_relief() {
+        let kv = llama_kv();
+        let b_tok = 1e6;
+        let relieved = compacted_traffic(b_tok, &kv, KvStrategy::Quantized { bits: 8 }, 2048);
+        assert!((relieved - (b_tok - 0.5 * 131072.0)).abs() < 1e-6);
+        // no compaction => unchanged
+        assert_eq!(compacted_traffic(b_tok, &kv, KvStrategy::Full, 2048), b_tok);
+    }
+
+    #[test]
+    fn dmem_requirement_splits_across_tiles() {
+        let kv = llama_kv();
+        let req = dmem_in_required(&kv, 2048, KvStrategy::Full, 1024, 8192.0);
+        assert!((req - (268_435_456.0 / 1024.0 + 8192.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,36 @@
+//! silicon-rl — RL-driven ASIC architecture exploration for on-device AI
+//! inference.
+//!
+//! Reproduction of "From LLM to Silicon: RL-Driven ASIC Architecture
+//! Exploration for On-Device AI Inference" (Ganti & Xu, CS.AR 2026).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * **L3 (this crate)** — the coordinator: workload IR, analytical PPA
+//!   models, operator partitioning, the MDP environment, and the SAC +
+//!   PER + world-model/MPC optimization loop of Algorithm 1.
+//! * **L2/L1 (build-time Python)** — JAX networks built on a Pallas fused
+//!   linear kernel, AOT-lowered to HLO text in `artifacts/` and executed
+//!   here through the PJRT CPU client ([`runtime`]). Python never runs on
+//!   the optimization path.
+//!
+//! Entry points: [`rl::loop_::run_node`] optimizes one process node per
+//! Algorithm 1; [`report`] regenerates every table/figure of the paper's
+//! evaluation section.
+
+pub mod arch;
+pub mod artifacts_out;
+pub mod config;
+pub mod env;
+pub mod hazard;
+pub mod ir;
+pub mod kv;
+pub mod mem;
+pub mod nn;
+pub mod noc;
+pub mod node;
+pub mod partition;
+pub mod ppa;
+pub mod report;
+pub mod rl;
+pub mod runtime;
+pub mod util;

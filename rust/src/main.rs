@@ -1,0 +1,270 @@
+//! silicon-rl — CLI leader for the RL-driven ASIC architecture explorer.
+//!
+//! Subcommands:
+//!   optimize  [key=value ...]  — run Algorithm 1 over the configured
+//!                                nodes; emit per-node design artifacts,
+//!                                convergence traces and all report tables
+//!   baselines [key=value ...]  — SAC vs random vs grid (Table 21)
+//!   report    [key=value ...]  — workload statistics (Tables 8/9)
+//!   info                       — runtime/platform/manifest diagnostics
+//!
+//! Config keys (see config::RunConfig::apply): workload=llama|smolvlm,
+//! mode=hp|lp, nodes=3,5,..., episodes=N, warmup=N, seed=N,
+//! granularity=op|group, kv=..., out_dir=..., artifacts_dir=...
+//!
+//! (The image vendors no CLI crate; parsing is a ~40-line hand-rolled
+//! key=value scheme — DESIGN.md §4.)
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use silicon_rl::artifacts_out;
+use silicon_rl::config::RunConfig;
+use silicon_rl::report::{self, NodeSummary};
+use silicon_rl::rl::{self, baselines, SacAgent};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_config(args: &[String]) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    // allow `mode=lp` to swap the whole profile first
+    if args.iter().any(|a| a == "mode=lp" || a == "mode=low-power") {
+        cfg = RunConfig::smolvlm_low_power();
+    }
+    for a in args {
+        if let Some(path) = a.strip_prefix("config=") {
+            cfg.load_file(path).map_err(anyhow::Error::msg)?;
+            continue;
+        }
+        let (k, v) = a
+            .split_once('=')
+            .with_context(|| format!("expected key=value, got {a}"))?;
+        if k == "mode" {
+            continue; // handled above
+        }
+        cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+    }
+    Ok(cfg)
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "optimize" => optimize(&args[1..]),
+        "baselines" => run_baselines(&args[1..]),
+        "seeds" => run_multiseed(&args[1..]),
+        "report" => workload_report(&args[1..]),
+        "info" => info(&args[1..]),
+        "help" | "--help" | "-h" => {
+            println!(
+                "silicon-rl — RL-driven ASIC architecture exploration\n\n\
+                 usage: silicon-rl <optimize|baselines|seeds|report|info> [key=value ...]\n\
+                 keys:  workload=llama|smolvlm mode=hp|lp nodes=3,5,7 episodes=N\n\
+                 \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
+                 \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE"
+            );
+            Ok(())
+        }
+        other => bail!("unknown command {other} (try `silicon-rl help`)"),
+    }
+}
+
+/// Full Algorithm 1 run: one shared agent, sequential nodes (Eq 50).
+fn optimize(args: &[String]) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let out_dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "platform={} entrypoints={} stores={}",
+        runtime.platform(),
+        runtime.manifest.entrypoints.len(),
+        runtime.manifest.stores.len()
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    println!(
+        "parameter store: {} arrays, {} elements",
+        agent.store.data.len(),
+        agent.store.total_elems()
+    );
+
+    let mut results: Vec<rl::NodeResult> = Vec::new();
+    for &nm in &cfg.nodes_nm {
+        let t0 = std::time::Instant::now();
+        let result = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        let dt = t0.elapsed().as_secs_f64();
+        match &result.best {
+            Some(b) => {
+                let o = &b.outcome;
+                println!(
+                    "{nm:>2}nm: best ep {:>5}  mesh {}x{}  {:>9.0} tok/s  {:>8.0} mW  {:>7.0} mm2  score {:.3}  ({:.1}s, {} feasible/{})",
+                    b.episode,
+                    o.decoded.mesh.width,
+                    o.decoded.mesh.height,
+                    o.ppa.tokens_per_s,
+                    o.ppa.power.total(),
+                    o.ppa.area.total(),
+                    o.reward.score,
+                    dt,
+                    result.feasible_count,
+                    result.total_episodes,
+                );
+                artifacts_out::write_node_artifacts(out_dir, nm, o)?;
+            }
+            None => println!("{nm:>2}nm: NO feasible configuration found"),
+        }
+        report::convergence_csv(&result.episodes)
+            .write_csv(&out_dir.join(format!("fig3_convergence_{nm}nm.csv")))?;
+        results.push(result);
+    }
+
+    emit_reports(&cfg, &results, out_dir)
+}
+
+fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> Result<()> {
+    let rows: Vec<NodeSummary> =
+        results.iter().filter_map(NodeSummary::from_result).collect();
+    if rows.is_empty() {
+        bail!("no node produced a feasible design; nothing to report");
+    }
+
+    let tables = [
+        ("table10_nodes.csv", report::nodes_table(&rows)),
+        ("table12_power.csv", report::power_breakdown(&rows)),
+        ("table13_scaling.csv", report::scaling_analysis(&rows)),
+        ("table18_efficiency.csv", report::efficiency_table(&rows)),
+        ("table14_run_stats.csv", report::run_stats(results, cfg.mode.name)),
+        ("table20_industry.csv", report::industry_comparison(rows.first())),
+    ];
+    for (file, t) in &tables {
+        println!("\n{}", t.to_text());
+        t.write_csv(&out_dir.join(file))?;
+    }
+
+    // Table 15/16 + Fig 10-12a from the best node's tile artifacts
+    if let Some(best) = results
+        .iter()
+        .filter(|r| r.best.is_some())
+        .min_by(|a, b| {
+            a.best_outcome().reward.score.total_cmp(&b.best_outcome().reward.score)
+        })
+    {
+        let o = best.best_outcome();
+        let t15 = report::tile_regions(&o.decoded.mesh, &o.tiles);
+        let t16 = report::tile_param_summary(&o.tiles);
+        println!("{}", t15.to_text());
+        println!("{}", t16.to_text());
+        t15.write_csv(&out_dir.join("table15_regions.csv"))?;
+        t16.write_csv(&out_dir.join("table16_tiles.csv"))?;
+    }
+
+    // Table 17 / Fig 12b: best (highest-throughput) vs oldest node
+    if rows.len() >= 2 {
+        let best = rows
+            .iter()
+            .max_by(|a, b| a.tokens_per_s.total_cmp(&b.tokens_per_s))
+            .unwrap();
+        let worst = rows.iter().max_by(|a, b| a.nm.cmp(&b.nm)).unwrap();
+        let t17 = report::cross_node_compare(best, worst);
+        println!("{}", t17.to_text());
+        t17.write_csv(&out_dir.join("table17_compare.csv"))?;
+    }
+    println!("reports written to {}", out_dir.display());
+    Ok(())
+}
+
+/// Table 21: SAC vs random vs grid under the same episode budget.
+fn run_baselines(args: &[String]) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let nm = *cfg.nodes_nm.first().context("need at least one node")?;
+    let out_dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+
+    let mut rng = Rng::new(cfg.seed);
+    println!("random search @ {nm}nm ({} episodes)...", cfg.rl.episodes_per_node);
+    let rand_r = baselines::random_search(&cfg, nm, &mut rng.fork(1));
+    println!("grid search @ {nm}nm...");
+    let grid_r = baselines::grid_search(&cfg, nm, &mut rng.fork(2));
+
+    println!("SAC @ {nm}nm...");
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    let sac_r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+
+    let t = report::search_comparison(&[
+        ("Random Search", &rand_r),
+        ("Grid Search", &grid_r),
+        ("SAC (ours)", &sac_r),
+    ]);
+    println!("\n{}", t.to_text());
+    t.write_csv(&out_dir.join("table21_search.csv"))?;
+    Ok(())
+}
+
+/// Repeated-seed evaluation (§5.5 future work): random-search across N
+/// derived seeds, reporting mean ± 95% CI per node. (SAC multi-seed runs
+/// go through `optimize seed=...` per seed; this gives the fast
+/// search-variance picture the paper calls for.)
+fn run_multiseed(args: &[String]) -> Result<()> {
+    let mut n_seeds = 5usize;
+    let mut rest = Vec::new();
+    for a in args {
+        if let Some(v) = a.strip_prefix("n_seeds=") {
+            n_seeds = v.parse().context("bad n_seeds")?;
+        } else {
+            rest.push(a.clone());
+        }
+    }
+    let cfg = parse_config(&rest)?;
+    let mut results = Vec::new();
+    for &nm in &cfg.nodes_nm {
+        results.push(rl::run_seeds(&cfg, nm, n_seeds, |c, nm, rng| {
+            baselines::random_search(c, nm, rng)
+        }));
+    }
+    let t = rl::seeds_table(&results);
+    println!("{}", t.to_text());
+    std::fs::create_dir_all(&cfg.out_dir)?;
+    t.write_csv(&Path::new(&cfg.out_dir).join("multiseed.csv"))?;
+    Ok(())
+}
+
+/// Tables 8/9 from the workload generators (no RL run needed).
+fn workload_report(args: &[String]) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let g = cfg.workload.build();
+    println!("{}", report::model_stats(&g).to_text());
+    let stats = silicon_rl::ir::stats::compute(&g);
+    println!(
+        "ilp={:.1} mem_intensity={:.2} vector_util={:.2} matmul_ratio={:.3} rho_comm={:.4}",
+        stats.ilp, stats.mem_intensity, stats.vector_util, stats.matmul_ratio, stats.rho_comm
+    );
+    Ok(())
+}
+
+fn info(args: &[String]) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    println!("platform: {}", runtime.platform());
+    println!("hyper: {:?}", runtime.manifest.hyper);
+    for (name, ep) in &runtime.manifest.entrypoints {
+        println!(
+            "  {name}: {} inputs, {} outputs ({})",
+            ep.inputs.len(),
+            ep.outputs.len(),
+            ep.file
+        );
+    }
+    Ok(())
+}

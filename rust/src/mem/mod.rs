@@ -1,0 +1,147 @@
+//! Memory hierarchy model (§3.6): WMEM capacity constraint (Eq 14), DMEM
+//! partitioning (Eq 15), effective bandwidth (Eq 16), and the tile-level
+//! memory-pressure score (Eq 17) that enters the state vector.
+
+use crate::arch::TileConfig;
+
+/// λ_d of Eq 17: data-memory pressure weight relative to weight memory.
+pub const LAMBDA_D: f64 = 0.5;
+
+/// DMEM split into input/output/scratch buffers (Eq 15). Fractions are
+/// RL-controlled (Memory/Load Partition action group) and sum to ≤ 1.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DmemSplit {
+    pub input_frac: f64,
+    pub output_frac: f64,
+}
+
+impl DmemSplit {
+    pub fn new(input_frac: f64, output_frac: f64) -> Self {
+        // guarantee a minimum scratch allocation (Eq 28)
+        let input_frac = input_frac.clamp(0.05, 0.85);
+        let output_frac = output_frac.clamp(0.05, 0.9 - input_frac);
+        DmemSplit { input_frac, output_frac }
+    }
+
+    pub fn scratch_frac(&self) -> f64 {
+        1.0 - self.input_frac - self.output_frac
+    }
+
+    /// Byte capacities (input, output, scratch) for a tile's DMEM.
+    pub fn capacities(&self, dmem_bytes: f64) -> (f64, f64, f64) {
+        (
+            dmem_bytes * self.input_frac,
+            dmem_bytes * self.output_frac,
+            dmem_bytes * self.scratch_frac(),
+        )
+    }
+}
+
+/// Eq 14: Σ WMEM_i ≥ W_total — can the mesh hold the model at all?
+pub fn wmem_feasible(tiles: &[TileConfig], total_weight_bytes: f64) -> bool {
+    let cap: f64 = tiles.iter().map(|t| t.wmem_kb as f64 * 1024.0).sum();
+    cap >= total_weight_bytes
+}
+
+/// Total WMEM overflow in bytes (0 when feasible) — drives P_mem (Eq 40).
+pub fn wmem_overflow_bytes(tiles: &[TileConfig], used_per_tile: &[f64]) -> f64 {
+    tiles
+        .iter()
+        .zip(used_per_tile)
+        .map(|(t, &used)| (used - t.wmem_kb as f64 * 1024.0).max(0.0))
+        .sum()
+}
+
+/// Eq 16: BW_eff = min(BW_pk, V / (C · T_clk)).
+/// `volume_bytes` over `cycles` at `clock_mhz` against peak `bw_pk_bytes`.
+pub fn effective_bandwidth(
+    bw_pk_bytes: f64,
+    volume_bytes: f64,
+    cycles: f64,
+    clock_mhz: f64,
+) -> f64 {
+    if cycles <= 0.0 {
+        return bw_pk_bytes;
+    }
+    let t_clk = 1.0 / (clock_mhz * 1e6);
+    bw_pk_bytes.min(volume_bytes / (cycles * t_clk))
+}
+
+/// Eq 17: P_i = W_used/W_alloc + λ_d · D_used/D_alloc.
+pub fn pressure(w_used: f64, w_alloc: f64, d_used: f64, d_alloc: f64) -> f64 {
+    let w = if w_alloc > 0.0 { w_used / w_alloc } else { 0.0 };
+    let d = if d_alloc > 0.0 { d_used / d_alloc } else { 0.0 };
+    w + LAMBDA_D * d
+}
+
+/// Peak per-tile SRAM bandwidth (bytes/s): `ports` concurrent accesses of
+/// VLEN bits per cycle.
+pub fn tile_peak_bw(vlen_bits: u32, ports: u32, clock_mhz: f64) -> f64 {
+    (vlen_bits as f64 / 8.0) * ports as f64 * clock_mhz * 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::TileConfig;
+
+    fn tile(wmem_kb: u32) -> TileConfig {
+        TileConfig {
+            tile: 0,
+            x: 0,
+            y: 0,
+            fetch: 4,
+            vlen_bits: 1024,
+            stanum: 4,
+            dmem_kb: 64,
+            wmem_kb,
+            imem_kb: 8,
+        }
+    }
+
+    #[test]
+    fn dmem_split_preserves_scratch() {
+        let s = DmemSplit::new(0.9, 0.9);
+        assert!(s.scratch_frac() >= 0.1 - 1e-12);
+        let (i, o, sc) = s.capacities(1024.0);
+        assert!((i + o + sc - 1024.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wmem_feasibility_eq14() {
+        let tiles: Vec<_> = (0..4).map(|_| tile(1024)).collect(); // 4 MB total
+        assert!(wmem_feasible(&tiles, 3.0 * 1024.0 * 1024.0));
+        assert!(!wmem_feasible(&tiles, 5.0 * 1024.0 * 1024.0));
+    }
+
+    #[test]
+    fn overflow_accumulates_only_deficits() {
+        let tiles = vec![tile(1), tile(1)]; // 1 KB each
+        let used = vec![2048.0, 512.0];
+        assert_eq!(wmem_overflow_bytes(&tiles, &used), 1024.0);
+    }
+
+    #[test]
+    fn effective_bw_is_min_of_peak_and_demand() {
+        // demand-limited
+        let bw = effective_bandwidth(1e12, 1e6, 1000.0, 1000.0);
+        assert!((bw - 1e6 / (1000.0 * 1e-9)).abs() / bw < 1e-12);
+        // peak-limited
+        let bw2 = effective_bandwidth(1e9, 1e9, 10.0, 1000.0);
+        assert_eq!(bw2, 1e9);
+    }
+
+    #[test]
+    fn pressure_eq17() {
+        let p = pressure(800.0, 1000.0, 400.0, 1000.0);
+        assert!((p - (0.8 + 0.5 * 0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_bw_scales_with_ports() {
+        assert_eq!(
+            tile_peak_bw(1024, 2, 1000.0),
+            2.0 * tile_peak_bw(1024, 1, 1000.0)
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Host-side neural-network state: the parameter store (weights, Adam
+//! moments, Polyak targets, entropy temperature — all named per the
+//! manifest) and the sampling heads that turn actor outputs into actions.
+//!
+//! All the math (forward passes, gradients, Adam) runs inside the
+//! AOT-lowered HLO modules; this module owns the *data* between calls and
+//! the RNG-dependent sampling (kept Rust-side so seeds live in one place).
+
+pub mod policy;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::{InitKind, Manifest};
+use crate::util::Rng;
+
+/// Named flat-f32 parameter store.
+#[derive(Debug, Clone, Default)]
+pub struct Store {
+    pub data: BTreeMap<String, Vec<f32>>,
+    pub shapes: BTreeMap<String, Vec<usize>>,
+}
+
+impl Store {
+    /// Initialize every entry per the manifest recipes (He for GELU-trunk
+    /// weights, zeros for biases/moments, const for log α, copies for the
+    /// Polyak targets). Deterministic under `rng`'s seed.
+    pub fn from_manifest(m: &Manifest, rng: &mut Rng) -> Result<Store> {
+        let mut store = Store::default();
+        // two passes: non-copies first so copy sources exist
+        for pass in 0..2 {
+            for si in &m.stores {
+                let is_copy = matches!(si.init, InitKind::Copy(_));
+                if (pass == 0) == is_copy {
+                    continue;
+                }
+                let n: usize = si.shape.iter().product::<usize>().max(1);
+                let data = match &si.init {
+                    InitKind::Zeros => vec![0.0; n],
+                    InitKind::Const(c) => vec![*c as f32; n],
+                    InitKind::He => {
+                        let fan_in = si.shape.first().copied().unwrap_or(1).max(1);
+                        let std = (2.0 / fan_in as f64).sqrt();
+                        (0..n).map(|_| (rng.gaussian() * std) as f32).collect()
+                    }
+                    InitKind::Copy(src) => match store.data.get(src) {
+                        Some(v) => v.clone(),
+                        None => bail!("copy source {src} missing for {}", si.name),
+                    },
+                };
+                store.shapes.insert(si.name.clone(), si.shape.clone());
+                store.data.insert(si.name.clone(), data);
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[f32]> {
+        self.data.get(name).map(|v| v.as_slice())
+    }
+
+    /// Write back an updated array (size must match the existing entry).
+    pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
+        match self.data.get_mut(name) {
+            Some(slot) => {
+                if slot.len() != data.len() {
+                    bail!("store {name}: size {} != {}", data.len(), slot.len());
+                }
+                *slot = data;
+                Ok(())
+            }
+            None => bail!("store {name}: unknown entry"),
+        }
+    }
+
+    /// Resolver closure for runtime calls: maps `state/<k>` to store
+    /// entries and everything else to the provided batch map.
+    pub fn resolver<'a>(
+        &'a self,
+        batch: &'a BTreeMap<String, Vec<f32>>,
+    ) -> impl FnMut(&str) -> Option<Vec<f32>> + 'a {
+        move |name: &str| {
+            if let Some(k) = name.strip_prefix("state/") {
+                return self.data.get(k).cloned();
+            }
+            if let Some(k) = name.strip_prefix("batch/") {
+                return batch.get(k).cloned().or_else(|| batch.get(name).cloned());
+            }
+            // pure-forward entrypoints use bare store names + call args
+            self.data.get(name).cloned().or_else(|| batch.get(name).cloned())
+        }
+    }
+
+    /// Apply entrypoint outputs: `state/<k>` entries write back to the
+    /// store; the rest (metrics) are returned to the caller.
+    pub fn absorb(
+        &mut self,
+        outputs: Vec<(String, Vec<f32>)>,
+    ) -> Result<BTreeMap<String, Vec<f32>>> {
+        let mut rest = BTreeMap::new();
+        for (name, data) in outputs {
+            if let Some(k) = name.strip_prefix("state/") {
+                self.set(k, data)?;
+            } else {
+                rest.insert(name, data);
+            }
+        }
+        Ok(rest)
+    }
+
+    /// Total parameter count (diagnostics; paper §5.3 "under 100 K
+    /// weights" for the policy network).
+    pub fn total_elems(&self) -> usize {
+        self.data.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    const SAMPLE: &str = r#"{
+      "entrypoints": {},
+      "stores": {
+        "actor/W1": {"shape": [52, 256], "init": "he"},
+        "actor/b1": {"shape": [256], "init": "zeros"},
+        "t1/W1": {"shape": [52, 256], "init": "copy:actor/W1"},
+        "log_alpha": {"shape": [], "init": "const:-1.6094379"}
+      },
+      "hyper": {}
+    }"#;
+
+    fn store() -> Store {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        Store::from_manifest(&m, &mut Rng::new(1)).unwrap()
+    }
+
+    #[test]
+    fn init_recipes_applied() {
+        let s = store();
+        let w = s.get("actor/W1").unwrap();
+        assert_eq!(w.len(), 52 * 256);
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        assert!(mean.abs() < 0.01, "he mean {mean}");
+        // he std ~ sqrt(2/52) = 0.196
+        let var: f32 = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        assert!((var.sqrt() - 0.196).abs() < 0.02, "std {}", var.sqrt());
+        assert!(s.get("actor/b1").unwrap().iter().all(|&x| x == 0.0));
+        assert_eq!(s.get("t1/W1").unwrap(), s.get("actor/W1").unwrap());
+        assert!((s.get("log_alpha").unwrap()[0] - (-1.6094379)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = Store::from_manifest(&m, &mut Rng::new(7)).unwrap();
+        let b = Store::from_manifest(&m, &mut Rng::new(7)).unwrap();
+        let c = Store::from_manifest(&m, &mut Rng::new(8)).unwrap();
+        assert_eq!(a.get("actor/W1"), b.get("actor/W1"));
+        assert_ne!(a.get("actor/W1"), c.get("actor/W1"));
+    }
+
+    #[test]
+    fn resolver_prefix_rules() {
+        let s = store();
+        let mut batch = BTreeMap::new();
+        batch.insert("s".to_string(), vec![1.0f32; 52]);
+        let mut r = s.resolver(&batch);
+        assert!(r("state/actor/W1").is_some());
+        assert!(r("actor/W1").is_some());
+        assert!(r("s").is_some());
+        assert!(r("state/nope").is_none());
+    }
+
+    #[test]
+    fn absorb_writes_back_state_and_returns_metrics() {
+        let mut s = store();
+        let out = vec![
+            ("state/actor/b1".to_string(), vec![1.0f32; 256]),
+            ("metrics/td_abs".to_string(), vec![0.5f32; 4]),
+        ];
+        let rest = s.absorb(out).unwrap();
+        assert_eq!(s.get("actor/b1").unwrap()[0], 1.0);
+        assert_eq!(rest["metrics/td_abs"], vec![0.5f32; 4]);
+    }
+
+    #[test]
+    fn set_rejects_shape_mismatch() {
+        let mut s = store();
+        assert!(s.set("actor/b1", vec![0.0; 3]).is_err());
+        assert!(s.set("unknown", vec![0.0; 3]).is_err());
+    }
+}

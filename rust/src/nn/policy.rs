@@ -1,0 +1,183 @@
+//! Sampling heads (§3.4.1): tanh-squashed Gaussian continuous actions,
+//! categorical mesh/SC deltas, and ε-greedy uniform exploration. RNG stays
+//! Rust-side; the HLO actor only produces (μ, logσ, discrete logits).
+
+use crate::env::{Action, ACT_DIM, DISC_OPTIONS, N_DISC};
+use crate::util::Rng;
+
+/// Sample a = tanh(μ + σ·ε) per continuous dim (Eq 8 analogue with tanh
+/// squashing per §3.11).
+pub fn sample_continuous(mu: &[f32], log_std: &[f32], rng: &mut Rng) -> [f64; ACT_DIM] {
+    debug_assert_eq!(mu.len(), ACT_DIM);
+    let mut out = [0.0; ACT_DIM];
+    for i in 0..ACT_DIM {
+        let std = (log_std[i] as f64).exp();
+        out[i] = (mu[i] as f64 + std * rng.gaussian()).tanh();
+    }
+    out
+}
+
+/// Deterministic (exploitation) continuous head: tanh(μ).
+pub fn mean_continuous(mu: &[f32]) -> [f64; ACT_DIM] {
+    let mut out = [0.0; ACT_DIM];
+    for i in 0..ACT_DIM {
+        out[i] = (mu[i] as f64).tanh();
+    }
+    out
+}
+
+/// Sample the 4 mesh/SC deltas from categorical distributions over the
+/// 20 discrete logits (Eqs 6–7). Returns (deltas, one-hot encoding).
+pub fn sample_discrete(logits: &[f32], rng: &mut Rng) -> ([i32; N_DISC], [f32; 20]) {
+    debug_assert_eq!(logits.len(), N_DISC * DISC_OPTIONS);
+    let mut deltas = [0i32; N_DISC];
+    let mut onehot = [0f32; 20];
+    for d in 0..N_DISC {
+        let ls = &logits[d * DISC_OPTIONS..(d + 1) * DISC_OPTIONS];
+        let probs = softmax(ls);
+        let opt = rng.categorical(&probs);
+        deltas[d] = Action::delta_from_option(opt);
+        onehot[d * DISC_OPTIONS + opt] = 1.0;
+    }
+    (deltas, onehot)
+}
+
+/// Greedy (argmax) discrete head.
+pub fn argmax_discrete(logits: &[f32]) -> ([i32; N_DISC], [f32; 20]) {
+    let mut deltas = [0i32; N_DISC];
+    let mut onehot = [0f32; 20];
+    for d in 0..N_DISC {
+        let ls = &logits[d * DISC_OPTIONS..(d + 1) * DISC_OPTIONS];
+        let opt = ls
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(2);
+        deltas[d] = Action::delta_from_option(opt);
+        onehot[d * DISC_OPTIONS + opt] = 1.0;
+    }
+    (deltas, onehot)
+}
+
+/// Uniform random action (Algorithm 1's ε branch).
+pub fn uniform_action(rng: &mut Rng) -> Action {
+    let mut a = Action::neutral();
+    for v in a.cont.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    for d in a.deltas.iter_mut() {
+        *d = rng.below(DISC_OPTIONS) as i32 - 2;
+    }
+    a
+}
+
+/// One-hot for an already-chosen delta vector (for replay storage).
+pub fn onehot_from_deltas(deltas: &[i32; N_DISC]) -> [f32; 20] {
+    let mut onehot = [0f32; 20];
+    for (d, &delta) in deltas.iter().enumerate() {
+        let opt = (delta + 2).clamp(0, 4) as usize;
+        onehot[d * DISC_OPTIONS + opt] = 1.0;
+    }
+    onehot
+}
+
+fn softmax(xs: &[f32]) -> Vec<f64> {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = xs.iter().map(|&x| ((x as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.into_iter().map(|e| e / z).collect()
+}
+
+/// Policy-entropy estimate from log-stds (diagnostic for Fig 3's entropy
+/// stabilization trace): Gaussian entropy Σ (logσ + ½log(2πe)).
+pub fn gaussian_entropy(log_std: &[f32]) -> f64 {
+    let c = 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E).ln();
+    log_std.iter().map(|&l| l as f64 + c).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn continuous_samples_bounded() {
+        let mut rng = Rng::new(1);
+        let mu = vec![0.0f32; ACT_DIM];
+        let ls = vec![0.0f32; ACT_DIM];
+        for _ in 0..100 {
+            let a = sample_continuous(&mu, &ls, &mut rng);
+            assert!(a.iter().all(|v| v.abs() <= 1.0));
+        }
+    }
+
+    #[test]
+    fn zero_std_recovers_mean() {
+        let mut rng = Rng::new(2);
+        let mu = vec![0.5f32; ACT_DIM];
+        let ls = vec![-20.0f32; ACT_DIM]; // σ ≈ 0
+        let a = sample_continuous(&mu, &ls, &mut rng);
+        for v in a {
+            assert!((v - 0.5f64.tanh()).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn discrete_sampling_respects_logits() {
+        let mut rng = Rng::new(3);
+        // option 4 (delta +2) overwhelmingly likely for head 0
+        let mut logits = vec![0.0f32; 20];
+        logits[4] = 20.0;
+        let mut count_plus2 = 0;
+        for _ in 0..200 {
+            let (d, oh) = sample_discrete(&logits, &mut rng);
+            if d[0] == 2 {
+                count_plus2 += 1;
+            }
+            // one-hot is valid: exactly one per head
+            for h in 0..N_DISC {
+                let s: f32 = oh[h * 5..h * 5 + 5].iter().sum();
+                assert_eq!(s, 1.0);
+            }
+        }
+        assert!(count_plus2 > 190, "{count_plus2}");
+    }
+
+    #[test]
+    fn argmax_discrete_deterministic() {
+        let mut logits = vec![0.0f32; 20];
+        logits[0] = 5.0; // head 0 -> option 0 -> delta -2
+        logits[9] = 5.0; // head 1 -> option 4 -> delta +2
+        let (d, _) = argmax_discrete(&logits);
+        assert_eq!(d[0], -2);
+        assert_eq!(d[1], 2);
+    }
+
+    #[test]
+    fn uniform_action_in_bounds() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let a = uniform_action(&mut rng);
+            assert!(a.cont.iter().all(|v| v.abs() <= 1.0));
+            assert!(a.deltas.iter().all(|d| (-2..=2).contains(d)));
+        }
+    }
+
+    #[test]
+    fn onehot_round_trip() {
+        let deltas = [-2, 0, 1, 2];
+        let oh = onehot_from_deltas(&deltas);
+        assert_eq!(oh[0], 1.0); // head0 option 0
+        assert_eq!(oh[5 + 2], 1.0); // head1 option 2
+        assert_eq!(oh[10 + 3], 1.0);
+        assert_eq!(oh[15 + 4], 1.0);
+        assert_eq!(oh.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn entropy_monotone_in_sigma() {
+        let lo = gaussian_entropy(&vec![-2.0f32; 30]);
+        let hi = gaussian_entropy(&vec![0.0f32; 30]);
+        assert!(hi > lo);
+    }
+}

@@ -1,0 +1,168 @@
+//! Network-on-Chip model (§3.7): bisection bandwidth (Eq 18), hop/latency
+//! model (Eq 19), communication-to-computation ratio (Eq 20), and the
+//! per-token cross-tile traffic accounting the partitioner feeds into the
+//! power and throughput models.
+
+use crate::arch::MeshConfig;
+
+/// NoC-level configuration + derived metrics for one candidate design.
+#[derive(Debug, Clone)]
+pub struct NocModel {
+    pub mesh: MeshConfig,
+    pub dflit_bits: u32,
+    pub clock_mhz: f64,
+}
+
+/// Per-hop latency in cycles and routing setup overhead (Eq 19 constants).
+pub const L_HOP_CYCLES: f64 = 1.0;
+pub const L_SETUP_CYCLES: f64 = 3.0;
+
+impl NocModel {
+    /// Bisection bandwidth in bytes/s (Eq 18):
+    /// BW = min(M,N) · W_DFLIT · f_node.
+    pub fn bisection_bw_bytes(&self) -> f64 {
+        let links = self.mesh.width.min(self.mesh.height) as f64;
+        links * (self.dflit_bits as f64 / 8.0) * self.clock_mhz * 1e6
+    }
+
+    /// Mean hop count h̄ = (M+N)/3 (Eq 19). Sub-cluster express links
+    /// shorten long paths: effective hops divide by the SC overlay factor
+    /// for the inter-cluster fraction of the route.
+    pub fn mean_hops_effective(&self) -> f64 {
+        let base = self.mesh.mean_hops();
+        let sc = (self.mesh.sc_x.max(1) * self.mesh.sc_y.max(1)) as f64;
+        // express links cover ~half of an average route when SC > 1
+        if sc > 1.0 {
+            base * (0.5 + 0.5 / sc.sqrt())
+        } else {
+            base
+        }
+    }
+
+    /// Mean NoC transfer latency in seconds for one flit-sized message
+    /// (Eq 19: L = h̄ · L_hop + L_setup).
+    pub fn mean_latency_s(&self) -> f64 {
+        let cycles = self.mean_hops_effective() * L_HOP_CYCLES + L_SETUP_CYCLES;
+        cycles / (self.clock_mhz * 1e6)
+    }
+
+    /// Per-link bandwidth (bytes/s) — used for hot-link saturation checks.
+    pub fn link_bw_bytes(&self) -> f64 {
+        (self.dflit_bits as f64 / 8.0) * self.clock_mhz * 1e6
+    }
+}
+
+/// Cross-tile traffic accounting accumulated during placement.
+#[derive(Debug, Clone, Default)]
+pub struct TrafficStats {
+    /// Total tensor bytes crossing tile boundaries per token.
+    pub cross_tile_bytes: f64,
+    /// Bytes × hops per token (energy integral for Eq 62's NoC term).
+    pub byte_hops: f64,
+    /// Bytes crossing the mesh bisection per token (Eq 23 denominator).
+    pub bisection_bytes: f64,
+    /// Number of cross-tile tensor transfers.
+    pub n_transfers: u64,
+}
+
+impl TrafficStats {
+    /// Record a `bytes`-sized transfer over `hops` mesh hops, of which
+    /// `crosses_bisection` says whether the route crosses the mesh midline.
+    pub fn record(&mut self, bytes: f64, hops: u32, crosses_bisection: bool) {
+        if hops == 0 {
+            return; // same-tile: stays in DMEM
+        }
+        self.cross_tile_bytes += bytes;
+        self.byte_hops += bytes * hops as f64;
+        if crosses_bisection {
+            self.bisection_bytes += bytes;
+        }
+        self.n_transfers += 1;
+    }
+
+    pub fn mean_hops(&self) -> f64 {
+        if self.cross_tile_bytes <= 0.0 {
+            0.0
+        } else {
+            self.byte_hops / self.cross_tile_bytes
+        }
+    }
+}
+
+/// Communication-to-computation ratio ρ_comm (Eq 20).
+pub fn rho_comm(edge_tensor_bytes: f64, total_flops: f64) -> f64 {
+    edge_tensor_bytes / total_flops.max(1.0)
+}
+
+/// Does the route between tiles `a` and `b` cross the vertical bisection
+/// of the mesh (for Eq 23's cross-bisection byte counting)?
+pub fn crosses_bisection(mesh: &MeshConfig, a: usize, b: usize) -> bool {
+    let half = mesh.width / 2;
+    let ax = a as u32 % mesh.width;
+    let bx = b as u32 % mesh.width;
+    (ax < half) != (bx < half)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bisection_bw_eq18() {
+        let noc = NocModel {
+            mesh: MeshConfig::new(41, 42),
+            dflit_bits: 2048,
+            clock_mhz: 1000.0,
+        };
+        // min(41,42) * 256 B * 1e9 Hz = 10.496 TB/s
+        let bw = noc.bisection_bw_bytes();
+        assert!((bw - 41.0 * 256.0 * 1e9).abs() / bw < 1e-12);
+    }
+
+    #[test]
+    fn latency_grows_with_mesh() {
+        let small = NocModel { mesh: MeshConfig::new(4, 4), dflit_bits: 512, clock_mhz: 500.0 };
+        let big = NocModel { mesh: MeshConfig::new(40, 40), dflit_bits: 512, clock_mhz: 500.0 };
+        assert!(big.mean_latency_s() > small.mean_latency_s());
+    }
+
+    #[test]
+    fn sc_overlay_reduces_hops() {
+        let mut m = MeshConfig::new(30, 30);
+        m.sc_x = 1;
+        m.sc_y = 1;
+        let flat = NocModel { mesh: m, dflit_bits: 512, clock_mhz: 500.0 };
+        let mut m2 = MeshConfig::new(30, 30);
+        m2.sc_x = 4;
+        m2.sc_y = 4;
+        let clustered = NocModel { mesh: m2, dflit_bits: 512, clock_mhz: 500.0 };
+        assert!(clustered.mean_hops_effective() < flat.mean_hops_effective());
+        assert!(clustered.mean_hops_effective() >= flat.mean_hops_effective() * 0.5);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut t = TrafficStats::default();
+        t.record(100.0, 0, false); // same tile: ignored
+        t.record(100.0, 2, false);
+        t.record(50.0, 4, true);
+        assert_eq!(t.cross_tile_bytes, 150.0);
+        assert_eq!(t.byte_hops, 400.0);
+        assert_eq!(t.bisection_bytes, 50.0);
+        assert_eq!(t.n_transfers, 2);
+        assert!((t.mean_hops() - 400.0 / 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bisection_detection() {
+        let mesh = MeshConfig::new(4, 4);
+        assert!(crosses_bisection(&mesh, 0, 3)); // x=0 -> x=3
+        assert!(!crosses_bisection(&mesh, 0, 1)); // x=0 -> x=1 (same half)
+        assert!(!crosses_bisection(&mesh, 2, 3));
+    }
+
+    #[test]
+    fn rho_comm_eq20() {
+        assert!((rho_comm(1e6, 1e9) - 1e-3).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,211 @@
+//! The calibrated node table.
+//!
+//! Every constant below is inverted from the paper's reported results
+//! (DESIGN.md §6 shows the derivations):
+//! * `fmax_mhz` — §3.15's clock pins (1 GHz @3nm … 250 MHz @28nm).
+//! * `mac_energy_pj` — Table 12 compute power / (cores·lanes·f):
+//!   0.166 pJ/FP16-MAC at 3nm rising to 0.91 pJ at 28nm.
+//! * `sram_dyn_mw_per_core_ghz` — Table 12 SRAM column per core-GHz.
+//! * `rom_read_mw_per_mb_at_fmax` — Table 12 ROM-read column / 14,960 MB.
+//! * `noc_hop_pj_per_bit` — Table 12 NoC column / (traffic · mean hops).
+//! * `sram_leak_mw_per_mb` — Table 12 leakage / total SRAM MB; highest at
+//!   advanced nodes (the §4.12 leakage-vs-density trade-off).
+//! * `area_scale` — Table 10 area column solved against logic+ROM+SRAM.
+
+
+
+use crate::util::lerp;
+
+/// The 7 process nodes evaluated in the paper (§4.1).
+pub const PAPER_NODES_NM: [u32; 7] = [3, 5, 7, 10, 14, 22, 28];
+
+/// Electrical/physical characterization of one process node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Feature size in nm.
+    pub nm: u32,
+    /// Maximum achievable clock (MHz); the RL pins to this in
+    /// high-performance mode (§3.15).
+    pub fmax_mhz: f64,
+    /// Nominal supply voltage (V).
+    pub vdd: f64,
+    /// Energy per FP16 multiply-accumulate (pJ).
+    pub mac_energy_pj: f64,
+    /// SRAM dynamic read/write power per core per GHz of clock (mW).
+    pub sram_dyn_mw_per_core_ghz: f64,
+    /// Weight-ROM read power per MB of model weights at fmax (mW/MB);
+    /// scales linearly with f/fmax (Eq 62's W_total·E_dyn·α term).
+    pub rom_read_mw_per_mb_at_fmax: f64,
+    /// NoC wire+router energy per bit per mesh hop (pJ).
+    pub noc_hop_pj_per_bit: f64,
+    /// SRAM peripheral leakage per MB (mW). ROM has sleep transistors on
+    /// the Vdd rail (§3.15) and does not leak.
+    pub sram_leak_mw_per_mb: f64,
+    /// Logic/memory area scale factor relative to 3nm (=1.0 at 3nm).
+    pub area_scale: f64,
+    /// Fixed per-core logic area at 3nm density (mm²): scalar pipeline,
+    /// fetch, reservation stations.
+    pub core_base_mm2: f64,
+    /// Incremental logic area per FP16 vector lane at 3nm density (mm²).
+    pub lane_mm2: f64,
+    /// Weight-ROM density at 3nm (mm²/MB), scaled by `area_scale`.
+    pub rom_mm2_per_mb: f64,
+    /// SRAM density at 3nm (mm²/MB), scaled by `area_scale`.
+    pub sram_mm2_per_mb: f64,
+}
+
+impl NodeSpec {
+    /// Eq 62's node power-scaling factor κ_P(n) = √A_scale(n) · V_dd²(n),
+    /// normalized so κ_P(28nm) = 1 in `NodeTable::paper()`.
+    pub fn kappa_p(&self) -> f64 {
+        (self.area_scale / 10.88).sqrt() * (self.vdd / 0.90) * (self.vdd / 0.90)
+    }
+
+    /// Logic area of one core with `lanes` FP16 vector lanes (mm²).
+    pub fn core_logic_mm2(&self, lanes: f64) -> f64 {
+        (self.core_base_mm2 + self.lane_mm2 * lanes) * self.area_scale
+    }
+
+    /// ROM area for `mb` megabytes of weights (mm²).
+    pub fn rom_mm2(&self, mb: f64) -> f64 {
+        self.rom_mm2_per_mb * self.area_scale * mb
+    }
+
+    /// SRAM area for `mb` megabytes (mm²).
+    pub fn sram_mm2(&self, mb: f64) -> f64 {
+        self.sram_mm2_per_mb * self.area_scale * mb
+    }
+}
+
+/// Ordered collection of node specs (ascending nm) with interpolation.
+#[derive(Debug, Clone)]
+pub struct NodeTable {
+    nodes: Vec<NodeSpec>,
+}
+
+impl NodeTable {
+    /// The paper-calibrated 7-node table.
+    pub fn paper() -> Self {
+        let mk = |nm: u32,
+                  fmax: f64,
+                  vdd: f64,
+                  mac: f64,
+                  sram_dyn: f64,
+                  rom_rd: f64,
+                  hop: f64,
+                  leak: f64,
+                  ascale: f64| NodeSpec {
+            nm,
+            fmax_mhz: fmax,
+            vdd,
+            mac_energy_pj: mac,
+            sram_dyn_mw_per_core_ghz: sram_dyn,
+            rom_read_mw_per_mb_at_fmax: rom_rd,
+            noc_hop_pj_per_bit: hop,
+            sram_leak_mw_per_mb: leak,
+            area_scale: ascale,
+            core_base_mm2: 0.050,
+            lane_mm2: 0.00153,
+            rom_mm2_per_mb: 0.020,
+            sram_mm2_per_mb: 0.080,
+        };
+        NodeTable {
+            nodes: vec![
+                //  nm  fmax  vdd   mac    sramd  rom_rd   hop    leak  area
+                mk(3, 1000.0, 0.55, 0.166, 0.770, 0.1860, 0.119, 22.3, 1.00),
+                mk(5, 820.0, 0.60, 0.256, 1.154, 0.1760, 0.208, 30.4, 1.53),
+                mk(7, 570.0, 0.65, 0.408, 1.842, 0.1280, 0.450, 28.3, 2.32),
+                mk(10, 520.0, 0.70, 0.425, 1.989, 0.0935, 0.532, 24.9, 3.56),
+                mk(14, 400.0, 0.75, 0.527, 2.527, 0.0469, 0.660, 19.5, 5.07),
+                mk(22, 250.0, 0.85, 0.863, 4.313, 0.0148, 1.080, 8.1, 8.21),
+                mk(28, 250.0, 0.90, 0.910, 5.390, 0.0088, 1.100, 7.3, 10.88),
+            ],
+        }
+    }
+
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn get(&self, nm: u32) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.nm == nm)
+    }
+
+    /// Linear interpolation between bracketing nodes for off-table sizes
+    /// (the paper's surrogate heads "interpolate from the process node
+    /// table").
+    pub fn interpolated(&self, nm: f64) -> NodeSpec {
+        let first = self.nodes.first().expect("empty node table");
+        let last = self.nodes.last().expect("empty node table");
+        if nm <= first.nm as f64 {
+            return first.clone();
+        }
+        if nm >= last.nm as f64 {
+            return last.clone();
+        }
+        let hi_idx = self
+            .nodes
+            .iter()
+            .position(|n| n.nm as f64 >= nm)
+            .expect("bracketing node");
+        let (lo, hi) = (&self.nodes[hi_idx - 1], &self.nodes[hi_idx]);
+        let (a, b) = (lo.nm as f64, hi.nm as f64);
+        let f = |x: f64, y: f64| lerp(nm, a, b, x, y);
+        NodeSpec {
+            nm: nm.round() as u32,
+            fmax_mhz: f(lo.fmax_mhz, hi.fmax_mhz),
+            vdd: f(lo.vdd, hi.vdd),
+            mac_energy_pj: f(lo.mac_energy_pj, hi.mac_energy_pj),
+            sram_dyn_mw_per_core_ghz: f(
+                lo.sram_dyn_mw_per_core_ghz,
+                hi.sram_dyn_mw_per_core_ghz,
+            ),
+            rom_read_mw_per_mb_at_fmax: f(
+                lo.rom_read_mw_per_mb_at_fmax,
+                hi.rom_read_mw_per_mb_at_fmax,
+            ),
+            noc_hop_pj_per_bit: f(lo.noc_hop_pj_per_bit, hi.noc_hop_pj_per_bit),
+            sram_leak_mw_per_mb: f(lo.sram_leak_mw_per_mb, hi.sram_leak_mw_per_mb),
+            area_scale: f(lo.area_scale, hi.area_scale),
+            core_base_mm2: f(lo.core_base_mm2, hi.core_base_mm2),
+            lane_mm2: f(lo.lane_mm2, hi.lane_mm2),
+            rom_mm2_per_mb: f(lo.rom_mm2_per_mb, hi.rom_mm2_per_mb),
+            sram_mm2_per_mb: f(lo.sram_mm2_per_mb, hi.sram_mm2_per_mb),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_is_sorted_ascending() {
+        let t = NodeTable::paper();
+        for w in t.nodes().windows(2) {
+            assert!(w[0].nm < w[1].nm);
+        }
+    }
+
+    #[test]
+    fn interpolation_clamps_at_extremes() {
+        let t = NodeTable::paper();
+        assert_eq!(t.interpolated(1.0), *t.get(3).unwrap());
+        assert_eq!(t.interpolated(40.0), *t.get(28).unwrap());
+    }
+
+    #[test]
+    fn rom_area_at_3nm_matches_design_md_fit() {
+        // 14,960 MB of weight ROM ≈ 299 mm² at 3nm (DESIGN.md §6)
+        let t = NodeTable::paper();
+        let rom = t.get(3).unwrap().rom_mm2(14960.0);
+        assert!((rom - 299.2).abs() < 1.0, "rom {rom}");
+    }
+
+    #[test]
+    fn core_logic_at_3nm_with_96_lanes_about_0p2_mm2() {
+        let t = NodeTable::paper();
+        let a = t.get(3).unwrap().core_logic_mm2(96.0);
+        assert!((a - 0.197).abs() < 0.005, "core {a}");
+    }
+}

@@ -1,0 +1,506 @@
+//! Operation-level partitioning (§3.5).
+//!
+//! For every (partitionable) operator:
+//!   1. classify (MatMul / Conv / general),
+//!   2. ρ_class = clip(ρ_base + Δ_class) from the RL action (Eqs 10–13),
+//!   3. N_cores = ⌈ρ · N_total⌉,
+//!   4. communication-graph-aware placement: per-TCC composite score =
+//!      current load + NoC hop distance to producers + imbalance penalty
+//!      + mesh centrality; pick the lowest-scoring TCCs,
+//!   5. split the workload across the selected cores.
+//!
+//! The placement also accumulates the NoC traffic statistics (Eq 62's
+//! energy integral, Eq 23's bisection bytes), per-tile loads for the
+//! heterogeneous derivation (§3.3), hazard statistics (state dims 37–44),
+//! and the load-distribution features (state dims 29–32).
+
+pub mod groups;
+
+use crate::arch::{MeshConfig, TileLoad};
+use crate::hazard::{self, HazardStats, Mitigation};
+use crate::ir::{Graph, PartitionClass};
+use crate::noc::{crosses_bisection, TrafficStats};
+use crate::util::clip;
+
+/// RL-controlled partitioning knobs (action groups: Op-Partition
+/// Controls, Memory/Load Partition, Streaming, Workload Partition).
+#[derive(Debug, Clone, Copy)]
+pub struct PartitionKnobs {
+    /// ρ_base of Eqs 11–13 (paper default 0.3).
+    pub rho_base: f64,
+    pub d_matmul: f64,
+    pub d_conv: f64,
+    pub d_general: f64,
+    /// Placement-score weight on current load vs the other terms
+    /// (load-balance controls of the Memory/Load Partition group).
+    pub w_load: f64,
+    /// Input/output streaming ratios (Table 3 dims 26–27): fraction of
+    /// split-broadcast traffic avoided by streaming directly from
+    /// producers.
+    pub streaming_in: f64,
+    pub streaming_out: f64,
+    /// Sub-matmul partition control (Table 3 dim 28): extra split factor
+    /// for the largest matmuls.
+    pub sub_matmul: f64,
+    /// All-reduce fraction (Table 3 dim 29): share of split outputs that
+    /// must be reduced across the split set.
+    pub allreduce_frac: f64,
+}
+
+impl Default for PartitionKnobs {
+    fn default() -> Self {
+        PartitionKnobs {
+            rho_base: 0.3,
+            d_matmul: 0.0,
+            d_conv: 0.0,
+            d_general: -0.25,
+            w_load: 1.0,
+            streaming_in: 0.5,
+            streaming_out: 0.5,
+            sub_matmul: 0.5,
+            allreduce_frac: 0.3,
+        }
+    }
+}
+
+impl PartitionKnobs {
+    /// Eqs 11–13.
+    pub fn rho(&self, class: PartitionClass) -> f64 {
+        let d = match class {
+            PartitionClass::MatMul => self.d_matmul,
+            PartitionClass::Conv => self.d_conv,
+            PartitionClass::General => self.d_general,
+        };
+        clip(self.rho_base + d, 0.0, 1.0)
+    }
+}
+
+/// Load-distribution features (state dims 29–32).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LoadStats {
+    pub variance: f64,
+    pub max_min_ratio: f64,
+    /// Balance score = mean/max ∈ (0,1]; also used for η_∥ (Eq 21).
+    pub balance: f64,
+    pub mean: f64,
+}
+
+/// A placement result for one candidate configuration.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub loads: Vec<TileLoad>,
+    pub traffic: TrafficStats,
+    pub load_stats: LoadStats,
+    pub hazards: HazardStats,
+    /// Per-class realized partition ratios (state dims 33–36).
+    pub class_rho: [f64; 3],
+    /// Number of placement units (ops or groups) placed.
+    pub n_units: usize,
+}
+
+impl Placement {
+    /// Parallel efficiency η_∥ for Eq 21: load balance discounted by
+    /// communication overhead.
+    pub fn eta_parallel(&self) -> f64 {
+        let comm_penalty = (self.traffic.mean_hops() * 0.002).min(0.08);
+        (self.load_stats.balance * (1.0 - comm_penalty)).clamp(0.05, 1.0)
+    }
+}
+
+/// One schedulable unit (an operator, or an operator group in `group`
+/// granularity — see [`groups`]).
+#[derive(Debug, Clone)]
+pub struct Unit {
+    pub class: PartitionClass,
+    pub flops: f64,
+    pub weight_bytes: f64,
+    pub out_bytes: f64,
+    pub instrs: f64,
+    /// Indices of producer units.
+    pub inputs: Vec<u32>,
+    pub kind: crate::ir::OpKind,
+}
+
+/// Working per-tile state during placement, struct-of-arrays so the
+/// O(units × cores) scoring loop streams over contiguous f64 lanes (the
+/// episode hot path — EXPERIMENTS.md §Perf L3).
+struct TileState {
+    flops: Vec<f64>,
+    weights: Vec<f64>,
+    act: Vec<f64>,
+    instrs: Vec<f64>,
+    /// Precomputed centrality penalty 1 − centrality(t) per tile.
+    central_penalty: Vec<f64>,
+    /// Precomputed normalized hop distance from each tile to every other
+    /// is too big to cache; hop distances are recomputed per unit.
+    xy: Vec<(u16, u16)>,
+}
+
+impl TileState {
+    fn new(mesh: &MeshConfig) -> TileState {
+        let n = mesh.cores();
+        let mut central_penalty = Vec::with_capacity(n);
+        let mut xy = Vec::with_capacity(n);
+        for t in 0..n {
+            central_penalty.push(1.0 - mesh.centrality(t));
+            xy.push(((t as u32 % mesh.width) as u16, (t as u32 / mesh.width) as u16));
+        }
+        TileState {
+            flops: vec![0.0; n],
+            weights: vec![0.0; n],
+            act: vec![0.0; n],
+            instrs: vec![0.0; n],
+            central_penalty,
+            xy,
+        }
+    }
+}
+
+/// Flops below which an op is never split (placement overhead dominates).
+const SPLIT_FLOOR_FLOPS: f64 = 1e5;
+
+/// Weight footprint above which an op is sharded regardless of class —
+/// embedding/LM-head tables cannot live in one tile's WMEM (Table 7 cap).
+const WEIGHT_SHARD_BYTES: f64 = 32.0 * 1024.0 * 1024.0;
+
+/// Place `units` onto the mesh. `mit` carries the microarchitectural
+/// hazard mitigation of the RL-selected average TCC parameters.
+pub fn place_units(
+    units: &[Unit],
+    mesh: &MeshConfig,
+    knobs: &PartitionKnobs,
+    mit: &Mitigation,
+) -> Placement {
+    let n = mesh.cores();
+    let mut tiles = TileState::new(mesh);
+    let mut primary: Vec<u32> = Vec::with_capacity(units.len());
+    let mut traffic = TrafficStats::default();
+    let mut hazards = HazardStats::default();
+    let mut scores: Vec<(f64, u32)> = vec![(0.0, 0); n];
+    // running totals for normalizing the load term of the composite score
+    let mut total_flops_placed = 1.0f64;
+    let mut total_weights_placed = 1.0f64;
+
+    for (ui, u) in units.iter().enumerate() {
+        let rho = knobs.rho(u.class);
+        // Step 3: target core count. Tiny or general ops are never split.
+        let splittable = u.flops >= SPLIT_FLOOR_FLOPS
+            && !matches!(u.class, PartitionClass::General);
+        let mut k = if splittable {
+            ((rho * n as f64).ceil() as usize).max(1)
+        } else {
+            1
+        };
+        // sub-matmul control splits the biggest units further (dim 28)
+        if splittable && u.flops > 1e8 {
+            k = ((k as f64 * (1.0 + knobs.sub_matmul)).ceil() as usize).min(n);
+        }
+        // giant weight tables (embeddings, LM head) shard by rows so the
+        // footprint fits per-tile WMEM even when ρ is small
+        if u.weight_bytes > WEIGHT_SHARD_BYTES {
+            k = k.max((u.weight_bytes / WEIGHT_SHARD_BYTES).ceil() as usize);
+        }
+        k = k.min(n);
+
+        // Step 4: composite placement score per tile. Hot loop: streams
+        // over the SoA tile state with all per-unit constants hoisted.
+        let inv_mean_f = n as f64 / total_flops_placed;
+        let inv_mean_w = n as f64 / total_weights_placed;
+        let mean_f = total_flops_placed / n as f64;
+        let prod_tile = u.inputs.first().map(|&p| primary[p as usize]);
+        let central_w = if u.inputs.len() > 1 { 0.3 } else { 0.05 };
+        let wl = knobs.w_load;
+        let inv_span = 1.0 / (mesh.width + mesh.height) as f64;
+        let prod_xy = prod_tile.map(|p| tiles.xy[p as usize]);
+        const INV_64K: f64 = 1.0 / (64.0 * 1024.0);
+        let prim = if k == n {
+            // whole-mesh split: the uniform shares make the composite
+            // ordering irrelevant — skip scoring, pick the least-loaded
+            // tile as the traffic anchor, select all tiles
+            let mut best = (f64::INFINITY, 0u32);
+            for (t, &f) in tiles.flops.iter().enumerate() {
+                if f < best.0 {
+                    best = (f, t as u32);
+                }
+                scores[t] = (0.0, t as u32);
+            }
+            best.1
+        } else {
+            for t in 0..n {
+                let f = tiles.flops[t];
+                let load = wl
+                    * (f * inv_mean_f
+                        + 0.3 * (tiles.weights[t] * inv_mean_w)
+                        + 0.1 * tiles.act[t] * INV_64K);
+                let hop = match prod_xy {
+                    Some((px, py)) => {
+                        let (tx, ty) = tiles.xy[t];
+                        (px.abs_diff(tx) as f64 + py.abs_diff(ty) as f64) * inv_span
+                    }
+                    None => 0.0,
+                };
+                // imbalance penalty: discourage already-above-mean tiles
+                let imb = ((f - mean_f) * inv_mean_f).max(0.0);
+                // centrality: heavily-connected ops prefer central tiles,
+                // pushing weight-resident ones outward (§4.10's edge-heavy
+                // WMEM pattern emerges from this)
+                scores[t] = (
+                    load + 0.8 * hop + 0.5 * imb + central_w * tiles.central_penalty[t],
+                    t as u32,
+                );
+            }
+            // pick the k lowest-scoring tiles (k=1: plain argmin swap —
+            // no partition pass needed)
+            if k == 1 {
+                let best = scores
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1 .0.total_cmp(&b.1 .0))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                scores.swap(0, best);
+                scores[0].1
+            } else {
+                scores.select_nth_unstable_by(k - 1, |a, b| a.0.total_cmp(&b.0));
+                scores[..k]
+                    .iter()
+                    .min_by(|a, b| a.0.total_cmp(&b.0))
+                    .map(|&(_, t)| t)
+                    .unwrap_or(0)
+            }
+        };
+        let selected = &scores[..k];
+        primary.push(prim);
+
+        // Step 5: split workload evenly over the selected cores.
+        let kf = k as f64;
+        for &(_, t) in selected {
+            let t = t as usize;
+            tiles.flops[t] += u.flops / kf;
+            tiles.weights[t] += u.weight_bytes / kf;
+            // activation working set: the largest double-buffered live
+            // tensor slice (activations are transient, not all-resident)
+            tiles.act[t] = tiles.act[t].max(2.0 * u.out_bytes / kf);
+            tiles.instrs[t] += u.instrs / kf;
+        }
+        total_flops_placed += u.flops;
+        total_weights_placed += u.weight_bytes;
+
+        // ---- traffic accounting
+        // producer -> primary tile edges
+        for &inp in &u.inputs {
+            let p = primary[inp as usize] as usize;
+            let hops = mesh.hop_distance(p, prim as usize);
+            traffic.record(
+                u.out_bytes,
+                hops,
+                crosses_bisection(mesh, p, prim as usize),
+            );
+        }
+        // split broadcast (input multicast tree over the split set: a
+        // row+column tree on a 2D mesh replicates ~√k times, not k−1) +
+        // all-reduce of partial outputs (~log₂k exchange rounds)
+        if k > 1 {
+            let intra_hops = (kf.sqrt() as u32).max(1);
+            // streaming hides at most 80% of the replication traffic —
+            // the first multicast copy always traverses the mesh
+            let bcast = u.out_bytes * kf.sqrt() * (1.0 - 0.8 * knobs.streaming_in);
+            traffic.record(bcast, intra_hops, false);
+            let reduce = u.out_bytes
+                * kf.log2()
+                * knobs.allreduce_frac
+                * (1.0 - 0.8 * knobs.streaming_out);
+            traffic.record(reduce, intra_hops, false);
+        }
+
+        // ---- hazards (instruction-mix model)
+        let op_proxy = crate::ir::Op {
+            id: ui as u32,
+            kind: u.kind,
+            layer: 0,
+            flops: u.flops,
+            weight_bytes: u.weight_bytes,
+            out_bytes: u.out_bytes,
+            inputs: vec![],
+            instrs: u.instrs,
+        };
+        hazards.accumulate(&hazard::estimate_op(&op_proxy, mit));
+    }
+
+    // ---- per-tile loads + hazard densities
+    let global_density = hazards.density();
+    let loads: Vec<TileLoad> = (0..n)
+        .map(|t| TileLoad {
+            flops: tiles.flops[t],
+            weight_bytes: tiles.weights[t],
+            act_bytes: tiles.act[t],
+            kv_bytes: 0.0, // filled by distribute_kv
+            instrs: tiles.instrs[t],
+            hazard_density: global_density,
+        })
+        .collect();
+
+    let load_stats = compute_load_stats(&loads);
+    let class_rho = [
+        knobs.rho(PartitionClass::MatMul),
+        knobs.rho(PartitionClass::Conv),
+        knobs.rho(PartitionClass::General),
+    ];
+    Placement { loads, traffic, load_stats, hazards, class_rho, n_units: units.len() }
+}
+
+fn compute_load_stats(loads: &[TileLoad]) -> LoadStats {
+    let n = loads.len() as f64;
+    let mean = loads.iter().map(|l| l.flops).sum::<f64>() / n;
+    let var = loads.iter().map(|l| (l.flops - mean).powi(2)).sum::<f64>() / n;
+    let max = loads.iter().map(|l| l.flops).fold(0.0f64, f64::max);
+    let min = loads.iter().map(|l| l.flops).fold(f64::INFINITY, f64::min);
+    LoadStats {
+        variance: var,
+        max_min_ratio: if min > 0.0 { max / min } else { f64::INFINITY },
+        balance: if max > 0.0 { (mean / max).clamp(0.0, 1.0) } else { 1.0 },
+        mean,
+    }
+}
+
+/// Convert every op of a graph into a placement unit (op granularity —
+/// the paper's full O(N_ops × N_cores) path).
+pub fn units_from_ops(g: &Graph) -> Vec<Unit> {
+    g.ops
+        .iter()
+        .map(|o| Unit {
+            class: o.kind.partition_class(),
+            flops: o.flops,
+            weight_bytes: o.weight_bytes,
+            out_bytes: o.out_bytes,
+            instrs: o.instrs,
+            inputs: o.inputs.clone(),
+            kind: o.kind,
+        })
+        .collect()
+}
+
+/// Distribute the KV cache across active tiles (Eq 27): records each
+/// active tile's KV slice; the memory model decides whether it fits DMEM
+/// or spills to WMEM (§3.9 "KV-cache pressure on DMEM").
+pub fn distribute_kv(loads: &mut [TileLoad], kv_total_bytes: f64) {
+    let active: usize = loads.iter().filter(|l| l.flops > 0.0).count().max(1);
+    let share = kv_total_bytes / active as f64;
+    for l in loads.iter_mut() {
+        if l.flops > 0.0 {
+            l.kv_bytes += share;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{llama, OpKind};
+
+    fn mit() -> Mitigation {
+        Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 }
+    }
+
+    fn place_llama_groups(mesh: MeshConfig, knobs: PartitionKnobs) -> Placement {
+        let g = llama::build();
+        let units = groups::units_from_groups(&g);
+        place_units(&units, &mesh, &knobs, &mit())
+    }
+
+    #[test]
+    fn rho_clipping_eq11_13() {
+        let mut k = PartitionKnobs::default();
+        k.rho_base = 0.3;
+        k.d_matmul = 0.9;
+        assert_eq!(k.rho(PartitionClass::MatMul), 1.0);
+        k.d_general = -0.9;
+        assert_eq!(k.rho(PartitionClass::General), 0.0);
+    }
+
+    #[test]
+    fn all_flops_conserved_by_placement() {
+        let g = llama::build();
+        let units = groups::units_from_groups(&g);
+        let total: f64 = units.iter().map(|u| u.flops).sum();
+        let p = place_units(&units, &MeshConfig::new(8, 8), &PartitionKnobs::default(), &mit());
+        let placed: f64 = p.loads.iter().map(|l| l.flops).sum();
+        assert!((placed - total).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn weights_conserved_by_placement() {
+        let g = llama::build();
+        let units = groups::units_from_groups(&g);
+        let total: f64 = units.iter().map(|u| u.weight_bytes).sum();
+        let p = place_units(&units, &MeshConfig::new(10, 10), &PartitionKnobs::default(), &mit());
+        let placed: f64 = p.loads.iter().map(|l| l.weight_bytes).sum();
+        assert!((placed - total).abs() / total < 1e-9);
+    }
+
+    #[test]
+    fn higher_rho_spreads_load_better() {
+        let lo = PartitionKnobs { rho_base: 0.05, sub_matmul: 0.0, ..Default::default() };
+        let hi = PartitionKnobs { rho_base: 0.9, sub_matmul: 0.0, ..Default::default() };
+        let mesh = MeshConfig::new(12, 12);
+        let p_lo = place_llama_groups(mesh, lo);
+        let p_hi = place_llama_groups(mesh, hi);
+        assert!(
+            p_hi.load_stats.balance > p_lo.load_stats.balance,
+            "{} vs {}",
+            p_hi.load_stats.balance,
+            p_lo.load_stats.balance
+        );
+    }
+
+    #[test]
+    fn splitting_generates_traffic() {
+        let mesh = MeshConfig::new(12, 12);
+        let no_split = PartitionKnobs {
+            rho_base: 0.0,
+            d_matmul: 0.0,
+            sub_matmul: 0.0,
+            ..Default::default()
+        };
+        let split = PartitionKnobs::default();
+        let p0 = place_llama_groups(mesh, no_split);
+        let p1 = place_llama_groups(mesh, split);
+        assert!(p1.traffic.cross_tile_bytes > p0.traffic.cross_tile_bytes);
+    }
+
+    #[test]
+    fn kv_distribution_only_hits_active_tiles() {
+        let mut loads = vec![
+            TileLoad { flops: 1.0, ..Default::default() },
+            TileLoad { flops: 0.0, ..Default::default() },
+            TileLoad { flops: 2.0, ..Default::default() },
+        ];
+        distribute_kv(&mut loads, 1000.0);
+        assert_eq!(loads[0].kv_bytes, 500.0);
+        assert_eq!(loads[1].kv_bytes, 0.0);
+        assert_eq!(loads[2].kv_bytes, 500.0);
+    }
+
+    #[test]
+    fn eta_parallel_in_unit_range() {
+        let p = place_llama_groups(MeshConfig::new(6, 7), PartitionKnobs::default());
+        let eta = p.eta_parallel();
+        assert!(eta > 0.0 && eta <= 1.0, "eta {eta}");
+    }
+
+    #[test]
+    fn general_ops_stay_unsplit() {
+        let units = vec![Unit {
+            class: PartitionClass::General,
+            flops: 1e9,
+            weight_bytes: 0.0,
+            out_bytes: 8192.0,
+            instrs: 100.0,
+            inputs: vec![],
+            kind: OpKind::Softmax,
+        }];
+        let p = place_units(&units, &MeshConfig::new(4, 4), &PartitionKnobs::default(), &mit());
+        let occupied = p.loads.iter().filter(|l| l.flops > 0.0).count();
+        assert_eq!(occupied, 1);
+    }
+}

@@ -1,0 +1,69 @@
+//! Silicon area model (Eq 64): per-core logic + weight ROM + SRAM, all
+//! scaled by the node density factor A_scale(n).
+
+use crate::node::NodeSpec;
+
+use super::DesignPoint;
+
+/// Area components in mm² (Eq 64 terms).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AreaBreakdown {
+    pub logic: f64,
+    pub rom: f64,
+    pub sram: f64,
+}
+
+impl AreaBreakdown {
+    pub fn total(&self) -> f64 {
+        self.logic + self.rom + self.sram
+    }
+}
+
+pub fn evaluate(d: &DesignPoint, n: &NodeSpec) -> AreaBreakdown {
+    let cores = d.mesh.cores() as f64;
+    let mean_lanes = if cores > 0.0 { d.sum_lanes / cores } else { 0.0 };
+    let logic = cores * n.core_logic_mm2(mean_lanes);
+    let rom = n.rom_mm2(d.weight_bytes / (1024.0 * 1024.0));
+    let sram = n.sram_mm2(d.sram_mb);
+    AreaBreakdown { logic, rom, sram }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeTable;
+    use crate::ppa::tests::paper_3nm_point;
+
+    #[test]
+    fn area_grows_with_node_size_for_same_design() {
+        // Table 10: same weights on an older node cost far more area
+        let t = NodeTable::paper();
+        let d = paper_3nm_point();
+        let a3 = evaluate(&d, t.get(3).unwrap()).total();
+        let a28 = evaluate(&d, t.get(28).unwrap()).total();
+        assert!(a28 > 5.0 * a3, "{a3} vs {a28}");
+    }
+
+    #[test]
+    fn rom_dominates_at_28nm_for_llama() {
+        // the paper's actual 28nm design: 11x12 mesh, 132 cores — ROM is
+        // the dominant area term (Table 10: 3,545 mm² total)
+        let t = NodeTable::paper();
+        let mut d = paper_3nm_point();
+        d.mesh = crate::arch::MeshConfig::new(11, 12);
+        d.sum_lanes = 132.0 * 105.0;
+        d.sum_lanes_capped = d.sum_lanes;
+        d.sram_mb = 132.0 * 0.0685;
+        let a = evaluate(&d, t.get(28).unwrap());
+        assert!(a.rom / a.total() > 0.6, "rom share {}", a.rom / a.total());
+        let err = (a.total() - 3545.0) / 3545.0;
+        assert!(err.abs() < 0.10, "area {} mm2", a.total());
+    }
+
+    #[test]
+    fn components_nonnegative() {
+        let t = NodeTable::paper();
+        let a = evaluate(&paper_3nm_point(), t.get(10).unwrap());
+        assert!(a.logic > 0.0 && a.rom > 0.0 && a.sram > 0.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Node-level efficiency ratios (Eqs 75–77, Table 18 / Fig 7).
+
+/// Eq 75: GOps/s per mW.
+pub fn perf_per_power(perf_gops: f64, power_mw: f64) -> f64 {
+    perf_gops / power_mw.max(1e-12)
+}
+
+/// Eq 76: tok/s per mW.
+pub fn tok_per_power(tokens_per_s: f64, power_mw: f64) -> f64 {
+    tokens_per_s / power_mw.max(1e-12)
+}
+
+/// Eq 77: GOps/s per mm².
+pub fn perf_per_area(perf_gops: f64, area_mm2: f64) -> f64 {
+    perf_gops / area_mm2.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table18_3nm_row() {
+        // 466,364 GOps / 51,366 mW = 9.078 GOps/mW; 29,809/51,366 = 0.5803
+        assert!((perf_per_power(466_364.0, 51_366.0) - 9.078).abs() < 0.01);
+        assert!((tok_per_power(29_809.0, 51_366.0) - 0.5803).abs() < 0.001);
+        assert!((perf_per_area(466_364.0, 648.0) - 719.7).abs() < 0.5);
+    }
+
+    #[test]
+    fn guards_against_zero_denominators() {
+        assert!(perf_per_power(1.0, 0.0).is_finite());
+        assert!(tok_per_power(1.0, 0.0).is_finite());
+        assert!(perf_per_area(1.0, 0.0).is_finite());
+    }
+}

@@ -1,0 +1,193 @@
+//! Analytical PPA models (§3.8, §3.15): power (Eq 62, Table 12
+//! decomposition), performance (Eq 63), area (Eq 64), throughput ceilings
+//! (Eqs 21–24), node-level efficiency ratios (Eqs 75–77) and the
+//! normalized PPA score.
+//!
+//! All constants live in [`crate::node::NodeTable`]; this module is pure
+//! arithmetic over a [`DesignPoint`] so evaluation is allocation-free on
+//! the episode hot path.
+
+pub mod area;
+pub mod efficiency;
+pub mod power;
+pub mod score;
+pub mod throughput;
+
+use crate::arch::{MeshConfig, TileConfig};
+use crate::node::NodeSpec;
+use crate::noc::TrafficStats;
+
+pub use area::AreaBreakdown;
+pub use power::PowerBreakdown;
+pub use score::{NormRanges, PpaWeights};
+pub use throughput::Ceilings;
+
+/// Everything the analytical models need about one candidate design.
+/// Assembled by the environment after partitioning + hetero derivation.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub mesh: MeshConfig,
+    pub clock_mhz: f64,
+    pub dflit_bits: u32,
+    /// Per-tile derived configurations (lanes, memories).
+    pub sum_lanes: f64,
+    /// Σ min(TM_FP16, VLEN_i/16) — effective tensor-multiplier lanes
+    /// (Eq 21's M_i already capped).
+    pub sum_lanes_capped: f64,
+    /// Total SRAM (DMEM+IMEM) across tiles, MB.
+    pub sram_mb: f64,
+    /// Total weight bytes resident in ROM.
+    pub weight_bytes: f64,
+    /// Per-token NoC traffic from placement.
+    pub traffic: TrafficStats,
+    /// Parallel efficiency η_∥ from load balance (Eq 21).
+    pub eta_parallel: f64,
+    /// Pipeline utilization η_util (Eq 63) from workload/memory pressure.
+    pub eta_util: f64,
+    /// Speculative-decoding acceleration α_spec ∈ [1, 2] (§3.8).
+    pub alpha_spec: f64,
+    /// FLOPs per generated token (2·P·φ_decode).
+    pub flops_per_token: f64,
+    /// Memory bytes touched per token after KV compaction (Eq 33).
+    pub mem_bytes_per_token: f64,
+    /// Aggregate effective memory bandwidth Σ BW_eff,i (bytes/s, Eq 16).
+    pub sum_bw_eff: f64,
+    /// Activity factor for compute/SRAM dynamics in [0,1] (1 = streaming
+    /// at full rate; low-power mode runs well below).
+    pub activity: f64,
+}
+
+/// Tensor-multiplier cap TM_FP16 of Eq 21 (lanes per TCC the MXU-like
+/// datapath can feed).
+pub const TM_FP16_LANES: f64 = 128.0;
+
+impl DesignPoint {
+    /// Convenience constructor computing the lane sums from tiles.
+    pub fn lane_sums(tiles: &[TileConfig]) -> (f64, f64) {
+        let mut sum = 0.0;
+        let mut capped = 0.0;
+        for t in tiles {
+            let l = t.lanes();
+            sum += l;
+            capped += l.min(TM_FP16_LANES);
+        }
+        (sum, capped)
+    }
+}
+
+/// Full evaluation result for one design point.
+#[derive(Debug, Clone)]
+pub struct PpaResult {
+    pub power: PowerBreakdown,
+    pub area: AreaBreakdown,
+    pub ceilings: Ceilings,
+    /// Realized tokens/s (Eq 24: min of the three ceilings).
+    pub tokens_per_s: f64,
+    /// Performance in GOps/s (Eq 63 realized).
+    pub perf_gops: f64,
+}
+
+/// Evaluate the analytical models for `d` on node `n`.
+pub fn evaluate(d: &DesignPoint, n: &NodeSpec) -> PpaResult {
+    let ceilings = throughput::ceilings(d, n);
+    let tokens_per_s = ceilings.realized();
+    // realized ops/s = tokens/s × FLOPs/token (counting FP16 MACs as the
+    // paper does: "GOps/s, counting FP16 multiply-accumulate operations")
+    let perf_gops = tokens_per_s * d.flops_per_token / 1e9;
+    let power = power::evaluate(d, n, tokens_per_s);
+    let area = area::evaluate(d, n);
+    PpaResult { power, area, ceilings, tokens_per_s, perf_gops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeTable;
+
+    /// A design point shaped like the paper's 3nm optimum (41×42 mesh,
+    /// ~96 mean lanes) — the calibration anchor for Tables 10–12.
+    pub(crate) fn paper_3nm_point() -> DesignPoint {
+        let mesh = MeshConfig::new(41, 42);
+        let cores = mesh.cores() as f64;
+        let lanes = 96.45;
+        // cross-tile traffic ~ 2·n_L·d_model·2B·sqrt(N) (DESIGN.md §6)
+        let cross = 2.0 * 32.0 * 4096.0 * 2.0 * cores.sqrt();
+        let traffic = TrafficStats {
+            cross_tile_bytes: cross,
+            byte_hops: cross * mesh.mean_hops(),
+            bisection_bytes: cross * 0.3,
+            n_transfers: 7489,
+        };
+        DesignPoint {
+            mesh,
+            clock_mhz: 1000.0,
+            dflit_bits: 2048,
+            sum_lanes: cores * lanes,
+            sum_lanes_capped: cores * lanes,
+            sram_mb: cores * 0.0685, // 64 KB DMEM + 6.1 KB IMEM per tile
+            weight_bytes: 14.96 * (1u64 << 30) as f64,
+            traffic,
+            eta_parallel: 0.90,
+            eta_util: 0.92,
+            alpha_spec: 1.56,
+            flops_per_token: 2.0 * 8.03e9 * 0.97,
+            mem_bytes_per_token: 14.96 * (1u64 << 30) as f64 + 131_072.0,
+            sum_bw_eff: cores * 2.0 * 96.0 * 2.0 * 1e9, // 2 ROM ports x vlen
+            activity: 1.0,
+        }
+    }
+
+    #[test]
+    fn calibration_3nm_tokens_within_2pct_of_paper() {
+        let t = NodeTable::paper();
+        let r = evaluate(&paper_3nm_point(), t.get(3).unwrap());
+        let err = (r.tokens_per_s - 29_809.0).abs() / 29_809.0;
+        assert!(err < 0.02, "tok/s {} (err {:.3})", r.tokens_per_s, err);
+    }
+
+    #[test]
+    fn calibration_3nm_perf_within_2pct() {
+        let t = NodeTable::paper();
+        let r = evaluate(&paper_3nm_point(), t.get(3).unwrap());
+        let err = (r.perf_gops - 466_364.0).abs() / 466_364.0;
+        assert!(err < 0.02, "perf {} GOps (err {:.3})", r.perf_gops, err);
+    }
+
+    #[test]
+    fn calibration_3nm_power_within_10pct_of_table12() {
+        let t = NodeTable::paper();
+        let r = evaluate(&paper_3nm_point(), t.get(3).unwrap());
+        let total = r.power.total();
+        let err = (total - 51_366.0).abs() / 51_366.0;
+        assert!(err < 0.10, "power {total} mW (err {err:.3})");
+        // compute share 54% +- 8pts, NoC 33% +- 8pts (Table 12)
+        assert!((r.power.compute / total - 0.536).abs() < 0.08);
+        assert!((r.power.noc / total - 0.333).abs() < 0.08);
+    }
+
+    #[test]
+    fn calibration_3nm_area_within_10pct() {
+        let t = NodeTable::paper();
+        let r = evaluate(&paper_3nm_point(), t.get(3).unwrap());
+        let err = (r.area.total() - 648.0).abs() / 648.0;
+        assert!(err < 0.10, "area {} mm2 (err {err:.3})", r.area.total());
+    }
+
+    #[test]
+    fn compute_ceiling_binds_for_llama_shape() {
+        // §3.8: "the compute ceiling is the active limiter at all nodes"
+        let t = NodeTable::paper();
+        for n in t.nodes() {
+            let mut d = paper_3nm_point();
+            d.clock_mhz = n.fmax_mhz;
+            let r = evaluate(&d, n);
+            assert!(
+                r.ceilings.compute <= r.ceilings.memory
+                    && r.ceilings.compute <= r.ceilings.noc,
+                "{}nm: {:?}",
+                n.nm,
+                r.ceilings
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Dynamic + leakage power model (Eq 62, decomposed per Table 12 into
+//! compute / SRAM / ROM-read / NoC / leakage).
+
+use crate::node::NodeSpec;
+
+use super::DesignPoint;
+
+/// Per-component power in mW (Table 12 columns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PowerBreakdown {
+    pub compute: f64,
+    pub sram: f64,
+    pub rom_read: f64,
+    pub noc: f64,
+    pub leakage: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.sram + self.rom_read + self.noc + self.leakage
+    }
+
+    /// Component percentage shares (Table 12's Comp%, SRAM%, ...).
+    pub fn shares(&self) -> [f64; 5] {
+        let t = self.total().max(1e-12);
+        [
+            self.compute / t,
+            self.sram / t,
+            self.rom_read / t,
+            self.noc / t,
+            self.leakage / t,
+        ]
+    }
+}
+
+/// Evaluate Eq 62 for a design point at `tokens_per_s` realized rate.
+pub fn evaluate(d: &DesignPoint, n: &NodeSpec, tokens_per_s: f64) -> PowerBreakdown {
+    let f_hz = d.clock_mhz * 1e6;
+    let f_ghz = d.clock_mhz / 1000.0;
+    let cores = d.mesh.cores() as f64;
+
+    // -- compute: MAC array switching, one MAC/lane/cycle at activity.
+    // The speculative-decoding draft predictor (§4.13.1) adds ~15% of
+    // compute power at full acceleration (α=1.6) — spec decode is not a
+    // free throughput multiplier.
+    let draft_overhead = 1.0 + 0.15 * (d.alpha_spec - 1.0) / 0.6;
+    let compute =
+        d.sum_lanes * f_hz * n.mac_energy_pj * 1e-12 * d.activity * 1e3 * draft_overhead;
+
+    // -- SRAM dynamic: per-core access energy scaled by clock + activity
+    let sram = cores * f_ghz * n.sram_dyn_mw_per_core_ghz * d.activity;
+
+    // -- ROM read: W_total · E_dyn(n) · α of Eq 62; scales with f/fmax
+    let weight_mb = d.weight_bytes / (1024.0 * 1024.0);
+    let rom_read = weight_mb
+        * n.rom_read_mw_per_mb_at_fmax
+        * (d.clock_mhz / n.fmax_mhz)
+        * d.activity;
+
+    // -- NoC: energy ∝ bit-hops/s (cross-tile traffic from the placement)
+    let bit_hops_per_s = d.traffic.byte_hops * 8.0 * tokens_per_s;
+    let noc = bit_hops_per_s * n.noc_hop_pj_per_bit * 1e-12 * 1e3;
+
+    // -- leakage: SRAM peripheral only (ROM sleep transistors, §3.15)
+    let leakage = d.sram_mb * n.sram_leak_mw_per_mb;
+
+    PowerBreakdown { compute, sram, rom_read, noc, leakage }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MeshConfig;
+    use crate::node::NodeTable;
+    use crate::noc::TrafficStats;
+
+    fn small_point(activity: f64, clock_mhz: f64) -> DesignPoint {
+        DesignPoint {
+            mesh: MeshConfig::new(2, 4),
+            clock_mhz,
+            dflit_bits: 256,
+            sum_lanes: 8.0 * 21.0,
+            sum_lanes_capped: 8.0 * 21.0,
+            sram_mb: 0.25,
+            weight_bytes: 0.48 * (1u64 << 30) as f64,
+            traffic: TrafficStats::default(),
+            eta_parallel: 0.9,
+            eta_util: 0.8,
+            alpha_spec: 1.0,
+            flops_per_token: 2.0 * 0.24e9 * 0.95,
+            mem_bytes_per_token: 0.48e9,
+            sum_bw_eff: 1e12,
+            activity,
+        }
+    }
+
+    #[test]
+    fn smolvlm_3nm_is_leakage_dominated_under_13mw() {
+        // §4.12: all nodes < 13 mW at 10 MHz; 97% leakage at 3nm
+        let t = NodeTable::paper();
+        let p = evaluate(&small_point(0.05, 10.0), t.get(3).unwrap(), 10.0);
+        assert!(p.total() < 13.0, "total {} mW", p.total());
+        assert!(p.leakage / p.total() > 0.85, "leak share {}", p.leakage / p.total());
+    }
+
+    #[test]
+    fn leakage_share_lower_at_28nm() {
+        let t = NodeTable::paper();
+        let p3 = evaluate(&small_point(0.05, 10.0), t.get(3).unwrap(), 10.0);
+        let p28 = evaluate(&small_point(0.05, 10.0), t.get(28).unwrap(), 10.0);
+        assert!(p28.leakage / p28.total() < p3.leakage / p3.total());
+    }
+
+    #[test]
+    fn power_scales_with_activity() {
+        let t = NodeTable::paper();
+        let n = t.get(7).unwrap();
+        let lo = evaluate(&small_point(0.1, 570.0), n, 100.0);
+        let hi = evaluate(&small_point(1.0, 570.0), n, 100.0);
+        assert!(hi.compute > 5.0 * lo.compute);
+        // leakage unaffected by activity
+        assert_eq!(hi.leakage, lo.leakage);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        let t = NodeTable::paper();
+        let p = evaluate(&small_point(1.0, 250.0), t.get(28).unwrap(), 50.0);
+        let s: f64 = p.shares().iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

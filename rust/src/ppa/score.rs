@@ -1,0 +1,144 @@
+//! Normalized PPA score (§3.10, Table 4 conventions).
+//!
+//! "PPA scores use a lower-is-better convention (cost function), where 0
+//! is ideal and values approaching 1.0 indicate larger power/area or
+//! lower performance" (Table 12 note). The score scalarizes normalized
+//! metrics with the user PPA weights (Eqs 42–44):
+//!
+//!   score = α·(1 − P_norm) + β·P_power + γ·A_norm
+//!
+//! Normalization ranges "are derived from process node characteristics
+//! and constraints" — i.e. per-node budgets, not global extremes.
+
+
+
+use crate::util::clip;
+
+/// User PPA weights (w_perf, w_power, w_area); Eqs 42–44 normalize them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PpaWeights {
+    pub perf: f64,
+    pub power: f64,
+    pub area: f64,
+}
+
+impl PpaWeights {
+    /// Paper's high-performance profile (§3.13).
+    pub const HIGH_PERF: PpaWeights = PpaWeights { perf: 0.4, power: 0.4, area: 0.2 };
+    /// Paper's low-power profile (§5.4).
+    pub const LOW_POWER: PpaWeights = PpaWeights { perf: 0.2, power: 0.6, area: 0.2 };
+
+    /// Eqs 42–44: (α, β, γ).
+    pub fn normalized(&self) -> (f64, f64, f64) {
+        let s = self.perf + self.power + self.area;
+        (self.perf / s, self.power / s, self.area / s)
+    }
+
+    /// Eq 48: ∂R/∂w_perf sensitivity at the current weights.
+    pub fn perf_sensitivity(&self, p_norm: f64) -> f64 {
+        let s = self.perf + self.power + self.area;
+        p_norm * (self.power + self.area) / (s * s)
+    }
+}
+
+/// Per-node normalization ranges (Eqs 35–37 denominators). Derived from
+/// the node's constraint budgets (§3.10 "derived from process node
+/// characteristics and constraints").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormRanges {
+    pub perf_min: f64,
+    pub perf_max: f64,
+    pub power_min: f64,
+    pub power_max: f64,
+    pub area_min: f64,
+    pub area_max: f64,
+}
+
+impl NormRanges {
+    /// Normalized metrics (P_norm, P_power, A_norm), each clipped to [0,1].
+    pub fn normalize(&self, perf: f64, power: f64, area: f64) -> (f64, f64, f64) {
+        let nz = |v: f64, lo: f64, hi: f64| clip((v - lo) / (hi - lo).max(1e-12), 0.0, 1.0);
+        (
+            nz(perf, self.perf_min, self.perf_max),
+            nz(power, self.power_min, self.power_max),
+            nz(area, self.area_min, self.area_max),
+        )
+    }
+}
+
+/// Lower-is-better composite PPA score.
+pub fn ppa_score(
+    weights: &PpaWeights,
+    ranges: &NormRanges,
+    perf: f64,
+    power: f64,
+    area: f64,
+) -> f64 {
+    let (alpha, beta, gamma) = weights.normalized();
+    let (p_norm, p_pow, a_norm) = ranges.normalize(perf, power, area);
+    alpha * (1.0 - p_norm) + beta * p_pow + gamma * a_norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranges() -> NormRanges {
+        NormRanges {
+            perf_min: 0.0,
+            perf_max: 100.0,
+            power_min: 0.0,
+            power_max: 50.0,
+            area_min: 0.0,
+            area_max: 1000.0,
+        }
+    }
+
+    #[test]
+    fn weights_normalize_to_unit_sum() {
+        let (a, b, g) = PpaWeights::HIGH_PERF.normalized();
+        assert!((a + b + g - 1.0).abs() < 1e-12);
+        assert!((a - 0.4).abs() < 1e-12 && (b - 0.4).abs() < 1e-12 && (g - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ideal_design_scores_zero() {
+        // max perf, zero power, zero area -> score 0 (ideal)
+        let s = ppa_score(&PpaWeights::HIGH_PERF, &ranges(), 100.0, 0.0, 0.0);
+        assert!(s.abs() < 1e-12);
+    }
+
+    #[test]
+    fn worst_design_scores_one() {
+        let s = ppa_score(&PpaWeights::HIGH_PERF, &ranges(), 0.0, 50.0, 1000.0);
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn better_perf_lowers_score() {
+        let w = PpaWeights::HIGH_PERF;
+        let lo = ppa_score(&w, &ranges(), 20.0, 25.0, 500.0);
+        let hi = ppa_score(&w, &ranges(), 80.0, 25.0, 500.0);
+        assert!(hi < lo);
+    }
+
+    #[test]
+    fn normalization_clips_outside_range() {
+        let (p, pw, a) = ranges().normalize(1e9, -5.0, 2e6);
+        assert_eq!((p, pw, a), (1.0, 0.0, 1.0));
+    }
+
+    #[test]
+    fn sensitivity_eq48_positive_when_perf_nonzero() {
+        let w = PpaWeights::HIGH_PERF;
+        assert!(w.perf_sensitivity(0.5) > 0.0);
+        assert_eq!(w.perf_sensitivity(0.0), 0.0);
+    }
+
+    #[test]
+    fn low_power_profile_weights_power_more() {
+        let (_, b_hp, _) = PpaWeights::HIGH_PERF.normalized();
+        let (_, b_lp, _) = PpaWeights::LOW_POWER.normalized();
+        assert!(b_lp > b_hp);
+    }
+}

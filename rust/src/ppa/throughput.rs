@@ -1,0 +1,121 @@
+//! Inference throughput model (§3.8): compute (Eq 21), memory (Eq 22) and
+//! NoC (Eq 23) ceilings; realized tok/s is their minimum (Eq 24).
+
+use crate::node::NodeSpec;
+
+use super::DesignPoint;
+
+/// The three throughput ceilings in tokens/s.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ceilings {
+    pub compute: f64,
+    pub memory: f64,
+    pub noc: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Binding {
+    Compute,
+    Memory,
+    Noc,
+}
+
+impl Ceilings {
+    /// Eq 24: realized throughput.
+    pub fn realized(&self) -> f64 {
+        self.compute.min(self.memory).min(self.noc)
+    }
+
+    /// Which constraint binds (§4.3 "ceiling analysis").
+    pub fn binding(&self) -> Binding {
+        if self.compute <= self.memory && self.compute <= self.noc {
+            Binding::Compute
+        } else if self.memory <= self.noc {
+            Binding::Memory
+        } else {
+            Binding::Noc
+        }
+    }
+}
+
+pub fn ceilings(d: &DesignPoint, _n: &NodeSpec) -> Ceilings {
+    let f_hz = d.clock_mhz * 1e6;
+
+    // Eq 21: Tok/s_comp = Σ M_i · 2 · f · η_par · α_spec / FLOPs_per_token
+    // (η_util belongs to the Eq 63 surrogate, not the realized ceiling)
+    let compute = d.sum_lanes_capped * 2.0 * f_hz * d.eta_parallel * d.alpha_spec
+        / d.flops_per_token.max(1.0);
+
+    // Eq 22: Tok/s_mem = Σ BW_eff,i / Bytes_per_token
+    let memory = d.sum_bw_eff / d.mem_bytes_per_token.max(1.0);
+
+    // Eq 23: Tok/s_NoC = BW_bisect / CrossTileBytes_bisection_per_token
+    let links = d.mesh.width.min(d.mesh.height) as f64;
+    let bw_bisect = links * (d.dflit_bits as f64 / 8.0) * f_hz;
+    let noc = if d.traffic.bisection_bytes > 0.0 {
+        bw_bisect / d.traffic.bisection_bytes
+    } else {
+        f64::INFINITY
+    };
+
+    Ceilings { compute, memory, noc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::node::NodeTable;
+    use crate::ppa::tests::paper_3nm_point;
+
+    #[test]
+    fn binding_constraint_detection() {
+        let c = Ceilings { compute: 100.0, memory: 200.0, noc: 300.0 };
+        assert_eq!(c.binding(), Binding::Compute);
+        assert_eq!(c.realized(), 100.0);
+        let c2 = Ceilings { compute: 300.0, memory: 200.0, noc: 250.0 };
+        assert_eq!(c2.binding(), Binding::Memory);
+        let c3 = Ceilings { compute: 300.0, memory: 200.0, noc: 150.0 };
+        assert_eq!(c3.binding(), Binding::Noc);
+    }
+
+    #[test]
+    fn compute_ceiling_linear_in_clock() {
+        let t = NodeTable::paper();
+        let n = t.get(3).unwrap();
+        let mut d = paper_3nm_point();
+        let c1 = ceilings(&d, n).compute;
+        d.clock_mhz /= 2.0;
+        let c2 = ceilings(&d, n).compute;
+        assert!((c1 / c2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_decoding_multiplies_compute_ceiling() {
+        let t = NodeTable::paper();
+        let n = t.get(3).unwrap();
+        let mut d = paper_3nm_point();
+        d.alpha_spec = 1.0;
+        let base = ceilings(&d, n).compute;
+        d.alpha_spec = 2.0;
+        assert!((ceilings(&d, n).compute / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_compaction_raises_memory_ceiling() {
+        let t = NodeTable::paper();
+        let n = t.get(3).unwrap();
+        let mut d = paper_3nm_point();
+        let m1 = ceilings(&d, n).memory;
+        d.mem_bytes_per_token *= 0.5; // Eq 33 relief
+        let m2 = ceilings(&d, n).memory;
+        assert!((m2 / m1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bisection_traffic_means_unbounded_noc() {
+        let t = NodeTable::paper();
+        let mut d = paper_3nm_point();
+        d.traffic.bisection_bytes = 0.0;
+        assert!(ceilings(&d, t.get(3).unwrap()).noc.is_infinite());
+    }
+}

@@ -1,0 +1,314 @@
+//! SAC agent driver: wraps the PJRT runtime + parameter store and drives
+//! the AOT-lowered `actor_fwd_*`, `sac_update`, `wm_fwd_*`/`wm_update`
+//! and `sur_*` computations. Also hosts the MPC planner (§3.16).
+//!
+//! The division of labour: HLO does ALL differentiable math; this module
+//! does batching, RNG (noise tensors are inputs), priority bookkeeping
+//! and the MPC candidate search.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::RlConfig;
+use crate::env::state::subset_index;
+use crate::env::{Action, ACT_DIM, SAC_STATE_DIM};
+use crate::nn::{policy, Store};
+use crate::rl::per::{PerBuffer, Transition};
+use crate::runtime::Runtime;
+use crate::util::Rng;
+
+/// Metrics from one SAC update step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpdateMetrics {
+    pub critic_loss: f64,
+    pub actor_loss: f64,
+    pub alpha_loss: f64,
+    pub alpha: f64,
+    pub entropy: f64,
+}
+
+pub struct SacAgent {
+    pub runtime: Runtime,
+    pub store: Store,
+    pub buffer: PerBuffer,
+    pub cfg: RlConfig,
+    batch: usize,
+    /// Last actor log-std head output (policy-entropy trace for Fig 3).
+    pub last_entropy: f64,
+    pub updates_done: usize,
+    pub wm_trained: bool,
+}
+
+impl SacAgent {
+    pub fn new(runtime: Runtime, cfg: RlConfig, rng: &mut Rng) -> Result<Self> {
+        let store = Store::from_manifest(&runtime.manifest, rng)?;
+        let batch = runtime.manifest.hyper_or("batch", 256.0) as usize;
+        let buffer =
+            PerBuffer::new(cfg.buffer_capacity, cfg.per_alpha, cfg.per_beta0, cfg.per_beta_step);
+        Ok(SacAgent {
+            runtime,
+            store,
+            buffer,
+            cfg,
+            batch,
+            last_entropy: 0.0,
+            updates_done: 0,
+            wm_trained: false,
+        })
+    }
+
+    /// Policy action for one state (B=1 actor forward + Rust sampling).
+    /// `stochastic` = sample (training) vs mean/argmax (exploitation).
+    pub fn act(&mut self, s: &[f32; SAC_STATE_DIM], stochastic: bool, rng: &mut Rng) -> Result<Action> {
+        let mut call_in = BTreeMap::new();
+        call_in.insert("s".to_string(), s.to_vec());
+        let outs = self.runtime.call("actor_fwd_b1", self.store.resolver(&call_in))?;
+        let get = |name: &str| {
+            outs.iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| v.clone())
+                .expect("actor output missing")
+        };
+        let mu = get("mu");
+        let log_std = get("log_std");
+        let disc = get("disc_logits");
+        self.last_entropy = policy::gaussian_entropy(&log_std);
+        let cont = if stochastic {
+            policy::sample_continuous(&mu, &log_std, rng)
+        } else {
+            policy::mean_continuous(&mu)
+        };
+        let (deltas, _) = if stochastic {
+            policy::sample_discrete(&disc, rng)
+        } else {
+            policy::argmax_discrete(&disc)
+        };
+        Ok(Action { cont, deltas })
+    }
+
+    pub fn push_transition(&mut self, t: Transition) {
+        self.buffer.push(t);
+    }
+
+    /// One SAC update (Algorithm 1 line 12): PER sample → `sac_update`
+    /// HLO (critics, actor, α, Polyak targets, Adam — all inside) →
+    /// write-back + priority refresh.
+    pub fn update(&mut self, rng: &mut Rng) -> Result<UpdateMetrics> {
+        let b = self.batch;
+        if self.buffer.len() < b {
+            return Ok(UpdateMetrics::default());
+        }
+        let (idxs, is_w) = self.buffer.sample(b, rng);
+
+        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
+        let mut a = Vec::with_capacity(b * ACT_DIM);
+        let mut ad = Vec::with_capacity(b * 20);
+        let mut r = Vec::with_capacity(b);
+        let mut s2 = Vec::with_capacity(b * SAC_STATE_DIM);
+        let mut done = Vec::with_capacity(b);
+        for &i in &idxs {
+            let t = self.buffer.get(i);
+            s.extend_from_slice(&t.s);
+            a.extend_from_slice(&t.a_cont);
+            ad.extend_from_slice(&t.a_disc);
+            r.push(t.r);
+            s2.extend_from_slice(&t.s2);
+            done.push(t.done);
+        }
+        let mut eps_cur = vec![0f32; b * ACT_DIM];
+        let mut eps_next = vec![0f32; b * ACT_DIM];
+        rng.fill_gaussian_f32(&mut eps_cur);
+        rng.fill_gaussian_f32(&mut eps_next);
+
+        let mut batch = BTreeMap::new();
+        batch.insert("s".into(), s);
+        batch.insert("a".into(), a);
+        batch.insert("ad".into(), ad);
+        batch.insert("r".into(), r);
+        batch.insert("s2".into(), s2);
+        batch.insert("done".into(), done);
+        batch.insert("w".into(), is_w);
+        batch.insert("eps_cur".into(), eps_cur);
+        batch.insert("eps_next".into(), eps_next);
+
+        let outs = self.runtime.call("sac_update", self.store.resolver(&batch))?;
+        let metrics = self.store.absorb(outs)?;
+        let td_abs = metrics.get("metrics/td_abs").cloned().unwrap_or_default();
+        self.buffer.update_priorities(&idxs, &td_abs);
+        self.updates_done += 1;
+
+        let scalar = |k: &str| {
+            metrics
+                .get(k)
+                .and_then(|v| v.first())
+                .copied()
+                .unwrap_or(0.0) as f64
+        };
+        Ok(UpdateMetrics {
+            critic_loss: scalar("metrics/critic_loss"),
+            actor_loss: scalar("metrics/actor_loss"),
+            alpha_loss: scalar("metrics/alpha_loss"),
+            alpha: scalar("metrics/alpha"),
+            entropy: scalar("metrics/entropy"),
+        })
+    }
+
+    /// Train the world model on a replay minibatch (§3.16, half critic LR
+    /// — baked into the lowered `wm_update`).
+    pub fn train_world_model(&mut self, rng: &mut Rng) -> Result<f64> {
+        let b = self.batch;
+        if self.buffer.len() < b {
+            return Ok(f64::NAN);
+        }
+        let (idxs, _) = self.buffer.sample(b, rng);
+        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
+        let mut a = Vec::with_capacity(b * ACT_DIM);
+        let mut s2 = Vec::with_capacity(b * SAC_STATE_DIM);
+        for &i in &idxs {
+            let t = self.buffer.get(i);
+            s.extend_from_slice(&t.s);
+            a.extend_from_slice(&t.a_cont);
+            s2.extend_from_slice(&t.s2);
+        }
+        let mut batch = BTreeMap::new();
+        batch.insert("s".into(), s);
+        batch.insert("a".into(), a);
+        batch.insert("s2".into(), s2);
+        let outs = self.runtime.call("wm_update", self.store.resolver(&batch))?;
+        let metrics = self.store.absorb(outs)?;
+        self.wm_trained = true;
+        Ok(metrics
+            .get("metrics/loss")
+            .and_then(|v| v.first())
+            .copied()
+            .unwrap_or(f32::NAN) as f64)
+    }
+
+    /// Train the PPA surrogate heads (Eq 65).
+    pub fn train_surrogate(&mut self, rng: &mut Rng) -> Result<f64> {
+        let b = self.batch;
+        if self.buffer.len() < b {
+            return Ok(f64::NAN);
+        }
+        let (idxs, _) = self.buffer.sample(b, rng);
+        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
+        let mut a = Vec::with_capacity(b * ACT_DIM);
+        let mut ppa = Vec::with_capacity(b * 3);
+        for &i in &idxs {
+            let t = self.buffer.get(i);
+            s.extend_from_slice(&t.s);
+            a.extend_from_slice(&t.a_cont);
+            ppa.extend_from_slice(&t.ppa);
+        }
+        let mut batch = BTreeMap::new();
+        batch.insert("s".into(), s);
+        batch.insert("a".into(), a);
+        batch.insert("ppa".into(), ppa);
+        let outs = self.runtime.call("sur_update", self.store.resolver(&batch))?;
+        let metrics = self.store.absorb(outs)?;
+        Ok(metrics
+            .get("metrics/loss")
+            .and_then(|v| v.first())
+            .copied()
+            .unwrap_or(f32::NAN) as f64)
+    }
+
+    /// MPC refinement (§3.16, Eqs 70–72): K candidate first actions
+    /// (policy mean + N(0, 0.3²) noise), rolled out H steps through the
+    /// world model with the policy providing future actions; surrogate
+    /// reward read from the predicted PPA-observation dims; best
+    /// candidate blended 70/30 with the SAC action on the TCC-parameter
+    /// dims (discrete mesh deltas stay SAC-only).
+    pub fn mpc_refine(
+        &mut self,
+        s: &[f32; SAC_STATE_DIM],
+        sac_action: &Action,
+        rng: &mut Rng,
+    ) -> Result<Action> {
+        if !self.wm_trained {
+            return Ok(sac_action.clone());
+        }
+        // K is baked into the lowered wm_fwd_b64/actor_fwd_b64 batch dim
+        let k = self.runtime.manifest.hyper_or("mpc_batch", 64.0) as usize;
+        let h = self.cfg.mpc_horizon;
+        let gamma = self.cfg.gamma;
+
+        // K candidate first actions
+        let mut cand: Vec<[f64; ACT_DIM]> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let mut c = sac_action.cont;
+            for v in c.iter_mut() {
+                *v = (*v + self.cfg.mpc_noise * rng.gaussian()).clamp(-1.0, 1.0);
+            }
+            cand.push(c);
+        }
+
+        // batched rollout: states [K, 52]
+        let mut states: Vec<f32> = Vec::with_capacity(k * SAC_STATE_DIM);
+        for _ in 0..k {
+            states.extend_from_slice(s);
+        }
+        let mut actions: Vec<f32> =
+            cand.iter().flat_map(|c| c.iter().map(|&v| v as f32)).collect();
+        let mut returns = vec![0.0f64; k];
+
+        for step in 0..h {
+            // ŝ_{k+1} = ŝ_k + f_ω([ŝ_k; a_k])  (Eq 71)
+            let mut call = BTreeMap::new();
+            call.insert("s".to_string(), states.clone());
+            call.insert("a".to_string(), actions.clone());
+            let outs = self.runtime.call("wm_fwd_b64", self.store.resolver(&call))?;
+            states = outs.into_iter().next().map(|(_, v)| v).unwrap();
+
+            // surrogate PPA reward from predicted observation dims (Eq 72)
+            let pi = subset_index(51).unwrap(); // perf
+            let wi = subset_index(50).unwrap(); // power
+            let ai = subset_index(52).unwrap(); // area
+            for (c, ret) in returns.iter_mut().enumerate() {
+                let base = c * SAC_STATE_DIM;
+                let r_sur = states[base + pi] as f64
+                    - 0.3 * states[base + wi] as f64
+                    - 0.2 * states[base + ai] as f64;
+                *ret += gamma.powi(step as i32) * r_sur;
+            }
+
+            if step + 1 < h {
+                // future actions from the policy at predicted states
+                let mut call = BTreeMap::new();
+                call.insert("s".to_string(), states.clone());
+                let outs =
+                    self.runtime.call("actor_fwd_b64", self.store.resolver(&call))?;
+                let mu = outs
+                    .iter()
+                    .find(|(n, _)| n == "mu")
+                    .map(|(_, v)| v.clone())
+                    .unwrap();
+                actions = mu.iter().map(|&m| m.tanh()).collect();
+            }
+        }
+
+        let best = returns
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+
+        // blend on continuous TCC-parameter dims only (our layout: 0–14)
+        let mut out = sac_action.clone();
+        for i in 0..15 {
+            out.cont[i] = (self.cfg.mpc_blend * cand[best][i]
+                + (1.0 - self.cfg.mpc_blend) * sac_action.cont[i])
+                .clamp(-1.0, 1.0);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // SacAgent requires compiled artifacts; its end-to-end behaviour is
+    // covered by rust/tests/runtime_e2e.rs. The pure helpers are tested in
+    // nn::policy and rl::per.
+}

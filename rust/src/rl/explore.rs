@@ -1,0 +1,72 @@
+//! Adaptive ε-greedy exploration (§3.4.2, Eq 9).
+//!
+//! The base decay d is auto-derived from the episode budget so ε reaches
+//! ε_min from ε₀ over the run; when no feasible configurations have been
+//! discovered recently, decay slows to d' = 1 − (1−d)·0.1, keeping
+//! exploration high until the policy finds feasible regions.
+
+#[derive(Debug, Clone)]
+pub struct EpsSchedule {
+    pub eps: f64,
+    pub eps_min: f64,
+    /// Base decay d (per episode).
+    pub d: f64,
+}
+
+impl EpsSchedule {
+    /// Auto-derive d so ε₀·d^T = ε_min over `budget` episodes.
+    pub fn new(eps0: f64, eps_min: f64, budget: usize) -> Self {
+        let t = budget.max(2) as f64;
+        let d = (eps_min / eps0).powf(1.0 / t);
+        EpsSchedule { eps: eps0, eps_min, d }
+    }
+
+    /// Advance one episode (Eq 9). `found_feasible` = whether any
+    /// feasible configuration has been discovered so far.
+    pub fn step(&mut self, found_feasible: bool) {
+        let d = if found_feasible {
+            self.d
+        } else {
+            1.0 - (1.0 - self.d) * 0.1 // d' > d: slower decay when stuck
+        };
+        self.eps = (self.eps * d).max(self.eps_min);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reaches_eps_min_over_budget() {
+        let mut s = EpsSchedule::new(0.5, 0.1, 1000);
+        for _ in 0..1000 {
+            s.step(true);
+        }
+        assert!((s.eps - 0.1).abs() < 0.01, "eps {}", s.eps);
+    }
+
+    #[test]
+    fn never_below_min() {
+        let mut s = EpsSchedule::new(0.5, 0.1, 100);
+        for _ in 0..10_000 {
+            s.step(true);
+        }
+        assert!(s.eps >= 0.1);
+    }
+
+    #[test]
+    fn stuck_decays_slower_eq9() {
+        let mut fast = EpsSchedule::new(0.5, 0.01, 500);
+        let mut slow = fast.clone();
+        for _ in 0..200 {
+            fast.step(true);
+            slow.step(false);
+        }
+        assert!(slow.eps > fast.eps, "{} vs {}", slow.eps, fast.eps);
+        // d' = 1 - (1-d)*0.1 exactly
+        let d = fast.d;
+        let dp = 1.0 - (1.0 - d) * 0.1;
+        assert!((slow.eps - 0.5 * dp.powi(200)).abs() < 1e-9);
+    }
+}

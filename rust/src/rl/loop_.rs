@@ -1,0 +1,206 @@
+//! Algorithm 1 — the unified RL-based hardware-aware compilation loop.
+//!
+//! Per node: encode → ε-greedy action (uniform | SAC policy, MPC-refined
+//! during exploitation) → constrained projection → mesh/TCC update →
+//! operator partitioning → PPA reward → PER store → SAC + world-model +
+//! surrogate updates → ε decay → Pareto archive → best tracking.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::env::{state, Action, Env, EvalOutcome};
+use crate::nn::policy;
+use crate::rl::agent::SacAgent;
+use crate::rl::explore::EpsSchedule;
+use crate::rl::pareto::{ParetoArchive, ParetoPoint};
+use crate::rl::per::Transition;
+use crate::util::Rng;
+
+/// Per-episode log row (Fig 3 convergence trace + report inputs).
+#[derive(Debug, Clone)]
+pub struct EpisodeLog {
+    pub episode: usize,
+    pub reward: f64,
+    pub score: f64,
+    pub best_score: f64,
+    pub feasible: bool,
+    pub tokens_per_s: f64,
+    pub power_mw: f64,
+    pub perf_gops: f64,
+    pub area_mm2: f64,
+    pub mesh_w: u32,
+    pub mesh_h: u32,
+    pub eps: f64,
+    pub entropy: f64,
+    pub unique_configs: usize,
+}
+
+/// Best configuration found for one node (Table 10/11 row).
+#[derive(Debug, Clone)]
+pub struct BestConfig {
+    pub episode: usize,
+    pub outcome: EvalOutcome,
+}
+
+/// Result of optimizing one process node.
+pub struct NodeResult {
+    pub nm: u32,
+    pub best: Option<BestConfig>,
+    pub episodes: Vec<EpisodeLog>,
+    pub pareto: ParetoArchive,
+    pub feasible_count: usize,
+    pub total_episodes: usize,
+}
+
+impl NodeResult {
+    pub fn best_outcome(&self) -> &EvalOutcome {
+        &self.best.as_ref().expect("no feasible configuration found").outcome
+    }
+}
+
+/// Configuration fingerprint for the unique-configs trace (Fig 3).
+fn config_key(out: &EvalOutcome) -> u64 {
+    let d = &out.decoded;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(d.mesh.width as u64);
+    mix(d.mesh.height as u64);
+    mix(d.avg.fetch as u64);
+    mix(d.avg.stanum as u64);
+    mix(d.avg.vlen_bits as u64);
+    mix(d.avg.dmem_kb as u64);
+    mix(d.avg.dflit_bits as u64);
+    mix((d.avg.clock_mhz * 10.0) as u64);
+    h
+}
+
+/// Run Algorithm 1 for one node with the SAC agent.
+pub fn run_node(
+    cfg: &RunConfig,
+    nm: u32,
+    agent: &mut SacAgent,
+    rng: &mut Rng,
+) -> Result<NodeResult> {
+    let mut env = Env::new(cfg, nm);
+    let rl = &cfg.rl;
+    let mut eps = EpsSchedule::new(rl.eps0, rl.eps_min, rl.episodes_per_node);
+
+    // bootstrap: evaluate the neutral action to get s₀
+    let mut prev = env.eval_action(&Action::neutral());
+    let mut s = state::sac_subset(&prev.full_state);
+
+    let mut pareto = ParetoArchive::new();
+    let mut episodes = Vec::with_capacity(rl.episodes_per_node);
+    let mut best: Option<BestConfig> = None;
+    let mut best_score = f64::INFINITY;
+    let mut feasible_count = 0usize;
+    let mut seen = std::collections::HashSet::new();
+
+    for t in 0..rl.episodes_per_node {
+        // ---- action selection (Algorithm 1 line 6)
+        let action = if rng.uniform() < eps.eps {
+            policy::uniform_action(rng)
+        } else {
+            let a = agent.act(&s, true, rng)?;
+            if eps.eps < rl.mpc_eps_gate {
+                agent.mpc_refine(&s, &a, rng)? // line 14
+            } else {
+                a
+            }
+        };
+
+        // ---- evaluate (projection Π + partition + PPA + reward)
+        let out = env.eval_action(&action);
+        let s2 = state::sac_subset(&out.full_state);
+
+        // ---- store transition
+        let a_cont: [f32; 30] = std::array::from_fn(|i| action.cont[i] as f32);
+        let a_disc = policy::onehot_from_deltas(&action.deltas);
+        agent.push_transition(Transition {
+            s,
+            a_cont,
+            a_disc,
+            r: out.reward.total as f32,
+            s2,
+            done: 0.0,
+            ppa: [
+                out.reward.p_power as f32,
+                out.reward.p_norm as f32,
+                out.reward.a_norm as f32,
+            ],
+        });
+
+        // ---- learning (after warmup)
+        if agent.buffer.len() >= rl.warmup_steps.max(agent_batch(agent)) {
+            agent.update(rng)?;
+            if t % rl.wm_train_every == 0 {
+                agent.train_world_model(rng)?;
+            }
+            if t % rl.sur_train_every == 0 {
+                agent.train_surrogate(rng)?;
+            }
+        }
+
+        // ---- bookkeeping
+        if out.reward.feasible {
+            feasible_count += 1;
+            pareto.insert(ParetoPoint {
+                perf_gops: out.ppa.perf_gops,
+                power_mw: out.ppa.power.total(),
+                area_mm2: out.ppa.area.total(),
+                tokens_per_s: out.ppa.tokens_per_s,
+                episode: t,
+                tag: t,
+            });
+            if out.reward.score < best_score {
+                best_score = out.reward.score;
+                best = Some(BestConfig { episode: t, outcome: out.clone() });
+            }
+        }
+        seen.insert(config_key(&out));
+        eps.step(feasible_count > 0);
+
+        episodes.push(EpisodeLog {
+            episode: t,
+            reward: out.reward.total,
+            score: out.reward.score,
+            best_score,
+            feasible: out.reward.feasible,
+            tokens_per_s: out.ppa.tokens_per_s,
+            power_mw: out.ppa.power.total(),
+            perf_gops: out.ppa.perf_gops,
+            area_mm2: out.ppa.area.total(),
+            mesh_w: out.decoded.mesh.width,
+            mesh_h: out.decoded.mesh.height,
+            eps: eps.eps,
+            entropy: agent.last_entropy,
+            unique_configs: seen.len(),
+        });
+
+        prev = out;
+        s = s2;
+    }
+    let _ = prev;
+
+    Ok(NodeResult {
+        nm,
+        best,
+        episodes,
+        pareto,
+        feasible_count,
+        total_episodes: rl.episodes_per_node,
+    })
+}
+
+fn agent_batch(agent: &SacAgent) -> usize {
+    agent.runtime.manifest.hyper_or("batch", 256.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    // run_node requires compiled artifacts; exercised by
+    // rust/tests/runtime_e2e.rs and the benches.
+}

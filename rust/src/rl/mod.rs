@@ -1,0 +1,19 @@
+//! The RL optimizer (§3.11–§3.16, Algorithm 1): SAC driver over the
+//! AOT-compiled networks, prioritized replay, adaptive ε-greedy
+//! exploration, world-model MPC planning, the Pareto archive, and the
+//! random/grid search baselines of §4.14.
+
+pub mod agent;
+pub mod baselines;
+pub mod explore;
+pub mod loop_;
+pub mod multiseed;
+pub mod pareto;
+pub mod per;
+
+pub use agent::{SacAgent, UpdateMetrics};
+pub use explore::EpsSchedule;
+pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
+pub use multiseed::{run_seeds, seeds_table, MultiSeedResult, SeedStat};
+pub use pareto::{ParetoArchive, ParetoPoint};
+pub use per::{PerBuffer, Transition};

@@ -1,0 +1,148 @@
+//! Repeated-seed evaluation (§5.4 limitation 2 / §5.5 future work).
+//!
+//! The paper reports single-run results and explicitly calls for
+//! "repeated-seed protocols with confidence intervals". This module runs
+//! any search strategy across N seeds and reports per-metric mean, std
+//! and a normal-approximation 95% confidence interval.
+
+use crate::config::RunConfig;
+use crate::rl::NodeResult;
+use crate::util::csv::{fnum, Table};
+use crate::util::Rng;
+
+/// Aggregated statistics for one metric across seeds.
+#[derive(Debug, Clone, Copy)]
+pub struct SeedStat {
+    pub mean: f64,
+    pub std: f64,
+    /// Half-width of the normal-approximation 95% CI.
+    pub ci95: f64,
+    pub n: usize,
+}
+
+impl SeedStat {
+    pub fn from_samples(xs: &[f64]) -> SeedStat {
+        let n = xs.len().max(1);
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let std = var.sqrt();
+        SeedStat { mean, std, ci95: 1.96 * std / (n as f64).sqrt(), n }
+    }
+}
+
+/// Multi-seed summary of a search strategy at one node.
+#[derive(Debug, Clone)]
+pub struct MultiSeedResult {
+    pub nm: u32,
+    pub seeds: Vec<u64>,
+    pub tokens_per_s: SeedStat,
+    pub power_mw: SeedStat,
+    pub area_mm2: SeedStat,
+    pub score: SeedStat,
+    pub feasible_frac: SeedStat,
+    /// Seeds that found no feasible configuration.
+    pub failures: usize,
+}
+
+/// Run `search` across `n_seeds` derived seeds and aggregate.
+pub fn run_seeds(
+    cfg: &RunConfig,
+    nm: u32,
+    n_seeds: usize,
+    mut search: impl FnMut(&RunConfig, u32, &mut Rng) -> NodeResult,
+) -> MultiSeedResult {
+    let mut toks = Vec::new();
+    let mut power = Vec::new();
+    let mut area = Vec::new();
+    let mut score = Vec::new();
+    let mut feas = Vec::new();
+    let mut seeds = Vec::new();
+    let mut failures = 0usize;
+    for i in 0..n_seeds {
+        let seed = cfg.seed.wrapping_add(0x9E37_79B9 * (i as u64 + 1));
+        seeds.push(seed);
+        let mut rng = Rng::new(seed);
+        let r = search(cfg, nm, &mut rng);
+        feas.push(r.feasible_count as f64 / r.total_episodes.max(1) as f64);
+        match &r.best {
+            Some(b) => {
+                toks.push(b.outcome.ppa.tokens_per_s);
+                power.push(b.outcome.ppa.power.total());
+                area.push(b.outcome.ppa.area.total());
+                score.push(b.outcome.reward.score);
+            }
+            None => failures += 1,
+        }
+    }
+    MultiSeedResult {
+        nm,
+        seeds,
+        tokens_per_s: SeedStat::from_samples(&toks),
+        power_mw: SeedStat::from_samples(&power),
+        area_mm2: SeedStat::from_samples(&area),
+        score: SeedStat::from_samples(&score),
+        feasible_frac: SeedStat::from_samples(&feas),
+        failures,
+    }
+}
+
+/// Render a multi-seed summary table (mean ± 95% CI).
+pub fn seeds_table(results: &[MultiSeedResult]) -> Table {
+    let mut t = Table::new(
+        "multi-seed evaluation (mean ± 95% CI)",
+        &["node", "seeds", "tok_s", "power_mw", "area_mm2", "score", "feas_frac", "failed"],
+    );
+    let pm = |s: &SeedStat, d: usize| format!("{} ±{}", fnum(s.mean, d), fnum(s.ci95, d));
+    for r in results {
+        t.row(vec![
+            format!("{}nm", r.nm),
+            r.seeds.len().to_string(),
+            pm(&r.tokens_per_s, 0),
+            pm(&r.power_mw, 0),
+            pm(&r.area_mm2, 0),
+            pm(&r.score, 3),
+            pm(&r.feasible_frac, 2),
+            r.failures.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Granularity;
+    use crate::rl::baselines;
+
+    #[test]
+    fn seed_stats_basics() {
+        let s = SeedStat::from_samples(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert!(s.ci95 > 0.0 && s.n == 3);
+        let single = SeedStat::from_samples(&[5.0]);
+        assert_eq!((single.mean, single.std), (5.0, 0.0));
+    }
+
+    #[test]
+    fn multi_seed_random_search_varies_but_overlaps() {
+        let mut cfg = RunConfig::default();
+        cfg.rl.episodes_per_node = 20;
+        cfg.granularity = Granularity::Group;
+        let r = run_seeds(&cfg, 3, 3, |c, nm, rng| {
+            baselines::random_search(c, nm, rng)
+        });
+        assert_eq!(r.seeds.len(), 3);
+        // distinct seeds were derived
+        assert_ne!(r.seeds[0], r.seeds[1]);
+        assert!(r.tokens_per_s.mean > 0.0);
+        // seed variance exists but is bounded (same search distribution)
+        assert!(r.tokens_per_s.std < r.tokens_per_s.mean);
+        let t = seeds_table(&[r]);
+        assert!(t.to_text().contains("±"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Pareto archive (§3.10 "Pareto-based final selection", §5.4).
+//!
+//! Every feasible configuration enters the archive; dominated points are
+//! evicted. After convergence the final design is selected from the
+//! frontier by scalarizing frontier-normalized objectives with the user's
+//! PPA weights — guaranteeing the returned design is Pareto-optimal.
+
+use crate::ppa::PpaWeights;
+
+/// One archived operating point. Objectives: maximize perf, minimize
+/// power, minimize area.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub perf_gops: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+    pub tokens_per_s: f64,
+    /// Episode that produced this point (provenance).
+    pub episode: usize,
+    /// Opaque payload id (index into the caller's config log).
+    pub tag: usize,
+}
+
+impl ParetoPoint {
+    /// True when `self` dominates `other` (≥ on all, > on at least one,
+    /// with perf maximized and power/area minimized).
+    pub fn dominates(&self, other: &ParetoPoint) -> bool {
+        let ge = self.perf_gops >= other.perf_gops
+            && self.power_mw <= other.power_mw
+            && self.area_mm2 <= other.area_mm2;
+        let gt = self.perf_gops > other.perf_gops
+            || self.power_mw < other.power_mw
+            || self.area_mm2 < other.area_mm2;
+        ge && gt
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct ParetoArchive {
+    points: Vec<ParetoPoint>,
+}
+
+impl ParetoArchive {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert if non-dominated; evict anything the new point dominates.
+    /// Returns true if inserted.
+    pub fn insert(&mut self, p: ParetoPoint) -> bool {
+        if self.points.iter().any(|q| q.dominates(&p)) {
+            return false;
+        }
+        self.points.retain(|q| !p.dominates(q));
+        self.points.push(p);
+        true
+    }
+
+    pub fn frontier(&self) -> &[ParetoPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Scalarized selection over frontier-normalized objectives with the
+    /// user PPA weights (lower composite = better, matching the paper's
+    /// lower-is-better score convention).
+    pub fn select(&self, w: &PpaWeights) -> Option<&ParetoPoint> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let (alpha, beta, gamma) = w.normalized();
+        let fmax = |f: fn(&ParetoPoint) -> f64| {
+            self.points.iter().map(f).fold(f64::MIN, f64::max)
+        };
+        let fmin = |f: fn(&ParetoPoint) -> f64| {
+            self.points.iter().map(f).fold(f64::MAX, f64::min)
+        };
+        let (p_lo, p_hi) = (fmin(|p| p.perf_gops), fmax(|p| p.perf_gops));
+        let (w_lo, w_hi) = (fmin(|p| p.power_mw), fmax(|p| p.power_mw));
+        let (a_lo, a_hi) = (fmin(|p| p.area_mm2), fmax(|p| p.area_mm2));
+        let nz = |v: f64, lo: f64, hi: f64| {
+            if hi - lo < 1e-12 {
+                0.5
+            } else {
+                (v - lo) / (hi - lo)
+            }
+        };
+        self.points.iter().min_by(|a, b| {
+            let sa = alpha * (1.0 - nz(a.perf_gops, p_lo, p_hi))
+                + beta * nz(a.power_mw, w_lo, w_hi)
+                + gamma * nz(a.area_mm2, a_lo, a_hi);
+            let sb = alpha * (1.0 - nz(b.perf_gops, p_lo, p_hi))
+                + beta * nz(b.power_mw, w_lo, w_hi)
+                + gamma * nz(b.area_mm2, a_lo, a_hi);
+            sa.total_cmp(&sb)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(perf: f64, power: f64, area: f64, tag: usize) -> ParetoPoint {
+        ParetoPoint {
+            perf_gops: perf,
+            power_mw: power,
+            area_mm2: area,
+            tokens_per_s: perf / 10.0,
+            episode: 0,
+            tag,
+        }
+    }
+
+    #[test]
+    fn dominated_points_rejected() {
+        let mut a = ParetoArchive::new();
+        assert!(a.insert(p(100.0, 10.0, 10.0, 0)));
+        assert!(!a.insert(p(90.0, 11.0, 11.0, 1))); // dominated
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn dominating_point_evicts() {
+        let mut a = ParetoArchive::new();
+        a.insert(p(100.0, 10.0, 10.0, 0));
+        a.insert(p(50.0, 5.0, 5.0, 1)); // trade-off: kept
+        assert_eq!(a.len(), 2);
+        assert!(a.insert(p(120.0, 4.0, 4.0, 2))); // dominates both
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.frontier()[0].tag, 2);
+    }
+
+    #[test]
+    fn frontier_holds_tradeoffs() {
+        let mut a = ParetoArchive::new();
+        a.insert(p(100.0, 50.0, 10.0, 0)); // fast, hungry
+        a.insert(p(10.0, 1.0, 10.0, 1)); // slow, frugal
+        a.insert(p(50.0, 20.0, 5.0, 2)); // compact
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn selection_follows_weights() {
+        let mut a = ParetoArchive::new();
+        a.insert(p(100.0, 50.0, 10.0, 0));
+        a.insert(p(10.0, 1.0, 10.0, 1));
+        // performance-priority picks the fast point
+        let hp = a.select(&PpaWeights { perf: 0.8, power: 0.1, area: 0.1 }).unwrap();
+        assert_eq!(hp.tag, 0);
+        // power-priority picks the frugal point
+        let lp = a.select(&PpaWeights { perf: 0.1, power: 0.8, area: 0.1 }).unwrap();
+        assert_eq!(lp.tag, 1);
+    }
+
+    #[test]
+    fn selected_point_is_pareto_optimal() {
+        let mut a = ParetoArchive::new();
+        for i in 0..20 {
+            let f = i as f64;
+            a.insert(p(10.0 * f, 5.0 * f + 1.0, 100.0 - 2.0 * f, i));
+        }
+        let sel = a.select(&PpaWeights::HIGH_PERF).unwrap().clone();
+        assert!(!a.frontier().iter().any(|q| q.dominates(&sel)));
+    }
+
+    #[test]
+    fn equal_points_not_mutually_dominating() {
+        let a = p(10.0, 10.0, 10.0, 0);
+        let b = p(10.0, 10.0, 10.0, 1);
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+    }
+}

@@ -1,0 +1,238 @@
+//! Prioritized experience replay (§3.11): 100 K-capacity ring buffer with
+//! a sum-tree for O(log n) stochastic prioritized sampling, priority
+//! exponent α=0.6, importance-sampling exponent β annealed 0.4 → 1.0,
+//! priorities p_i = (|δ_i| + 1e-6)^0.6.
+
+use crate::env::{ACT_DIM, SAC_STATE_DIM};
+use crate::util::Rng;
+
+/// One stored transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub s: [f32; SAC_STATE_DIM],
+    pub a_cont: [f32; ACT_DIM],
+    pub a_disc: [f32; 20],
+    pub r: f32,
+    pub s2: [f32; SAC_STATE_DIM],
+    pub done: f32,
+    /// Normalized (power, perf, area) observation — surrogate targets.
+    pub ppa: [f32; 3],
+}
+
+/// Flat binary sum-tree over capacity leaves.
+struct SumTree {
+    n: usize,
+    tree: Vec<f64>,
+}
+
+impl SumTree {
+    fn new(n: usize) -> Self {
+        SumTree { n, tree: vec![0.0; 2 * n] }
+    }
+
+    fn set(&mut self, i: usize, v: f64) {
+        let mut idx = self.n + i;
+        self.tree[idx] = v;
+        while idx > 1 {
+            idx /= 2;
+            self.tree[idx] = self.tree[2 * idx] + self.tree[2 * idx + 1];
+        }
+    }
+
+    fn get(&self, i: usize) -> f64 {
+        self.tree[self.n + i]
+    }
+
+    fn total(&self) -> f64 {
+        self.tree[1]
+    }
+
+    /// Find the leaf where the prefix sum crosses `u` ∈ [0, total).
+    fn find(&self, mut u: f64) -> usize {
+        let mut idx = 1;
+        while idx < self.n {
+            let left = self.tree[2 * idx];
+            if u < left {
+                idx *= 2;
+            } else {
+                u -= left;
+                idx = 2 * idx + 1;
+            }
+        }
+        (idx - self.n).min(self.n - 1)
+    }
+}
+
+pub struct PerBuffer {
+    capacity: usize,
+    data: Vec<Transition>,
+    write: usize,
+    tree: SumTree,
+    max_priority: f64,
+    pub alpha: f64,
+    pub beta: f64,
+    beta_step: f64,
+}
+
+impl PerBuffer {
+    pub fn new(capacity: usize, alpha: f64, beta0: f64, beta_step: f64) -> Self {
+        PerBuffer {
+            capacity,
+            data: Vec::with_capacity(capacity.min(4096)),
+            write: 0,
+            tree: SumTree::new(capacity),
+            max_priority: 1.0,
+            alpha,
+            beta: beta0,
+            beta_step,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Insert with max priority (new experience is always worth a look).
+    pub fn push(&mut self, t: Transition) {
+        if self.data.len() < self.capacity {
+            self.data.push(t);
+            let i = self.data.len() - 1;
+            self.tree.set(i, self.max_priority);
+        } else {
+            self.data[self.write] = t;
+            self.tree.set(self.write, self.max_priority);
+            self.write = (self.write + 1) % self.capacity;
+        }
+    }
+
+    /// Stochastic prioritized sample of `k` transitions. Returns indices
+    /// and normalized importance-sampling weights (max weight = 1).
+    /// Anneals β by `beta_step` per sampled transition.
+    pub fn sample(&mut self, k: usize, rng: &mut Rng) -> (Vec<usize>, Vec<f32>) {
+        assert!(!self.is_empty(), "sampling from empty buffer");
+        let total = self.tree.total().max(1e-12);
+        let n = self.data.len() as f64;
+        let mut idxs = Vec::with_capacity(k);
+        let mut weights = Vec::with_capacity(k);
+        let mut wmax = 0.0f64;
+        for j in 0..k {
+            // stratified sampling over the priority mass
+            let seg = total / k as f64;
+            let u = seg * (j as f64 + rng.uniform());
+            let i = self.tree.find(u);
+            let p = self.tree.get(i) / total;
+            let w = (n * p).powf(-self.beta);
+            wmax = wmax.max(w);
+            idxs.push(i);
+            weights.push(w);
+        }
+        self.beta = (self.beta + self.beta_step * k as f64).min(1.0);
+        let weights = weights.into_iter().map(|w| (w / wmax) as f32).collect();
+        (idxs, weights)
+    }
+
+    /// Update priorities from TD errors: p = (|δ| + 1e-6)^α.
+    pub fn update_priorities(&mut self, idxs: &[usize], td_abs: &[f32]) {
+        for (&i, &d) in idxs.iter().zip(td_abs) {
+            let p = ((d.abs() as f64) + 1e-6).powf(self.alpha);
+            self.max_priority = self.max_priority.max(p);
+            self.tree.set(i, p);
+        }
+    }
+
+    pub fn get(&self, i: usize) -> &Transition {
+        &self.data[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f32) -> Transition {
+        Transition {
+            s: [0.0; SAC_STATE_DIM],
+            a_cont: [0.0; ACT_DIM],
+            a_disc: [0.0; 20],
+            r,
+            s2: [0.0; SAC_STATE_DIM],
+            done: 0.0,
+            ppa: [0.0; 3],
+        }
+    }
+
+    #[test]
+    fn ring_buffer_wraps() {
+        let mut b = PerBuffer::new(4, 0.6, 0.4, 0.001);
+        for i in 0..6 {
+            b.push(t(i as f32));
+        }
+        assert_eq!(b.len(), 4);
+        // oldest (0,1) overwritten by (4,5)
+        let rs: Vec<f32> = (0..4).map(|i| b.get(i).r).collect();
+        assert!(rs.contains(&4.0) && rs.contains(&5.0));
+        assert!(!rs.contains(&0.0));
+    }
+
+    #[test]
+    fn prioritized_sampling_prefers_high_td() {
+        let mut b = PerBuffer::new(128, 0.6, 0.4, 0.0);
+        for i in 0..100 {
+            b.push(t(i as f32));
+        }
+        // give index 7 a huge priority
+        let idxs: Vec<usize> = (0..100).collect();
+        let mut tds = vec![0.01f32; 100];
+        tds[7] = 100.0;
+        b.update_priorities(&idxs, &tds);
+        let mut rng = Rng::new(1);
+        let mut hits = 0;
+        for _ in 0..50 {
+            let (ix, _) = b.sample(16, &mut rng);
+            hits += ix.iter().filter(|&&i| i == 7).count();
+        }
+        assert!(hits > 200, "high-priority index sampled {hits}/800");
+    }
+
+    #[test]
+    fn importance_weights_normalized() {
+        let mut b = PerBuffer::new(64, 0.6, 0.4, 0.001);
+        for i in 0..32 {
+            b.push(t(i as f32));
+        }
+        let mut rng = Rng::new(2);
+        let (_, w) = b.sample(16, &mut rng);
+        assert!(w.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-6));
+        assert!(w.iter().any(|&x| (x - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn beta_anneals_to_one() {
+        let mut b = PerBuffer::new(64, 0.6, 0.4, 0.001);
+        for _ in 0..8 {
+            b.push(t(0.0));
+        }
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            b.sample(256, &mut rng);
+        }
+        assert!((b.beta - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sum_tree_prefix_find() {
+        let mut st = SumTree::new(8);
+        for i in 0..8 {
+            st.set(i, 1.0);
+        }
+        assert_eq!(st.total(), 8.0);
+        assert_eq!(st.find(0.5), 0);
+        assert_eq!(st.find(7.5), 7);
+        st.set(3, 100.0);
+        assert_eq!(st.find(50.0), 3);
+    }
+}

@@ -1,0 +1,210 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// One tensor in an entrypoint signature (positional order matters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered computation.
+#[derive(Debug, Clone)]
+pub struct EntryPoint {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parameter-store initialization recipe (aot.py `store_inits`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum InitKind {
+    Zeros,
+    /// He/Kaiming: N(0, sqrt(2/fan_in)).
+    He,
+    Const(f64),
+    /// Copy from another store entry (Polyak targets start as copies).
+    Copy(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct StoreInit {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entrypoints: BTreeMap<String, EntryPoint>,
+    pub stores: Vec<StoreInit>,
+    pub hyper: BTreeMap<String, f64>,
+}
+
+fn parse_specs(arr: &Json) -> Result<Vec<TensorSpec>, String> {
+    arr.as_arr()
+        .ok_or("specs not an array")?
+        .iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or("spec missing name")?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("spec missing shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim"))
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(TensorSpec { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let mut entrypoints = BTreeMap::new();
+        for (name, ep) in j
+            .get("entrypoints")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing entrypoints")?
+        {
+            entrypoints.insert(
+                name.clone(),
+                EntryPoint {
+                    file: ep
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or("entrypoint missing file")?
+                        .to_string(),
+                    inputs: parse_specs(ep.get("inputs").ok_or("missing inputs")?)?,
+                    outputs: parse_specs(ep.get("outputs").ok_or("missing outputs")?)?,
+                },
+            );
+        }
+
+        let mut stores = Vec::new();
+        for (name, st) in j
+            .get("stores")
+            .and_then(Json::as_obj)
+            .ok_or("manifest missing stores")?
+        {
+            let shape = st
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or("store missing shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or("bad dim"))
+                .collect::<Result<Vec<_>, _>>()?;
+            let init_s = st
+                .get("init")
+                .and_then(Json::as_str)
+                .ok_or("store missing init")?;
+            let init = if init_s == "zeros" {
+                InitKind::Zeros
+            } else if init_s == "he" {
+                InitKind::He
+            } else if let Some(v) = init_s.strip_prefix("const:") {
+                InitKind::Const(v.parse().map_err(|_| format!("bad const {v}"))?)
+            } else if let Some(src) = init_s.strip_prefix("copy:") {
+                InitKind::Copy(src.to_string())
+            } else {
+                return Err(format!("unknown init recipe {init_s}"));
+            };
+            stores.push(StoreInit { name: name.clone(), shape, init });
+        }
+
+        let mut hyper = BTreeMap::new();
+        if let Some(h) = j.get("hyper").and_then(Json::as_obj) {
+            for (k, v) in h {
+                if let Some(n) = v.as_f64() {
+                    hyper.insert(k.clone(), n);
+                }
+            }
+        }
+        Ok(Manifest { entrypoints, stores, hyper })
+    }
+
+    pub fn hyper_or(&self, key: &str, default: f64) -> f64 {
+        self.hyper.get(key).copied().unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "entrypoints": {
+        "f": {
+          "file": "f.hlo.txt",
+          "inputs": [{"name": "state/w", "shape": [2, 3], "dtype": "f32"},
+                     {"name": "batch/x", "shape": [], "dtype": "f32"}],
+          "outputs": [{"name": "state/w", "shape": [2, 3], "dtype": "f32"}]
+        }
+      },
+      "stores": {
+        "w": {"shape": [2, 3], "init": "he"},
+        "w_m": {"shape": [2, 3], "init": "zeros"},
+        "t": {"shape": [2, 3], "init": "copy:w"},
+        "la": {"shape": [], "init": "const:-1.5"}
+      },
+      "hyper": {"lr": 0.0003, "batch": 256}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let ep = &m.entrypoints["f"];
+        assert_eq!(ep.inputs.len(), 2);
+        assert_eq!(ep.inputs[0].elems(), 6);
+        assert_eq!(ep.inputs[1].elems(), 1); // scalar
+        assert_eq!(m.stores.len(), 4);
+        assert!(m
+            .stores
+            .iter()
+            .any(|s| s.init == InitKind::Copy("w".into())));
+        assert!(m.stores.iter().any(|s| s.init == InitKind::Const(-1.5)));
+        assert_eq!(m.hyper_or("batch", 0.0), 256.0);
+        assert_eq!(m.hyper_or("nope", 7.0), 7.0);
+    }
+
+    #[test]
+    fn rejects_bad_init() {
+        let bad = SAMPLE.replace("\"he\"", "\"bogus\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_when_built() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.entrypoints.contains_key("sac_update"));
+            assert!(m.entrypoints.contains_key("actor_fwd_b1"));
+            assert_eq!(m.hyper_or("state_dim", 0.0), 52.0);
+            assert_eq!(m.hyper_or("act_dim", 0.0), 30.0);
+            // every sac_update state input is initializable
+            let names: std::collections::BTreeSet<_> =
+                m.stores.iter().map(|s| s.name.clone()).collect();
+            for i in &m.entrypoints["sac_update"].inputs {
+                if let Some(k) = i.name.strip_prefix("state/") {
+                    assert!(names.contains(k), "{k} missing from stores");
+                }
+            }
+        }
+    }
+}

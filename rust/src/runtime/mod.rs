@@ -1,0 +1,162 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the optimization loop.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Python never
+//! runs at optimization time — the manifest makes this module fully
+//! table-driven.
+
+pub mod manifest;
+
+pub use manifest::{EntryPoint, InitKind, Manifest, StoreInit, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Lazily-compiling executor over the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executed-call counter per entrypoint (perf accounting).
+    pub call_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse `<dir>/manifest.json`.
+    /// Executables compile lazily on first call.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let manifest = Manifest::parse(&text).map_err(anyhow::Error::msg)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            exes: HashMap::new(),
+            call_counts: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile an entrypoint (otherwise compiled on first call).
+    pub fn ensure_compiled(&mut self, entry: &str) -> Result<()> {
+        if self.exes.contains_key(entry) {
+            return Ok(());
+        }
+        let ep = self
+            .manifest
+            .entrypoints
+            .get(entry)
+            .with_context(|| format!("unknown entrypoint {entry}"))?;
+        let path = self.dir.join(&ep.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(entry.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute `entry`, resolving each manifest input by name through
+    /// `resolve` (returning a borrowed flat f32 slice). Returns
+    /// (name, flat data) for every output, in manifest order.
+    ///
+    /// NOTE: goes through `execute_b` with caller-owned `PjRtBuffer`s —
+    /// the vendored xla crate's `execute(&[Literal])` path `release()`s
+    /// the device buffers it creates for each input and never frees them
+    /// (xla_rs.cc `execute`), leaking ~the full input payload per call.
+    /// With buffers we own, Drop reclaims them.
+    pub fn call(
+        &mut self,
+        entry: &str,
+        mut resolve: impl FnMut(&str) -> Option<Vec<f32>>,
+    ) -> Result<Vec<(String, Vec<f32>)>> {
+        self.ensure_compiled(entry)?;
+        *self.call_counts.entry(entry.to_string()).or_insert(0) += 1;
+        let ep = &self.manifest.entrypoints[entry];
+
+        let mut buffers = Vec::with_capacity(ep.inputs.len());
+        for spec in &ep.inputs {
+            let data = resolve(&spec.name)
+                .with_context(|| format!("{entry}: missing input {}", spec.name))?;
+            if data.len() != spec.elems() {
+                bail!(
+                    "{entry}: input {} has {} elems, manifest shape {:?} wants {}",
+                    spec.name,
+                    data.len(),
+                    spec.shape,
+                    spec.elems()
+                );
+            }
+            let dims: &[usize] = if spec.shape.is_empty() { &[] } else { &spec.shape };
+            buffers.push(self.client.buffer_from_host_buffer::<f32>(
+                &data, dims, None,
+            )?);
+        }
+
+        let exe = self.exes.get(entry).unwrap();
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True: unpack the tuple
+        let parts = result.to_tuple()?;
+        if parts.len() != ep.outputs.len() {
+            bail!(
+                "{entry}: got {} outputs, manifest lists {}",
+                parts.len(),
+                ep.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(&ep.outputs) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != spec.elems() {
+                bail!(
+                    "{entry}: output {} has {} elems, expected {}",
+                    spec.name,
+                    v.len(),
+                    spec.elems()
+                );
+            }
+            out.push((spec.name.clone(), v));
+        }
+        Ok(out)
+    }
+}
+
+#[allow(dead_code)] // kept for Literal-path diagnostics + tests
+fn make_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // End-to-end runtime tests (require `make artifacts`) live in
+    // rust/tests/runtime_e2e.rs. Here: literal plumbing only.
+
+    #[test]
+    fn scalar_literal_round_trip() {
+        let l = make_literal(&[2.5], &[]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn shaped_literal_round_trip() {
+        let l = make_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+}

@@ -1,0 +1,171 @@
+//! Tiny criterion-style benchmark harness.
+//!
+//! criterion is not vendored in this image, so `cargo bench` targets
+//! (declared with `harness = false`) use this module: warmup, repeated
+//! timed samples, mean/stddev/min reporting, and optional CSV emission so
+//! the report pipeline can import bench numbers.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std_s(&self) -> f64 {
+        let m = self.mean_s();
+        (self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+            / self.samples.len() as f64)
+            .sqrt()
+    }
+
+    pub fn min_s(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}  std {:>10}  min {:>12}  ({} samples)",
+            self.name,
+            fmt_dur(self.mean_s()),
+            fmt_dur(self.std_s()),
+            fmt_dur(self.min_s()),
+            self.samples.len()
+        )
+    }
+}
+
+pub fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{:.3} s", s)
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(3),
+            max_samples: 50,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// Time `f`, which performs ONE iteration of the benchmarked work and
+    /// returns a value kept alive to prevent dead-code elimination.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // sampling
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        if samples.is_empty() {
+            samples.push(f64::NAN);
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        println!("{}", r.report());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Emit all results as CSV (name, mean_s, std_s, min_s, samples).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("name,mean_s,std_s,min_s,samples\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                r.name,
+                r.mean_s(),
+                r.std_s(),
+                r.min_s(),
+                r.samples.len()
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        let _ = std::fs::write(path, self.to_csv());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_samples: 5,
+            results: vec![],
+        };
+        b.bench("noop-ish", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        let r = &b.results[0];
+        assert!(!r.samples.is_empty());
+        assert!(r.mean_s() >= 0.0);
+        assert!(r.min_s() <= r.mean_s());
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(5),
+            max_samples: 2,
+            results: vec![],
+        };
+        b.bench("a", || 1);
+        let csv = b.to_csv();
+        assert!(csv.starts_with("name,mean_s"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_dur(2.0), "2.000 s");
+        assert!(fmt_dur(0.002).ends_with("ms"));
+        assert!(fmt_dur(2e-6).ends_with("µs"));
+        assert!(fmt_dur(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Small shared utilities: deterministic RNG, statistics helpers, CSV
+//! emission. No external randomness — every stochastic component in the
+//! optimizer draws from [`rng::Rng`] so runs are reproducible from a single
+//! seed.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Round `v` up to the next multiple of `m`.
+pub fn round_up(v: usize, m: usize) -> usize {
+    v.div_ceil(m) * m
+}
+
+/// Clamp helper mirroring the paper's `clip(x, lo, hi)` notation.
+pub fn clip(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Linear interpolation of `x` from `[a0, a1]` onto `[b0, b1]`.
+pub fn lerp(x: f64, a0: f64, a1: f64, b0: f64, b1: f64) -> f64 {
+    if (a1 - a0).abs() < 1e-12 {
+        return b0;
+    }
+    b0 + (x - a0) * (b1 - b0) / (a1 - a0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn clip_bounds() {
+        assert_eq!(clip(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clip(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clip(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        assert!((lerp(3.0, 3.0, 28.0, 1.0, 0.1) - 1.0).abs() < 1e-12);
+        assert!((lerp(28.0, 3.0, 28.0, 1.0, 0.1) - 0.1).abs() < 1e-12);
+        // degenerate interval returns b0
+        assert_eq!(lerp(1.0, 2.0, 2.0, 7.0, 9.0), 7.0);
+    }
+}

@@ -1,0 +1,202 @@
+//! Statistics used by the paper's evaluation section: summary stats
+//! (Table 16), Pearson correlation (Fig 8 / Table 13), log-log power-law
+//! fits (Eq 73–74 / Fig 9 / Table 13), Gini coefficient + Lorenz curve
+//! (Fig 11c), and percentile thresholds (Fig 12a P50/P90).
+
+/// Summary statistics over a sample (Table 16 columns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub median: f64,
+    pub std_dev: f64,
+    pub unique: usize,
+}
+
+pub fn summary(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summary of empty sample");
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let median = percentile_sorted(&sorted, 50.0);
+    let mut unique = 1;
+    for w in sorted.windows(2) {
+        if (w[1] - w[0]).abs() > 1e-9 {
+            unique += 1;
+        }
+    }
+    Summary {
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        mean,
+        median,
+        std_dev: var.sqrt(),
+        unique,
+    }
+}
+
+/// Percentile (nearest-rank interpolated) of a pre-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    percentile_sorted(&sorted, p)
+}
+
+/// Pearson correlation coefficient (Fig 8, Table 13 lower half).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Log-log power-law fit y = c · n^k (Eq 73). Returns (k, c, r²).
+pub fn loglog_fit(n: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(n.len(), y.len());
+    let lx: Vec<f64> = n.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = y.iter().map(|v| v.ln()).collect();
+    let (k, logc) = linfit(&lx, &ly);
+    // R² in log space (Eq 74)
+    let my = ly.iter().sum::<f64>() / ly.len() as f64;
+    let ss_res: f64 = lx
+        .iter()
+        .zip(&ly)
+        .map(|(x, yv)| {
+            let pred = logc + k * x;
+            (yv - pred) * (yv - pred)
+        })
+        .sum();
+    let ss_tot: f64 = ly.iter().map(|v| (v - my) * (v - my)).sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (k, logc.exp(), r2)
+}
+
+/// Ordinary least squares y = a·x + b → (a, b).
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+    }
+    let slope = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    (slope, my - slope * mx)
+}
+
+/// Gini coefficient of a non-negative allocation (Fig 11c).
+pub fn gini(xs: &[f64]) -> f64 {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let n = sorted.len() as f64;
+    let total: f64 = sorted.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut cum = 0.0;
+    let mut b = 0.0; // area under Lorenz curve (trapezoid)
+    for &x in &sorted {
+        let prev = cum;
+        cum += x / total;
+        b += (prev + cum) / 2.0;
+    }
+    1.0 - 2.0 * b / n
+}
+
+/// Lorenz curve points (cumulative share) for plotting, ascending.
+pub fn lorenz(xs: &[f64]) -> Vec<(f64, f64)> {
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let total: f64 = sorted.iter().sum();
+    let n = sorted.len() as f64;
+    let mut cum = 0.0;
+    let mut out = vec![(0.0, 0.0)];
+    for (i, &x) in sorted.iter().enumerate() {
+        cum += x;
+        out.push(((i + 1) as f64 / n, if total > 0.0 { cum / total } else { 0.0 }));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summary(&[1.0, 2.0, 3.0, 4.0, 4.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.mean - 2.8).abs() < 1e-12);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.unique, 4);
+    }
+
+    #[test]
+    fn pearson_perfect_and_anti() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y: Vec<f64> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let z: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loglog_fit_recovers_power_law() {
+        let n: [f64; 7] = [3.0, 5.0, 7.0, 10.0, 14.0, 22.0, 28.0];
+        let y: Vec<f64> = n.iter().map(|v| 100.0 * v.powf(-1.33)).collect();
+        let (k, c, r2) = loglog_fit(&n, &y);
+        assert!((k + 1.33).abs() < 1e-9, "k {k}");
+        assert!((c - 100.0).abs() < 1e-6, "c {c}");
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn gini_uniform_is_zero_concentrated_near_one() {
+        assert!(gini(&[1.0; 100]).abs() < 1e-9);
+        let mut xs = vec![0.0; 99];
+        xs.push(100.0);
+        assert!(gini(&xs) > 0.95);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.0).abs() < 1e-9);
+        assert!((percentile(&xs, 90.0) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lorenz_ends_at_one() {
+        let pts = lorenz(&[5.0, 1.0, 3.0]);
+        assert_eq!(pts[0], (0.0, 0.0));
+        let last = pts.last().unwrap();
+        assert!((last.0 - 1.0).abs() < 1e-12 && (last.1 - 1.0).abs() < 1e-12);
+    }
+}

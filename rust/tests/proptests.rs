@@ -1,0 +1,235 @@
+//! Property-based tests over coordinator invariants. The image vendors no
+//! proptest crate, so properties are swept with the crate's deterministic
+//! RNG (util::Rng) over a few hundred random cases each — same idea:
+//! random inputs, universal assertions, reproducible failures (the seed is
+//! printed on panic via assert messages).
+
+use silicon_rl::arch::{derive_tiles, MeshConfig, ParamRanges, TccParams, TileLoad};
+use silicon_rl::arch::ranges::{QuantPolicy, Quantizer};
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{Action, Env, ACT_DIM, N_DISC};
+use silicon_rl::hazard::Mitigation;
+use silicon_rl::ir::{llama, PartitionClass};
+use silicon_rl::partition::{self, PartitionKnobs, Unit};
+use silicon_rl::ppa::PpaWeights;
+use silicon_rl::rl::{ParetoArchive, ParetoPoint};
+use silicon_rl::util::{stats, Rng};
+
+fn random_units(rng: &mut Rng, n: usize) -> Vec<Unit> {
+    (0..n)
+        .map(|i| {
+            let class = match rng.below(3) {
+                0 => PartitionClass::MatMul,
+                1 => PartitionClass::Conv,
+                _ => PartitionClass::General,
+            };
+            let kind = match class {
+                PartitionClass::MatMul => silicon_rl::ir::OpKind::MatMul,
+                PartitionClass::Conv => silicon_rl::ir::OpKind::Conv,
+                PartitionClass::General => silicon_rl::ir::OpKind::Softmax,
+            };
+            Unit {
+                class,
+                flops: rng.uniform_in(0.0, 1e9),
+                weight_bytes: rng.uniform_in(0.0, 5e7),
+                out_bytes: rng.uniform_in(64.0, 1e6),
+                instrs: rng.uniform_in(10.0, 1e5),
+                inputs: if i > 0 { vec![rng.below(i) as u32] } else { vec![] },
+                kind,
+            }
+        })
+        .collect()
+}
+
+fn random_knobs(rng: &mut Rng) -> PartitionKnobs {
+    PartitionKnobs {
+        rho_base: rng.uniform_in(0.0, 1.0),
+        d_matmul: rng.uniform_in(-0.5, 0.7),
+        d_conv: rng.uniform_in(-0.5, 0.7),
+        d_general: rng.uniform_in(-0.5, 0.5),
+        w_load: rng.uniform_in(0.1, 3.0),
+        streaming_in: rng.uniform_in(0.0, 1.0),
+        streaming_out: rng.uniform_in(0.0, 1.0),
+        sub_matmul: rng.uniform_in(0.0, 2.0),
+        allreduce_frac: rng.uniform_in(0.0, 1.0),
+    }
+}
+
+#[test]
+fn prop_placement_conserves_flops_and_weights() {
+    let mut rng = Rng::new(0xA11 + 1);
+    let mit = Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 };
+    for case in 0..60 {
+        let n_units = 32 + rng.below(100);
+        let units = random_units(&mut rng, n_units);
+        let mesh = MeshConfig::new(2 + rng.below(14) as u32, 2 + rng.below(14) as u32);
+        let knobs = random_knobs(&mut rng);
+        let p = partition::place_units(&units, &mesh, &knobs, &mit);
+        let uf: f64 = units.iter().map(|u| u.flops).sum();
+        let pf: f64 = p.loads.iter().map(|l| l.flops).sum();
+        assert!((uf - pf).abs() <= 1e-6 * uf.max(1.0), "case {case}: flops leak");
+        let uw: f64 = units.iter().map(|u| u.weight_bytes).sum();
+        let pw: f64 = p.loads.iter().map(|l| l.weight_bytes).sum();
+        assert!((uw - pw).abs() <= 1e-6 * uw.max(1.0), "case {case}: weight leak");
+        // balance score in (0, 1]
+        assert!(p.load_stats.balance > 0.0 && p.load_stats.balance <= 1.0);
+        // traffic statistics self-consistent
+        assert!(p.traffic.byte_hops >= p.traffic.cross_tile_bytes - 1e-9);
+        assert!(p.traffic.bisection_bytes <= p.traffic.cross_tile_bytes + 1e-9);
+    }
+}
+
+#[test]
+fn prop_quantizers_respect_bounds_and_policy() {
+    let mut rng = Rng::new(2);
+    for _ in 0..300 {
+        let lo = 2f64.powi(rng.below(6) as i32);
+        let hi = lo * 2f64.powi(1 + rng.below(8) as i32);
+        let q = Quantizer::new(lo, hi, QuantPolicy::PowerOfTwo);
+        let v = rng.uniform_in(0.0, hi * 2.0);
+        let out = q.quantize(v) as f64;
+        let up = q.quantize_up(v) as f64;
+        for o in [out, up] {
+            assert!(o >= lo && o <= hi, "{o} outside [{lo},{hi}]");
+            assert!((o as u32).is_power_of_two());
+        }
+        // quantize_up never loses capacity (within bounds)
+        if v >= lo && v <= hi {
+            assert!(up >= v - 1e-9, "up {up} < v {v}");
+        }
+        assert!(up >= out || (v > hi));
+    }
+}
+
+#[test]
+fn prop_hetero_tiles_always_within_table7() {
+    let mut rng = Rng::new(3);
+    let ranges = ParamRanges::paper();
+    for _ in 0..40 {
+        let mesh = MeshConfig::new(2 + rng.below(10) as u32, 2 + rng.below(10) as u32);
+        let mut avg = TccParams::default_for(rng.uniform_in(10.0, 1000.0));
+        avg.vlen_bits = ranges.vlen_bits.from_unit(rng.uniform_in(-1.0, 1.0));
+        avg.dmem_kb = ranges.dmem_kb.from_unit(rng.uniform_in(-1.0, 1.0));
+        let loads: Vec<TileLoad> = (0..mesh.cores())
+            .map(|_| TileLoad {
+                flops: rng.uniform_in(0.0, 1e10),
+                weight_bytes: rng.uniform_in(0.0, 2e8),
+                act_bytes: rng.uniform_in(0.0, 2e6),
+                kv_bytes: rng.uniform_in(0.0, 1e6),
+                instrs: rng.uniform_in(1.0, 1e6),
+                hazard_density: rng.uniform_in(0.0, 1.0),
+            })
+            .collect();
+        let tiles = derive_tiles(&mesh, &avg, &loads, &ranges);
+        for t in &tiles {
+            assert!((1..=16).contains(&t.fetch) && t.fetch.is_power_of_two());
+            assert!((128..=2048).contains(&t.vlen_bits));
+            assert!(t.vlen_bits.is_power_of_two());
+            assert!((16..=1024).contains(&t.dmem_kb));
+            assert!((1..=128).contains(&t.imem_kb));
+            assert!(t.wmem_kb >= 256);
+            // capacity covers placement unless capped at the range max
+            let cap = t.wmem_kb as f64 * 1024.0;
+            let used = loads[t.tile].weight_bytes;
+            assert!(cap >= used || t.wmem_kb == 131_072, "tile {}", t.tile);
+        }
+    }
+}
+
+#[test]
+fn prop_env_eval_never_panics_and_stays_finite() {
+    let mut cfg = RunConfig::default();
+    cfg.granularity = Granularity::Group;
+    let mut rng = Rng::new(4);
+    for nm in [3u32, 10, 28] {
+        let mut env = Env::new(&cfg, nm);
+        for _ in 0..15 {
+            let mut a = Action::neutral();
+            for v in a.cont.iter_mut() {
+                *v = rng.uniform_in(-1.5, 1.5); // deliberately out of range
+            }
+            for d in a.deltas.iter_mut() {
+                *d = rng.below(5) as i32 - 2;
+            }
+            let out = env.eval_action(&a);
+            assert!(out.ppa.tokens_per_s.is_finite());
+            assert!(out.ppa.power.total() > 0.0);
+            assert!(out.ppa.area.total() > 0.0);
+            assert!(out.reward.total.is_finite());
+            assert!(out.full_state.iter().all(|v| v.is_finite()));
+            assert!(out.reward.score >= 0.0 && out.reward.score <= 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_pareto_archive_invariants_under_random_inserts() {
+    let mut rng = Rng::new(5);
+    let mut archive = ParetoArchive::new();
+    for i in 0..500 {
+        archive.insert(ParetoPoint {
+            perf_gops: rng.uniform_in(1.0, 1e6),
+            power_mw: rng.uniform_in(1.0, 1e5),
+            area_mm2: rng.uniform_in(1.0, 4e3),
+            tokens_per_s: rng.uniform_in(1.0, 3e4),
+            episode: i,
+            tag: i,
+        });
+        // no point on the frontier dominates another
+        let f = archive.frontier();
+        for a in f {
+            for b in f {
+                assert!(!a.dominates(b) || std::ptr::eq(a, b));
+            }
+        }
+    }
+    // selection always returns a frontier member for any weights
+    for _ in 0..20 {
+        let w = PpaWeights {
+            perf: rng.uniform_in(0.01, 1.0),
+            power: rng.uniform_in(0.01, 1.0),
+            area: rng.uniform_in(0.01, 1.0),
+        };
+        let sel = archive.select(&w).unwrap();
+        assert!(archive.frontier().iter().any(|p| p.tag == sel.tag));
+    }
+}
+
+#[test]
+fn prop_action_decode_total_dims_match_paper() {
+    assert_eq!(ACT_DIM, 30);
+    assert_eq!(N_DISC, 4);
+}
+
+#[test]
+fn prop_stats_summary_consistency() {
+    let mut rng = Rng::new(6);
+    for _ in 0..100 {
+        let n = 1 + rng.below(200);
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform_in(-100.0, 100.0)).collect();
+        let s = stats::summary(&xs);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.min <= s.mean && s.mean <= s.max);
+        assert!(s.std_dev >= 0.0);
+        assert!(s.unique >= 1 && s.unique <= n);
+        let g = stats::gini(&xs.iter().map(|x| x.abs()).collect::<Vec<_>>());
+        assert!((0.0..=1.0).contains(&g));
+    }
+}
+
+#[test]
+fn prop_llama_placement_compute_bound_for_reasonable_knobs() {
+    // Eq 24 shape: for sane knob settings the compute ceiling binds
+    let g = llama::build();
+    let units = partition::groups::units_from_groups(&g);
+    let mit = Mitigation { stanum: 8, fetch: 4, xr_wp: 2, vr_wp: 2 };
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let mut knobs = random_knobs(&mut rng);
+        knobs.streaming_in = rng.uniform_in(0.4, 1.0);
+        let mesh = MeshConfig::new(8 + rng.below(30) as u32, 8 + rng.below(30) as u32);
+        let p = partition::place_units(&units, &mesh, &knobs, &mit);
+        // all weights placed; eta_par sane
+        assert!(p.eta_parallel() > 0.05 && p.eta_parallel() <= 1.0);
+    }
+}

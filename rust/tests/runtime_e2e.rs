@@ -1,0 +1,194 @@
+//! End-to-end tests over the AOT artifacts: PJRT load/compile/execute of
+//! every entrypoint, SAC update mechanics, world-model/MPC path, and a
+//! short Algorithm 1 run. Skipped (pass trivially) when `make artifacts`
+//! has not been run.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
+use silicon_rl::nn::Store;
+use silicon_rl::rl::{run_node, SacAgent, Transition};
+use silicon_rl::runtime::Runtime;
+use silicon_rl::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts not built; skipping runtime e2e test");
+        None
+    }
+}
+
+fn agent(seed: u64) -> Option<(SacAgent, Rng)> {
+    let dir = artifacts_dir()?;
+    let runtime = Runtime::load(&dir).expect("runtime loads");
+    let mut rng = Rng::new(seed);
+    let cfg = RunConfig::default().rl;
+    let agent = SacAgent::new(runtime, cfg, &mut rng).expect("agent init");
+    Some((agent, rng))
+}
+
+#[test]
+fn actor_forward_produces_valid_heads() {
+    let Some((mut agent, mut rng)) = agent(1) else { return };
+    let s = [0.25f32; SAC_STATE_DIM];
+    let a = agent.act(&s, true, &mut rng).expect("act");
+    assert!(a.cont.iter().all(|v| v.abs() <= 1.0));
+    assert!(a.deltas.iter().all(|d| (-2..=2).contains(d)));
+    // entropy trace populated (Fig 3)
+    assert!(agent.last_entropy.is_finite());
+    // deterministic head differs from stochastic in general
+    let det = agent.act(&s, false, &mut rng).expect("act det");
+    let det2 = agent.act(&s, false, &mut rng).expect("act det2");
+    assert_eq!(det.cont, det2.cont, "deterministic head must be stable");
+}
+
+fn synthetic_transition(rng: &mut Rng, reward: f32) -> Transition {
+    let mut t = Transition {
+        s: [0.0; SAC_STATE_DIM],
+        a_cont: [0.0; ACT_DIM],
+        a_disc: [0.0; 20],
+        r: reward,
+        s2: [0.0; SAC_STATE_DIM],
+        done: 0.0,
+        ppa: [0.3, 0.5, 0.2],
+    };
+    for v in t.s.iter_mut().chain(t.s2.iter_mut()) {
+        *v = rng.uniform() as f32;
+    }
+    for v in t.a_cont.iter_mut() {
+        *v = rng.uniform_in(-0.99, 0.99) as f32;
+    }
+    for d in 0..4 {
+        t.a_disc[d * 5 + rng.below(5)] = 1.0;
+    }
+    t
+}
+
+#[test]
+fn sac_update_moves_parameters_and_returns_priorities() {
+    let Some((mut agent, mut rng)) = agent(2) else { return };
+    for i in 0..300 {
+        let tr = synthetic_transition(&mut rng, (i % 7) as f32 * 0.1);
+        agent.push_transition(tr);
+    }
+    let w_before = agent.store.get("actor/W1").unwrap().to_vec();
+    let t_before = agent.store.get("t1/Wa").unwrap().to_vec();
+    let q_before = agent.store.get("c1/Wa").unwrap().to_vec();
+    let m = agent.update(&mut rng).expect("sac update");
+    assert!(m.critic_loss.is_finite() && m.actor_loss.is_finite());
+    assert!(m.alpha > 0.0);
+    let w_after = agent.store.get("actor/W1").unwrap();
+    assert!(w_before.iter().zip(w_after).any(|(a, b)| a != b), "actor unchanged");
+    // Polyak targets move much less than the online critic (tau=0.005)
+    let dq: f32 = agent
+        .store
+        .get("c1/Wa")
+        .unwrap()
+        .iter()
+        .zip(&q_before)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    let dt: f32 = agent
+        .store
+        .get("t1/Wa")
+        .unwrap()
+        .iter()
+        .zip(&t_before)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(dq > 0.0 && dt > 0.0 && dt < dq, "dq {dq} dt {dt}");
+    // step counter advanced inside the HLO
+    assert_eq!(agent.store.get("step").unwrap()[0], 1.0);
+}
+
+#[test]
+fn world_model_and_surrogate_losses_decrease() {
+    let Some((mut agent, mut rng)) = agent(3) else { return };
+    for _ in 0..300 {
+        let tr = synthetic_transition(&mut rng, 0.5);
+        agent.push_transition(tr);
+    }
+    let mut wm_losses = Vec::new();
+    let mut sur_losses = Vec::new();
+    for _ in 0..25 {
+        wm_losses.push(agent.train_world_model(&mut rng).unwrap());
+        sur_losses.push(agent.train_surrogate(&mut rng).unwrap());
+    }
+    assert!(
+        wm_losses.last().unwrap() < wm_losses.first().unwrap(),
+        "wm {wm_losses:?}"
+    );
+    assert!(
+        sur_losses.last().unwrap() < sur_losses.first().unwrap(),
+        "sur {sur_losses:?}"
+    );
+}
+
+#[test]
+fn mpc_refine_blends_tcc_dims_only() {
+    let Some((mut agent, mut rng)) = agent(4) else { return };
+    for _ in 0..300 {
+        let tr = synthetic_transition(&mut rng, 0.1);
+        agent.push_transition(tr);
+    }
+    agent.train_world_model(&mut rng).unwrap();
+    let s = [0.4f32; SAC_STATE_DIM];
+    let base = agent.act(&s, false, &mut rng).unwrap();
+    let refined = agent.mpc_refine(&s, &base, &mut rng).unwrap();
+    // discrete deltas untouched
+    assert_eq!(refined.deltas, base.deltas);
+    // non-TCC continuous dims (15..30) untouched
+    for i in 15..ACT_DIM {
+        assert_eq!(refined.cont[i], base.cont[i], "dim {i}");
+    }
+    // some TCC dim moved (noise std 0.3 makes a no-op vanishingly rare)
+    assert!(
+        (0..15).any(|i| refined.cont[i] != base.cont[i]),
+        "MPC refinement was a no-op"
+    );
+}
+
+#[test]
+fn short_algorithm1_run_completes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.granularity = Granularity::Group;
+    cfg.rl.episodes_per_node = 25;
+    cfg.rl.warmup_steps = 10_000; // skip updates: keep the test fast
+    let mut rng = Rng::new(5);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng).unwrap();
+    let r = run_node(&cfg, 3, &mut agent, &mut rng).expect("run_node");
+    assert_eq!(r.episodes.len(), 25);
+    assert!(r.feasible_count > 0, "no feasible configs in 25 episodes");
+    assert!(r.best.is_some());
+    // epsilon decayed
+    assert!(r.episodes.last().unwrap().eps < cfg.rl.eps0);
+    // unique-config trace is monotone (Fig 3)
+    for w in r.episodes.windows(2) {
+        assert!(w[1].unique_configs >= w[0].unique_configs);
+    }
+}
+
+#[test]
+fn store_matches_manifest_and_hyper() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = Runtime::load(&dir).unwrap();
+    assert_eq!(runtime.manifest.hyper_or("state_dim", 0.0) as usize, SAC_STATE_DIM);
+    assert_eq!(runtime.manifest.hyper_or("act_dim", 0.0) as usize, ACT_DIM);
+    let mut rng = Rng::new(6);
+    let store = Store::from_manifest(&runtime.manifest, &mut rng).unwrap();
+    // every sac_update state input resolvable
+    let batch = BTreeMap::new();
+    let mut resolver = store.resolver(&batch);
+    for spec in &runtime.manifest.entrypoints["sac_update"].inputs {
+        if spec.name.starts_with("state/") {
+            assert!(resolver(&spec.name).is_some(), "{} unresolvable", spec.name);
+        }
+    }
+}
