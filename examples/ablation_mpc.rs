@@ -10,6 +10,7 @@
 use std::path::Path;
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::{Error, Result};
 use silicon_rl::rl::{self, SacAgent};
 use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
@@ -18,7 +19,7 @@ fn run_variant(
     name: &str,
     cfg: &RunConfig,
     rng_seed: u64,
-) -> anyhow::Result<(String, f64, f64, usize)> {
+) -> Result<(String, f64, f64, usize)> {
     let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
     let mut rng = Rng::new(rng_seed);
     let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
@@ -31,13 +32,13 @@ fn run_variant(
     Ok((name.to_string(), score, toks, r.feasible_count))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut base = RunConfig::default();
     base.rl.episodes_per_node = 500;
     base.rl.warmup_steps = 256;
     for a in std::env::args().skip(1) {
         if let Some((k, v)) = a.split_once('=') {
-            base.apply(k, v).map_err(anyhow::Error::msg)?;
+            base.apply(k, v).map_err(Error::msg)?;
         }
     }
 

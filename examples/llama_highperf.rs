@@ -16,12 +16,13 @@ use std::path::Path;
 
 use silicon_rl::artifacts_out;
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::{Error, Result};
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, SacAgent};
 use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.nodes_nm = vec![3, 14, 28];
     cfg.rl.episodes_per_node = 600;
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     cfg.out_dir = "out/llama_highperf".into();
     for a in std::env::args().skip(1) {
         if let Some((k, v)) = a.split_once('=') {
-            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+            cfg.apply(k, v).map_err(Error::msg)?;
         }
     }
 

@@ -9,16 +9,17 @@
 //! Usage: cargo run --release --example pareto_explore [-- key=value ...]
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::{Error, Result};
 use silicon_rl::ppa::PpaWeights;
 use silicon_rl::rl::baselines;
 use silicon_rl::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.rl.episodes_per_node = 250;
     for a in std::env::args().skip(1) {
         if let Some((k, v)) = a.split_once('=') {
-            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+            cfg.apply(k, v).map_err(Error::msg)?;
         }
     }
     let nm = *cfg.nodes_nm.first().unwrap_or(&3);

@@ -8,19 +8,20 @@
 use std::path::Path;
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::{Error, Result};
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, SacAgent};
 use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let mut cfg = RunConfig::smolvlm_low_power();
     cfg.rl.episodes_per_node = 400;
     cfg.rl.warmup_steps = 256;
     cfg.out_dir = "out/smolvlm_lowpower".into();
     for a in std::env::args().skip(1) {
         if let Some((k, v)) = a.split_once('=') {
-            cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+            cfg.apply(k, v).map_err(Error::msg)?;
         }
     }
 

@@ -6,6 +6,7 @@
 
 use silicon_rl::config::{Granularity, RunConfig};
 use silicon_rl::env::{Action, Env};
+use silicon_rl::eval::{parallel, Evaluator};
 use silicon_rl::hazard::Mitigation;
 use silicon_rl::ir::llama;
 use silicon_rl::partition::{self, PartitionKnobs};
@@ -15,6 +16,32 @@ use silicon_rl::util::Rng;
 fn main() {
     let mut b = Bencher::default();
     println!("== bench_eval: episode evaluation hot path ==");
+
+    // candidate-set scoring through the stateless evaluator: serial vs
+    // all-worker fan-out (the MPC-rerank / baseline-round shape)
+    {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Group;
+        let ev = Evaluator::new(&cfg, 3);
+        let mesh = ev.initial_mesh();
+        let mut rng = Rng::new(7);
+        let actions: Vec<Action> = (0..16)
+            .map(|_| {
+                let mut a = Action::neutral();
+                for v in a.cont.iter_mut() {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                a
+            })
+            .collect();
+        let workers = parallel::num_threads();
+        b.bench("evaluate_many/16cand/1thread", || {
+            ev.evaluate_many(&mesh, &actions, 1).len()
+        });
+        b.bench(&format!("evaluate_many/16cand/{workers}threads"), || {
+            ev.evaluate_many(&mesh, &actions, workers).len()
+        });
+    }
 
     // full eval_action at several mesh scales (group granularity)
     for nm in [3u32, 28] {

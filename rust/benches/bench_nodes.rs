@@ -10,9 +10,10 @@
 use std::path::Path;
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::Result;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, SacAgent};
-use silicon_rl::runtime::Runtime;
+use silicon_rl::runtime::{self, Runtime};
 use silicon_rl::util::Rng;
 
 fn episodes() -> usize {
@@ -22,10 +23,14 @@ fn episodes() -> usize {
         .unwrap_or(1000)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("bench_nodes: artifacts not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+    if !runtime::backend_available() {
+        println!("bench_nodes: PJRT backend unavailable (offline xla stub); skipping");
         return Ok(());
     }
     let out = Path::new("out/bench");

@@ -19,6 +19,10 @@ fn main() {
         println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
         return;
     }
+    if !silicon_rl::runtime::backend_available() {
+        println!("bench_runtime: PJRT backend unavailable (offline xla stub); skipping");
+        return;
+    }
     let runtime = Runtime::load(&dir).expect("runtime");
     let mut rng = Rng::new(1);
     let cfg = RunConfig::default().rl;
@@ -67,7 +71,7 @@ fn main() {
 
     let base = agent.act(&s, false, &mut rng).unwrap();
     b.bench("mpc_refine (K=64, H=5)", || {
-        agent.mpc_refine(&s, &base, &mut rng).unwrap()
+        agent.mpc_refine(&s, &base, None, &mut rng).unwrap()
     });
 
     b.write_csv("out/bench/bench_runtime.csv");

@@ -1,19 +1,24 @@
 //! Table 21 — search-strategy comparison at 3nm: SAC (ours) vs random
 //! search vs grid search under the same episode budget and evaluation
-//! pipeline. The paper's claim shape: SAC finds a better score, much
-//! higher throughput, and many more feasible configurations.
+//! pipeline — plus the evaluation-layer scaling case: a 7-node ×
+//! multi-seed random-search sweep driven serially and in parallel, with
+//! a bit-identical-results check (the paper's claim shape for SAC: a
+//! better score, much higher throughput, many more feasible configs).
 //!
 //! Budget: SILICON_RL_BENCH_EPISODES (default 1000; paper used ~4,600).
+//! Sweep budget: SILICON_RL_BENCH_SWEEP_EPISODES (default 60/node/seed).
 
 use std::path::Path;
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::Result;
+use silicon_rl::eval::parallel;
 use silicon_rl::report;
 use silicon_rl::rl::{self, baselines, SacAgent};
-use silicon_rl::runtime::Runtime;
+use silicon_rl::runtime::{self, Runtime};
 use silicon_rl::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let eps = std::env::var("SILICON_RL_BENCH_EPISODES")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -35,15 +40,20 @@ fn main() -> anyhow::Result<()> {
     println!("grid search:   {:.1}s", t0.elapsed().as_secs_f64());
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let sac_r = if dir.join("manifest.json").exists() {
+    let sac_r = if dir.join("manifest.json").exists() && runtime::backend_available() {
+        // strict evaluation-count parity with the baselines: disable the
+        // MPC real-eval re-ranking so every strategy performs exactly one
+        // evaluation per budgeted episode
+        let mut sac_cfg = cfg.clone();
+        sac_cfg.rl.mpc_rerank = 0;
         let runtime = Runtime::load(&dir)?;
-        let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+        let mut agent = SacAgent::new(runtime, sac_cfg.rl, &mut rng)?;
         let t0 = std::time::Instant::now();
-        let r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+        let r = rl::run_node(&sac_cfg, nm, &mut agent, &mut rng)?;
         println!("SAC:           {:.1}s", t0.elapsed().as_secs_f64());
         Some(r)
     } else {
-        println!("SAC: skipped (artifacts not built)");
+        println!("SAC: skipped (artifacts not built or PJRT backend unavailable)");
         None
     };
 
@@ -67,5 +77,76 @@ fn main() -> anyhow::Result<()> {
             sac.feasible_count as f64 / rand_r.feasible_count.max(1) as f64
         );
     }
+
+    node_sweep_scaling()?;
+    Ok(())
+}
+
+/// Evaluation-layer scaling case: the full 7-node sweep × multi-seed
+/// random search, serial (1 worker) vs parallel (all workers). Asserts
+/// the two produce bit-identical statistics, then reports wall-clock
+/// speedup (expect ≳3× on a 4-core machine: seeds × candidate sets both
+/// fan out through the same stateless evaluator).
+fn node_sweep_scaling() -> Result<()> {
+    let sweep_eps = std::env::var("SILICON_RL_BENCH_SWEEP_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60);
+    let n_seeds = 4;
+    let workers = parallel::num_threads();
+    let mut cfg = RunConfig::default();
+    cfg.rl.episodes_per_node = sweep_eps;
+
+    println!(
+        "\n== bench_search: 7-node x {n_seeds}-seed sweep, {sweep_eps} episodes \
+         (1 vs {workers} workers) =="
+    );
+
+    let run = |threads: usize| -> (Vec<rl::MultiSeedResult>, f64) {
+        let t0 = std::time::Instant::now();
+        let results: Vec<rl::MultiSeedResult> = cfg
+            .nodes_nm
+            .iter()
+            .map(|&nm| {
+                rl::run_seeds_t(&cfg, nm, n_seeds, threads, |c, nm, rng| {
+                    baselines::random_search_t(c, nm, rng, 1)
+                })
+            })
+            .collect();
+        (results, t0.elapsed().as_secs_f64())
+    };
+
+    let (serial, dt_serial) = run(1);
+    let (par, dt_par) = run(workers);
+
+    // determinism: the parallel driver must reproduce the serial sweep
+    // bit-for-bit
+    for (s, p) in serial.iter().zip(&par) {
+        assert_eq!(s.seeds, p.seeds, "{}nm: seed derivation diverged", s.nm);
+        assert_eq!(
+            s.score.mean.to_bits(),
+            p.score.mean.to_bits(),
+            "{}nm: best-score mean diverged between serial and parallel",
+            s.nm
+        );
+        assert_eq!(
+            s.tokens_per_s.mean.to_bits(),
+            p.tokens_per_s.mean.to_bits(),
+            "{}nm: throughput mean diverged",
+            s.nm
+        );
+        assert_eq!(s.pareto.len(), p.pareto.len(), "{}nm: frontier diverged", s.nm);
+    }
+    println!("determinism: serial and parallel sweeps bit-identical across 7 nodes");
+
+    let t = rl::seeds_table(&par);
+    println!("{}", t.to_text());
+    std::fs::create_dir_all("out/bench")?;
+    t.write_csv(Path::new("out/bench/multiseed_sweep.csv"))?;
+    println!(
+        "sweep wall-clock: serial {dt_serial:.1}s, parallel {dt_par:.1}s -> {:.2}x \
+         speedup on {workers} workers",
+        dt_serial / dt_par.max(1e-9)
+    );
     Ok(())
 }

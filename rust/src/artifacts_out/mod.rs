@@ -10,10 +10,9 @@
 
 use std::path::Path;
 
-use anyhow::Result;
-
 use crate::arch::{region_of, MeshConfig, TileConfig};
-use crate::env::EvalOutcome;
+use crate::error::Result;
+use crate::eval::EvalOutcome;
 use crate::util::json::{arr, num, obj, s, Json};
 
 /// Serialize per-TCC configurations.

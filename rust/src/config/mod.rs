@@ -167,6 +167,19 @@ pub struct RlConfig {
     pub wm_train_every: usize,
     /// Train the surrogate every k episodes.
     pub sur_train_every: usize,
+    /// Worker threads for the evaluation layer (0 = auto-detect).
+    pub eval_threads: usize,
+    /// Candidate-set size per baseline search round: proposals are scored
+    /// in batches of this size through `Evaluator::evaluate_many`, and the
+    /// mesh walks to the round's best candidate. Independent of
+    /// `eval_threads`, so results do not depend on the worker count.
+    pub candidate_batch: usize,
+    /// MPC candidates re-ranked through the real evaluator after the
+    /// world-model rollout (0 disables re-ranking).
+    pub mpc_rerank: usize,
+    /// Memo-cache capacity (design points) for Algorithm 1's episode
+    /// loop; 0 disables caching.
+    pub eval_cache: usize,
 }
 
 impl Default for RlConfig {
@@ -189,6 +202,10 @@ impl Default for RlConfig {
             gamma: 0.99,
             wm_train_every: 1,
             sur_train_every: 1,
+            eval_threads: 0,
+            candidate_batch: 8,
+            mpc_rerank: 8,
+            eval_cache: 256,
         }
     }
 }
@@ -206,6 +223,10 @@ pub struct RunConfig {
     pub kv_strategy: crate::kv::KvStrategy,
     pub artifacts_dir: String,
     pub out_dir: String,
+    /// `optimize` driver: run the per-node sweeps concurrently, one agent
+    /// per node (forfeits Eq 50's cross-node transfer learning for
+    /// wall-clock; results are deterministic per node).
+    pub parallel_nodes: bool,
 }
 
 impl Default for RunConfig {
@@ -220,6 +241,7 @@ impl Default for RunConfig {
             kv_strategy: crate::kv::KvStrategy::Full,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
+            parallel_nodes: false,
         }
     }
 }
@@ -237,10 +259,16 @@ impl RunConfig {
         }
     }
 
+    /// Worker threads for the evaluation layer, auto-detect resolved.
+    pub fn eval_threads(&self) -> usize {
+        crate::eval::parallel::resolve(self.rl.eval_threads)
+    }
+
     /// Apply `key=value` overrides (CLI / config file lines). Supported
     /// keys: episodes, warmup, seed, granularity (op|group), workload
     /// (llama|smolvlm), mode (hp|lp), nodes (comma list), out_dir,
-    /// artifacts_dir, kv (full|int8|int4|window:N|int8win:N).
+    /// artifacts_dir, kv (full|int8|int4|window:N|int8win:N), threads
+    /// (0 = auto), candidate_batch, parallel_nodes (true|false).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -282,6 +310,25 @@ impl RunConfig {
             }
             "out_dir" => self.out_dir = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "threads" => {
+                self.rl.eval_threads =
+                    value.parse().map_err(|_| format!("bad threads {value}"))?
+            }
+            "candidate_batch" => {
+                let n: usize =
+                    value.parse().map_err(|_| format!("bad candidate_batch {value}"))?;
+                if n == 0 {
+                    return Err("candidate_batch must be >= 1".to_string());
+                }
+                self.rl.candidate_batch = n;
+            }
+            "parallel_nodes" => {
+                self.parallel_nodes = match value {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    _ => return Err(format!("bad parallel_nodes {value}")),
+                }
+            }
             "kv" => {
                 use crate::kv::KvStrategy::*;
                 self.kv_strategy = if value == "full" {
@@ -360,12 +407,20 @@ mod tests {
         c.apply("workload", "smolvlm").unwrap();
         c.apply("nodes", "3,28").unwrap();
         c.apply("kv", "int8win:1024").unwrap();
+        c.apply("threads", "4").unwrap();
+        c.apply("candidate_batch", "16").unwrap();
+        c.apply("parallel_nodes", "true").unwrap();
         assert_eq!(c.rl.episodes_per_node, 100);
         assert_eq!(c.granularity, Granularity::Op);
         assert_eq!(c.workload, Workload::SmolVlm);
         assert_eq!(c.nodes_nm, vec![3, 28]);
+        assert_eq!(c.rl.eval_threads, 4);
+        assert_eq!(c.rl.candidate_batch, 16);
+        assert!(c.parallel_nodes);
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("episodes", "xyz").is_err());
+        assert!(c.apply("candidate_batch", "0").is_err());
+        assert!(c.apply("parallel_nodes", "maybe").is_err());
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! The MDP environment (§3.1): action → configuration → partitioning →
-//! heterogeneous derivation → analytical PPA → reward → next state.
+//! The MDP environment (§3.1): a thin stateful wrapper over the
+//! stateless evaluation layer ([`crate::eval`]).
 //!
 //! One [`Env`] instance optimizes one (workload, process-node) pair, as in
-//! Algorithm 1's inner loop. `eval_action` is the "codegen + simulation"
-//! step the paper quotes at ~10 ms — the episode hot path.
+//! Algorithm 1's inner loop. All of the action → configuration →
+//! partitioning → heterogeneous derivation → analytical PPA → reward →
+//! next-state pipeline lives in [`Evaluator::evaluate`] — a pure function
+//! that fans out across cores. The environment owns exactly the mutable
+//! part: the walking mesh (Algorithm 1 line 8) plus a reusable
+//! [`EvalScratch`] so `eval_action` stays allocation-free.
 
 pub mod action;
 pub mod reward;
@@ -13,309 +17,53 @@ pub use action::{Action, DecodedAction, ACT_DIM, DISC_DIM, DISC_OPTIONS, N_DISC}
 pub use reward::RewardTerms;
 pub use state::{FULL_STATE_DIM, SAC_STATE_DIM};
 
-use crate::arch::{self, MeshConfig, ParamRanges, TileConfig};
-use crate::config::{Granularity, ModeConfig, NodeBudget, RunConfig};
-use crate::hazard::Mitigation;
-use crate::ir::stats::WorkloadStats;
-use crate::ir::Graph;
-use crate::kv::{self, KvStrategy};
-use crate::node::{NodeSpec, NodeTable};
-use crate::partition::{self, Placement, Unit};
-use crate::ppa::{self, DesignPoint, PpaResult};
+// Re-exported for source compatibility: the outcome type and initial-mesh
+// rule moved to the evaluation layer.
+pub use crate::eval::{initial_mesh, EvalOutcome};
 
-/// Full outcome of evaluating one action (one episode body).
-#[derive(Debug, Clone)]
-pub struct EvalOutcome {
-    pub decoded: DecodedAction,
-    pub tiles: Vec<TileConfig>,
-    pub placement: Placement,
-    pub ppa: PpaResult,
-    pub reward: RewardTerms,
-    pub full_state: [f64; FULL_STATE_DIM],
-    /// Constraint-projection shrink steps applied (Eq 68).
-    pub proj_steps: u32,
-}
+use crate::arch::MeshConfig;
+use crate::config::RunConfig;
+use crate::eval::{EvalScratch, Evaluator};
 
 pub struct Env {
-    pub graph: Graph,
-    pub units: Vec<Unit>,
-    pub wstats: WorkloadStats,
-    pub node: NodeSpec,
-    pub budget: NodeBudget,
-    pub mode: ModeConfig,
-    pub ranges: ParamRanges,
-    pub kv_strategy: KvStrategy,
-    pub seq_len: u32,
-    pub batch_size: u32,
+    /// The immutable evaluation context (graph, units, node, budget, …).
+    /// Also reachable field-by-field through `Deref`, so `env.node`,
+    /// `env.budget` etc. keep working.
+    pub eval: Evaluator,
     /// Current mesh — the discrete action deltas walk this (Algorithm 1).
     pub mesh: MeshConfig,
+    scratch: EvalScratch,
+}
+
+impl std::ops::Deref for Env {
+    type Target = Evaluator;
+
+    fn deref(&self) -> &Evaluator {
+        &self.eval
+    }
 }
 
 impl Env {
     pub fn new(cfg: &RunConfig, nm: u32) -> Self {
-        let graph = cfg.workload.build();
-        let units = match cfg.granularity {
-            Granularity::Op => partition::units_from_ops(&graph),
-            Granularity::Group => partition::groups::units_from_groups(&graph),
-        };
-        let wstats = crate::ir::stats::compute(&graph);
-        let table = NodeTable::paper();
-        let node = table.get(nm).unwrap_or_else(|| panic!("unknown node {nm}nm")).clone();
-        let budget = *cfg.mode.budget(nm);
-        let mesh = initial_mesh(&graph, &cfg.mode);
-        Env {
-            graph,
-            units,
-            wstats,
-            node,
-            budget,
-            mode: cfg.mode.clone(),
-            ranges: ParamRanges::paper(),
-            kv_strategy: cfg.kv_strategy,
-            seq_len: cfg.workload.seq_len(),
-            batch_size: 3, // paper's Llama evaluation batch (Table 9)
-            mesh,
-        }
+        let eval = Evaluator::new(cfg, nm);
+        let mesh = eval.initial_mesh();
+        Env { eval, mesh, scratch: EvalScratch::default() }
     }
 
     /// Evaluate a raw action: the full §3.5 + §3.6–3.9 + §3.10 pipeline.
     /// Advances the environment's mesh to the (projected) action's mesh.
     pub fn eval_action(&mut self, a: &Action) -> EvalOutcome {
-        // 1. decode + constraint projection (Eq 68)
-        let decoded = action::decode(
-            a,
-            &self.mesh,
-            &self.node,
-            &self.mode,
-            &self.ranges,
-            self.kv_strategy,
-            self.seq_len,
-        );
-        let total_weights = self.graph.total_weight_bytes();
-        let (decoded, proj_steps) =
-            action::project(decoded, &self.node, &self.budget, total_weights);
-
-        // 2. operator partitioning + placement (§3.5)
-        let mit = Mitigation {
-            stanum: decoded.avg.stanum,
-            fetch: decoded.avg.fetch,
-            xr_wp: decoded.avg.xr_wp,
-            vr_wp: decoded.avg.vr_wp,
-        };
-        let mut placement =
-            partition::place_units(&self.units, &decoded.mesh, &decoded.knobs, &mit);
-
-        // 3. KV-cache distribution across active tiles (Eq 27)
-        let kv_total = match self.graph.kv {
-            Some(kvc) => kv::total_bytes(&kvc, self.seq_len, decoded.kv_strategy),
-            None => 0.0,
-        };
-        partition::distribute_kv(&mut placement.loads, kv_total);
-
-        // 4. heterogeneous per-TCC derivation (§3.3)
-        let tiles =
-            arch::derive_tiles(&decoded.mesh, &decoded.avg, &placement.loads, &self.ranges);
-
-        // 5. assemble the design point for the analytical models
-        let d = self.design_point(&decoded, &placement, &tiles, total_weights);
-
-        // 6. analytical PPA (Eqs 21-24, 62-64)
-        let ppa_result = ppa::evaluate(&d, &self.node);
-
-        // 7. feasibility + reward (Eqs 34-44)
-        let mem_overflow = wmem_overflow(&tiles, &placement);
-        let dmem_ok = dmem_feasible(&tiles, &placement, &decoded);
-        let rterms = reward::compute(
-            &self.mode.weights,
-            &self.budget,
-            &reward::RewardInputs {
-                perf_gops: ppa_result.perf_gops,
-                power_mw: ppa_result.power.total(),
-                area_mm2: ppa_result.area.total(),
-                mem_overflow_bytes: mem_overflow,
-                dmem_ok,
-                hazard_score: placement.hazards.score(),
-            },
-        );
-
-        // 8. next state (Table 2)
-        let full_state = state::encode_full(&state::StateInputs {
-            workload: &self.wstats,
-            mesh: &decoded.mesh,
-            avg: &decoded.avg,
-            node: &self.node,
-            budget: &self.budget,
-            placement: &placement,
-            dmem_split: &decoded.dmem_split,
-            ppa: Some(&ppa_result),
-            hazards: &placement.hazards,
-            kv_strategy: decoded.kv_strategy,
-            seq_len: self.seq_len,
-            weight_total_bytes: total_weights,
-            batch_size: self.batch_size,
-        });
-
-        // 9. the mesh walk (Algorithm 1 line 8)
-        self.mesh = decoded.mesh;
-
-        EvalOutcome {
-            decoded,
-            tiles,
-            placement,
-            ppa: ppa_result,
-            reward: rterms,
-            full_state,
-            proj_steps,
-        }
-    }
-
-    fn design_point(
-        &self,
-        decoded: &DecodedAction,
-        placement: &Placement,
-        tiles: &[TileConfig],
-        total_weights: f64,
-    ) -> DesignPoint {
-        let (sum_lanes, sum_lanes_capped) = DesignPoint::lane_sums(tiles);
-        let sram_mb: f64 = tiles.iter().map(|t| t.sram_mb()).sum();
-
-        // pipeline utilization η_util (Eq 63): hazards + memory pressure
-        // + KV spill-to-WMEM latency (§3.9)
-        let hazard = placement.hazards.density();
-        let pressure_excess = mean_pressure_excess(tiles, placement);
-        let spill = kv_spill_fraction(tiles, placement, decoded);
-        let eta_util =
-            (1.0 - 0.35 * hazard - 0.15 * pressure_excess - 0.2 * spill).clamp(0.3, 1.0);
-
-        // per-token memory traffic: full weight sweep + compacted KV
-        // (Eq 33) + cross-tile activations
-        let kv_traffic = match self.graph.kv {
-            Some(kvc) => kv::bytes_per_token(&kvc)
-                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
-            None => 0.0,
-        };
-        let mem_bytes_per_token =
-            total_weights + kv_traffic + placement.traffic.cross_tile_bytes;
-
-        // aggregate bandwidth: two ROM/SRAM ports of VLEN width per tile
-        let f_hz = decoded.avg.clock_mhz * 1e6;
-        let sum_bw_eff: f64 = tiles
-            .iter()
-            .map(|t| 2.0 * (t.vlen_bits as f64 / 8.0) * f_hz)
-            .sum();
-
-        DesignPoint {
-            mesh: decoded.mesh,
-            clock_mhz: decoded.avg.clock_mhz,
-            dflit_bits: decoded.avg.dflit_bits,
-            sum_lanes,
-            sum_lanes_capped,
-            sram_mb,
-            weight_bytes: total_weights,
-            traffic: placement.traffic.clone(),
-            eta_parallel: placement.eta_parallel(),
-            eta_util,
-            alpha_spec: decoded.alpha_spec,
-            flops_per_token: self.graph.flops_per_token_model(),
-            mem_bytes_per_token,
-            sum_bw_eff,
-            activity: decoded.activity,
-        }
-    }
-}
-
-/// Initial mesh m₀(n) of Algorithm 1: sized so the model's weights fit at
-/// mid-range WMEM, clamped to sensible walk-start bounds.
-pub fn initial_mesh(graph: &Graph, mode: &ModeConfig) -> MeshConfig {
-    let weights_mb = graph.total_weight_bytes() / (1024.0 * 1024.0);
-    if mode.clock_mhz_fixed.is_some() {
-        // low-power: start tiny
-        return MeshConfig { width: 2, height: 2, sc_x: 1, sc_y: 1 };
-    }
-    // high-performance: start with ~16 MB of weights per tile
-    let cores = (weights_mb / 16.0).ceil().max(4.0);
-    let side = (cores.sqrt().ceil() as u32).clamp(2, 64);
-    MeshConfig::new(side, side)
-}
-
-fn wmem_overflow(tiles: &[TileConfig], placement: &Placement) -> f64 {
-    let used: Vec<f64> = placement.loads.iter().map(|l| l.weight_bytes).collect();
-    crate::mem::wmem_overflow_bytes(tiles, &used)
-}
-
-/// Eq 27 feasibility: activation working sets must fit the DMEM
-/// input+scratch partitions (≤5% violating tiles tolerated). KV overflow
-/// is NOT an infeasibility — it spills to WMEM at a latency cost (§3.9),
-/// handled by [`kv_spill_fraction`] throttling η_util.
-fn dmem_feasible(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> bool {
-    let mut violations = 0usize;
-    let mut active = 0usize;
-    for (t, l) in tiles.iter().zip(&placement.loads) {
-        if l.flops <= 0.0 {
-            continue;
-        }
-        active += 1;
-        let dmem_bytes = t.dmem_kb as f64 * 1024.0;
-        let usable = dmem_bytes * (d.dmem_split.input_frac + d.dmem_split.scratch_frac());
-        // 4x headroom: moderate overflow streams from producers at a
-        // latency cost (η_util pressure); only hopeless tiles violate
-        if l.act_bytes > usable * 4.0 {
-            violations += 1;
-        }
-    }
-    active == 0 || (violations as f64) / (active as f64) <= 0.05
-}
-
-/// Fraction of active tiles whose KV slice does not fit the DMEM input
-/// partition next to the activations — those slices spill to WMEM and pay
-/// the slower-tier latency (§3.9), throttling η_util.
-fn kv_spill_fraction(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> f64 {
-    let mut spilled = 0usize;
-    let mut active = 0usize;
-    for (t, l) in tiles.iter().zip(&placement.loads) {
-        if l.flops <= 0.0 {
-            continue;
-        }
-        active += 1;
-        let dmem_in = t.dmem_kb as f64 * 1024.0 * d.dmem_split.input_frac;
-        if l.kv_bytes + l.act_bytes * 0.5 > dmem_in {
-            spilled += 1;
-        }
-    }
-    if active == 0 {
-        0.0
-    } else {
-        spilled as f64 / active as f64
-    }
-}
-
-fn mean_pressure_excess(tiles: &[TileConfig], placement: &Placement) -> f64 {
-    let mut sum = 0.0;
-    let mut n = 0usize;
-    for (t, l) in tiles.iter().zip(&placement.loads) {
-        if l.flops <= 0.0 {
-            continue;
-        }
-        let p = crate::mem::pressure(
-            l.weight_bytes,
-            t.wmem_kb as f64 * 1024.0,
-            l.act_bytes + l.kv_bytes,
-            t.dmem_kb as f64 * 1024.0,
-        );
-        sum += (p - 1.0).max(0.0);
-        n += 1;
-    }
-    if n == 0 {
-        0.0
-    } else {
-        (sum / n as f64).min(1.0)
+        let out = self.eval.evaluate(&self.mesh, a, &mut self.scratch);
+        // the mesh walk (Algorithm 1 line 8)
+        self.mesh = out.decoded.mesh;
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::RunConfig;
+    use crate::config::{Granularity, ModeConfig, RunConfig};
 
     fn small_cfg() -> RunConfig {
         let mut c = RunConfig::default();
@@ -403,5 +151,28 @@ mod tests {
         assert_eq!(out.full_state.len(), 73);
         let sub = state::sac_subset(&out.full_state);
         assert_eq!(sub.len(), 52);
+    }
+
+    #[test]
+    fn env_wrapper_matches_direct_evaluator() {
+        // the wrapper must be a zero-logic shim over the eval layer
+        let cfg = small_cfg();
+        let mut env = Env::new(&cfg, 3);
+        let ev = Evaluator::new(&cfg, 3);
+        let mut scratch = EvalScratch::default();
+        let mut mesh = ev.initial_mesh();
+        let mut a = Action::neutral();
+        a.deltas = [1, -1, 0, 0];
+        for _ in 0..3 {
+            let from_env = env.eval_action(&a);
+            let direct = ev.evaluate(&mesh, &a, &mut scratch);
+            mesh = direct.decoded.mesh;
+            assert_eq!(
+                from_env.reward.total.to_bits(),
+                direct.reward.total.to_bits()
+            );
+            assert_eq!(from_env.decoded.mesh, direct.decoded.mesh);
+            assert_eq!(env.mesh, mesh);
+        }
     }
 }

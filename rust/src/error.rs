@@ -1,0 +1,147 @@
+//! Crate-local error type replacing the `anyhow` dependency so the crate
+//! builds offline with zero external dependencies (the only path
+//! dependency is the vendored `xla` bindings).
+//!
+//! API mirrors the subset of anyhow the crate used: a message-carrying
+//! [`Error`], a [`Result`] alias with a defaulted error parameter, a
+//! [`Context`] extension trait for `Result`/`Option`, and the [`bail!`]
+//! macro.
+
+use std::fmt;
+
+/// A message-carrying error. Context wraps outer-to-inner, rendered as
+/// `outer: inner` so `{e}` and `{e:#}` both read as a cause chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (anyhow::Error::msg).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(ctx: impl fmt::Display, cause: impl fmt::Display) -> Error {
+        Error { msg: format!("{ctx}: {cause}") }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::msg(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Result alias with a defaulted error parameter (anyhow::Result).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (anyhow::Context).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::wrap(ctx, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (anyhow::bail!).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broken {}", 42)
+    }
+
+    #[test]
+    fn bail_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broken 42");
+    }
+
+    #[test]
+    fn context_chains_outer_to_inner() {
+        let r: std::result::Result<(), String> = Err("inner".into());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let some: Option<u32> = Some(7);
+        assert_eq!(some.with_context(|| "unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn io_and_parse_errors_convert() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/real/path")?)
+        }
+        assert!(io().is_err());
+        fn parse() -> Result<usize> {
+            Ok("xyz".parse::<usize>()?)
+        }
+        assert!(parse().is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! Fingerprint-keyed memoization of [`EvalOutcome`]s.
+//!
+//! [`Evaluator::evaluate`] is pure in `(mesh, action)`, so an outcome can
+//! be replayed from a cache keyed on exactly those inputs. Algorithm 1
+//! revisits design points often — deterministic exploitation actions at a
+//! converged policy, grid-search lattice recycling, the MPC candidate
+//! blend collapsing to the SAC mean — and each hit skips the ~10 ms
+//! codegen+simulation step the paper quotes.
+//!
+//! Keys hash the *raw inputs* (mesh fields, the exact f64 bits of the 30
+//! continuous dims, the 4 discrete deltas) with FNV-1a, not the decoded
+//! configuration: two different raw actions that decode identically are
+//! separate entries, but one raw action always maps to one entry — a hit
+//! can never return a different design than recomputation would.
+
+use std::collections::HashMap;
+
+use crate::arch::MeshConfig;
+use crate::env::Action;
+use crate::eval::{EvalOutcome, EvalScratch, Evaluator};
+
+/// FNV-1a fingerprint of an evaluation input `(mesh, action)`.
+pub fn input_key(mesh: &MeshConfig, a: &Action) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(mesh.width as u64);
+    mix(mesh.height as u64);
+    mix(mesh.sc_x as u64);
+    mix(mesh.sc_y as u64);
+    for &c in &a.cont {
+        mix(c.to_bits());
+    }
+    for &d in &a.deltas {
+        mix(d as u64);
+    }
+    h
+}
+
+/// Bounded memo cache over evaluation outcomes.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    map: HashMap<u64, EvalOutcome>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl EvalCache {
+    /// `capacity` bounds resident outcomes (each holds per-tile vectors —
+    /// tens of KB at large meshes). 0 disables caching entirely.
+    pub fn new(capacity: usize) -> EvalCache {
+        EvalCache { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+    }
+
+    /// Evaluate through the cache: replay a stored outcome when the exact
+    /// `(mesh, action)` input has been scored before, else compute and
+    /// store. When full, the cache resets wholesale — a deterministic
+    /// eviction policy (no clock, no access order) so cached and
+    /// uncached runs stay reproducible.
+    pub fn evaluate(
+        &mut self,
+        ev: &Evaluator,
+        mesh: &MeshConfig,
+        a: &Action,
+        scratch: &mut EvalScratch,
+    ) -> EvalOutcome {
+        if self.capacity == 0 {
+            return ev.evaluate(mesh, a, scratch);
+        }
+        let key = input_key(mesh, a);
+        if let Some(out) = self.map.get(&key) {
+            self.hits += 1;
+            return out.clone();
+        }
+        self.misses += 1;
+        let out = ev.evaluate(mesh, a, scratch);
+        if self.map.len() >= self.capacity {
+            self.map.clear();
+        }
+        self.map.insert(key, out.clone());
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Granularity, RunConfig};
+
+    fn evaluator() -> Evaluator {
+        let mut c = RunConfig::default();
+        c.granularity = Granularity::Group;
+        Evaluator::new(&c, 3)
+    }
+
+    #[test]
+    fn keys_separate_inputs() {
+        let m = MeshConfig::new(8, 8);
+        let a = Action::neutral();
+        let mut b = Action::neutral();
+        b.cont[0] = 1e-12; // tiniest perturbation still re-keys
+        assert_ne!(input_key(&m, &a), input_key(&m, &b));
+        assert_ne!(input_key(&m, &a), input_key(&MeshConfig::new(8, 9), &a));
+        assert_eq!(input_key(&m, &a), input_key(&m, &Action::neutral()));
+    }
+
+    #[test]
+    fn hit_equals_recomputation() {
+        let ev = evaluator();
+        let mesh = ev.initial_mesh();
+        let mut scratch = EvalScratch::default();
+        let mut cache = EvalCache::new(16);
+
+        let first = cache.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        assert_eq!((cache.hits, cache.misses), (0, 1));
+        let hit = cache.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        let fresh = ev.evaluate(&mesh, &Action::neutral(), &mut scratch);
+
+        for (a, b) in [(&first, &hit), (&hit, &fresh)] {
+            assert_eq!(a.reward.total.to_bits(), b.reward.total.to_bits());
+            assert_eq!(a.reward.score.to_bits(), b.reward.score.to_bits());
+            assert_eq!(a.ppa.tokens_per_s.to_bits(), b.ppa.tokens_per_s.to_bits());
+            assert_eq!(a.decoded.mesh, b.decoded.mesh);
+            assert_eq!(a.tiles.len(), b.tiles.len());
+        }
+        assert!(cache.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn capacity_bounds_and_zero_disables() {
+        let ev = evaluator();
+        let mesh = ev.initial_mesh();
+        let mut scratch = EvalScratch::default();
+
+        let mut tiny = EvalCache::new(2);
+        for i in 0..5 {
+            let mut a = Action::neutral();
+            a.cont[0] = i as f64 * 0.1;
+            tiny.evaluate(&ev, &mesh, &a, &mut scratch);
+        }
+        assert!(tiny.len() <= 2);
+
+        let mut off = EvalCache::new(0);
+        off.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        off.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        assert_eq!(off.len(), 0);
+        assert_eq!((off.hits, off.misses), (0, 0));
+    }
+}

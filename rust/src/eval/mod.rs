@@ -1,0 +1,486 @@
+//! The stateless evaluation layer: everything between a raw [`Action`]
+//! and its [`EvalOutcome`] — decode + constrained projection (Eq 68),
+//! operator partitioning (§3.5), KV distribution (Eq 27), heterogeneous
+//! per-TCC derivation (§3.3), analytical PPA (Eqs 21–24, 62–64) and
+//! reward (Eqs 34–44) — factored out of the MDP environment so it can fan
+//! out across cores.
+//!
+//! Design (DESIGN.md §5):
+//! * [`Evaluator`] owns the *immutable* per-(workload, node) context:
+//!   graph, placement units, workload stats, node spec, budget, ranges.
+//!   [`Evaluator::evaluate`] is a pure function of `(mesh, action)` — no
+//!   interior mutability, no RNG — so the same inputs always produce the
+//!   same outcome, on any thread.
+//! * [`EvalScratch`] carries the reusable working buffers (placement
+//!   tile state, score heap, overflow accumulators) so the ~10 ms hot
+//!   path stays allocation-free; each worker thread owns one.
+//! * [`Evaluator::evaluate_many`] scores a candidate set via scoped-
+//!   thread fan-out ([`parallel`]), preserving input order — serial and
+//!   parallel runs are bit-identical.
+//! * [`cache::EvalCache`] memoizes outcomes keyed by a fingerprint of
+//!   `(mesh, action)`, so repeated design points skip re-evaluation.
+//!
+//! The environment ([`crate::env::Env`]) shrinks to a thin wrapper owning
+//! only the walking mesh of Algorithm 1.
+
+pub mod cache;
+pub mod parallel;
+
+pub use cache::EvalCache;
+
+use crate::arch::{self, MeshConfig, ParamRanges, TileConfig};
+use crate::config::{Granularity, ModeConfig, NodeBudget, RunConfig};
+use crate::env::action::{self, Action, DecodedAction};
+use crate::env::reward::{self, RewardTerms};
+use crate::env::state::{self, FULL_STATE_DIM};
+use crate::hazard::Mitigation;
+use crate::ir::stats::WorkloadStats;
+use crate::ir::Graph;
+use crate::kv::{self, KvStrategy};
+use crate::node::{NodeSpec, NodeTable};
+use crate::partition::{self, PlaceScratch, Placement, Unit};
+use crate::ppa::{self, DesignPoint, PpaResult};
+
+/// Full outcome of evaluating one action (one episode body).
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub decoded: DecodedAction,
+    pub tiles: Vec<TileConfig>,
+    pub placement: Placement,
+    pub ppa: PpaResult,
+    pub reward: RewardTerms,
+    pub full_state: [f64; FULL_STATE_DIM],
+    /// Constraint-projection shrink steps applied (Eq 68).
+    pub proj_steps: u32,
+}
+
+/// Reusable per-thread working buffers for the evaluation hot path.
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    pub place: PlaceScratch,
+    /// Per-tile used-WMEM accumulator for the overflow check (Eq 14).
+    used_wmem: Vec<f64>,
+}
+
+/// Immutable per-(workload, process-node) evaluation context. Shared by
+/// reference across worker threads (`&Evaluator` is `Sync`: every field
+/// is plain data).
+pub struct Evaluator {
+    pub graph: Graph,
+    pub units: Vec<Unit>,
+    pub wstats: WorkloadStats,
+    pub node: NodeSpec,
+    pub budget: NodeBudget,
+    pub mode: ModeConfig,
+    pub ranges: ParamRanges,
+    pub kv_strategy: KvStrategy,
+    pub seq_len: u32,
+    pub batch_size: u32,
+    /// Σ weight bytes of the graph, hoisted off the per-episode path.
+    total_weights: f64,
+    /// Model FLOPs per generated token, hoisted off the per-episode path.
+    flops_per_token: f64,
+}
+
+impl Evaluator {
+    pub fn new(cfg: &RunConfig, nm: u32) -> Self {
+        let graph = cfg.workload.build();
+        let units = match cfg.granularity {
+            Granularity::Op => partition::units_from_ops(&graph),
+            Granularity::Group => partition::groups::units_from_groups(&graph),
+        };
+        let wstats = crate::ir::stats::compute(&graph);
+        let table = NodeTable::paper();
+        let node =
+            table.get(nm).unwrap_or_else(|| panic!("unknown node {nm}nm")).clone();
+        let budget = *cfg.mode.budget(nm);
+        let total_weights = graph.total_weight_bytes();
+        let flops_per_token = graph.flops_per_token_model();
+        Evaluator {
+            graph,
+            units,
+            wstats,
+            node,
+            budget,
+            mode: cfg.mode.clone(),
+            ranges: ParamRanges::paper(),
+            kv_strategy: cfg.kv_strategy,
+            seq_len: cfg.workload.seq_len(),
+            batch_size: 3, // paper's Llama evaluation batch (Table 9)
+            total_weights,
+            flops_per_token,
+        }
+    }
+
+    /// Initial mesh m₀(n) of Algorithm 1 for this workload/mode.
+    pub fn initial_mesh(&self) -> MeshConfig {
+        initial_mesh(&self.graph, &self.mode)
+    }
+
+    /// Evaluate a raw action against `mesh`: the full §3.5 + §3.6–3.9 +
+    /// §3.10 pipeline. Pure: does not advance any mesh — the caller owns
+    /// the Algorithm 1 walk (see [`crate::env::Env::eval_action`]).
+    pub fn evaluate(
+        &self,
+        mesh: &MeshConfig,
+        a: &Action,
+        scratch: &mut EvalScratch,
+    ) -> EvalOutcome {
+        // 1. decode + constraint projection (Eq 68)
+        let decoded = action::decode(
+            a,
+            mesh,
+            &self.node,
+            &self.mode,
+            &self.ranges,
+            self.kv_strategy,
+            self.seq_len,
+        );
+        let (decoded, proj_steps) =
+            action::project(decoded, &self.node, &self.budget, self.total_weights);
+
+        // 2. operator partitioning + placement (§3.5)
+        let mit = Mitigation {
+            stanum: decoded.avg.stanum,
+            fetch: decoded.avg.fetch,
+            xr_wp: decoded.avg.xr_wp,
+            vr_wp: decoded.avg.vr_wp,
+        };
+        let mut placement = partition::place_units_with(
+            &self.units,
+            &decoded.mesh,
+            &decoded.knobs,
+            &mit,
+            &mut scratch.place,
+        );
+
+        // 3. KV-cache distribution across active tiles (Eq 27)
+        let kv_total = match self.graph.kv {
+            Some(kvc) => kv::total_bytes(&kvc, self.seq_len, decoded.kv_strategy),
+            None => 0.0,
+        };
+        partition::distribute_kv(&mut placement.loads, kv_total);
+
+        // 4. heterogeneous per-TCC derivation (§3.3)
+        let tiles =
+            arch::derive_tiles(&decoded.mesh, &decoded.avg, &placement.loads, &self.ranges);
+
+        // 5. assemble the design point for the analytical models
+        let d = self.design_point(&decoded, &placement, &tiles);
+
+        // 6. analytical PPA (Eqs 21-24, 62-64)
+        let ppa_result = ppa::evaluate(&d, &self.node);
+
+        // 7. feasibility + reward (Eqs 34-44)
+        let mem_overflow =
+            wmem_overflow(&tiles, &placement, &mut scratch.used_wmem);
+        let dmem_ok = dmem_feasible(&tiles, &placement, &decoded);
+        let rterms = reward::compute(
+            &self.mode.weights,
+            &self.budget,
+            &reward::RewardInputs {
+                perf_gops: ppa_result.perf_gops,
+                power_mw: ppa_result.power.total(),
+                area_mm2: ppa_result.area.total(),
+                mem_overflow_bytes: mem_overflow,
+                dmem_ok,
+                hazard_score: placement.hazards.score(),
+            },
+        );
+
+        // 8. next state (Table 2)
+        let full_state = state::encode_full(&state::StateInputs {
+            workload: &self.wstats,
+            mesh: &decoded.mesh,
+            avg: &decoded.avg,
+            node: &self.node,
+            budget: &self.budget,
+            placement: &placement,
+            dmem_split: &decoded.dmem_split,
+            ppa: Some(&ppa_result),
+            hazards: &placement.hazards,
+            kv_strategy: decoded.kv_strategy,
+            seq_len: self.seq_len,
+            weight_total_bytes: self.total_weights,
+            batch_size: self.batch_size,
+        });
+
+        EvalOutcome {
+            decoded,
+            tiles,
+            placement,
+            ppa: ppa_result,
+            reward: rterms,
+            full_state,
+            proj_steps,
+        }
+    }
+
+    /// Score a candidate set against one base mesh with up to `threads`
+    /// workers, each owning its own [`EvalScratch`]. Output order matches
+    /// `actions` order; results are bit-identical to a serial loop (the
+    /// determinism contract of `tests/eval_parallel.rs`).
+    pub fn evaluate_many(
+        &self,
+        mesh: &MeshConfig,
+        actions: &[Action],
+        threads: usize,
+    ) -> Vec<EvalOutcome> {
+        parallel::scoped_chunk_map(
+            actions,
+            threads,
+            EvalScratch::default,
+            |scratch, _i, a| self.evaluate(mesh, a, scratch),
+        )
+    }
+
+    fn design_point(
+        &self,
+        decoded: &DecodedAction,
+        placement: &Placement,
+        tiles: &[TileConfig],
+    ) -> DesignPoint {
+        let (sum_lanes, sum_lanes_capped) = DesignPoint::lane_sums(tiles);
+        let sram_mb: f64 = tiles.iter().map(|t| t.sram_mb()).sum();
+
+        // pipeline utilization η_util (Eq 63): hazards + memory pressure
+        // + KV spill-to-WMEM latency (§3.9)
+        let hazard = placement.hazards.density();
+        let pressure_excess = mean_pressure_excess(tiles, placement);
+        let spill = kv_spill_fraction(tiles, placement, decoded);
+        let eta_util =
+            (1.0 - 0.35 * hazard - 0.15 * pressure_excess - 0.2 * spill).clamp(0.3, 1.0);
+
+        // per-token memory traffic: full weight sweep + compacted KV
+        // (Eq 33) + cross-tile activations
+        let kv_traffic = match self.graph.kv {
+            Some(kvc) => kv::bytes_per_token(&kvc)
+                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
+            None => 0.0,
+        };
+        let mem_bytes_per_token =
+            self.total_weights + kv_traffic + placement.traffic.cross_tile_bytes;
+
+        // aggregate bandwidth: two ROM/SRAM ports of VLEN width per tile
+        let f_hz = decoded.avg.clock_mhz * 1e6;
+        let sum_bw_eff: f64 = tiles
+            .iter()
+            .map(|t| 2.0 * (t.vlen_bits as f64 / 8.0) * f_hz)
+            .sum();
+
+        DesignPoint {
+            mesh: decoded.mesh,
+            clock_mhz: decoded.avg.clock_mhz,
+            dflit_bits: decoded.avg.dflit_bits,
+            sum_lanes,
+            sum_lanes_capped,
+            sram_mb,
+            weight_bytes: self.total_weights,
+            traffic: placement.traffic.clone(),
+            eta_parallel: placement.eta_parallel(),
+            eta_util,
+            alpha_spec: decoded.alpha_spec,
+            flops_per_token: self.flops_per_token,
+            mem_bytes_per_token,
+            sum_bw_eff,
+            activity: decoded.activity,
+        }
+    }
+}
+
+/// Initial mesh m₀(n) of Algorithm 1: sized so the model's weights fit at
+/// mid-range WMEM, clamped to sensible walk-start bounds.
+pub fn initial_mesh(graph: &Graph, mode: &ModeConfig) -> MeshConfig {
+    let weights_mb = graph.total_weight_bytes() / (1024.0 * 1024.0);
+    if mode.clock_mhz_fixed.is_some() {
+        // low-power: start tiny
+        return MeshConfig { width: 2, height: 2, sc_x: 1, sc_y: 1 };
+    }
+    // high-performance: start with ~16 MB of weights per tile
+    let cores = (weights_mb / 16.0).ceil().max(4.0);
+    let side = (cores.sqrt().ceil() as u32).clamp(2, 64);
+    MeshConfig::new(side, side)
+}
+
+/// Configuration fingerprint over the *decoded* design point (Fig 3's
+/// unique-configs trace; formerly private to `rl::loop_`).
+pub fn config_key(out: &EvalOutcome) -> u64 {
+    let d = &out.decoded;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(d.mesh.width as u64);
+    mix(d.mesh.height as u64);
+    mix(d.avg.fetch as u64);
+    mix(d.avg.stanum as u64);
+    mix(d.avg.vlen_bits as u64);
+    mix(d.avg.dmem_kb as u64);
+    mix(d.avg.dflit_bits as u64);
+    mix((d.avg.clock_mhz * 10.0) as u64);
+    h
+}
+
+fn wmem_overflow(
+    tiles: &[TileConfig],
+    placement: &Placement,
+    used: &mut Vec<f64>,
+) -> f64 {
+    used.clear();
+    used.extend(placement.loads.iter().map(|l| l.weight_bytes));
+    crate::mem::wmem_overflow_bytes(tiles, used)
+}
+
+/// Eq 27 feasibility: activation working sets must fit the DMEM
+/// input+scratch partitions (≤5% violating tiles tolerated). KV overflow
+/// is NOT an infeasibility — it spills to WMEM at a latency cost (§3.9),
+/// handled by [`kv_spill_fraction`] throttling η_util.
+fn dmem_feasible(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> bool {
+    let mut violations = 0usize;
+    let mut active = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        active += 1;
+        let dmem_bytes = t.dmem_kb as f64 * 1024.0;
+        let usable = dmem_bytes * (d.dmem_split.input_frac + d.dmem_split.scratch_frac());
+        // 4x headroom: moderate overflow streams from producers at a
+        // latency cost (η_util pressure); only hopeless tiles violate
+        if l.act_bytes > usable * 4.0 {
+            violations += 1;
+        }
+    }
+    active == 0 || (violations as f64) / (active as f64) <= 0.05
+}
+
+/// Fraction of active tiles whose KV slice does not fit the DMEM input
+/// partition next to the activations — those slices spill to WMEM and pay
+/// the slower-tier latency (§3.9), throttling η_util.
+fn kv_spill_fraction(tiles: &[TileConfig], placement: &Placement, d: &DecodedAction) -> f64 {
+    let mut spilled = 0usize;
+    let mut active = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        active += 1;
+        let dmem_in = t.dmem_kb as f64 * 1024.0 * d.dmem_split.input_frac;
+        if l.kv_bytes + l.act_bytes * 0.5 > dmem_in {
+            spilled += 1;
+        }
+    }
+    if active == 0 {
+        0.0
+    } else {
+        spilled as f64 / active as f64
+    }
+}
+
+fn mean_pressure_excess(tiles: &[TileConfig], placement: &Placement) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (t, l) in tiles.iter().zip(&placement.loads) {
+        if l.flops <= 0.0 {
+            continue;
+        }
+        let p = crate::mem::pressure(
+            l.weight_bytes,
+            t.wmem_kb as f64 * 1024.0,
+            l.act_bytes + l.kv_bytes,
+            t.dmem_kb as f64 * 1024.0,
+        );
+        sum += (p - 1.0).max(0.0);
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        (sum / n as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+    use crate::util::Rng;
+
+    fn small_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.granularity = Granularity::Group;
+        c
+    }
+
+    fn random_action(rng: &mut Rng) -> Action {
+        let mut a = Action::neutral();
+        for v in a.cont.iter_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        for d in a.deltas.iter_mut() {
+            *d = rng.below(5) as i32 - 2;
+        }
+        a
+    }
+
+    fn outcomes_equal(a: &EvalOutcome, b: &EvalOutcome) -> bool {
+        a.reward.total.to_bits() == b.reward.total.to_bits()
+            && a.reward.score.to_bits() == b.reward.score.to_bits()
+            && a.ppa.tokens_per_s.to_bits() == b.ppa.tokens_per_s.to_bits()
+            && a.decoded.mesh == b.decoded.mesh
+            && a.proj_steps == b.proj_steps
+            && a
+                .full_state
+                .iter()
+                .zip(&b.full_state)
+                .all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn evaluate_is_pure_and_scratch_independent() {
+        let ev = Evaluator::new(&small_cfg(), 3);
+        let mesh = ev.initial_mesh();
+        let a = Action::neutral();
+        let mut s1 = EvalScratch::default();
+        let o1 = ev.evaluate(&mesh, &a, &mut s1);
+        // reuse the dirty scratch; then a fresh one
+        let o2 = ev.evaluate(&mesh, &a, &mut s1);
+        let o3 = ev.evaluate(&mesh, &a, &mut EvalScratch::default());
+        assert!(outcomes_equal(&o1, &o2));
+        assert!(outcomes_equal(&o1, &o3));
+    }
+
+    #[test]
+    fn evaluate_many_matches_serial_in_order() {
+        let ev = Evaluator::new(&small_cfg(), 7);
+        let mesh = ev.initial_mesh();
+        let mut rng = Rng::new(17);
+        let actions: Vec<Action> = (0..9).map(|_| random_action(&mut rng)).collect();
+        let serial = ev.evaluate_many(&mesh, &actions, 1);
+        let par = ev.evaluate_many(&mesh, &actions, 4);
+        assert_eq!(serial.len(), par.len());
+        let mut scratch = EvalScratch::default();
+        for i in 0..actions.len() {
+            assert!(outcomes_equal(&serial[i], &par[i]), "index {i} diverged");
+            let direct = ev.evaluate(&mesh, &actions[i], &mut scratch);
+            assert!(
+                outcomes_equal(&par[i], &direct),
+                "index {i} not aligned with its input action"
+            );
+        }
+    }
+
+    #[test]
+    fn config_key_separates_meshes() {
+        let ev = Evaluator::new(&small_cfg(), 3);
+        let mut scratch = EvalScratch::default();
+        let m1 = MeshConfig::new(8, 8);
+        let m2 = MeshConfig::new(12, 12);
+        let o1 = ev.evaluate(&m1, &Action::neutral(), &mut scratch);
+        let o2 = ev.evaluate(&m2, &Action::neutral(), &mut scratch);
+        assert_ne!(config_key(&o1), config_key(&o2));
+        let o1b = ev.evaluate(&m1, &Action::neutral(), &mut scratch);
+        assert_eq!(config_key(&o1), config_key(&o1b));
+    }
+}

@@ -15,12 +15,17 @@
 //!
 //! Entry points: [`rl::loop_::run_node`] optimizes one process node per
 //! Algorithm 1; [`report`] regenerates every table/figure of the paper's
-//! evaluation section.
+//! evaluation section. [`eval`] is the stateless, thread-parallel
+//! evaluation layer beneath both (DESIGN.md §5): node sweeps, multi-seed
+//! runs and MPC candidate scoring all fan out through
+//! [`eval::Evaluator::evaluate_many`].
 
 pub mod arch;
 pub mod artifacts_out;
 pub mod config;
 pub mod env;
+pub mod error;
+pub mod eval;
 pub mod hazard;
 pub mod ir;
 pub mod kv;

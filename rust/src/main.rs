@@ -17,10 +17,11 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
 use silicon_rl::artifacts_out;
+use silicon_rl::bail;
 use silicon_rl::config::RunConfig;
+use silicon_rl::error::{Context, Error, Result};
+use silicon_rl::eval::parallel;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, baselines, SacAgent};
 use silicon_rl::runtime::Runtime;
@@ -42,7 +43,7 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
     }
     for a in args {
         if let Some(path) = a.strip_prefix("config=") {
-            cfg.load_file(path).map_err(anyhow::Error::msg)?;
+            cfg.load_file(path).map_err(Error::msg)?;
             continue;
         }
         let (k, v) = a
@@ -51,7 +52,7 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
         if k == "mode" {
             continue; // handled above
         }
-        cfg.apply(k, v).map_err(anyhow::Error::msg)?;
+        cfg.apply(k, v).map_err(Error::msg)?;
     }
     Ok(cfg)
 }
@@ -70,6 +71,7 @@ fn run(args: &[String]) -> Result<()> {
                  usage: silicon-rl <optimize|baselines|seeds|report|info> [key=value ...]\n\
                  keys:  workload=llama|smolvlm mode=hp|lp nodes=3,5,7 episodes=N\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
+                 \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
                  \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE"
             );
             Ok(())
@@ -78,32 +80,22 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// Full Algorithm 1 run: one shared agent, sequential nodes (Eq 50).
+/// Full Algorithm 1 run. Default: one shared agent, sequential nodes
+/// (Eq 50's cross-node transfer). With `parallel_nodes=true`: one agent
+/// per node, nodes fanned across worker threads — deterministic per node
+/// (each gets an index-derived RNG), reported in configured node order.
 fn optimize(args: &[String]) -> Result<()> {
     let cfg = parse_config(args)?;
     let out_dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(out_dir)?;
 
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    println!(
-        "platform={} entrypoints={} stores={}",
-        runtime.platform(),
-        runtime.manifest.entrypoints.len(),
-        runtime.manifest.stores.len()
-    );
-    let mut rng = Rng::new(cfg.seed);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
-    println!(
-        "parameter store: {} arrays, {} elements",
-        agent.store.data.len(),
-        agent.store.total_elems()
-    );
+    let results = if cfg.parallel_nodes {
+        optimize_nodes_parallel(&cfg)?
+    } else {
+        optimize_nodes_serial(&cfg)?
+    };
 
-    let mut results: Vec<rl::NodeResult> = Vec::new();
-    for &nm in &cfg.nodes_nm {
-        let t0 = std::time::Instant::now();
-        let result = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
-        let dt = t0.elapsed().as_secs_f64();
+    for (nm, result, dt) in &results {
         match &result.best {
             Some(b) => {
                 let o = &b.outcome;
@@ -120,16 +112,80 @@ fn optimize(args: &[String]) -> Result<()> {
                     result.feasible_count,
                     result.total_episodes,
                 );
-                artifacts_out::write_node_artifacts(out_dir, nm, o)?;
+                artifacts_out::write_node_artifacts(out_dir, *nm, o)?;
             }
             None => println!("{nm:>2}nm: NO feasible configuration found"),
         }
         report::convergence_csv(&result.episodes)
             .write_csv(&out_dir.join(format!("fig3_convergence_{nm}nm.csv")))?;
-        results.push(result);
     }
 
+    let results: Vec<rl::NodeResult> =
+        results.into_iter().map(|(_, r, _)| r).collect();
     emit_reports(&cfg, &results, out_dir)
+}
+
+fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
+    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    println!(
+        "platform={} entrypoints={} stores={}",
+        runtime.platform(),
+        runtime.manifest.entrypoints.len(),
+        runtime.manifest.stores.len()
+    );
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    println!(
+        "parameter store: {} arrays, {} elements",
+        agent.store.data.len(),
+        agent.store.total_elems()
+    );
+
+    let mut results = Vec::new();
+    for &nm in &cfg.nodes_nm {
+        let t0 = std::time::Instant::now();
+        let result = rl::run_node(cfg, nm, &mut agent, &mut rng)?;
+        results.push((nm, result, t0.elapsed().as_secs_f64()));
+    }
+    Ok(results)
+}
+
+fn optimize_nodes_parallel(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
+    let total = cfg.eval_threads();
+    let threads = total.min(cfg.nodes_nm.len()).max(1);
+    // split the worker budget between the node fan-out and each node's
+    // inner evaluate_many (MPC rerank) so concurrent nodes don't each
+    // grab every core
+    let mut worker_cfg = cfg.clone();
+    worker_cfg.rl.eval_threads = (total / threads).max(1);
+    println!(
+        "parallel node sweep: {} nodes on {} threads ({} eval thread(s) each, \
+         independent agents)",
+        cfg.nodes_nm.len(),
+        threads,
+        worker_cfg.rl.eval_threads
+    );
+    // per-node RNG streams derived in configured order, so results do not
+    // depend on scheduling
+    let mut root = Rng::new(cfg.seed);
+    let jobs: Vec<(u32, Rng)> =
+        cfg.nodes_nm.iter().map(|&nm| (nm, root.fork(nm as u64))).collect();
+
+    let worker_cfg = &worker_cfg;
+    let outcomes: Vec<Result<(u32, rl::NodeResult, f64)>> = parallel::scoped_chunk_map(
+        &jobs,
+        threads,
+        || (),
+        |_, _i, (nm, rng)| -> Result<(u32, rl::NodeResult, f64)> {
+            let t0 = std::time::Instant::now();
+            let runtime = Runtime::load(Path::new(&worker_cfg.artifacts_dir))?;
+            let mut rng = rng.clone();
+            let mut agent = SacAgent::new(runtime, worker_cfg.rl, &mut rng)?;
+            let result = rl::run_node(worker_cfg, *nm, &mut agent, &mut rng)?;
+            Ok((*nm, result, t0.elapsed().as_secs_f64()))
+        },
+    );
+    outcomes.into_iter().collect()
 }
 
 fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> Result<()> {
@@ -198,9 +254,13 @@ fn run_baselines(args: &[String]) -> Result<()> {
     let grid_r = baselines::grid_search(&cfg, nm, &mut rng.fork(2));
 
     println!("SAC @ {nm}nm...");
+    // Table 21 parity: no MPC real-eval re-ranking, so every strategy
+    // spends exactly one evaluation per budgeted episode
+    let mut sac_cfg = cfg.clone();
+    sac_cfg.rl.mpc_rerank = 0;
     let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
-    let sac_r = rl::run_node(&cfg, nm, &mut agent, &mut rng)?;
+    let mut agent = SacAgent::new(runtime, sac_cfg.rl, &mut rng)?;
+    let sac_r = rl::run_node(&sac_cfg, nm, &mut agent, &mut rng)?;
 
     let t = report::search_comparison(&[
         ("Random Search", &rand_r),
@@ -227,10 +287,13 @@ fn run_multiseed(args: &[String]) -> Result<()> {
         }
     }
     let cfg = parse_config(&rest)?;
+    // seeds fan out across workers; each seed's search runs serially so
+    // the machine is not oversubscribed
+    let threads = cfg.eval_threads();
     let mut results = Vec::new();
     for &nm in &cfg.nodes_nm {
-        results.push(rl::run_seeds(&cfg, nm, n_seeds, |c, nm, rng| {
-            baselines::random_search(c, nm, rng)
+        results.push(rl::run_seeds_t(&cfg, nm, n_seeds, threads, |c, nm, rng| {
+            baselines::random_search_t(c, nm, rng, 1)
         }));
     }
     let t = rl::seeds_table(&results);

@@ -10,7 +10,8 @@ pub mod policy;
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 use crate::runtime::{InitKind, Manifest};
 use crate::util::Rng;

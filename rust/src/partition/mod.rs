@@ -121,38 +121,46 @@ pub struct Unit {
     pub kind: crate::ir::OpKind,
 }
 
-/// Working per-tile state during placement, struct-of-arrays so the
-/// O(units × cores) scoring loop streams over contiguous f64 lanes (the
-/// episode hot path — EXPERIMENTS.md §Perf L3).
-struct TileState {
+/// Reusable working state for [`place_units_with`], struct-of-arrays so
+/// the O(units × cores) scoring loop streams over contiguous f64 lanes
+/// (the episode hot path — EXPERIMENTS.md §Perf L3). Owning one per
+/// worker thread keeps repeated placements allocation-free; an
+/// [`crate::eval::EvalScratch`] embeds one.
+#[derive(Debug, Default)]
+pub struct PlaceScratch {
     flops: Vec<f64>,
     weights: Vec<f64>,
     act: Vec<f64>,
     instrs: Vec<f64>,
     /// Precomputed centrality penalty 1 − centrality(t) per tile.
     central_penalty: Vec<f64>,
-    /// Precomputed normalized hop distance from each tile to every other
-    /// is too big to cache; hop distances are recomputed per unit.
+    /// Precomputed tile coordinates. The full all-pairs hop table is too
+    /// big to cache; hop distances are recomputed per unit.
     xy: Vec<(u16, u16)>,
+    /// Per-tile composite placement scores for the current unit.
+    scores: Vec<(f64, u32)>,
+    /// Primary (traffic-anchor) tile per already-placed unit.
+    primary: Vec<u32>,
 }
 
-impl TileState {
-    fn new(mesh: &MeshConfig) -> TileState {
+impl PlaceScratch {
+    fn reset(&mut self, mesh: &MeshConfig) {
         let n = mesh.cores();
-        let mut central_penalty = Vec::with_capacity(n);
-        let mut xy = Vec::with_capacity(n);
+        for buf in [&mut self.flops, &mut self.weights, &mut self.act, &mut self.instrs]
+        {
+            buf.clear();
+            buf.resize(n, 0.0);
+        }
+        self.central_penalty.clear();
+        self.xy.clear();
         for t in 0..n {
-            central_penalty.push(1.0 - mesh.centrality(t));
-            xy.push(((t as u32 % mesh.width) as u16, (t as u32 / mesh.width) as u16));
+            self.central_penalty.push(1.0 - mesh.centrality(t));
+            self.xy
+                .push(((t as u32 % mesh.width) as u16, (t as u32 / mesh.width) as u16));
         }
-        TileState {
-            flops: vec![0.0; n],
-            weights: vec![0.0; n],
-            act: vec![0.0; n],
-            instrs: vec![0.0; n],
-            central_penalty,
-            xy,
-        }
+        self.scores.clear();
+        self.scores.resize(n, (0.0, 0));
+        self.primary.clear();
     }
 }
 
@@ -163,20 +171,42 @@ const SPLIT_FLOOR_FLOPS: f64 = 1e5;
 /// embedding/LM-head tables cannot live in one tile's WMEM (Table 7 cap).
 const WEIGHT_SHARD_BYTES: f64 = 32.0 * 1024.0 * 1024.0;
 
-/// Place `units` onto the mesh. `mit` carries the microarchitectural
-/// hazard mitigation of the RL-selected average TCC parameters.
+/// Place `units` onto the mesh with a one-shot scratch. Prefer
+/// [`place_units_with`] on hot paths to reuse the working buffers.
 pub fn place_units(
     units: &[Unit],
     mesh: &MeshConfig,
     knobs: &PartitionKnobs,
     mit: &Mitigation,
 ) -> Placement {
+    place_units_with(units, mesh, knobs, mit, &mut PlaceScratch::default())
+}
+
+/// Place `units` onto the mesh. `mit` carries the microarchitectural
+/// hazard mitigation of the RL-selected average TCC parameters. The
+/// scratch is reset on entry; results are independent of its prior
+/// contents.
+pub fn place_units_with(
+    units: &[Unit],
+    mesh: &MeshConfig,
+    knobs: &PartitionKnobs,
+    mit: &Mitigation,
+    scratch: &mut PlaceScratch,
+) -> Placement {
     let n = mesh.cores();
-    let mut tiles = TileState::new(mesh);
-    let mut primary: Vec<u32> = Vec::with_capacity(units.len());
+    scratch.reset(mesh);
+    let PlaceScratch {
+        flops: tiles_flops,
+        weights: tiles_weights,
+        act: tiles_act,
+        instrs: tiles_instrs,
+        central_penalty,
+        xy,
+        scores,
+        primary,
+    } = scratch;
     let mut traffic = TrafficStats::default();
     let mut hazards = HazardStats::default();
-    let mut scores: Vec<(f64, u32)> = vec![(0.0, 0); n];
     // running totals for normalizing the load term of the composite score
     let mut total_flops_placed = 1.0f64;
     let mut total_weights_placed = 1.0f64;
@@ -211,14 +241,14 @@ pub fn place_units(
         let central_w = if u.inputs.len() > 1 { 0.3 } else { 0.05 };
         let wl = knobs.w_load;
         let inv_span = 1.0 / (mesh.width + mesh.height) as f64;
-        let prod_xy = prod_tile.map(|p| tiles.xy[p as usize]);
+        let prod_xy = prod_tile.map(|p| xy[p as usize]);
         const INV_64K: f64 = 1.0 / (64.0 * 1024.0);
         let prim = if k == n {
             // whole-mesh split: the uniform shares make the composite
             // ordering irrelevant — skip scoring, pick the least-loaded
             // tile as the traffic anchor, select all tiles
             let mut best = (f64::INFINITY, 0u32);
-            for (t, &f) in tiles.flops.iter().enumerate() {
+            for (t, &f) in tiles_flops.iter().enumerate() {
                 if f < best.0 {
                     best = (f, t as u32);
                 }
@@ -227,14 +257,14 @@ pub fn place_units(
             best.1
         } else {
             for t in 0..n {
-                let f = tiles.flops[t];
+                let f = tiles_flops[t];
                 let load = wl
                     * (f * inv_mean_f
-                        + 0.3 * (tiles.weights[t] * inv_mean_w)
-                        + 0.1 * tiles.act[t] * INV_64K);
+                        + 0.3 * (tiles_weights[t] * inv_mean_w)
+                        + 0.1 * tiles_act[t] * INV_64K);
                 let hop = match prod_xy {
                     Some((px, py)) => {
-                        let (tx, ty) = tiles.xy[t];
+                        let (tx, ty) = xy[t];
                         (px.abs_diff(tx) as f64 + py.abs_diff(ty) as f64) * inv_span
                     }
                     None => 0.0,
@@ -245,7 +275,7 @@ pub fn place_units(
                 // pushing weight-resident ones outward (§4.10's edge-heavy
                 // WMEM pattern emerges from this)
                 scores[t] = (
-                    load + 0.8 * hop + 0.5 * imb + central_w * tiles.central_penalty[t],
+                    load + 0.8 * hop + 0.5 * imb + central_w * central_penalty[t],
                     t as u32,
                 );
             }
@@ -276,12 +306,12 @@ pub fn place_units(
         let kf = k as f64;
         for &(_, t) in selected {
             let t = t as usize;
-            tiles.flops[t] += u.flops / kf;
-            tiles.weights[t] += u.weight_bytes / kf;
+            tiles_flops[t] += u.flops / kf;
+            tiles_weights[t] += u.weight_bytes / kf;
             // activation working set: the largest double-buffered live
             // tensor slice (activations are transient, not all-resident)
-            tiles.act[t] = tiles.act[t].max(2.0 * u.out_bytes / kf);
-            tiles.instrs[t] += u.instrs / kf;
+            tiles_act[t] = tiles_act[t].max(2.0 * u.out_bytes / kf);
+            tiles_instrs[t] += u.instrs / kf;
         }
         total_flops_placed += u.flops;
         total_weights_placed += u.weight_bytes;
@@ -331,11 +361,11 @@ pub fn place_units(
     let global_density = hazards.density();
     let loads: Vec<TileLoad> = (0..n)
         .map(|t| TileLoad {
-            flops: tiles.flops[t],
-            weight_bytes: tiles.weights[t],
-            act_bytes: tiles.act[t],
+            flops: tiles_flops[t],
+            weight_bytes: tiles_weights[t],
+            act_bytes: tiles_act[t],
             kv_bytes: 0.0, // filled by distribute_kv
-            instrs: tiles.instrs[t],
+            instrs: tiles_instrs[t],
             hazard_density: global_density,
         })
         .collect();
@@ -486,6 +516,35 @@ mod tests {
         let p = place_llama_groups(MeshConfig::new(6, 7), PartitionKnobs::default());
         let eta = p.eta_parallel();
         assert!(eta > 0.0 && eta <= 1.0, "eta {eta}");
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let g = llama::build();
+        let units = groups::units_from_groups(&g);
+        let knobs = PartitionKnobs::default();
+        let mut scratch = PlaceScratch::default();
+        // reuse the scratch across different mesh sizes; every placement
+        // must equal a fresh-scratch run exactly
+        for side in [4u32, 12, 6] {
+            let mesh = MeshConfig::new(side, side);
+            let reused = place_units_with(&units, &mesh, &knobs, &mit(), &mut scratch);
+            let fresh = place_units(&units, &mesh, &knobs, &mit());
+            assert_eq!(reused.loads.len(), fresh.loads.len());
+            for (a, b) in reused.loads.iter().zip(&fresh.loads) {
+                assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+                assert_eq!(a.weight_bytes.to_bits(), b.weight_bytes.to_bits());
+                assert_eq!(a.act_bytes.to_bits(), b.act_bytes.to_bits());
+            }
+            assert_eq!(
+                reused.traffic.cross_tile_bytes.to_bits(),
+                fresh.traffic.cross_tile_bytes.to_bits()
+            );
+            assert_eq!(
+                reused.load_stats.balance.to_bits(),
+                fresh.load_stats.balance.to_bits()
+            );
+        }
     }
 
     #[test]

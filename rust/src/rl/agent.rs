@@ -8,11 +8,12 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
+use crate::arch::MeshConfig;
 use crate::config::RlConfig;
 use crate::env::state::subset_index;
 use crate::env::{Action, ACT_DIM, SAC_STATE_DIM};
+use crate::error::Result;
+use crate::eval::{parallel, Evaluator};
 use crate::nn::{policy, Store};
 use crate::rl::per::{PerBuffer, Transition};
 use crate::runtime::Runtime;
@@ -220,10 +221,17 @@ impl SacAgent {
     /// reward read from the predicted PPA-observation dims; best
     /// candidate blended 70/30 with the SAC action on the TCC-parameter
     /// dims (discrete mesh deltas stay SAC-only).
+    ///
+    /// With `eval_ctx = Some((evaluator, mesh))`, the surrogate's top
+    /// `cfg.mpc_rerank` candidates are re-scored through the *real*
+    /// evaluation pipeline in parallel (`evaluate_many`) and the winner
+    /// is picked by true reward — the surrogate proposes, the analytical
+    /// model disposes. `None` keeps the pure world-model ranking.
     pub fn mpc_refine(
         &mut self,
         s: &[f32; SAC_STATE_DIM],
         sac_action: &Action,
+        eval_ctx: Option<(&Evaluator, &MeshConfig)>,
         rng: &mut Rng,
     ) -> Result<Action> {
         if !self.wm_trained {
@@ -288,21 +296,71 @@ impl SacAgent {
             }
         }
 
-        let best = returns
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .unwrap_or(0);
+        let best = match eval_ctx {
+            Some((ev, mesh)) if self.cfg.mpc_rerank > 0 => {
+                self.rerank_candidates(&cand, &returns, ev, mesh, sac_action)
+            }
+            _ => returns
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+        };
 
-        // blend on continuous TCC-parameter dims only (our layout: 0–14)
+        Ok(self.blend(&cand[best], sac_action))
+    }
+
+    /// Blend a candidate into the SAC action on the continuous
+    /// TCC-parameter dims only (our layout: 0–14); discrete mesh deltas
+    /// and the remaining continuous dims stay SAC's.
+    fn blend(&self, cand: &[f64; ACT_DIM], sac_action: &Action) -> Action {
         let mut out = sac_action.clone();
         for i in 0..15 {
-            out.cont[i] = (self.cfg.mpc_blend * cand[best][i]
+            out.cont[i] = (self.cfg.mpc_blend * cand[i]
                 + (1.0 - self.cfg.mpc_blend) * sac_action.cont[i])
                 .clamp(-1.0, 1.0);
         }
-        Ok(out)
+        out
+    }
+
+    /// Pick the winning MPC candidate by real evaluation: take the
+    /// surrogate's top `mpc_rerank` candidates (stable order: return
+    /// desc, index asc), evaluate each candidate's *executed form* —
+    /// the 70/30 blend with the SAC action that `mpc_refine` would
+    /// return for it — across worker threads, and return the candidate
+    /// index whose blended action has the best true reward (feasible
+    /// first, then score, ties to the higher surrogate rank). Fully
+    /// deterministic for a fixed candidate set.
+    fn rerank_candidates(
+        &self,
+        cand: &[[f64; ACT_DIM]],
+        returns: &[f64],
+        ev: &Evaluator,
+        mesh: &MeshConfig,
+        sac_action: &Action,
+    ) -> usize {
+        let mut order: Vec<usize> = (0..cand.len()).collect();
+        order.sort_by(|&a, &b| returns[b].total_cmp(&returns[a]).then(a.cmp(&b)));
+        order.truncate(self.cfg.mpc_rerank.min(cand.len()));
+
+        // rank what will actually run: the blended action, not the raw
+        // candidate (the blend collapses dims 15-29 back to SAC's)
+        let actions: Vec<Action> =
+            order.iter().map(|&i| self.blend(&cand[i], sac_action)).collect();
+        let threads = parallel::resolve(self.cfg.eval_threads).min(actions.len());
+        let outs = ev.evaluate_many(mesh, &actions, threads);
+
+        let mut best = 0usize;
+        for (rank, out) in outs.iter().enumerate() {
+            let (cur, new) = (&outs[best].reward, &out.reward);
+            let better = (new.feasible && !cur.feasible)
+                || (new.feasible == cur.feasible && new.score < cur.score);
+            if better {
+                best = rank;
+            }
+        }
+        order[best]
     }
 }
 

@@ -1,93 +1,100 @@
 //! Search-strategy baselines (§4.14, Table 21): random search and grid
 //! search under the same episode budget and the same evaluation pipeline
-//! as SAC — only the proposal mechanism differs.
+//! as SAC — only the proposal mechanism differs. (Caveat for strict
+//! evaluation-count parity: once SAC's MPC gate opens it performs up to
+//! `rl.mpc_rerank` additional real evaluations per exploitation episode
+//! that are not counted against the episode budget; set `mpc_rerank=0`
+//! for a same-evaluation-count comparison.)
+//!
+//! Both baselines score proposals in candidate *sets* of
+//! `cfg.rl.candidate_batch` through [`Evaluator::evaluate_many`], fanning
+//! each set across worker threads. The mesh then walks to the round's
+//! best candidate (feasible first, then score, ties to the earliest
+//! proposal). The batch size — not the thread count — shapes the search
+//! trajectory, so a run is bit-identical whether it executes on 1 thread
+//! or 16 (pinned by `tests/eval_parallel.rs`).
 
 use crate::config::RunConfig;
-use crate::env::{Action, Env, ACT_DIM};
+use crate::env::{Action, ACT_DIM};
+use crate::eval::{parallel, Evaluator};
 use crate::nn::policy;
-use crate::rl::loop_::{BestConfig, EpisodeLog, NodeResult};
-use crate::rl::pareto::{ParetoArchive, ParetoPoint};
+use crate::rl::loop_::{EpisodeTracker, NodeResult};
 use crate::util::Rng;
 
-/// Shared episode-loop skeleton for proposal-driven baselines.
+/// Shared round-loop skeleton for proposal-driven baselines: propose a
+/// candidate set, score it in parallel, log every candidate in proposal
+/// order, walk the mesh to the round's best.
 fn run_with_proposals(
     cfg: &RunConfig,
     nm: u32,
-    mut propose: impl FnMut(usize, &mut Env, &mut Rng) -> Action,
+    mut propose: impl FnMut(usize, &mut Rng) -> Action,
     rng: &mut Rng,
+    threads: usize,
 ) -> NodeResult {
-    let mut env = Env::new(cfg, nm);
+    let eval = Evaluator::new(cfg, nm);
+    let mut mesh = eval.initial_mesh();
     let episodes_budget = cfg.rl.episodes_per_node;
-    let mut pareto = ParetoArchive::new();
-    let mut episodes = Vec::with_capacity(episodes_budget);
-    let mut best: Option<BestConfig> = None;
-    let mut best_score = f64::INFINITY;
-    let mut feasible_count = 0usize;
-    let mut seen = std::collections::HashSet::new();
+    let set_size = cfg.rl.candidate_batch.max(1);
+    let mut tracker = EpisodeTracker::new(episodes_budget);
 
-    for t in 0..episodes_budget {
-        let action = propose(t, &mut env, rng);
-        let out = env.eval_action(&action);
-        if out.reward.feasible {
-            feasible_count += 1;
-            pareto.insert(ParetoPoint {
-                perf_gops: out.ppa.perf_gops,
-                power_mw: out.ppa.power.total(),
-                area_mm2: out.ppa.area.total(),
-                tokens_per_s: out.ppa.tokens_per_s,
-                episode: t,
-                tag: t,
-            });
-            if out.reward.score < best_score {
-                best_score = out.reward.score;
-                best = Some(BestConfig { episode: t, outcome: out.clone() });
+    let mut t = 0usize;
+    while t < episodes_budget {
+        let k = set_size.min(episodes_budget - t);
+        // proposals consume the RNG in episode order, independent of the
+        // worker count
+        let actions: Vec<Action> = (0..k).map(|j| propose(t + j, rng)).collect();
+        let outs = eval.evaluate_many(&mesh, &actions, threads);
+
+        // deterministic reduction: iterate candidates in proposal order
+        let mut walk_idx = 0usize;
+        for (j, out) in outs.iter().enumerate() {
+            tracker.record(t + j, out, 1.0, 0.0);
+            let better = {
+                let (cur, new) = (&outs[walk_idx].reward, &out.reward);
+                (new.feasible && !cur.feasible)
+                    || (new.feasible == cur.feasible && new.score < cur.score)
+            };
+            if better {
+                walk_idx = j;
             }
         }
-        let mut h: u64 = out.decoded.mesh.width as u64;
-        h = h.wrapping_mul(1315423911) ^ out.decoded.avg.vlen_bits as u64;
-        seen.insert(h ^ (out.decoded.avg.dmem_kb as u64) << 24);
-        episodes.push(EpisodeLog {
-            episode: t,
-            reward: out.reward.total,
-            score: out.reward.score,
-            best_score,
-            feasible: out.reward.feasible,
-            tokens_per_s: out.ppa.tokens_per_s,
-            power_mw: out.ppa.power.total(),
-            perf_gops: out.ppa.perf_gops,
-            area_mm2: out.ppa.area.total(),
-            mesh_w: out.decoded.mesh.width,
-            mesh_h: out.decoded.mesh.height,
-            eps: 1.0,
-            entropy: 0.0,
-            unique_configs: seen.len(),
-        });
+        mesh = outs[walk_idx].decoded.mesh;
+        t += k;
     }
-    NodeResult {
-        nm,
-        best,
-        episodes,
-        pareto,
-        feasible_count,
-        total_episodes: episodes_budget,
-    }
+    tracker.finish(nm, episodes_budget)
 }
 
 /// Pure random search: uniform actions every episode.
 pub fn random_search(cfg: &RunConfig, nm: u32, rng: &mut Rng) -> NodeResult {
-    run_with_proposals(cfg, nm, |_, _, rng| policy::uniform_action(rng), rng)
+    random_search_t(cfg, nm, rng, parallel::resolve(cfg.rl.eval_threads))
+}
+
+/// [`random_search`] with an explicit worker count (1 = fully serial).
+/// Results are identical for any `threads`.
+pub fn random_search_t(
+    cfg: &RunConfig,
+    nm: u32,
+    rng: &mut Rng,
+    threads: usize,
+) -> NodeResult {
+    run_with_proposals(cfg, nm, |_, rng| policy::uniform_action(rng), rng, threads)
 }
 
 /// Grid search: a deterministic lattice over the most influential dims
 /// (mesh side via deltas, VLEN, DMEM, ρ_matmul, DFLIT), neutral elsewhere.
 /// Enumerates lexicographically, recycling with jitter once exhausted.
 pub fn grid_search(cfg: &RunConfig, nm: u32, rng: &mut Rng) -> NodeResult {
+    grid_search_t(cfg, nm, rng, parallel::resolve(cfg.rl.eval_threads))
+}
+
+/// [`grid_search`] with an explicit worker count (1 = fully serial).
+pub fn grid_search_t(cfg: &RunConfig, nm: u32, rng: &mut Rng, threads: usize) -> NodeResult {
     const LEVELS: [f64; 5] = [-1.0, -0.5, 0.0, 0.5, 1.0];
     let mesh_deltas: [i32; 3] = [-2, 0, 2];
     run_with_proposals(
         cfg,
         nm,
-        move |t, _, rng| {
+        move |t, rng| {
             let mut a = Action::neutral();
             let mut k = t;
             let vlen = LEVELS[k % 5];
@@ -114,6 +121,7 @@ pub fn grid_search(cfg: &RunConfig, nm: u32, rng: &mut Rng) -> NodeResult {
             a
         },
         rng,
+        threads,
     )
 }
 
@@ -160,9 +168,23 @@ mod tests {
     }
 
     #[test]
-    fn pareto_archive_only_holds_feasible(){
+    fn pareto_archive_only_holds_feasible() {
         let mut rng = Rng::new(4);
         let r = random_search(&tiny_cfg(), 28, &mut rng);
         assert!(r.pareto.len() <= r.feasible_count.max(1));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut cfg = tiny_cfg();
+        cfg.rl.episodes_per_node = 24;
+        let serial = random_search_t(&cfg, 7, &mut Rng::new(11), 1);
+        let par = random_search_t(&cfg, 7, &mut Rng::new(11), 4);
+        assert_eq!(serial.feasible_count, par.feasible_count);
+        for (a, b) in serial.episodes.iter().zip(&par.episodes) {
+            assert_eq!(a.reward.to_bits(), b.reward.to_bits());
+            assert_eq!(a.best_score.to_bits(), b.best_score.to_bits());
+            assert_eq!((a.mesh_w, a.mesh_h), (b.mesh_w, b.mesh_h));
+        }
     }
 }

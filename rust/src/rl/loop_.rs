@@ -4,11 +4,17 @@
 //! during exploitation) → constrained projection → mesh/TCC update →
 //! operator partitioning → PPA reward → PER store → SAC + world-model +
 //! surrogate updates → ε decay → Pareto archive → best tracking.
-
-use anyhow::Result;
+//!
+//! Evaluation goes through the stateless [`Evaluator`] with a
+//! fingerprint-keyed [`EvalCache`]: revisited design points replay their
+//! memoized outcome instead of re-running the ~10 ms pipeline, and the
+//! MPC refinement re-ranks its candidate set with real (parallel)
+//! evaluations instead of trusting the surrogate alone.
 
 use crate::config::RunConfig;
-use crate::env::{state, Action, Env, EvalOutcome};
+use crate::env::{state, Action};
+use crate::error::Result;
+use crate::eval::{config_key, EvalCache, EvalOutcome, EvalScratch, Evaluator};
 use crate::nn::policy;
 use crate::rl::agent::SacAgent;
 use crate::rl::explore::EpsSchedule;
@@ -58,23 +64,78 @@ impl NodeResult {
     }
 }
 
-/// Configuration fingerprint for the unique-configs trace (Fig 3).
-fn config_key(out: &EvalOutcome) -> u64 {
-    let d = &out.decoded;
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x100000001b3);
-    };
-    mix(d.mesh.width as u64);
-    mix(d.mesh.height as u64);
-    mix(d.avg.fetch as u64);
-    mix(d.avg.stanum as u64);
-    mix(d.avg.vlen_bits as u64);
-    mix(d.avg.dmem_kb as u64);
-    mix(d.avg.dflit_bits as u64);
-    mix((d.avg.clock_mhz * 10.0) as u64);
-    h
+/// Shared episode bookkeeping: Pareto archive, best tracking, unique
+/// configs, per-episode log rows. Used by both the SAC loop and the
+/// baseline searches so their reductions are identical (and, for the
+/// batched baselines, deterministic in input order).
+pub(crate) struct EpisodeTracker {
+    pub pareto: ParetoArchive,
+    pub episodes: Vec<EpisodeLog>,
+    pub best: Option<BestConfig>,
+    pub best_score: f64,
+    pub feasible_count: usize,
+    pub seen: std::collections::HashSet<u64>,
+}
+
+impl EpisodeTracker {
+    pub fn new(capacity: usize) -> Self {
+        EpisodeTracker {
+            pareto: ParetoArchive::new(),
+            episodes: Vec::with_capacity(capacity),
+            best: None,
+            best_score: f64::INFINITY,
+            feasible_count: 0,
+            seen: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Record one evaluated episode; `eps`/`entropy` are the exploration
+    /// trace values for the log row.
+    pub fn record(&mut self, t: usize, out: &EvalOutcome, eps: f64, entropy: f64) {
+        if out.reward.feasible {
+            self.feasible_count += 1;
+            self.pareto.insert(ParetoPoint {
+                perf_gops: out.ppa.perf_gops,
+                power_mw: out.ppa.power.total(),
+                area_mm2: out.ppa.area.total(),
+                tokens_per_s: out.ppa.tokens_per_s,
+                episode: t,
+                tag: t,
+            });
+            if out.reward.score < self.best_score {
+                self.best_score = out.reward.score;
+                self.best = Some(BestConfig { episode: t, outcome: out.clone() });
+            }
+        }
+        self.seen.insert(config_key(out));
+        self.episodes.push(EpisodeLog {
+            episode: t,
+            reward: out.reward.total,
+            score: out.reward.score,
+            best_score: self.best_score,
+            feasible: out.reward.feasible,
+            tokens_per_s: out.ppa.tokens_per_s,
+            power_mw: out.ppa.power.total(),
+            perf_gops: out.ppa.perf_gops,
+            area_mm2: out.ppa.area.total(),
+            mesh_w: out.decoded.mesh.width,
+            mesh_h: out.decoded.mesh.height,
+            eps,
+            entropy,
+            unique_configs: self.seen.len(),
+        });
+    }
+
+    pub fn finish(self, nm: u32, total_episodes: usize) -> NodeResult {
+        NodeResult {
+            nm,
+            best: self.best,
+            episodes: self.episodes,
+            pareto: self.pareto,
+            feasible_count: self.feasible_count,
+            total_episodes,
+        }
+    }
 }
 
 /// Run Algorithm 1 for one node with the SAC agent.
@@ -84,20 +145,19 @@ pub fn run_node(
     agent: &mut SacAgent,
     rng: &mut Rng,
 ) -> Result<NodeResult> {
-    let mut env = Env::new(cfg, nm);
+    let eval = Evaluator::new(cfg, nm);
+    let mut mesh = eval.initial_mesh();
+    let mut scratch = EvalScratch::default();
+    let mut cache = EvalCache::new(cfg.rl.eval_cache);
     let rl = &cfg.rl;
     let mut eps = EpsSchedule::new(rl.eps0, rl.eps_min, rl.episodes_per_node);
 
     // bootstrap: evaluate the neutral action to get s₀
-    let mut prev = env.eval_action(&Action::neutral());
+    let prev = cache.evaluate(&eval, &mesh, &Action::neutral(), &mut scratch);
+    mesh = prev.decoded.mesh;
     let mut s = state::sac_subset(&prev.full_state);
 
-    let mut pareto = ParetoArchive::new();
-    let mut episodes = Vec::with_capacity(rl.episodes_per_node);
-    let mut best: Option<BestConfig> = None;
-    let mut best_score = f64::INFINITY;
-    let mut feasible_count = 0usize;
-    let mut seen = std::collections::HashSet::new();
+    let mut tracker = EpisodeTracker::new(rl.episodes_per_node);
 
     for t in 0..rl.episodes_per_node {
         // ---- action selection (Algorithm 1 line 6)
@@ -106,14 +166,15 @@ pub fn run_node(
         } else {
             let a = agent.act(&s, true, rng)?;
             if eps.eps < rl.mpc_eps_gate {
-                agent.mpc_refine(&s, &a, rng)? // line 14
+                agent.mpc_refine(&s, &a, Some((&eval, &mesh)), rng)? // line 14
             } else {
                 a
             }
         };
 
-        // ---- evaluate (projection Π + partition + PPA + reward)
-        let out = env.eval_action(&action);
+        // ---- evaluate (projection Π + partition + PPA + reward), walk
+        let out = cache.evaluate(&eval, &mesh, &action, &mut scratch);
+        mesh = out.decoded.mesh;
         let s2 = state::sac_subset(&out.full_state);
 
         // ---- store transition
@@ -145,54 +206,13 @@ pub fn run_node(
         }
 
         // ---- bookkeeping
-        if out.reward.feasible {
-            feasible_count += 1;
-            pareto.insert(ParetoPoint {
-                perf_gops: out.ppa.perf_gops,
-                power_mw: out.ppa.power.total(),
-                area_mm2: out.ppa.area.total(),
-                tokens_per_s: out.ppa.tokens_per_s,
-                episode: t,
-                tag: t,
-            });
-            if out.reward.score < best_score {
-                best_score = out.reward.score;
-                best = Some(BestConfig { episode: t, outcome: out.clone() });
-            }
-        }
-        seen.insert(config_key(&out));
-        eps.step(feasible_count > 0);
+        eps.step(tracker.feasible_count > 0 || out.reward.feasible);
+        tracker.record(t, &out, eps.eps, agent.last_entropy);
 
-        episodes.push(EpisodeLog {
-            episode: t,
-            reward: out.reward.total,
-            score: out.reward.score,
-            best_score,
-            feasible: out.reward.feasible,
-            tokens_per_s: out.ppa.tokens_per_s,
-            power_mw: out.ppa.power.total(),
-            perf_gops: out.ppa.perf_gops,
-            area_mm2: out.ppa.area.total(),
-            mesh_w: out.decoded.mesh.width,
-            mesh_h: out.decoded.mesh.height,
-            eps: eps.eps,
-            entropy: agent.last_entropy,
-            unique_configs: seen.len(),
-        });
-
-        prev = out;
         s = s2;
     }
-    let _ = prev;
 
-    Ok(NodeResult {
-        nm,
-        best,
-        episodes,
-        pareto,
-        feasible_count,
-        total_episodes: rl.episodes_per_node,
-    })
+    Ok(tracker.finish(nm, rl.episodes_per_node))
 }
 
 fn agent_batch(agent: &SacAgent) -> usize {
@@ -202,5 +222,6 @@ fn agent_batch(agent: &SacAgent) -> usize {
 #[cfg(test)]
 mod tests {
     // run_node requires compiled artifacts; exercised by
-    // rust/tests/runtime_e2e.rs and the benches.
+    // rust/tests/runtime_e2e.rs and the benches. The evaluation layer it
+    // drives is covered in eval::* and tests/eval_parallel.rs.
 }

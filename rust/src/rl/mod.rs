@@ -14,6 +14,6 @@ pub mod per;
 pub use agent::{SacAgent, UpdateMetrics};
 pub use explore::EpsSchedule;
 pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
-pub use multiseed::{run_seeds, seeds_table, MultiSeedResult, SeedStat};
+pub use multiseed::{run_seeds, run_seeds_t, seeds_table, MultiSeedResult, SeedStat};
 pub use pareto::{ParetoArchive, ParetoPoint};
 pub use per::{PerBuffer, Transition};

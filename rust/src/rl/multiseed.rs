@@ -2,10 +2,18 @@
 //!
 //! The paper reports single-run results and explicitly calls for
 //! "repeated-seed protocols with confidence intervals". This module runs
-//! any search strategy across N seeds and reports per-metric mean, std
-//! and a normal-approximation 95% confidence interval.
+//! any search strategy across N seeds — fanning the seeds across worker
+//! threads — and reports per-metric mean, std and a normal-approximation
+//! 95% confidence interval, plus the merged Pareto frontier.
+//!
+//! Determinism: seed `i` is derived from the base seed by index, each
+//! worker gets its own [`Rng`], and aggregation walks results in seed
+//! order (never completion order) — so `run_seeds_t(.., 1, ..)` and
+//! `run_seeds_t(.., 16, ..)` produce identical statistics.
 
 use crate::config::RunConfig;
+use crate::eval::parallel;
+use crate::rl::pareto::ParetoArchive;
 use crate::rl::NodeResult;
 use crate::util::csv::{fnum, Table};
 use crate::util::Rng;
@@ -35,7 +43,7 @@ impl SeedStat {
 }
 
 /// Multi-seed summary of a search strategy at one node.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct MultiSeedResult {
     pub nm: u32,
     pub seeds: Vec<u64>,
@@ -46,28 +54,58 @@ pub struct MultiSeedResult {
     pub feasible_frac: SeedStat,
     /// Seeds that found no feasible configuration.
     pub failures: usize,
+    /// Union frontier across all seeds, merged in seed order.
+    pub pareto: ParetoArchive,
 }
 
-/// Run `search` across `n_seeds` derived seeds and aggregate.
+/// Derive the i-th run seed from the configured base seed.
+pub fn derive_seed(base: u64, i: usize) -> u64 {
+    base.wrapping_add(0x9E37_79B9u64.wrapping_mul(i as u64 + 1))
+}
+
+/// Run `search` across `n_seeds` derived seeds and aggregate
+/// ([`run_seeds_t`] with the configured/auto worker count).
 pub fn run_seeds(
     cfg: &RunConfig,
     nm: u32,
     n_seeds: usize,
-    mut search: impl FnMut(&RunConfig, u32, &mut Rng) -> NodeResult,
+    search: impl Fn(&RunConfig, u32, &mut Rng) -> NodeResult + Sync,
 ) -> MultiSeedResult {
+    run_seeds_t(cfg, nm, n_seeds, parallel::resolve(cfg.rl.eval_threads), search)
+}
+
+/// Run `search` across `n_seeds` derived seeds with up to `threads`
+/// concurrent workers (1 = fully serial), then aggregate in seed order.
+pub fn run_seeds_t(
+    cfg: &RunConfig,
+    nm: u32,
+    n_seeds: usize,
+    threads: usize,
+    search: impl Fn(&RunConfig, u32, &mut Rng) -> NodeResult + Sync,
+) -> MultiSeedResult {
+    let seeds: Vec<u64> = (0..n_seeds).map(|i| derive_seed(cfg.seed, i)).collect();
+
+    let results: Vec<NodeResult> = parallel::scoped_chunk_map(
+        &seeds,
+        threads,
+        || (),
+        |_, _i, &seed| {
+            let mut rng = Rng::new(seed);
+            search(cfg, nm, &mut rng)
+        },
+    );
+
+    // deterministic reduction: walk results in seed order
     let mut toks = Vec::new();
     let mut power = Vec::new();
     let mut area = Vec::new();
     let mut score = Vec::new();
     let mut feas = Vec::new();
-    let mut seeds = Vec::new();
     let mut failures = 0usize;
-    for i in 0..n_seeds {
-        let seed = cfg.seed.wrapping_add(0x9E37_79B9 * (i as u64 + 1));
-        seeds.push(seed);
-        let mut rng = Rng::new(seed);
-        let r = search(cfg, nm, &mut rng);
+    let mut pareto = ParetoArchive::new();
+    for r in &results {
         feas.push(r.feasible_count as f64 / r.total_episodes.max(1) as f64);
+        pareto.merge(&r.pareto);
         match &r.best {
             Some(b) => {
                 toks.push(b.outcome.ppa.tokens_per_s);
@@ -87,6 +125,7 @@ pub fn run_seeds(
         score: SeedStat::from_samples(&score),
         feasible_frac: SeedStat::from_samples(&feas),
         failures,
+        pareto,
     }
 }
 
@@ -144,5 +183,25 @@ mod tests {
         assert!(r.tokens_per_s.std < r.tokens_per_s.mean);
         let t = seeds_table(&[r]);
         assert!(t.to_text().contains("±"));
+    }
+
+    #[test]
+    fn parallel_seeds_match_serial_seeds() {
+        let mut cfg = RunConfig::default();
+        cfg.rl.episodes_per_node = 16;
+        cfg.granularity = Granularity::Group;
+        let search = |c: &RunConfig, nm: u32, rng: &mut Rng| {
+            baselines::random_search_t(c, nm, rng, 1)
+        };
+        let serial = run_seeds_t(&cfg, 3, 4, 1, search);
+        let par = run_seeds_t(&cfg, 3, 4, 4, search);
+        assert_eq!(serial.seeds, par.seeds);
+        assert_eq!(serial.failures, par.failures);
+        assert_eq!(serial.score.mean.to_bits(), par.score.mean.to_bits());
+        assert_eq!(
+            serial.tokens_per_s.mean.to_bits(),
+            par.tokens_per_s.mean.to_bits()
+        );
+        assert_eq!(serial.pareto.len(), par.pareto.len());
     }
 }

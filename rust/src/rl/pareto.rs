@@ -35,7 +35,7 @@ impl ParetoPoint {
     }
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ParetoArchive {
     points: Vec<ParetoPoint>,
 }
@@ -58,6 +58,17 @@ impl ParetoArchive {
 
     pub fn frontier(&self) -> &[ParetoPoint] {
         &self.points
+    }
+
+    /// Merge another archive into this one by re-inserting its frontier
+    /// in storage order. Insertion order only affects internal layout,
+    /// never frontier membership, but keeping it fixed makes parallel
+    /// drivers reproduce serial archives exactly: workers' archives are
+    /// merged in input (seed/node) order, not completion order.
+    pub fn merge(&mut self, other: &ParetoArchive) {
+        for p in other.frontier() {
+            self.insert(p.clone());
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -177,5 +188,34 @@ mod tests {
         let b = p(10.0, 10.0, 10.0, 1);
         assert!(!a.dominates(&b));
         assert!(!b.dominates(&a));
+    }
+
+    #[test]
+    fn merge_equals_sequential_insertion() {
+        let pts: Vec<ParetoPoint> =
+            (0..12).map(|i| p(10.0 * i as f64, 40.0 - 3.0 * i as f64, 20.0, i)).collect();
+        let mut sequential = ParetoArchive::new();
+        for q in &pts {
+            sequential.insert(q.clone());
+        }
+        // split into two worker archives, then merge in worker order
+        let (mut w1, mut w2) = (ParetoArchive::new(), ParetoArchive::new());
+        for (i, q) in pts.iter().enumerate() {
+            if i < 6 {
+                w1.insert(q.clone());
+            } else {
+                w2.insert(q.clone());
+            }
+        }
+        let mut merged = ParetoArchive::new();
+        merged.merge(&w1);
+        merged.merge(&w2);
+        assert_eq!(merged.len(), sequential.len());
+        let mut tags_a: Vec<usize> = merged.frontier().iter().map(|q| q.tag).collect();
+        let mut tags_b: Vec<usize> =
+            sequential.frontier().iter().map(|q| q.tag).collect();
+        tags_a.sort_unstable();
+        tags_b.sort_unstable();
+        assert_eq!(tags_a, tags_b);
     }
 }

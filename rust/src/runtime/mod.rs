@@ -14,7 +14,15 @@ pub use manifest::{EntryPoint, InitKind, Manifest, StoreInit, TensorSpec};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Error, Result};
+
+/// True when the PJRT backend can actually execute HLO. False under the
+/// offline `xla` stub — artifact-dependent tests and benches gate on
+/// this and skip with a clear message.
+pub fn backend_available() -> bool {
+    xla::backend_available()
+}
 
 /// Lazily-compiling executor over the artifact directory.
 pub struct Runtime {
@@ -32,7 +40,7 @@ impl Runtime {
     pub fn load(dir: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading manifest in {}", dir.display()))?;
-        let manifest = Manifest::parse(&text).map_err(anyhow::Error::msg)?;
+        let manifest = Manifest::parse(&text).map_err(Error::msg)?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
             client,

@@ -1,0 +1,208 @@
+//! Determinism and correctness contract of the stateless evaluation
+//! layer (DESIGN.md §5): serial and parallel drivers must produce
+//! bit-identical results for a fixed seed, memo-cache hits must equal
+//! recomputation, and `evaluate_many` must preserve input order. No AOT
+//! artifacts needed — everything here runs the analytical pipeline.
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::Action;
+use silicon_rl::eval::{EvalCache, EvalOutcome, EvalScratch, Evaluator};
+use silicon_rl::rl::{baselines, run_seeds_t};
+use silicon_rl::util::Rng;
+
+fn small_cfg(episodes: usize) -> RunConfig {
+    let mut c = RunConfig::default();
+    c.rl.episodes_per_node = episodes;
+    c.granularity = Granularity::Group;
+    c
+}
+
+fn random_action(rng: &mut Rng) -> Action {
+    let mut a = Action::neutral();
+    for v in a.cont.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    for d in a.deltas.iter_mut() {
+        *d = rng.below(5) as i32 - 2;
+    }
+    a
+}
+
+fn assert_outcomes_identical(a: &EvalOutcome, b: &EvalOutcome, what: &str) {
+    assert_eq!(a.reward.total.to_bits(), b.reward.total.to_bits(), "{what}: reward");
+    assert_eq!(a.reward.score.to_bits(), b.reward.score.to_bits(), "{what}: score");
+    assert_eq!(a.reward.feasible, b.reward.feasible, "{what}: feasible");
+    assert_eq!(
+        a.ppa.tokens_per_s.to_bits(),
+        b.ppa.tokens_per_s.to_bits(),
+        "{what}: tokens/s"
+    );
+    assert_eq!(
+        a.ppa.power.total().to_bits(),
+        b.ppa.power.total().to_bits(),
+        "{what}: power"
+    );
+    assert_eq!(a.decoded.mesh, b.decoded.mesh, "{what}: mesh");
+    assert_eq!(a.proj_steps, b.proj_steps, "{what}: projection steps");
+    assert_eq!(a.tiles.len(), b.tiles.len(), "{what}: tile count");
+    for (i, (x, y)) in a.full_state.iter().zip(&b.full_state).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: state dim {i}");
+    }
+}
+
+#[test]
+fn evaluate_many_serial_vs_parallel_bit_identical() {
+    let cfg = small_cfg(1);
+    for nm in [3u32, 28] {
+        let ev = Evaluator::new(&cfg, nm);
+        let mesh = ev.initial_mesh();
+        let mut rng = Rng::new(42 + nm as u64);
+        let actions: Vec<Action> = (0..13).map(|_| random_action(&mut rng)).collect();
+        let serial = ev.evaluate_many(&mesh, &actions, 1);
+        for threads in [2usize, 4, 16] {
+            let par = ev.evaluate_many(&mesh, &actions, threads);
+            assert_eq!(serial.len(), par.len());
+            for (i, (s, p)) in serial.iter().zip(&par).enumerate() {
+                assert_outcomes_identical(
+                    s,
+                    p,
+                    &format!("{nm}nm, {threads} threads, action {i}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn evaluate_many_preserves_input_order() {
+    // distinguishable actions: each candidate walks the mesh differently,
+    // so any reordering of results is visible in the decoded mesh
+    let cfg = small_cfg(1);
+    let ev = Evaluator::new(&cfg, 7);
+    let mesh = ev.initial_mesh();
+    let actions: Vec<Action> = (0..5)
+        .map(|i| {
+            let mut a = Action::neutral();
+            a.deltas = [i as i32 - 2, i as i32 - 2, 0, 0];
+            a
+        })
+        .collect();
+    let outs = ev.evaluate_many(&mesh, &actions, 4);
+    let mut scratch = EvalScratch::default();
+    for (i, (a, out)) in actions.iter().zip(&outs).enumerate() {
+        let direct = ev.evaluate(&mesh, a, &mut scratch);
+        assert_outcomes_identical(out, &direct, &format!("slot {i}"));
+    }
+}
+
+#[test]
+fn cached_outcome_equals_recomputed() {
+    let cfg = small_cfg(1);
+    let ev = Evaluator::new(&cfg, 3);
+    let mesh = ev.initial_mesh();
+    let mut rng = Rng::new(7);
+    let mut cache = EvalCache::new(64);
+    let mut scratch = EvalScratch::default();
+
+    let actions: Vec<Action> = (0..6).map(|_| random_action(&mut rng)).collect();
+    // first pass fills, second pass hits; every hit must equal a fresh
+    // evaluation with a clean scratch
+    for pass in 0..2 {
+        for (i, a) in actions.iter().enumerate() {
+            let through_cache = cache.evaluate(&ev, &mesh, a, &mut scratch);
+            let fresh = ev.evaluate(&mesh, a, &mut EvalScratch::default());
+            assert_outcomes_identical(
+                &through_cache,
+                &fresh,
+                &format!("pass {pass}, action {i}"),
+            );
+        }
+    }
+    assert_eq!(cache.misses, actions.len() as u64);
+    assert_eq!(cache.hits, actions.len() as u64);
+}
+
+#[test]
+fn random_search_identical_across_worker_counts() {
+    let cfg = small_cfg(32);
+    let serial = baselines::random_search_t(&cfg, 7, &mut Rng::new(5), 1);
+    for threads in [2usize, 8] {
+        let par = baselines::random_search_t(&cfg, 7, &mut Rng::new(5), threads);
+        assert_eq!(serial.feasible_count, par.feasible_count, "{threads} threads");
+        assert_eq!(serial.pareto.len(), par.pareto.len(), "{threads} threads");
+        assert_eq!(serial.episodes.len(), par.episodes.len());
+        for (e1, e2) in serial.episodes.iter().zip(&par.episodes) {
+            assert_eq!(e1.reward.to_bits(), e2.reward.to_bits());
+            assert_eq!(e1.score.to_bits(), e2.score.to_bits());
+            assert_eq!(e1.best_score.to_bits(), e2.best_score.to_bits());
+            assert_eq!((e1.mesh_w, e1.mesh_h), (e2.mesh_w, e2.mesh_h));
+            assert_eq!(e1.unique_configs, e2.unique_configs);
+        }
+        match (&serial.best, &par.best) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.episode, b.episode);
+                assert_outcomes_identical(&a.outcome, &b.outcome, "best outcome");
+            }
+            (None, None) => {}
+            _ => panic!("best presence diverged between worker counts"),
+        }
+    }
+}
+
+#[test]
+fn grid_search_identical_across_worker_counts() {
+    let cfg = small_cfg(30);
+    let serial = baselines::grid_search_t(&cfg, 14, &mut Rng::new(9), 1);
+    let par = baselines::grid_search_t(&cfg, 14, &mut Rng::new(9), 4);
+    for (e1, e2) in serial.episodes.iter().zip(&par.episodes) {
+        assert_eq!(e1.reward.to_bits(), e2.reward.to_bits());
+        assert_eq!((e1.mesh_w, e1.mesh_h), (e2.mesh_w, e2.mesh_h));
+    }
+}
+
+#[test]
+fn multi_seed_identical_across_worker_counts() {
+    let cfg = small_cfg(18);
+    let search = |c: &RunConfig, nm: u32, rng: &mut Rng| {
+        baselines::random_search_t(c, nm, rng, 1)
+    };
+    let serial = run_seeds_t(&cfg, 3, 5, 1, search);
+    for threads in [2usize, 5, 8] {
+        let par = run_seeds_t(&cfg, 3, 5, threads, search);
+        assert_eq!(serial.seeds, par.seeds, "{threads} threads");
+        assert_eq!(serial.failures, par.failures);
+        for (a, b) in [
+            (serial.tokens_per_s, par.tokens_per_s),
+            (serial.power_mw, par.power_mw),
+            (serial.area_mm2, par.area_mm2),
+            (serial.score, par.score),
+            (serial.feasible_frac, par.feasible_frac),
+        ] {
+            assert_eq!(a.mean.to_bits(), b.mean.to_bits(), "{threads} threads: mean");
+            assert_eq!(a.std.to_bits(), b.std.to_bits(), "{threads} threads: std");
+        }
+        assert_eq!(serial.pareto.len(), par.pareto.len());
+    }
+}
+
+#[test]
+fn candidate_batch_shapes_search_not_thread_count() {
+    // the knob that changes trajectories is candidate_batch; threads never
+    // does. Two different batch sizes may legitimately differ...
+    let mut cfg_a = small_cfg(24);
+    cfg_a.rl.candidate_batch = 1;
+    let mut cfg_b = small_cfg(24);
+    cfg_b.rl.candidate_batch = 8;
+    let a = baselines::random_search_t(&cfg_a, 3, &mut Rng::new(3), 2);
+    let b = baselines::random_search_t(&cfg_b, 3, &mut Rng::new(3), 2);
+    // ...but both still consume the full episode budget and stay finite
+    assert_eq!(a.episodes.len(), 24);
+    assert_eq!(b.episodes.len(), 24);
+    assert!(a.episodes.iter().all(|e| e.reward.is_finite()));
+    assert!(b.episodes.iter().all(|e| e.reward.is_finite()));
+    // batch=1 reproduces itself regardless of the worker count
+    let a2 = baselines::random_search_t(&cfg_a, 3, &mut Rng::new(3), 8);
+    for (x, y) in a.episodes.iter().zip(&a2.episodes) {
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits());
+    }
+}

@@ -1,0 +1,238 @@
+//! Offline stub of the vendored `xla-rs` PJRT bindings.
+//!
+//! This image does not ship the XLA C++ libraries, so the real bindings
+//! cannot link. This crate mirrors the API surface `silicon_rl::runtime`
+//! uses — client/executable/buffer/literal types with identical method
+//! signatures — and degrades gracefully:
+//!
+//! * [`Literal`] is fully functional (host-side data, no device): the
+//!   scalar/vec1/reshape/to_vec plumbing the runtime tests exercise works.
+//! * Device paths ([`PjRtClient::compile`], execution) return
+//!   [`Error::Unavailable`] with a clear message. Callers gate on
+//!   [`backend_available`] and skip artifact-dependent work.
+//!
+//! Swapping in the real bindings is a `Cargo.toml` path change in the
+//! `silicon_rl` package; no call site changes.
+
+use std::fmt;
+
+/// True when this build can actually execute HLO. The stub never can.
+pub const fn backend_available() -> bool {
+    false
+}
+
+const UNAVAILABLE_MSG: &str =
+    "PJRT backend unavailable: this build uses the offline xla stub \
+     (vendor the real xla-rs bindings to execute HLO artifacts)";
+
+/// Error type mirroring xla-rs (message-carrying).
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn unavailable() -> Error {
+        Error::msg(UNAVAILABLE_MSG)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] / device buffer can carry. The runtime only
+/// ever moves flat `f32` data, so that is the only implementation.
+pub trait ArrayElement: Copy {
+    fn from_f32(v: f32) -> Self;
+    fn into_f32(self) -> f32;
+}
+
+impl ArrayElement for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+
+    fn into_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host-side literal: flat data + dims. Fully functional in the stub.
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: vec![] }
+    }
+
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let elems: i64 = dims.iter().product();
+        if elems as usize != self.data.len() {
+            return Err(Error::msg(format!(
+                "reshape: {} elements cannot take shape {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Unpack a tuple literal. Stub literals are never tuples (tuples only
+    /// arise from device execution, which the stub cannot perform).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::msg("stub literal is not a tuple (no device execution)"))
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module handle. The stub validates the file is readable but
+/// does not parse HLO text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error::msg(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// Computation handle built from a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// A device placement handle (unused by the stub; present so call sites
+/// can pass `None` for the device argument with full type inference).
+#[derive(Debug, Clone, Copy)]
+pub struct PjRtDevice;
+
+/// Device-resident buffer handle. Never constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Marker for types `execute_b` can yield (mirrors xla-rs's generic
+/// execution output parameter).
+pub trait ExecuteOutput: Sized {}
+
+impl ExecuteOutput for PjRtBuffer {}
+
+/// Compiled executable handle. Never successfully constructed by the stub.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: ExecuteOutput>(
+        &self,
+        _args: &[PjRtBuffer],
+    ) -> Result<Vec<Vec<T>>> {
+        Err(Error::unavailable())
+    }
+}
+
+/// PJRT client. Construction succeeds (so manifests can be inspected and
+/// `info` works); anything requiring the device errors with a clear
+/// message.
+#[derive(Debug, Default)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient::default())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::msg(format!("{UNAVAILABLE_MSG}; cannot compile {}", comp.path)))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_scalar_and_vec_round_trip() {
+        assert_eq!(Literal::scalar(2.5).to_vec::<f32>().unwrap(), vec![2.5]);
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.to_vec::<f32>().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[2, 3]).is_ok());
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_report_unavailable() {
+        assert!(!backend_available());
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "offline-stub");
+        let err = client
+            .buffer_from_host_buffer::<f32>(&[0.0], &[1], None)
+            .unwrap_err();
+        assert!(err.to_string().contains("unavailable"));
+    }
+}
