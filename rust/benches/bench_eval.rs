@@ -1,90 +1,252 @@
 //! L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf): the per-episode
-//! evaluation cost — placement, heterogeneous derivation, PPA — across
-//! placement granularities and mesh sizes. The paper quotes ~10 ms per
-//! full PPA evaluation; `group` granularity must land at or under that
-//! on this single-core testbed.
+//! evaluation cost — per stage and end-to-end — plus batched candidate
+//! scoring under the stage-split memos and roofline admission pruning.
+//! The paper quotes ~10 ms per full PPA evaluation; `group` granularity
+//! must land at or under that on this single-core testbed.
+//!
+//! Set `BENCH_SMOKE=1` for the CI perf-smoke mode: shorter sampling, the
+//! large mesh sweeps skipped. Both modes emit `out/bench/BENCH_eval.json`
+//! (episodes/sec, per-stage timings, cache hit rates, prune fraction) so
+//! the perf trajectory is tracked over time.
 
 use silicon_rl::config::{Granularity, RunConfig};
 use silicon_rl::env::{Action, Env};
-use silicon_rl::eval::{parallel, Evaluator};
+use silicon_rl::eval::{parallel, EvalScratch, Evaluator, StageCache};
 use silicon_rl::hazard::Mitigation;
 use silicon_rl::ir::llama;
 use silicon_rl::partition::{self, PartitionKnobs};
 use silicon_rl::util::bench::Bencher;
-use silicon_rl::util::Rng;
+use silicon_rl::util::{json, Rng};
 
-fn main() {
-    let mut b = Bencher::default();
-    println!("== bench_eval: episode evaluation hot path ==");
+/// Candidate batch shaped like SAC/MPC exploitation: perturb only
+/// non-partition continuous dims (clock/VLEN/DMEM), so the placement key
+/// is shared and the stage memo replays.
+fn sac_shaped(rng: &mut Rng, k: usize) -> Vec<Action> {
+    (0..k)
+        .map(|_| {
+            let mut a = Action::neutral();
+            a.cont[2] = rng.uniform_in(-1.0, 1.0); // vlen
+            a.cont[3] = rng.uniform_in(-1.0, 1.0); // dmem
+            a.cont[11] = rng.uniform_in(-1.0, 1.0); // clock
+            a
+        })
+        .collect()
+}
 
-    // candidate-set scoring through the stateless evaluator: serial vs
-    // all-worker fan-out (the MPC-rerank / baseline-round shape)
-    {
-        let mut cfg = RunConfig::default();
-        cfg.granularity = Granularity::Group;
-        let ev = Evaluator::new(&cfg, 3);
-        let mesh = ev.initial_mesh();
-        let mut rng = Rng::new(7);
-        let actions: Vec<Action> = (0..16)
-            .map(|_| {
-                let mut a = Action::neutral();
-                for v in a.cont.iter_mut() {
-                    *v = rng.uniform_in(-1.0, 1.0);
-                }
-                a
-            })
-            .collect();
-        let workers = parallel::num_threads();
-        b.bench("evaluate_many/16cand/1thread", || {
-            ev.evaluate_many(&mesh, &actions, 1).len()
-        });
-        b.bench(&format!("evaluate_many/16cand/{workers}threads"), || {
-            ev.evaluate_many(&mesh, &actions, workers).len()
-        });
-    }
+/// Candidate batch shaped like the grid baseline: a lattice over VLEN,
+/// DMEM, ρ_matmul, DFLIT and mesh deltas.
+fn grid_shaped(k: usize) -> Vec<Action> {
+    const LEVELS: [f64; 5] = [-1.0, -0.5, 0.0, 0.5, 1.0];
+    let mesh_deltas: [i32; 3] = [-2, 0, 2];
+    (0..k)
+        .map(|t| {
+            let mut a = Action::neutral();
+            let mut i = t;
+            a.cont[2] = LEVELS[i % 5];
+            i /= 5;
+            a.cont[3] = LEVELS[i % 5];
+            i /= 5;
+            a.cont[19] = LEVELS[i % 5];
+            i /= 5;
+            a.cont[6] = LEVELS[i % 5];
+            i /= 5;
+            let md = mesh_deltas[i % 3];
+            a.deltas = [md, md, 0, 0];
+            a
+        })
+        .collect()
+}
 
-    // full eval_action at several mesh scales (group granularity)
-    for nm in [3u32, 28] {
-        let mut cfg = RunConfig::default();
-        cfg.granularity = Granularity::Group;
-        let mut env = Env::new(&cfg, nm);
-        let mut rng = Rng::new(1);
-        b.bench(&format!("eval_action/group/{nm}nm"), || {
+fn random_shaped(rng: &mut Rng, k: usize) -> Vec<Action> {
+    (0..k)
+        .map(|_| {
             let mut a = Action::neutral();
             for v in a.cont.iter_mut() {
                 *v = rng.uniform_in(-1.0, 1.0);
             }
-            env.eval_action(&a).ppa.tokens_per_s
+            a
+        })
+        .collect()
+}
+
+fn main() {
+    // BENCH_SMOKE=1 (anything but "0"/empty) = CI short mode
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let mut b = Bencher::default();
+    if smoke {
+        b.warmup = std::time::Duration::from_millis(50);
+        b.budget = std::time::Duration::from_millis(500);
+        b.max_samples = 10;
+        println!("== bench_eval (SMOKE mode): episode evaluation hot path ==");
+    } else {
+        println!("== bench_eval: episode evaluation hot path ==");
+    }
+
+    let mut cfg = RunConfig::default();
+    cfg.granularity = Granularity::Group;
+    let ev = Evaluator::new(&cfg, 3);
+    let mesh = ev.initial_mesh();
+    let workers = parallel::num_threads();
+
+    // ---- per-stage timings (the stage-split decomposition)
+    let a0 = Action::neutral();
+    let (decoded, _) = ev.stage_decode(&mesh, &a0);
+    let mut cold = EvalScratch::default();
+    cold.stages = StageCache::new(0); // memo off: every placement is real
+    let mut warm = EvalScratch::default();
+    warm.stages = StageCache::new(64);
+    let decode_s = b.bench("stage/decode+project", || ev.stage_decode(&mesh, &a0).1).mean_s();
+    let place_cold_s =
+        b.bench("stage/place(cold)", || ev.stage_place(&decoded, &mut cold).n_units).mean_s();
+    let place_warm_s =
+        b.bench("stage/place(memo hit)", || ev.stage_place(&decoded, &mut warm).n_units).mean_s();
+    let placement = ev.stage_place(&decoded, &mut warm);
+    let tiles = ev.stage_tiles(&decoded, &placement);
+    let tiles_s =
+        b.bench("stage/derive_tiles", || ev.stage_tiles(&decoded, &placement).len()).mean_s();
+    let ppa_s = b
+        .bench("stage/ppa", || {
+            ev.stage_ppa(&decoded, &placement, &tiles).tokens_per_s
+        })
+        .mean_s();
+    let bound_s =
+        b.bench("stage/admission_bound", || ev.admission_bound(&decoded)).mean_s();
+
+    // ---- batched candidate evaluation: PR 1 baseline (fresh scratches,
+    // exact) vs stage-cached + pruned, for the three batch shapes the
+    // drivers produce
+    let k = 32usize;
+    let mut rng = Rng::new(7);
+    let shapes: [(&str, Vec<Action>); 3] = [
+        ("sac", sac_shaped(&mut rng, k)),
+        ("grid", grid_shaped(k)),
+        ("random", random_shaped(&mut rng, k)),
+    ];
+    let mut batch_json: Vec<(&str, json::Json)> = Vec::new();
+    let mut headline_exact_s = 0.0f64;
+    let mut headline_opt_s = 0.0f64;
+    for (name, actions) in &shapes {
+        let exact_s = b
+            .bench(&format!("batch{k}/{name}/exact_fresh"), || {
+                ev.evaluate_many(&mesh, actions, workers).len()
+            })
+            .mean_s();
+        let mut scratches: Vec<EvalScratch> =
+            (0..workers.max(1)).map(|_| EvalScratch::default()).collect();
+        let opt_s = b
+            .bench(&format!("batch{k}/{name}/staged_pruned"), || {
+                ev.evaluate_best_with(&mesh, actions, &mut scratches, true).best
+            })
+            .mean_s();
+        let probe = ev.evaluate_best_with(&mesh, actions, &mut scratches, true);
+        let mut place_hits = 0u64;
+        let mut place_misses = 0u64;
+        for s in &scratches {
+            place_hits += s.stages.hits;
+            place_misses += s.stages.misses;
+        }
+        let hit_rate =
+            place_hits as f64 / (place_hits + place_misses).max(1) as f64;
+        let pruned_frac = probe.n_pruned as f64 / k as f64;
+        println!(
+            "  {name}: {:.1} eps/s exact -> {:.1} eps/s staged+pruned \
+             ({:.2}x, {:.0}% pruned, {:.0}% place hits)",
+            k as f64 / exact_s,
+            k as f64 / opt_s,
+            exact_s / opt_s,
+            pruned_frac * 100.0,
+            hit_rate * 100.0
+        );
+        batch_json.push((
+            *name,
+            json::obj(vec![
+                ("episodes_per_sec_exact", json::num(k as f64 / exact_s)),
+                ("episodes_per_sec_staged_pruned", json::num(k as f64 / opt_s)),
+                ("speedup", json::num(exact_s / opt_s)),
+                ("pruned_frac", json::num(pruned_frac)),
+                ("place_hit_rate", json::num(hit_rate)),
+            ]),
+        ));
+        if *name == "grid" {
+            headline_exact_s = exact_s;
+            headline_opt_s = opt_s;
+        }
+    }
+
+    // ---- legacy end-to-end + sweep benches (skipped in smoke mode)
+    if !smoke {
+        for nm in [3u32, 28] {
+            let mut c = RunConfig::default();
+            c.granularity = Granularity::Group;
+            let mut env = Env::new(&c, nm);
+            let mut rng = Rng::new(1);
+            b.bench(&format!("eval_action/group/{nm}nm"), || {
+                let mut a = Action::neutral();
+                for v in a.cont.iter_mut() {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                env.eval_action(&a).ppa.tokens_per_s
+            });
+        }
+        {
+            let mut c = RunConfig::default();
+            c.granularity = Granularity::Op;
+            let mut env = Env::new(&c, 3);
+            b.bench("eval_action/op/3nm", || {
+                env.eval_action(&Action::neutral()).ppa.tokens_per_s
+            });
+        }
+        let g = llama::build();
+        let units = partition::groups::units_from_groups(&g);
+        let mit = Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 };
+        for side in [8u32, 16, 32, 48] {
+            let m = silicon_rl::arch::MeshConfig::new(side, side);
+            let knobs = PartitionKnobs::default();
+            b.bench(&format!("place_units/group/{side}x{side}"), || {
+                partition::place_units(&units, &m, &knobs, &mit).n_units
+            });
+        }
+        b.bench("llama_graph_build", || llama::build().ops.len());
+        b.bench("units_from_groups", || {
+            partition::groups::units_from_groups(&g).len()
         });
     }
 
-    // op-granularity (paper-faithful O(N_ops x N_cores)) at 3nm
-    {
-        let mut cfg = RunConfig::default();
-        cfg.granularity = Granularity::Op;
-        let mut env = Env::new(&cfg, 3);
-        b.bench("eval_action/op/3nm", || {
-            env.eval_action(&Action::neutral()).ppa.tokens_per_s
-        });
-    }
-
-    // placement alone, sweeping mesh size (the O(N_ops x N_cores) core)
-    let g = llama::build();
-    let units = partition::groups::units_from_groups(&g);
-    let mit = Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 };
-    for side in [8u32, 16, 32, 48] {
-        let mesh = silicon_rl::arch::MeshConfig::new(side, side);
-        let knobs = PartitionKnobs::default();
-        b.bench(&format!("place_units/group/{side}x{side}"), || {
-            partition::place_units(&units, &mesh, &knobs, &mit).n_units
-        });
-    }
-
-    // graph generation + grouping (one-time setup costs)
-    b.bench("llama_graph_build", || llama::build().ops.len());
-    b.bench("units_from_groups", || {
-        partition::groups::units_from_groups(&g).len()
-    });
+    // ---- JSON perf record (consumed by the CI perf-smoke step)
+    let stages = json::obj(vec![
+        ("decode_s", json::num(decode_s)),
+        ("place_cold_s", json::num(place_cold_s)),
+        ("place_memo_hit_s", json::num(place_warm_s)),
+        ("derive_tiles_s", json::num(tiles_s)),
+        ("ppa_s", json::num(ppa_s)),
+        ("admission_bound_s", json::num(bound_s)),
+    ]);
+    let batches = json::obj(batch_json);
+    let record = json::obj(vec![
+        ("bench", json::s("bench_eval")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("workers", json::num(workers as f64)),
+        ("batch_size", json::num(k as f64)),
+        (
+            "episodes_per_sec_exact",
+            json::num(k as f64 / headline_exact_s.max(1e-12)),
+        ),
+        (
+            "episodes_per_sec_staged_pruned",
+            json::num(k as f64 / headline_opt_s.max(1e-12)),
+        ),
+        (
+            "speedup_grid_batch",
+            json::num(headline_exact_s / headline_opt_s.max(1e-12)),
+        ),
+        ("stage_s", stages),
+        ("batches", batches),
+    ]);
+    let _ = std::fs::create_dir_all("out/bench");
+    let _ = std::fs::write("out/bench/BENCH_eval.json", record.to_string_pretty());
+    println!("json: out/bench/BENCH_eval.json");
 
     b.write_csv("out/bench/bench_eval.csv");
     println!("csv: out/bench/bench_eval.csv");

@@ -180,6 +180,14 @@ pub struct RlConfig {
     /// Memo-cache capacity (design points) for Algorithm 1's episode
     /// loop; 0 disables caching.
     pub eval_cache: usize,
+    /// Roofline admission pruning on argmax-only batch paths (baseline
+    /// candidate rounds, MPC re-ranking, multiseed sweeps): candidates
+    /// whose O(1) optimistic bound cannot beat the batch incumbent skip
+    /// the full evaluation. The selected design is bit-identical either
+    /// way; pruned candidates are absent from episode logs and Pareto
+    /// archives, so the library default is the exact path (the CLI's
+    /// argmax-only commands enable it, with `--no-prune` as fallback).
+    pub prune: bool,
 }
 
 impl Default for RlConfig {
@@ -206,6 +214,7 @@ impl Default for RlConfig {
             candidate_batch: 8,
             mpc_rerank: 8,
             eval_cache: 256,
+            prune: false,
         }
     }
 }
@@ -227,6 +236,10 @@ pub struct RunConfig {
     /// per node (forfeits Eq 50's cross-node transfer learning for
     /// wall-clock; results are deterministic per node).
     pub parallel_nodes: bool,
+    /// Whether `rl.prune` was explicitly set (CLI `prune=` / `--no-prune`
+    /// or a config-file line) — the CLI's argmax-only commands default
+    /// pruning on only when the user expressed no preference.
+    pub prune_explicit: bool,
 }
 
 impl Default for RunConfig {
@@ -242,6 +255,7 @@ impl Default for RunConfig {
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
             parallel_nodes: false,
+            prune_explicit: false,
         }
     }
 }
@@ -268,7 +282,8 @@ impl RunConfig {
     /// keys: episodes, warmup, seed, granularity (op|group), workload
     /// (llama|smolvlm), mode (hp|lp), nodes (comma list), out_dir,
     /// artifacts_dir, kv (full|int8|int4|window:N|int8win:N), threads
-    /// (0 = auto), candidate_batch, parallel_nodes (true|false).
+    /// (0 = auto), candidate_batch, parallel_nodes (true|false),
+    /// prune (true|false — roofline admission pruning on argmax paths).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -328,6 +343,14 @@ impl RunConfig {
                     "false" | "0" | "no" => false,
                     _ => return Err(format!("bad parallel_nodes {value}")),
                 }
+            }
+            "prune" => {
+                self.rl.prune = match value {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    _ => return Err(format!("bad prune {value}")),
+                };
+                self.prune_explicit = true;
             }
             "kv" => {
                 use crate::kv::KvStrategy::*;
@@ -410,6 +433,9 @@ mod tests {
         c.apply("threads", "4").unwrap();
         c.apply("candidate_batch", "16").unwrap();
         c.apply("parallel_nodes", "true").unwrap();
+        assert!(!c.rl.prune && !c.prune_explicit);
+        c.apply("prune", "true").unwrap();
+        assert!(c.rl.prune && c.prune_explicit);
         assert_eq!(c.rl.episodes_per_node, 100);
         assert_eq!(c.granularity, Granularity::Op);
         assert_eq!(c.workload, Workload::SmolVlm);
@@ -421,6 +447,7 @@ mod tests {
         assert!(c.apply("episodes", "xyz").is_err());
         assert!(c.apply("candidate_batch", "0").is_err());
         assert!(c.apply("parallel_nodes", "maybe").is_err());
+        assert!(c.apply("prune", "maybe").is_err());
     }
 
     #[test]

@@ -5,9 +5,12 @@
 //! Algorithm 1's inner loop. All of the action → configuration →
 //! partitioning → heterogeneous derivation → analytical PPA → reward →
 //! next-state pipeline lives in [`Evaluator::evaluate`] — a pure function
-//! that fans out across cores. The environment owns exactly the mutable
-//! part: the walking mesh (Algorithm 1 line 8) plus a reusable
-//! [`EvalScratch`] so `eval_action` stays allocation-free.
+//! (stage-split and per-stage memoized, DESIGN.md §5) that fans out
+//! across cores. The environment owns exactly the mutable part: the
+//! walking mesh (Algorithm 1 line 8) plus a reusable [`EvalScratch`]
+//! whose placement-stage memo stays warm across the walk, so
+//! `eval_action` stays allocation-free and continuous-knob steps skip
+//! the O(units × cores) placement.
 
 pub mod action;
 pub mod reward;

@@ -1,4 +1,6 @@
-//! Fingerprint-keyed memoization of [`EvalOutcome`]s.
+//! Fingerprint-keyed memoization for the evaluation layer: the
+//! whole-outcome memo ([`EvalCache`]) plus the per-stage placement memo
+//! ([`StageCache`]) of the stage-split pipeline (DESIGN.md §5).
 //!
 //! [`Evaluator::evaluate`] is pure in `(mesh, action)`, so an outcome can
 //! be replayed from a cache keyed on exactly those inputs. Algorithm 1
@@ -7,36 +9,133 @@
 //! blend collapsing to the SAC mean — and each hit skips the ~10 ms
 //! codegen+simulation step the paper quotes.
 //!
-//! Keys hash the *raw inputs* (mesh fields, the exact f64 bits of the 30
-//! continuous dims, the 4 discrete deltas) with FNV-1a, not the decoded
-//! configuration: two different raw actions that decode identically are
-//! separate entries, but one raw action always maps to one entry — a hit
-//! can never return a different design than recomputation would.
+//! Keys hash the *raw inputs* (mesh fields, the exact f64 bits of the
+//! continuous dims, the discrete deltas, and the dimensionality of both)
+//! with FNV-1a, not the decoded configuration: two different raw actions
+//! that decode identically are separate entries, but one raw action
+//! always maps to one entry — a hit can never return a different design
+//! than recomputation would. Mixing the lengths prevents actions of
+//! differing dimensionality from aliasing to the same key (a `[x]`
+//! continuous vector with an empty delta list must not collide with an
+//! empty vector whose first delta carries the same bits).
+//!
+//! The stage memo exploits that placement (§3.5) reads only the mesh
+//! dims, the partition knobs and the hazard mitigation — not the
+//! clock/voltage/memory dims — so continuous-knob-only perturbations (the
+//! common SAC case) reuse the expensive O(units × cores) placement and
+//! re-run only the cheap PPA + reward stages.
 
 use std::collections::HashMap;
 
 use crate::arch::MeshConfig;
 use crate::env::Action;
 use crate::eval::{EvalOutcome, EvalScratch, Evaluator};
+use crate::hazard::Mitigation;
+use crate::partition::{self, PartitionKnobs, PlaceScratch, Placement, Unit};
+
+/// FNV-1a accumulator — the one hash implementation behind every memo
+/// key in the evaluation layer ([`fingerprint_parts`], [`units_key`],
+/// [`place_key`], [`crate::eval::config_key`]).
+#[derive(Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv(0xcbf29ce484222325)
+    }
+
+    pub fn mix(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(0x100000001b3);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a over raw evaluation-input parts. `cont`/`deltas` lengths are
+/// mixed before their payloads so differing dimensionalities cannot alias.
+pub fn fingerprint_parts(mesh: &MeshConfig, cont: &[f64], deltas: &[i32]) -> u64 {
+    let mut h = Fnv::new();
+    h.mix(mesh.width as u64);
+    h.mix(mesh.height as u64);
+    h.mix(mesh.sc_x as u64);
+    h.mix(mesh.sc_y as u64);
+    h.mix(cont.len() as u64);
+    for &c in cont {
+        h.mix(c.to_bits());
+    }
+    h.mix(deltas.len() as u64);
+    for &d in deltas {
+        h.mix(d as u64);
+    }
+    h.finish()
+}
 
 /// FNV-1a fingerprint of an evaluation input `(mesh, action)`.
 pub fn input_key(mesh: &MeshConfig, a: &Action) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x100000001b3);
-    };
-    mix(mesh.width as u64);
-    mix(mesh.height as u64);
-    mix(mesh.sc_x as u64);
-    mix(mesh.sc_y as u64);
-    for &c in &a.cont {
-        mix(c.to_bits());
+    fingerprint_parts(mesh, &a.cont, &a.deltas)
+}
+
+/// FNV-1a fingerprint of a placement-unit list — the per-Evaluator salt
+/// for [`place_key`], so a scratch shared across evaluators of different
+/// workloads/granularities can never replay the wrong placement.
+pub fn units_key(units: &[Unit]) -> u64 {
+    let mut h = Fnv::new();
+    h.mix(units.len() as u64);
+    for u in units {
+        h.mix(u.class as u64);
+        h.mix(u.kind as u64);
+        h.mix(u.flops.to_bits());
+        h.mix(u.weight_bytes.to_bits());
+        h.mix(u.out_bytes.to_bits());
+        h.mix(u.instrs.to_bits());
+        h.mix(u.inputs.len() as u64);
+        for &i in &u.inputs {
+            h.mix(i as u64);
+        }
     }
-    for &d in &a.deltas {
-        mix(d as u64);
+    h.finish()
+}
+
+/// FNV-1a fingerprint of exactly the inputs the placement stage reads:
+/// the unit-list salt ([`units_key`], hoisted per Evaluator), mesh dims
+/// (the SC overlay does not affect placement), the partition knobs and
+/// the hazard mitigation. Clock, voltage and memory dims are
+/// deliberately absent — perturbing them must hit.
+pub fn place_key(salt: u64, mesh: &MeshConfig, knobs: &PartitionKnobs, mit: &Mitigation) -> u64 {
+    let mut h = Fnv::new();
+    h.mix(salt);
+    h.mix(mesh.width as u64);
+    h.mix(mesh.height as u64);
+    let knob_bits = [
+        knobs.rho_base,
+        knobs.d_matmul,
+        knobs.d_conv,
+        knobs.d_general,
+        knobs.w_load,
+        knobs.streaming_in,
+        knobs.streaming_out,
+        knobs.sub_matmul,
+        knobs.allreduce_frac,
+    ];
+    h.mix(knob_bits.len() as u64);
+    for k in knob_bits {
+        h.mix(k.to_bits());
     }
-    h
+    h.mix(4);
+    h.mix(mit.stanum as u64);
+    h.mix(mit.fetch as u64);
+    h.mix(mit.xr_wp as u64);
+    h.mix(mit.vr_wp as u64);
+    h.finish()
 }
 
 /// Bounded memo cache over evaluation outcomes.
@@ -46,13 +145,15 @@ pub struct EvalCache {
     capacity: usize,
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped by the wholesale capacity reset.
+    pub evictions: u64,
 }
 
 impl EvalCache {
     /// `capacity` bounds resident outcomes (each holds per-tile vectors —
     /// tens of KB at large meshes). 0 disables caching entirely.
     pub fn new(capacity: usize) -> EvalCache {
-        EvalCache { map: HashMap::new(), capacity, hits: 0, misses: 0 }
+        EvalCache { map: HashMap::new(), capacity, hits: 0, misses: 0, evictions: 0 }
     }
 
     /// Evaluate through the cache: replay a stored outcome when the exact
@@ -78,6 +179,7 @@ impl EvalCache {
         self.misses += 1;
         let out = ev.evaluate(mesh, a, scratch);
         if self.map.len() >= self.capacity {
+            self.evictions += self.map.len() as u64;
             self.map.clear();
         }
         self.map.insert(key, out.clone());
@@ -102,6 +204,159 @@ impl EvalCache {
     }
 }
 
+/// Per-stage memo for the placement stage of the split pipeline. Keyed by
+/// [`place_key`] — only the inputs placement actually reads — and bounded
+/// with the same deterministic wholesale reset as [`EvalCache`]. Owned by
+/// an [`EvalScratch`], so each worker thread memoizes independently (no
+/// locks on the hot path) and a cached run stays bit-identical to an
+/// uncached one (placement is a pure function of the key inputs).
+///
+/// Entries hold the placement *before* KV distribution (Eq 27): the KV
+/// slice depends on the KV strategy, which is not part of the key, so the
+/// caller re-applies [`partition::distribute_kv`] on a clone per hit.
+#[derive(Debug)]
+pub struct StageCache {
+    map: HashMap<u64, Placement>,
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Default placement-memo capacity per scratch (a 23×23-mesh placement is
+/// ~25 KB; 64 entries keep a worker well under 2 MB at typical scales).
+pub const DEFAULT_STAGE_CAPACITY: usize = 64;
+
+impl Default for StageCache {
+    fn default() -> Self {
+        StageCache::new(DEFAULT_STAGE_CAPACITY)
+    }
+}
+
+impl StageCache {
+    /// `capacity` bounds resident placements; 0 disables the stage memo.
+    pub fn new(capacity: usize) -> StageCache {
+        StageCache { map: HashMap::new(), capacity, hits: 0, misses: 0, evictions: 0 }
+    }
+
+    /// Place `units` through the memo: replay when the (units salt, mesh
+    /// dims, knobs, mitigation) key has been placed before, else run the
+    /// real placement and store. Returns the pre-KV placement either way.
+    /// `salt` must be [`units_key`]`(units)` (the evaluator hoists it).
+    pub fn place(
+        &mut self,
+        salt: u64,
+        units: &[Unit],
+        mesh: &MeshConfig,
+        knobs: &PartitionKnobs,
+        mit: &Mitigation,
+        scratch: &mut PlaceScratch,
+    ) -> Placement {
+        if self.capacity == 0 {
+            return partition::place_units_with(units, mesh, knobs, mit, scratch);
+        }
+        let key = place_key(salt, mesh, knobs, mit);
+        if let Some(p) = self.map.get(&key) {
+            self.hits += 1;
+            return p.clone();
+        }
+        self.misses += 1;
+        let p = partition::place_units_with(units, mesh, knobs, mit, scratch);
+        if self.map.len() >= self.capacity {
+            self.evictions += self.map.len() as u64;
+            self.map.clear();
+        }
+        self.map.insert(key, p.clone());
+        p
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Aggregated evaluation-layer counters for the run report: whole-outcome
+/// memo, placement-stage memo, mesh-geometry cache and roofline admission
+/// pruning.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalStats {
+    pub outcome_hits: u64,
+    pub outcome_misses: u64,
+    pub outcome_evictions: u64,
+    pub place_hits: u64,
+    pub place_misses: u64,
+    pub place_evictions: u64,
+    pub geom_hits: u64,
+    pub geom_misses: u64,
+    /// Candidates rejected by the roofline admission bound without a full
+    /// evaluation.
+    pub pruned: u64,
+    /// Candidates that went through the full pipeline on pruning paths.
+    pub evaluated: u64,
+}
+
+impl EvalStats {
+    pub fn merge(&mut self, o: &EvalStats) {
+        self.outcome_hits += o.outcome_hits;
+        self.outcome_misses += o.outcome_misses;
+        self.outcome_evictions += o.outcome_evictions;
+        self.place_hits += o.place_hits;
+        self.place_misses += o.place_misses;
+        self.place_evictions += o.place_evictions;
+        self.geom_hits += o.geom_hits;
+        self.geom_misses += o.geom_misses;
+        self.pruned += o.pruned;
+        self.evaluated += o.evaluated;
+    }
+
+    /// Fold in the counters of a whole-outcome memo.
+    pub fn absorb_outcome_cache(&mut self, c: &EvalCache) {
+        self.outcome_hits += c.hits;
+        self.outcome_misses += c.misses;
+        self.outcome_evictions += c.evictions;
+    }
+
+    /// Fold in the stage-memo + geometry counters of one worker scratch.
+    pub fn absorb_scratch(&mut self, s: &EvalScratch) {
+        self.place_hits += s.stages.hits;
+        self.place_misses += s.stages.misses;
+        self.place_evictions += s.stages.evictions;
+        self.geom_hits += s.place.geom.hits;
+        self.geom_misses += s.place.geom.misses;
+    }
+
+    fn rate(hits: u64, misses: u64) -> f64 {
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    pub fn outcome_hit_rate(&self) -> f64 {
+        Self::rate(self.outcome_hits, self.outcome_misses)
+    }
+
+    pub fn place_hit_rate(&self) -> f64 {
+        Self::rate(self.place_hits, self.place_misses)
+    }
+
+    /// Fraction of batch candidates rejected by the admission bound.
+    pub fn prune_rate(&self) -> f64 {
+        Self::rate(self.pruned, self.evaluated)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +377,80 @@ mod tests {
         assert_ne!(input_key(&m, &a), input_key(&m, &b));
         assert_ne!(input_key(&m, &a), input_key(&MeshConfig::new(8, 9), &a));
         assert_eq!(input_key(&m, &a), input_key(&m, &Action::neutral()));
+    }
+
+    #[test]
+    fn fingerprint_mixes_dimensionality() {
+        // without length mixing these alias: a lone 0.0 continuous dim
+        // hashes the same bits as a lone 0 delta
+        let m = MeshConfig::new(8, 8);
+        assert_ne!(
+            fingerprint_parts(&m, &[0.0], &[]),
+            fingerprint_parts(&m, &[], &[0])
+        );
+        // moving the boundary between the two sections must re-key even
+        // when the payload bit stream is unchanged
+        assert_ne!(
+            fingerprint_parts(&m, &[0.0, 0.0], &[1]),
+            fingerprint_parts(&m, &[0.0], &[0, 1])
+        );
+        assert_eq!(
+            fingerprint_parts(&m, &[0.5], &[1, -1]),
+            fingerprint_parts(&m, &[0.5], &[1, -1])
+        );
+    }
+
+    #[test]
+    fn place_key_ignores_non_placement_dims() {
+        let mit = Mitigation { stanum: 4, fetch: 4, xr_wp: 2, vr_wp: 2 };
+        let knobs = PartitionKnobs::default();
+        let m = MeshConfig::new(8, 8);
+        // SC overlay is not read by placement: same key
+        let mut m_sc = m;
+        m_sc.sc_x = 8;
+        m_sc.sc_y = 1;
+        assert_eq!(place_key(0, &m, &knobs, &mit), place_key(0, &m_sc, &knobs, &mit));
+        // unit salt, mesh dims, knobs and mitigation all re-key
+        assert_ne!(place_key(0, &m, &knobs, &mit), place_key(1, &m, &knobs, &mit));
+        assert_ne!(
+            place_key(0, &m, &knobs, &mit),
+            place_key(0, &MeshConfig::new(8, 9), &knobs, &mit)
+        );
+        let mut k2 = knobs;
+        k2.sub_matmul += 1e-12;
+        assert_ne!(place_key(0, &m, &knobs, &mit), place_key(0, &m, &k2, &mit));
+        let mit2 = Mitigation { stanum: 5, ..mit };
+        assert_ne!(place_key(0, &m, &knobs, &mit), place_key(0, &m, &knobs, &mit2));
+    }
+
+    #[test]
+    fn stage_cache_is_safe_across_evaluators() {
+        // a scratch shared between evaluators of different workloads must
+        // never replay the other workload's placement, even when mesh
+        // dims, knobs and mitigation coincide — the units salt re-keys
+        let ev_a = evaluator(); // llama, group granularity
+        let mut c = RunConfig::smolvlm_low_power();
+        c.granularity = Granularity::Group;
+        let ev_b = Evaluator::new(&c, 3);
+
+        let m = MeshConfig::new(4, 4);
+        let (da, _) = ev_a.stage_decode(&m, &Action::neutral());
+        let (db, _) = ev_b.stage_decode(&m, &Action::neutral());
+
+        let mut shared = EvalScratch::default();
+        let pa = ev_a.stage_place(&da, &mut shared);
+        let pb = ev_b.stage_place(&db, &mut shared);
+        let pb_fresh = ev_b.stage_place(&db, &mut EvalScratch::default());
+        for (x, y) in pb.loads.iter().zip(&pb_fresh.loads) {
+            assert_eq!(x.flops.to_bits(), y.flops.to_bits());
+            assert_eq!(x.weight_bytes.to_bits(), y.weight_bytes.to_bits());
+        }
+        // and the two workloads genuinely place differently
+        assert!(pa
+            .loads
+            .iter()
+            .zip(&pb.loads)
+            .any(|(x, y)| x.flops.to_bits() != y.flops.to_bits()));
     }
 
     #[test]
@@ -160,11 +489,72 @@ mod tests {
             tiny.evaluate(&ev, &mesh, &a, &mut scratch);
         }
         assert!(tiny.len() <= 2);
+        assert!(tiny.evictions > 0);
 
         let mut off = EvalCache::new(0);
         off.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
         off.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
         assert_eq!(off.len(), 0);
         assert_eq!((off.hits, off.misses), (0, 0));
+    }
+
+    #[test]
+    fn stage_cache_hits_on_continuous_knob_perturbations() {
+        // the common SAC case: a decoded design differing only in
+        // non-placement dims (VLEN here) keeps the placement key, so the
+        // expensive stage replays; a knob/mitigation change re-places
+        let ev = evaluator();
+        let mesh = ev.initial_mesh();
+        let (d1, _) = ev.stage_decode(&mesh, &Action::neutral());
+        let mut d2 = d1.clone();
+        d2.avg.vlen_bits *= 2; // memory/compute dim: not in the key
+
+        let mut scratch = EvalScratch::default();
+        let p1 = ev.stage_place(&d1, &mut scratch);
+        assert_eq!((scratch.stages.hits, scratch.stages.misses), (0, 1));
+        let p2 = ev.stage_place(&d2, &mut scratch);
+        assert_eq!((scratch.stages.hits, scratch.stages.misses), (1, 1));
+        // the replayed placement is the same pure result
+        for (a, b) in p1.loads.iter().zip(&p2.loads) {
+            assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+        }
+        // downstream stages still see the VLEN change
+        let t1 = ev.stage_tiles(&d1, &p1);
+        let t2 = ev.stage_tiles(&d2, &p2);
+        assert!(t1.iter().zip(&t2).any(|(a, b)| a.vlen_bits != b.vlen_bits));
+
+        // a partition knob change re-keys and re-places
+        let mut d3 = d1.clone();
+        d3.knobs.sub_matmul += 0.1;
+        ev.stage_place(&d3, &mut scratch);
+        assert_eq!(scratch.stages.misses, 2);
+        // so does a mitigation (STANUM) change
+        let mut d4 = d1.clone();
+        d4.avg.stanum += 1;
+        ev.stage_place(&d4, &mut scratch);
+        assert_eq!(scratch.stages.misses, 3);
+    }
+
+    #[test]
+    fn stage_cache_zero_capacity_disables() {
+        let ev = evaluator();
+        let mesh = ev.initial_mesh();
+        let mut scratch = EvalScratch::default();
+        scratch.stages = StageCache::new(0);
+        ev.evaluate(&mesh, &Action::neutral(), &mut scratch);
+        ev.evaluate(&mesh, &Action::neutral(), &mut scratch);
+        assert_eq!(scratch.stages.len(), 0);
+        assert_eq!((scratch.stages.hits, scratch.stages.misses), (0, 0));
+    }
+
+    #[test]
+    fn eval_stats_merge_and_rates() {
+        let s = EvalStats { pruned: 3, evaluated: 1, ..Default::default() };
+        let mut t = EvalStats { outcome_hits: 2, outcome_misses: 2, ..Default::default() };
+        t.merge(&s);
+        assert_eq!(t.pruned, 3);
+        assert!((t.outcome_hit_rate() - 0.5).abs() < 1e-12);
+        assert!((t.prune_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(EvalStats::default().place_hit_rate(), 0.0);
     }
 }

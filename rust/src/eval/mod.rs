@@ -11,14 +11,25 @@
 //!   [`Evaluator::evaluate`] is a pure function of `(mesh, action)` — no
 //!   interior mutability, no RNG — so the same inputs always produce the
 //!   same outcome, on any thread.
+//! * The pipeline is **stage-split** with explicit keys: decode/projection
+//!   ([`Evaluator::stage_decode`]) → partition/placement
+//!   ([`Evaluator::stage_place`], memoized per scratch on only the inputs
+//!   placement reads) → heterogeneous derivation
+//!   ([`Evaluator::stage_tiles`]) → PPA ([`Evaluator::stage_ppa`]) →
+//!   reward/state. Continuous-knob-only perturbations (the common SAC
+//!   case) replay the expensive placement and re-run only PPA + reward.
 //! * [`EvalScratch`] carries the reusable working buffers (placement
-//!   tile state, score heap, overflow accumulators) so the ~10 ms hot
-//!   path stays allocation-free; each worker thread owns one.
+//!   tile state, score heap, overflow accumulators) plus the per-worker
+//!   [`StageCache`]; each worker thread owns one.
 //! * [`Evaluator::evaluate_many`] scores a candidate set via scoped-
 //!   thread fan-out ([`parallel`]), preserving input order — serial and
-//!   parallel runs are bit-identical.
-//! * [`cache::EvalCache`] memoizes outcomes keyed by a fingerprint of
-//!   `(mesh, action)`, so repeated design points skip re-evaluation.
+//!   parallel runs are bit-identical. [`Evaluator::evaluate_best`] adds
+//!   roofline admission pruning for argmax-only paths: candidates whose
+//!   O(1) optimistic bound ([`Evaluator::admission_bound`]) cannot beat
+//!   the batch incumbent skip the full pipeline, and the selected outcome
+//!   is provably bit-identical to the exact scan.
+//! * [`cache::EvalCache`] memoizes whole outcomes keyed by a fingerprint
+//!   of `(mesh, action)`, so repeated design points skip re-evaluation.
 //!
 //! The environment ([`crate::env::Env`]) shrinks to a thin wrapper owning
 //! only the walking mesh of Algorithm 1.
@@ -26,7 +37,7 @@
 pub mod cache;
 pub mod parallel;
 
-pub use cache::EvalCache;
+pub use cache::{EvalCache, EvalStats, StageCache};
 
 use crate::arch::{self, MeshConfig, ParamRanges, TileConfig};
 use crate::config::{Granularity, ModeConfig, NodeBudget, RunConfig};
@@ -54,12 +65,65 @@ pub struct EvalOutcome {
     pub proj_steps: u32,
 }
 
-/// Reusable per-thread working buffers for the evaluation hot path.
+/// One candidate batch scored for its argmax, possibly under roofline
+/// admission pruning ([`Evaluator::evaluate_best_with`]).
+#[derive(Debug)]
+pub struct BatchEval {
+    /// Per-candidate outcome in input order; `None` means the candidate
+    /// was pruned (its admission bound proved it cannot beat the batch
+    /// incumbent, so it is not the argmax).
+    pub outcomes: Vec<Option<EvalOutcome>>,
+    /// Index of the selected candidate — always `Some` in `outcomes`,
+    /// and identical to the argmax of an unpruned scan.
+    pub best: usize,
+    /// Candidates skipped by the admission bound.
+    pub n_pruned: usize,
+}
+
+impl BatchEval {
+    /// The selected outcome (the batch argmax).
+    pub fn best_outcome(&self) -> &EvalOutcome {
+        self.outcomes[self.best].as_ref().expect("best index always evaluated")
+    }
+}
+
+/// Walk outcomes in input order and pick the earliest optimum under the
+/// (feasible first, then lower score) ordering — the same reduction every
+/// batch driver uses. Pruned (`None`) entries are never optimal by
+/// construction, so skipping them preserves the exact selection.
+pub fn select_best(outs: &[Option<EvalOutcome>]) -> usize {
+    let mut best: Option<usize> = None;
+    for (i, o) in outs.iter().enumerate() {
+        let o = match o {
+            Some(o) => o,
+            None => continue,
+        };
+        match best {
+            None => best = Some(i),
+            Some(b) => {
+                let cur = &outs[b].as_ref().unwrap().reward;
+                let new = &o.reward;
+                let better = (new.feasible && !cur.feasible)
+                    || (new.feasible == cur.feasible && new.score < cur.score);
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+    }
+    best.expect("at least one evaluated outcome in the batch")
+}
+
+/// Reusable per-thread working buffers for the evaluation hot path, plus
+/// the per-worker stage memo.
 #[derive(Debug, Default)]
 pub struct EvalScratch {
     pub place: PlaceScratch,
     /// Per-tile used-WMEM accumulator for the overflow check (Eq 14).
     used_wmem: Vec<f64>,
+    /// Placement-stage memo (DESIGN.md §5): keyed on exactly the inputs
+    /// placement reads, so non-partition continuous perturbations replay.
+    pub stages: StageCache,
 }
 
 /// Immutable per-(workload, process-node) evaluation context. Shared by
@@ -80,6 +144,9 @@ pub struct Evaluator {
     total_weights: f64,
     /// Model FLOPs per generated token, hoisted off the per-episode path.
     flops_per_token: f64,
+    /// [`cache::units_key`] fingerprint of `units` — the placement-memo
+    /// salt, so scratches shared across evaluators stay correct.
+    units_key: u64,
 }
 
 impl Evaluator {
@@ -96,6 +163,7 @@ impl Evaluator {
         let budget = *cfg.mode.budget(nm);
         let total_weights = graph.total_weight_bytes();
         let flops_per_token = graph.flops_per_token_model();
+        let units_key = cache::units_key(&units);
         Evaluator {
             graph,
             units,
@@ -109,6 +177,7 @@ impl Evaluator {
             batch_size: 3, // paper's Llama evaluation batch (Table 9)
             total_weights,
             flops_per_token,
+            units_key,
         }
     }
 
@@ -117,16 +186,9 @@ impl Evaluator {
         initial_mesh(&self.graph, &self.mode)
     }
 
-    /// Evaluate a raw action against `mesh`: the full §3.5 + §3.6–3.9 +
-    /// §3.10 pipeline. Pure: does not advance any mesh — the caller owns
-    /// the Algorithm 1 walk (see [`crate::env::Env::eval_action`]).
-    pub fn evaluate(
-        &self,
-        mesh: &MeshConfig,
-        a: &Action,
-        scratch: &mut EvalScratch,
-    ) -> EvalOutcome {
-        // 1. decode + constraint projection (Eq 68)
+    /// Stage 1 — decode + constrained projection (Eq 68). Reads the full
+    /// `(mesh, action)` input; O(action dims), no placement.
+    pub fn stage_decode(&self, mesh: &MeshConfig, a: &Action) -> (DecodedAction, u32) {
         let decoded = action::decode(
             a,
             mesh,
@@ -136,40 +198,84 @@ impl Evaluator {
             self.kv_strategy,
             self.seq_len,
         );
-        let (decoded, proj_steps) =
-            action::project(decoded, &self.node, &self.budget, self.total_weights);
+        action::project(decoded, &self.node, &self.budget, self.total_weights)
+    }
 
-        // 2. operator partitioning + placement (§3.5)
+    /// Stage 2 — operator partitioning + placement (§3.5) and KV-cache
+    /// distribution (Eq 27). The O(units × cores) placement is served
+    /// from the scratch's [`StageCache`] when its key — mesh dims,
+    /// partition knobs, hazard mitigation; *not* clock/voltage/memory
+    /// dims — has been placed before.
+    pub fn stage_place(
+        &self,
+        decoded: &DecodedAction,
+        scratch: &mut EvalScratch,
+    ) -> Placement {
         let mit = Mitigation {
             stanum: decoded.avg.stanum,
             fetch: decoded.avg.fetch,
             xr_wp: decoded.avg.xr_wp,
             vr_wp: decoded.avg.vr_wp,
         };
-        let mut placement = partition::place_units_with(
+        let mut placement = scratch.stages.place(
+            self.units_key,
             &self.units,
             &decoded.mesh,
             &decoded.knobs,
             &mit,
             &mut scratch.place,
         );
-
-        // 3. KV-cache distribution across active tiles (Eq 27)
         let kv_total = match self.graph.kv {
             Some(kvc) => kv::total_bytes(&kvc, self.seq_len, decoded.kv_strategy),
             None => 0.0,
         };
         partition::distribute_kv(&mut placement.loads, kv_total);
+        placement
+    }
+
+    /// Stage 3 — heterogeneous per-TCC derivation (§3.3). O(cores).
+    pub fn stage_tiles(
+        &self,
+        decoded: &DecodedAction,
+        placement: &Placement,
+    ) -> Vec<TileConfig> {
+        arch::derive_tiles(&decoded.mesh, &decoded.avg, &placement.loads, &self.ranges)
+    }
+
+    /// Stage 4 — analytical PPA (Eqs 21–24, 62–64). Pure arithmetic.
+    pub fn stage_ppa(
+        &self,
+        decoded: &DecodedAction,
+        placement: &Placement,
+        tiles: &[TileConfig],
+    ) -> PpaResult {
+        let d = self.design_point(decoded, placement, tiles);
+        ppa::evaluate(&d, &self.node)
+    }
+
+    /// Evaluate a raw action against `mesh`: the full §3.5 + §3.6–3.9 +
+    /// §3.10 pipeline, composed from the explicitly-keyed stages. Pure:
+    /// does not advance any mesh — the caller owns the Algorithm 1 walk
+    /// (see [`crate::env::Env::eval_action`]). Stage memos in `scratch`
+    /// only replay pure results, so outcomes are independent of scratch
+    /// history (pinned by `tests/eval_staged.rs`).
+    pub fn evaluate(
+        &self,
+        mesh: &MeshConfig,
+        a: &Action,
+        scratch: &mut EvalScratch,
+    ) -> EvalOutcome {
+        // 1. decode + constraint projection (Eq 68)
+        let (decoded, proj_steps) = self.stage_decode(mesh, a);
+
+        // 2–3. placement (memoized) + KV distribution
+        let placement = self.stage_place(&decoded, scratch);
 
         // 4. heterogeneous per-TCC derivation (§3.3)
-        let tiles =
-            arch::derive_tiles(&decoded.mesh, &decoded.avg, &placement.loads, &self.ranges);
+        let tiles = self.stage_tiles(&decoded, &placement);
 
-        // 5. assemble the design point for the analytical models
-        let d = self.design_point(&decoded, &placement, &tiles);
-
-        // 6. analytical PPA (Eqs 21-24, 62-64)
-        let ppa_result = ppa::evaluate(&d, &self.node);
+        // 5–6. design point + analytical PPA (Eqs 21-24, 62-64)
+        let ppa_result = self.stage_ppa(&decoded, &placement, &tiles);
 
         // 7. feasibility + reward (Eqs 34-44)
         let mem_overflow =
@@ -232,6 +338,141 @@ impl Evaluator {
             EvalScratch::default,
             |scratch, _i, a| self.evaluate(mesh, a, scratch),
         )
+    }
+
+    /// [`Self::evaluate_many`] with caller-owned worker scratches (one
+    /// per worker): stage memos stay warm across rounds. Bit-identical to
+    /// the fresh-scratch variant for any scratch history.
+    pub fn evaluate_many_with(
+        &self,
+        mesh: &MeshConfig,
+        actions: &[Action],
+        scratches: &mut [EvalScratch],
+    ) -> Vec<EvalOutcome> {
+        parallel::scoped_chunk_map_with(actions, scratches, |scratch, _i, a| {
+            self.evaluate(mesh, a, scratch)
+        })
+    }
+
+    /// Admissible lower bound on the composite PPA score (lower is
+    /// better) reachable by `decoded`: `admission_bound(d) ≤
+    /// outcome.reward.score` for every full evaluation of the same
+    /// decoded design (soundness argument in DESIGN.md §5; pinned across
+    /// nodes by `tests/eval_staged.rs`). O(1) — no placement.
+    pub fn admission_bound(&self, decoded: &DecodedAction) -> f64 {
+        let kv_traffic = match self.graph.kv {
+            Some(kvc) => kv::bytes_per_token(&kvc)
+                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
+            None => 0.0,
+        };
+        let rb = ppa::roofline_bound(
+            decoded,
+            &self.node,
+            &self.ranges,
+            self.total_weights,
+            self.flops_per_token,
+            kv_traffic,
+        );
+        let ranges = reward::ranges_from_budget(&self.budget);
+        ppa::score::ppa_score(
+            &self.mode.weights,
+            &ranges,
+            rb.perf_gops,
+            rb.power_mw,
+            rb.area_mm2,
+        )
+    }
+
+    /// Score a candidate set for its argmax under roofline admission
+    /// pruning ([`Self::evaluate_best_with`] with fresh scratches).
+    pub fn evaluate_best(
+        &self,
+        mesh: &MeshConfig,
+        actions: &[Action],
+        threads: usize,
+        prune: bool,
+    ) -> BatchEval {
+        let mut scratches: Vec<EvalScratch> =
+            (0..threads.max(1)).map(|_| EvalScratch::default()).collect();
+        self.evaluate_best_with(mesh, actions, &mut scratches, prune)
+    }
+
+    /// Score a candidate set when only the argmax matters (baseline
+    /// rounds, MPC re-ranking, multiseed sweeps). With `prune` set, each
+    /// candidate first gets its O(1) [`Self::admission_bound`]; the most
+    /// promising bound seeds the incumbent, and candidates whose bound
+    /// proves they cannot strictly beat it skip the full pipeline. The
+    /// selected index/outcome is bit-identical to an exact
+    /// [`Self::evaluate_many`] + [`select_best`] scan (the batch optimum
+    /// is never prunable — DESIGN.md §5); pruned candidates simply have
+    /// no outcome. `prune = false` is the exact fallback.
+    pub fn evaluate_best_with(
+        &self,
+        mesh: &MeshConfig,
+        actions: &[Action],
+        scratches: &mut [EvalScratch],
+        prune: bool,
+    ) -> BatchEval {
+        assert!(!actions.is_empty(), "evaluate_best needs at least one candidate");
+        if !prune || actions.len() < 2 {
+            let outs = self.evaluate_many_with(mesh, actions, scratches);
+            let outcomes: Vec<Option<EvalOutcome>> = outs.into_iter().map(Some).collect();
+            let best = select_best(&outcomes);
+            return BatchEval { outcomes, best, n_pruned: 0 };
+        }
+
+        // O(1) admission bounds (decode + projection only, no placement)
+        let bounds: Vec<f64> = actions
+            .iter()
+            .map(|a| {
+                let (d, _) = self.stage_decode(mesh, a);
+                self.admission_bound(&d)
+            })
+            .collect();
+
+        // seed the incumbent with the most promising bound (earliest tie)
+        let mut i0 = 0usize;
+        for (i, b) in bounds.iter().enumerate() {
+            if *b < bounds[i0] {
+                i0 = i;
+            }
+        }
+        let seed_out = self.evaluate(mesh, &actions[i0], &mut scratches[0]);
+
+        // pruning is only sound against a *feasible* incumbent (an
+        // infeasible one loses to any feasible candidate regardless of
+        // score, and feasibility has no O(1) bound): keep every
+        // candidate whose bound could still tie or beat the incumbent
+        // score. PRUNE_MARGIN absorbs ulp-level float slop so a
+        // borderline candidate is evaluated rather than wrongly dropped.
+        const PRUNE_MARGIN: f64 = 1e-9;
+        let incumbent =
+            if seed_out.reward.feasible { Some(seed_out.reward.score) } else { None };
+        let survivors: Vec<usize> = (0..actions.len())
+            .filter(|&i| {
+                i != i0
+                    && match incumbent {
+                        Some(s) => bounds[i] <= s + PRUNE_MARGIN,
+                        None => true,
+                    }
+            })
+            .collect();
+
+        let evals = parallel::scoped_chunk_map_with(
+            &survivors,
+            scratches,
+            |scratch, _j, &i| self.evaluate(mesh, &actions[i], scratch),
+        );
+
+        let mut outcomes: Vec<Option<EvalOutcome>> =
+            (0..actions.len()).map(|_| None).collect();
+        outcomes[i0] = Some(seed_out);
+        for (&i, out) in survivors.iter().zip(evals.into_iter()) {
+            outcomes[i] = Some(out);
+        }
+        let best = select_best(&outcomes);
+        let n_pruned = outcomes.iter().filter(|o| o.is_none()).count();
+        BatchEval { outcomes, best, n_pruned }
     }
 
     fn design_point(
@@ -306,20 +547,16 @@ pub fn initial_mesh(graph: &Graph, mode: &ModeConfig) -> MeshConfig {
 /// unique-configs trace; formerly private to `rl::loop_`).
 pub fn config_key(out: &EvalOutcome) -> u64 {
     let d = &out.decoded;
-    let mut h: u64 = 0xcbf29ce484222325;
-    let mut mix = |v: u64| {
-        h ^= v;
-        h = h.wrapping_mul(0x100000001b3);
-    };
-    mix(d.mesh.width as u64);
-    mix(d.mesh.height as u64);
-    mix(d.avg.fetch as u64);
-    mix(d.avg.stanum as u64);
-    mix(d.avg.vlen_bits as u64);
-    mix(d.avg.dmem_kb as u64);
-    mix(d.avg.dflit_bits as u64);
-    mix((d.avg.clock_mhz * 10.0) as u64);
-    h
+    let mut h = cache::Fnv::new();
+    h.mix(d.mesh.width as u64);
+    h.mix(d.mesh.height as u64);
+    h.mix(d.avg.fetch as u64);
+    h.mix(d.avg.stanum as u64);
+    h.mix(d.avg.vlen_bits as u64);
+    h.mix(d.avg.dmem_kb as u64);
+    h.mix(d.avg.dflit_bits as u64);
+    h.mix((d.avg.clock_mhz * 10.0) as u64);
+    h.finish()
 }
 
 fn wmem_overflow(
@@ -469,6 +706,33 @@ mod tests {
                 "index {i} not aligned with its input action"
             );
         }
+    }
+
+    #[test]
+    fn evaluate_best_matches_exact_argmax() {
+        let ev = Evaluator::new(&small_cfg(), 7);
+        let mesh = ev.initial_mesh();
+        let mut rng = Rng::new(23);
+        let actions: Vec<Action> = (0..10).map(|_| random_action(&mut rng)).collect();
+        let exact = ev.evaluate_best(&mesh, &actions, 2, false);
+        let pruned = ev.evaluate_best(&mesh, &actions, 2, true);
+        assert_eq!(exact.n_pruned, 0);
+        assert_eq!(exact.best, pruned.best, "pruning changed the selection");
+        assert!(outcomes_equal(exact.best_outcome(), pruned.best_outcome()));
+    }
+
+    #[test]
+    fn admission_bound_is_admissible_for_neutral_action() {
+        let ev = Evaluator::new(&small_cfg(), 3);
+        let mesh = ev.initial_mesh();
+        let (decoded, _) = ev.stage_decode(&mesh, &Action::neutral());
+        let bound = ev.admission_bound(&decoded);
+        let out = ev.evaluate(&mesh, &Action::neutral(), &mut EvalScratch::default());
+        assert!(
+            bound <= out.reward.score + 1e-9,
+            "bound {bound} exceeds true score {}",
+            out.reward.score
+        );
     }
 
     #[test]

@@ -83,6 +83,56 @@ where
     out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
 }
 
+/// [`scoped_chunk_map`] with caller-owned per-worker states: the worker
+/// count is `states.len()`, and each worker's state persists across calls
+/// — so stage memos and scratch buffers stay warm across rounds (the
+/// batched-baseline and MPC-rerank shapes). Results are bit-identical to
+/// [`scoped_chunk_map`] for any state history because every consumer's
+/// per-item work is a pure function of the item (caches replay, never
+/// alter, results).
+pub fn scoped_chunk_map_with<T, R, S, F>(items: &[T], states: &mut [S], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    S: Send,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    assert!(!states.is_empty(), "scoped_chunk_map_with needs at least one state");
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let threads = states.len();
+    if threads == 1 || items.len() == 1 {
+        let state = &mut states[0];
+        return items.iter().enumerate().map(|(i, t)| f(&mut *state, i, t)).collect();
+    }
+
+    let chunk = items.len().div_ceil(threads.min(items.len()));
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    std::thread::scope(|scope| {
+        for (ci, ((in_chunk, out_chunk), state)) in items
+            .chunks(chunk)
+            .zip(out.chunks_mut(chunk))
+            .zip(states.iter_mut())
+            .enumerate()
+        {
+            let base = ci * chunk;
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (item, slot)) in
+                    in_chunk.iter().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(&mut *state, base + j, item));
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +180,28 @@ mod tests {
     fn resolve_zero_is_auto() {
         assert!(resolve(0) >= 1);
         assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn with_states_matches_init_variant_and_persists() {
+        let items: Vec<usize> = (0..23).collect();
+        let fresh = scoped_chunk_map(&items, 4, || (), |_, i, &x| x * 10 + i);
+        let mut states = vec![(), (), (), ()];
+        let kept = scoped_chunk_map_with(&items, &mut states, |_, i, &x| x * 10 + i);
+        assert_eq!(fresh, kept);
+
+        // states persist across calls: each worker keeps counting
+        let mut counters = vec![0u64, 0];
+        let items8 = [0u8; 8];
+        let first = scoped_chunk_map_with(&items8, &mut counters, |c, _, _| {
+            *c += 1;
+            *c
+        });
+        assert_eq!(first, vec![1, 2, 3, 4, 1, 2, 3, 4]);
+        let second = scoped_chunk_map_with(&items8, &mut counters, |c, _, _| {
+            *c += 1;
+            *c
+        });
+        assert_eq!(second, vec![5, 6, 7, 8, 5, 6, 7, 8]);
     }
 }

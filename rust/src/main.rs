@@ -42,6 +42,13 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
         cfg = RunConfig::smolvlm_low_power();
     }
     for a in args {
+        if a == "--no-prune" {
+            // exact fallback for the argmax-only commands that default
+            // roofline admission pruning on
+            cfg.rl.prune = false;
+            cfg.prune_explicit = true;
+            continue;
+        }
         if let Some(path) = a.strip_prefix("config=") {
             cfg.load_file(path).map_err(Error::msg)?;
             continue;
@@ -55,6 +62,18 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
         cfg.apply(k, v).map_err(Error::msg)?;
     }
     Ok(cfg)
+}
+
+/// Default roofline admission pruning ON for a command where only the
+/// argmax matters, unless the user said otherwise (`prune=...` /
+/// `--no-prune` on the CLI, or a `prune =` config-file line). The
+/// selected designs are bit-identical either way; pruning only removes
+/// provably-losing candidates from the full pipeline (and from
+/// per-episode logs / Pareto archives).
+fn default_prune_on(cfg: &mut RunConfig) {
+    if !cfg.prune_explicit {
+        cfg.rl.prune = true;
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -72,6 +91,7 @@ fn run(args: &[String]) -> Result<()> {
                  keys:  workload=llama|smolvlm mode=hp|lp nodes=3,5,7 episodes=N\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
                  \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
+                 \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
                  \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE"
             );
             Ok(())
@@ -85,7 +105,10 @@ fn run(args: &[String]) -> Result<()> {
 /// per node, nodes fanned across worker threads — deterministic per node
 /// (each gets an index-derived RNG), reported in configured node order.
 fn optimize(args: &[String]) -> Result<()> {
-    let cfg = parse_config(args)?;
+    let mut cfg = parse_config(args)?;
+    // only the MPC rerank argmax prunes here — outputs are identical
+    default_prune_on(&mut cfg);
+    let cfg = cfg;
     let out_dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(out_dir)?;
 
@@ -242,16 +265,31 @@ fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> 
 
 /// Table 21: SAC vs random vs grid under the same episode budget.
 fn run_baselines(args: &[String]) -> Result<()> {
-    let cfg = parse_config(args)?;
+    let mut cfg = parse_config(args)?;
+    // baseline rounds only need the round argmax: prune by default
+    default_prune_on(&mut cfg);
+    let cfg = cfg;
     let nm = *cfg.nodes_nm.first().context("need at least one node")?;
     let out_dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(out_dir)?;
+    if cfg.rl.prune {
+        println!("roofline admission pruning: on (--no-prune for the exact path)");
+    }
 
     let mut rng = Rng::new(cfg.seed);
     println!("random search @ {nm}nm ({} episodes)...", cfg.rl.episodes_per_node);
     let rand_r = baselines::random_search(&cfg, nm, &mut rng.fork(1));
     println!("grid search @ {nm}nm...");
     let grid_r = baselines::grid_search(&cfg, nm, &mut rng.fork(2));
+    for (name, r) in [("random", &rand_r), ("grid", &grid_r)] {
+        let es = &r.eval_stats;
+        println!(
+            "  {name}: pruned {} of {} candidates, placement-stage hit rate {:.1}%",
+            es.pruned,
+            es.pruned + es.evaluated,
+            es.place_hit_rate() * 100.0
+        );
+    }
 
     println!("SAC @ {nm}nm...");
     // Table 21 parity: no MPC real-eval re-ranking, so every strategy
@@ -286,7 +324,13 @@ fn run_multiseed(args: &[String]) -> Result<()> {
             rest.push(a.clone());
         }
     }
-    let cfg = parse_config(&rest)?;
+    let mut cfg = parse_config(&rest)?;
+    // the multiseed sweep aggregates per-seed argmaxes: prune by default
+    default_prune_on(&mut cfg);
+    let cfg = cfg;
+    if cfg.rl.prune {
+        println!("roofline admission pruning: on (--no-prune for the exact path)");
+    }
     // seeds fan out across workers; each seed's search runs serially so
     // the machine is not oversubscribed
     let threads = cfg.eval_threads();

@@ -94,6 +94,101 @@ pub fn rho_comm(edge_tensor_bytes: f64, total_flops: f64) -> f64 {
     edge_tensor_bytes / total_flops.max(1.0)
 }
 
+/// Precomputed per-mesh-dims geometry (DESIGN.md §5): tile coordinates,
+/// centrality penalties and the bisection-half mask, built once per
+/// `(width, height)` and cached across placements so the O(units × cores)
+/// scoring loop and the traffic accounting never recompute div/mod,
+/// centrality or the bisection test per (operator, tile) pair.
+///
+/// Every accessor is bit-identical to the corresponding on-the-fly
+/// [`MeshConfig`] computation (pinned by `geom_matches_mesh_config`), so
+/// cached and uncached placements produce identical results.
+#[derive(Debug, Clone)]
+pub struct MeshGeom {
+    pub width: u32,
+    pub height: u32,
+    /// (x, y) per tile index.
+    pub xy: Vec<(u16, u16)>,
+    /// 1 − centrality(t) per tile (§3.5 step 4 score term).
+    pub central_penalty: Vec<f64>,
+    /// Whether the tile lies west of the vertical bisection (x < width/2).
+    west: Vec<bool>,
+}
+
+impl MeshGeom {
+    pub fn build(mesh: &MeshConfig) -> MeshGeom {
+        let n = mesh.cores();
+        let half = mesh.width / 2;
+        let mut xy = Vec::with_capacity(n);
+        let mut central_penalty = Vec::with_capacity(n);
+        let mut west = Vec::with_capacity(n);
+        for t in 0..n {
+            let x = t as u32 % mesh.width;
+            let y = t as u32 / mesh.width;
+            xy.push((x as u16, y as u16));
+            central_penalty.push(1.0 - mesh.centrality(t));
+            west.push(x < half);
+        }
+        MeshGeom { width: mesh.width, height: mesh.height, xy, central_penalty, west }
+    }
+
+    /// Does this table describe `mesh`'s dimensions? (SC overlay does not
+    /// affect geometry, so it is not part of the key.)
+    pub fn matches(&self, mesh: &MeshConfig) -> bool {
+        self.width == mesh.width && self.height == mesh.height
+    }
+
+    /// Manhattan hop distance via the coordinate table — bit-identical to
+    /// [`MeshConfig::hop_distance`].
+    #[inline]
+    pub fn hop(&self, a: usize, b: usize) -> u32 {
+        let (ax, ay) = self.xy[a];
+        let (bx, by) = self.xy[b];
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u32
+    }
+
+    /// Bisection-crossing test via the half mask — bit-identical to
+    /// [`crosses_bisection`].
+    #[inline]
+    pub fn crosses(&self, a: usize, b: usize) -> bool {
+        self.west[a] != self.west[b]
+    }
+}
+
+/// A small cache of [`MeshGeom`] tables keyed by mesh dims. The Algorithm
+/// 1 walk revisits a handful of dimensions, so a bounded linear-scan store
+/// with wholesale reset (deterministic, like [`crate::eval::EvalCache`])
+/// is enough.
+#[derive(Debug, Default)]
+pub struct GeomCache {
+    geoms: Vec<MeshGeom>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl GeomCache {
+    /// Resident geometry tables (a 64×64 table is ~100 KB).
+    const CAP: usize = 16;
+
+    pub fn get(&mut self, mesh: &MeshConfig) -> &MeshGeom {
+        let pos = self.geoms.iter().position(|g| g.matches(mesh));
+        match pos {
+            Some(i) => {
+                self.hits += 1;
+                &self.geoms[i]
+            }
+            None => {
+                self.misses += 1;
+                if self.geoms.len() >= Self::CAP {
+                    self.geoms.clear();
+                }
+                self.geoms.push(MeshGeom::build(mesh));
+                self.geoms.last().unwrap()
+            }
+        }
+    }
+}
+
 /// Does the route between tiles `a` and `b` cross the vertical bisection
 /// of the mesh (for Eq 23's cross-bisection byte counting)?
 pub fn crosses_bisection(mesh: &MeshConfig, a: usize, b: usize) -> bool {
@@ -164,5 +259,45 @@ mod tests {
     #[test]
     fn rho_comm_eq20() {
         assert!((rho_comm(1e6, 1e9) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn geom_matches_mesh_config() {
+        // every precomputed accessor must agree bit-for-bit with the
+        // on-the-fly MeshConfig computation the placement loop used before
+        for (w, h) in [(2u32, 2u32), (4, 4), (5, 7), (41, 42)] {
+            let mesh = MeshConfig::new(w, h);
+            let g = MeshGeom::build(&mesh);
+            assert!(g.matches(&mesh));
+            for t in 0..mesh.cores() {
+                let (x, y) = g.xy[t];
+                assert_eq!(x as u32, t as u32 % w);
+                assert_eq!(y as u32, t as u32 / w);
+                assert_eq!(
+                    g.central_penalty[t].to_bits(),
+                    (1.0 - mesh.centrality(t)).to_bits()
+                );
+            }
+            for (a, b) in [(0usize, mesh.cores() - 1), (1, 2), (0, 0)] {
+                assert_eq!(g.hop(a, b), mesh.hop_distance(a, b));
+                assert_eq!(g.crosses(a, b), crosses_bisection(&mesh, a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn geom_cache_hits_on_revisit() {
+        let mut c = GeomCache::default();
+        let m1 = MeshConfig::new(8, 8);
+        let m2 = MeshConfig::new(8, 9);
+        c.get(&m1);
+        c.get(&m2);
+        c.get(&m1);
+        assert_eq!((c.hits, c.misses), (1, 2));
+        // SC overlay changes do not re-key (geometry is dims-only)
+        let mut m1_sc = m1;
+        m1_sc.sc_x = 4;
+        c.get(&m1_sc);
+        assert_eq!((c.hits, c.misses), (2, 2));
     }
 }

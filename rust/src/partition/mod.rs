@@ -19,7 +19,7 @@ pub mod groups;
 use crate::arch::{MeshConfig, TileLoad};
 use crate::hazard::{self, HazardStats, Mitigation};
 use crate::ir::{Graph, PartitionClass};
-use crate::noc::{crosses_bisection, TrafficStats};
+use crate::noc::{GeomCache, TrafficStats};
 use crate::util::clip;
 
 /// RL-controlled partitioning knobs (action groups: Op-Partition
@@ -132,15 +132,16 @@ pub struct PlaceScratch {
     weights: Vec<f64>,
     act: Vec<f64>,
     instrs: Vec<f64>,
-    /// Precomputed centrality penalty 1 − centrality(t) per tile.
-    central_penalty: Vec<f64>,
-    /// Precomputed tile coordinates. The full all-pairs hop table is too
-    /// big to cache; hop distances are recomputed per unit.
-    xy: Vec<(u16, u16)>,
     /// Per-tile composite placement scores for the current unit.
     scores: Vec<(f64, u32)>,
     /// Primary (traffic-anchor) tile per already-placed unit.
     primary: Vec<u32>,
+    /// Precomputed per-mesh-dims geometry (tile coordinates, centrality
+    /// penalties, bisection masks) — built once per (width, height) and
+    /// reused across placements instead of being recomputed on every
+    /// reset. The full all-pairs hop table stays uncached (too big); hop
+    /// distances come from the coordinate table.
+    pub geom: GeomCache,
 }
 
 impl PlaceScratch {
@@ -150,13 +151,6 @@ impl PlaceScratch {
         {
             buf.clear();
             buf.resize(n, 0.0);
-        }
-        self.central_penalty.clear();
-        self.xy.clear();
-        for t in 0..n {
-            self.central_penalty.push(1.0 - mesh.centrality(t));
-            self.xy
-                .push(((t as u32 % mesh.width) as u16, (t as u32 / mesh.width) as u16));
         }
         self.scores.clear();
         self.scores.resize(n, (0.0, 0));
@@ -200,11 +194,13 @@ pub fn place_units_with(
         weights: tiles_weights,
         act: tiles_act,
         instrs: tiles_instrs,
-        central_penalty,
-        xy,
         scores,
         primary,
+        geom,
     } = scratch;
+    let geom = geom.get(mesh);
+    let central_penalty = &geom.central_penalty;
+    let xy = &geom.xy;
     let mut traffic = TrafficStats::default();
     let mut hazards = HazardStats::default();
     // running totals for normalizing the load term of the composite score
@@ -320,12 +316,8 @@ pub fn place_units_with(
         // producer -> primary tile edges
         for &inp in &u.inputs {
             let p = primary[inp as usize] as usize;
-            let hops = mesh.hop_distance(p, prim as usize);
-            traffic.record(
-                u.out_bytes,
-                hops,
-                crosses_bisection(mesh, p, prim as usize),
-            );
+            let hops = geom.hop(p, prim as usize);
+            traffic.record(u.out_bytes, hops, geom.crosses(p, prim as usize));
         }
         // split broadcast (input multicast tree over the split set: a
         // row+column tree on a 2D mesh replicates ~√k times, not k−1) +

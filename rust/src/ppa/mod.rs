@@ -10,6 +10,7 @@
 pub mod area;
 pub mod efficiency;
 pub mod power;
+pub mod roofline;
 pub mod score;
 pub mod throughput;
 
@@ -19,6 +20,7 @@ use crate::noc::TrafficStats;
 
 pub use area::AreaBreakdown;
 pub use power::PowerBreakdown;
+pub use roofline::{roofline_bound, RooflineBound};
 pub use score::{NormRanges, PpaWeights};
 pub use throughput::Ceilings;
 

@@ -1,0 +1,167 @@
+//! Roofline admission bound: an O(1) optimistic PPA envelope for one
+//! decoded candidate, computed *before* placement (DESIGN.md §5).
+//!
+//! Following the roofline-as-admission-filter idea of the hardware
+//! co-design scaling-law literature, the bound brackets every quantity
+//! the full pipeline can produce for the same [`DecodedAction`]:
+//! throughput from above (Eqs 21/22/24 with perfect load balance, zero
+//! cross-tile traffic and an unbounded NoC), power and area from below
+//! (Eq 62/64 terms that cannot shrink below the decoded configuration).
+//! Scalarized through the lower-is-better PPA score, that yields an
+//! *admissible* score bound: `bound ≤ true score` for any full
+//! evaluation — so on argmax-only paths a candidate whose bound cannot
+//! beat the incumbent is provably not the argmax and can skip the
+//! O(units × cores) pipeline entirely.
+//!
+//! The §3.3 heterogeneous derivation brackets make this sound without
+//! placement knowledge: per-tile VLEN/DMEM/IMEM are `quantize(avg ·
+//! share)` with the compute share clamped to `[0.25, 4].sqrt() = [0.5,
+//! 2]` (and the instruction share to `[0.25, 4]`); the [`Quantizer`] is
+//! monotone, so quantizing the clamp endpoints brackets every derivable
+//! tile.
+
+use crate::arch::ParamRanges;
+use crate::env::action::DecodedAction;
+use crate::node::NodeSpec;
+use crate::ppa::TM_FP16_LANES;
+
+/// Optimistic PPA envelope for one decoded candidate: throughput/perf
+/// are upper bounds, power/area are lower bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct RooflineBound {
+    pub tokens_per_s: f64,
+    pub perf_gops: f64,
+    pub power_mw: f64,
+    pub area_mm2: f64,
+}
+
+/// Compute the O(1) roofline envelope. `kv_traffic_per_token` is the
+/// compacted KV read traffic (Eq 33) for the decoded KV strategy;
+/// `weight_bytes` / `flops_per_token` are the workload invariants the
+/// evaluator hoists.
+pub fn roofline_bound(
+    d: &DecodedAction,
+    n: &NodeSpec,
+    ranges: &ParamRanges,
+    weight_bytes: f64,
+    flops_per_token: f64,
+    kv_traffic_per_token: f64,
+) -> RooflineBound {
+    let cores = d.mesh.cores() as f64;
+    let f_hz = d.avg.clock_mhz * 1e6;
+
+    // §3.3 derivation brackets (see module doc).
+    let vlen_ub = ranges.vlen_bits.quantize(d.avg.vlen_bits as f64 * 2.0) as f64;
+    let vlen_lb = ranges.vlen_bits.quantize(d.avg.vlen_bits as f64 * 0.5) as f64;
+    let lanes_ub = vlen_ub / 16.0;
+    let lanes_lb = vlen_lb / 16.0;
+
+    // ---- throughput upper bound ----
+    // Eq 21 with η_∥ = 1 and every tile at the maximum derivable lane
+    // count (capped by TM_FP16 as in the real ceiling).
+    let compute_ub = cores * lanes_ub.min(TM_FP16_LANES) * 2.0 * f_hz * d.alpha_spec
+        / flops_per_token.max(1.0);
+    // Eq 22 with maximum per-tile bandwidth over the minimum possible
+    // per-token traffic (cross-tile activation bytes ≥ 0).
+    let mem_floor = (weight_bytes + kv_traffic_per_token).max(1.0);
+    let memory_ub = cores * 2.0 * (vlen_ub / 8.0) * f_hz / mem_floor;
+    // Eq 23 optimistically unbounded (bisection traffic could be zero).
+    let tokens_ub = compute_ub.min(memory_ub);
+    let perf_ub = tokens_ub * flops_per_token / 1e9;
+
+    // ---- power lower bound (Eq 62 floor) ----
+    // compute switching at the minimum derivable lane count; the draft
+    // predictor overhead is exact (α_spec is decoded, not derived)
+    let draft_overhead = 1.0 + 0.15 * (d.alpha_spec - 1.0) / 0.6;
+    let compute_lb = cores
+        * lanes_lb
+        * f_hz
+        * n.mac_energy_pj
+        * 1e-12
+        * d.activity
+        * 1e3
+        * draft_overhead;
+    // SRAM-dynamic and ROM-read are exact: they depend only on cores,
+    // clock, activity and the (fixed) weight footprint
+    let sram_dyn =
+        cores * (d.avg.clock_mhz / 1000.0) * n.sram_dyn_mw_per_core_ghz * d.activity;
+    let weight_mb = weight_bytes / (1024.0 * 1024.0);
+    let rom_read = weight_mb
+        * n.rom_read_mw_per_mb_at_fmax
+        * (d.avg.clock_mhz / n.fmax_mhz)
+        * d.activity;
+    // leakage at the minimum derivable per-tile SRAM; NoC power ≥ 0
+    let dmem_lb = ranges.dmem_kb.quantize_up(d.avg.dmem_kb as f64 * 0.5) as f64;
+    let imem_lb = ranges.imem_kb.quantize(d.avg.imem_kb as f64 * 0.25) as f64;
+    let sram_mb_lb = cores * (dmem_lb + imem_lb) / 1024.0;
+    let leak_lb = sram_mb_lb * n.sram_leak_mw_per_mb;
+    let power_lb = compute_lb + sram_dyn + rom_read + leak_lb;
+
+    // ---- area lower bound (Eq 64 floor: minimum lanes/SRAM, exact ROM)
+    let area_lb =
+        cores * n.core_logic_mm2(lanes_lb) + n.rom_mm2(weight_mb) + n.sram_mm2(sram_mb_lb);
+
+    RooflineBound {
+        tokens_per_s: tokens_ub,
+        perf_gops: perf_ub,
+        power_mw: power_lb,
+        area_mm2: area_lb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MeshConfig;
+    use crate::config::ModeConfig;
+    use crate::env::action::{self, Action};
+    use crate::kv::KvStrategy;
+    use crate::node::NodeTable;
+
+    fn decode_at(mesh: MeshConfig, a: &Action, nm: u32) -> DecodedAction {
+        let table = NodeTable::paper();
+        action::decode(
+            a,
+            &mesh,
+            table.get(nm).unwrap(),
+            &ModeConfig::high_performance(),
+            &ParamRanges::paper(),
+            KvStrategy::Full,
+            2048,
+        )
+    }
+
+    #[test]
+    fn bound_components_are_finite_and_positive() {
+        let d = decode_at(MeshConfig::new(16, 16), &Action::neutral(), 3);
+        let t = NodeTable::paper();
+        let b = roofline_bound(
+            &d,
+            t.get(3).unwrap(),
+            &ParamRanges::paper(),
+            14.96 * (1u64 << 30) as f64,
+            2.0 * 8.03e9,
+            131_072.0,
+        );
+        assert!(b.tokens_per_s.is_finite() && b.tokens_per_s > 0.0);
+        assert!(b.perf_gops.is_finite() && b.perf_gops > 0.0);
+        assert!(b.power_mw.is_finite() && b.power_mw > 0.0);
+        assert!(b.area_mm2.is_finite() && b.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn bound_scales_with_mesh() {
+        // more cores: higher throughput roof, higher power/area floor
+        let t = NodeTable::paper();
+        let n = t.get(7).unwrap();
+        let r = ParamRanges::paper();
+        let w = 1e9;
+        let small = decode_at(MeshConfig::new(4, 4), &Action::neutral(), 7);
+        let big = decode_at(MeshConfig::new(16, 16), &Action::neutral(), 7);
+        let bs = roofline_bound(&small, n, &r, w, 1e9, 0.0);
+        let bb = roofline_bound(&big, n, &r, w, 1e9, 0.0);
+        assert!(bb.tokens_per_s > bs.tokens_per_s);
+        assert!(bb.power_mw > bs.power_mw);
+        assert!(bb.area_mm2 > bs.area_mm2);
+    }
+}

@@ -17,6 +17,7 @@
 //!   Fig 3         → [`convergence_csv`]
 
 use crate::arch::{region_of, MeshConfig, Region, TileConfig};
+use crate::eval::EvalStats;
 use crate::ir::Graph;
 use crate::ppa::PowerBreakdown;
 use crate::rl::{EpisodeLog, NodeResult};
@@ -413,6 +414,29 @@ pub fn run_stats(results: &[NodeResult], mode: &str) -> Table {
             .first()
             .map(|r| r.total_episodes.to_string())
             .unwrap_or_default(),
+    ]);
+
+    // evaluation-layer counters (memo caches + roofline admission
+    // pruning), summed across nodes
+    let mut es = EvalStats::default();
+    for r in results {
+        es.merge(&r.eval_stats);
+    }
+    t.row(vec![
+        "eval cache hits/misses/evicted".into(),
+        format!("{}/{}/{}", es.outcome_hits, es.outcome_misses, es.outcome_evictions),
+    ]);
+    t.row(vec![
+        "placement stage hits/misses/evicted".into(),
+        format!("{}/{}/{}", es.place_hits, es.place_misses, es.place_evictions),
+    ]);
+    t.row(vec![
+        "placement stage hit rate".into(),
+        format!("{:.1}%", es.place_hit_rate() * 100.0),
+    ]);
+    t.row(vec![
+        "candidates pruned (roofline)".into(),
+        format!("{} of {}", es.pruned, es.pruned + es.evaluated),
     ]);
     t
 }

@@ -13,7 +13,7 @@ use crate::config::RlConfig;
 use crate::env::state::subset_index;
 use crate::env::{Action, ACT_DIM, SAC_STATE_DIM};
 use crate::error::Result;
-use crate::eval::{parallel, Evaluator};
+use crate::eval::{parallel, EvalScratch, EvalStats, Evaluator};
 use crate::nn::{policy, Store};
 use crate::rl::per::{PerBuffer, Transition};
 use crate::runtime::Runtime;
@@ -39,6 +39,13 @@ pub struct SacAgent {
     pub last_entropy: f64,
     pub updates_done: usize,
     pub wm_trained: bool,
+    /// MPC rerank admission-pruning counters since the last
+    /// [`Self::take_eval_stats`]: (pruned, fully evaluated).
+    prune_counters: (u64, u64),
+    /// Per-worker scratches for the rerank fan-out — persistent so the
+    /// placement-stage memos stay warm across exploitation episodes (the
+    /// common SAC case the stage split targets).
+    rerank_scratches: Vec<EvalScratch>,
 }
 
 impl SacAgent {
@@ -56,7 +63,28 @@ impl SacAgent {
             last_entropy: 0.0,
             updates_done: 0,
             wm_trained: false,
+            prune_counters: (0, 0),
+            rerank_scratches: Vec::new(),
         })
+    }
+
+    /// Drain the rerank evaluation counters (admission pruning + stage
+    /// memos of the persistent rerank scratches) — called by the per-node
+    /// driver so counts never leak across nodes. The scratch *contents*
+    /// (memoized placements) are kept warm; only the counters reset.
+    pub fn take_eval_stats(&mut self) -> EvalStats {
+        let mut es = EvalStats::default();
+        let (pruned, evaluated) = std::mem::take(&mut self.prune_counters);
+        es.pruned = pruned;
+        es.evaluated = evaluated;
+        for s in &mut self.rerank_scratches {
+            es.place_hits += std::mem::take(&mut s.stages.hits);
+            es.place_misses += std::mem::take(&mut s.stages.misses);
+            es.place_evictions += std::mem::take(&mut s.stages.evictions);
+            es.geom_hits += std::mem::take(&mut s.place.geom.hits);
+            es.geom_misses += std::mem::take(&mut s.place.geom.misses);
+        }
+        es
     }
 
     /// Policy action for one state (B=1 actor forward + Rust sampling).
@@ -331,9 +359,12 @@ impl SacAgent {
     /// return for it — across worker threads, and return the candidate
     /// index whose blended action has the best true reward (feasible
     /// first, then score, ties to the higher surrogate rank). Fully
-    /// deterministic for a fixed candidate set.
+    /// deterministic for a fixed candidate set. With `cfg.prune`, the
+    /// roofline admission bound skips candidates that provably cannot
+    /// win — the selected index is identical either way (only the
+    /// argmax matters here, and the argmax is never prunable).
     fn rerank_candidates(
-        &self,
+        &mut self,
         cand: &[[f64; ACT_DIM]],
         returns: &[f64],
         ev: &Evaluator,
@@ -348,19 +379,20 @@ impl SacAgent {
         // candidate (the blend collapses dims 15-29 back to SAC's)
         let actions: Vec<Action> =
             order.iter().map(|&i| self.blend(&cand[i], sac_action)).collect();
-        let threads = parallel::resolve(self.cfg.eval_threads).min(actions.len());
-        let outs = ev.evaluate_many(mesh, &actions, threads);
-
-        let mut best = 0usize;
-        for (rank, out) in outs.iter().enumerate() {
-            let (cur, new) = (&outs[best].reward, &out.reward);
-            let better = (new.feasible && !cur.feasible)
-                || (new.feasible == cur.feasible && new.score < cur.score);
-            if better {
-                best = rank;
-            }
+        let threads =
+            parallel::resolve(self.cfg.eval_threads).min(actions.len()).max(1);
+        if self.rerank_scratches.len() < threads {
+            self.rerank_scratches.resize_with(threads, EvalScratch::default);
         }
-        order[best]
+        let batch = ev.evaluate_best_with(
+            mesh,
+            &actions,
+            &mut self.rerank_scratches[..threads],
+            self.cfg.prune,
+        );
+        self.prune_counters.0 += batch.n_pruned as u64;
+        self.prune_counters.1 += (actions.len() - batch.n_pruned) as u64;
+        order[batch.best]
     }
 }
 

@@ -7,23 +7,36 @@
 //! for a same-evaluation-count comparison.)
 //!
 //! Both baselines score proposals in candidate *sets* of
-//! `cfg.rl.candidate_batch` through [`Evaluator::evaluate_many`], fanning
-//! each set across worker threads. The mesh then walks to the round's
-//! best candidate (feasible first, then score, ties to the earliest
-//! proposal). The batch size — not the thread count — shapes the search
-//! trajectory, so a run is bit-identical whether it executes on 1 thread
-//! or 16 (pinned by `tests/eval_parallel.rs`).
+//! `cfg.rl.candidate_batch` through [`Evaluator::evaluate_best_with`]
+//! (optionally under roofline admission pruning), fanning each set across
+//! worker threads. The mesh then walks to the round's best candidate
+//! (feasible first, then score, ties to the earliest proposal). The batch
+//! size — not the thread count — shapes the search trajectory, so a run
+//! is bit-identical whether it executes on 1 thread or 16 (pinned by
+//! `tests/eval_parallel.rs` and `tests/eval_staged.rs`).
 
 use crate::config::RunConfig;
 use crate::env::{Action, ACT_DIM};
-use crate::eval::{parallel, Evaluator};
+use crate::eval::{parallel, EvalScratch, Evaluator};
 use crate::nn::policy;
 use crate::rl::loop_::{EpisodeTracker, NodeResult};
 use crate::util::Rng;
 
 /// Shared round-loop skeleton for proposal-driven baselines: propose a
-/// candidate set, score it in parallel, log every candidate in proposal
-/// order, walk the mesh to the round's best.
+/// candidate set, score it in parallel (per-worker scratches — and their
+/// stage memos — persist across rounds), log every evaluated candidate in
+/// proposal order, walk the mesh to the round's best.
+///
+/// With `cfg.rl.prune`, each round runs under roofline admission pruning:
+/// candidates whose O(1) bound cannot beat the round incumbent skip the
+/// full pipeline. The walk and the best-design tracking are bit-identical
+/// to the exact path (the optimum is never prunable — DESIGN.md §5);
+/// pruned candidates still consume episode budget but are absent from the
+/// per-episode log and the Pareto archive — and from `feasible_count`, so
+/// feasibility statistics (`feasible_count / total_episodes`, the seeds
+/// table's `feas_frac`) are *lower bounds* under pruning, not comparable
+/// to the exact `--no-prune` path (pinned by
+/// `tests/eval_staged.rs::pruned_random_search_walks_and_ranks_identically`).
 fn run_with_proposals(
     cfg: &RunConfig,
     nm: u32,
@@ -35,7 +48,12 @@ fn run_with_proposals(
     let mut mesh = eval.initial_mesh();
     let episodes_budget = cfg.rl.episodes_per_node;
     let set_size = cfg.rl.candidate_batch.max(1);
+    let prune = cfg.rl.prune;
     let mut tracker = EpisodeTracker::new(episodes_budget);
+    let mut scratches: Vec<EvalScratch> =
+        (0..threads.max(1)).map(|_| EvalScratch::default()).collect();
+    let mut pruned_total = 0u64;
+    let mut evaluated_total = 0u64;
 
     let mut t = 0usize;
     while t < episodes_budget {
@@ -43,25 +61,26 @@ fn run_with_proposals(
         // proposals consume the RNG in episode order, independent of the
         // worker count
         let actions: Vec<Action> = (0..k).map(|j| propose(t + j, rng)).collect();
-        let outs = eval.evaluate_many(&mesh, &actions, threads);
+        let batch = eval.evaluate_best_with(&mesh, &actions, &mut scratches, prune);
 
         // deterministic reduction: iterate candidates in proposal order
-        let mut walk_idx = 0usize;
-        for (j, out) in outs.iter().enumerate() {
-            tracker.record(t + j, out, 1.0, 0.0);
-            let better = {
-                let (cur, new) = (&outs[walk_idx].reward, &out.reward);
-                (new.feasible && !cur.feasible)
-                    || (new.feasible == cur.feasible && new.score < cur.score)
-            };
-            if better {
-                walk_idx = j;
+        for (j, out) in batch.outcomes.iter().enumerate() {
+            if let Some(out) = out {
+                tracker.record(t + j, out, 1.0, 0.0);
             }
         }
-        mesh = outs[walk_idx].decoded.mesh;
+        pruned_total += batch.n_pruned as u64;
+        evaluated_total += (k - batch.n_pruned) as u64;
+        mesh = batch.best_outcome().decoded.mesh;
         t += k;
     }
-    tracker.finish(nm, episodes_budget)
+    let mut result = tracker.finish(nm, episodes_budget);
+    for s in &scratches {
+        result.eval_stats.absorb_scratch(s);
+    }
+    result.eval_stats.pruned += pruned_total;
+    result.eval_stats.evaluated += evaluated_total;
+    result
 }
 
 /// Pure random search: uniform actions every episode.
@@ -172,6 +191,36 @@ mod tests {
         let mut rng = Rng::new(4);
         let r = random_search(&tiny_cfg(), 28, &mut rng);
         assert!(r.pareto.len() <= r.feasible_count.max(1));
+    }
+
+    #[test]
+    fn pruned_search_keeps_the_same_best_design() {
+        let mut exact_cfg = tiny_cfg();
+        exact_cfg.rl.episodes_per_node = 24;
+        let mut pruned_cfg = exact_cfg.clone();
+        pruned_cfg.rl.prune = true;
+        let exact = random_search_t(&exact_cfg, 7, &mut Rng::new(11), 2);
+        let pruned = random_search_t(&pruned_cfg, 7, &mut Rng::new(11), 2);
+        match (&exact.best, &pruned.best) {
+            (Some(a), Some(b)) => {
+                assert_eq!(a.episode, b.episode);
+                assert_eq!(
+                    a.outcome.reward.score.to_bits(),
+                    b.outcome.reward.score.to_bits()
+                );
+                assert_eq!(a.outcome.decoded.mesh, b.outcome.decoded.mesh);
+            }
+            (None, None) => {}
+            _ => panic!("best presence diverged under pruning"),
+        }
+        // pruned candidates are absent from the log but still counted
+        // against the episode budget
+        assert!(pruned.episodes.len() <= exact.episodes.len());
+        assert_eq!(pruned.total_episodes, exact.total_episodes);
+        assert_eq!(
+            pruned.eval_stats.pruned + pruned.eval_stats.evaluated,
+            24
+        );
     }
 
     #[test]

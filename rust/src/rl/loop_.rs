@@ -14,7 +14,7 @@
 use crate::config::RunConfig;
 use crate::env::{state, Action};
 use crate::error::Result;
-use crate::eval::{config_key, EvalCache, EvalOutcome, EvalScratch, Evaluator};
+use crate::eval::{config_key, EvalCache, EvalOutcome, EvalScratch, EvalStats, Evaluator};
 use crate::nn::policy;
 use crate::rl::agent::SacAgent;
 use crate::rl::explore::EpsSchedule;
@@ -56,6 +56,9 @@ pub struct NodeResult {
     pub pareto: ParetoArchive,
     pub feasible_count: usize,
     pub total_episodes: usize,
+    /// Evaluation-layer counters (memo caches + admission pruning) for
+    /// the run report.
+    pub eval_stats: EvalStats,
 }
 
 impl NodeResult {
@@ -134,6 +137,7 @@ impl EpisodeTracker {
             pareto: self.pareto,
             feasible_count: self.feasible_count,
             total_episodes,
+            eval_stats: EvalStats::default(),
         }
     }
 }
@@ -212,7 +216,11 @@ pub fn run_node(
         s = s2;
     }
 
-    Ok(tracker.finish(nm, rl.episodes_per_node))
+    let mut result = tracker.finish(nm, rl.episodes_per_node);
+    result.eval_stats.absorb_outcome_cache(&cache);
+    result.eval_stats.absorb_scratch(&scratch);
+    result.eval_stats.merge(&agent.take_eval_stats());
+    Ok(result)
 }
 
 fn agent_batch(agent: &SacAgent) -> usize {

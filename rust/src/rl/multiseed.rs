@@ -12,7 +12,7 @@
 //! `run_seeds_t(.., 16, ..)` produce identical statistics.
 
 use crate::config::RunConfig;
-use crate::eval::parallel;
+use crate::eval::{parallel, EvalStats};
 use crate::rl::pareto::ParetoArchive;
 use crate::rl::NodeResult;
 use crate::util::csv::{fnum, Table};
@@ -51,11 +51,19 @@ pub struct MultiSeedResult {
     pub power_mw: SeedStat,
     pub area_mm2: SeedStat,
     pub score: SeedStat,
+    /// Fraction of budgeted episodes that produced a feasible design.
+    /// Under roofline admission pruning only fully-evaluated candidates
+    /// count, so this is a *lower bound* — not comparable to an exact
+    /// (`--no-prune`) run. The best-design statistics above are identical
+    /// either way.
     pub feasible_frac: SeedStat,
     /// Seeds that found no feasible configuration.
     pub failures: usize,
     /// Union frontier across all seeds, merged in seed order.
     pub pareto: ParetoArchive,
+    /// Evaluation-layer counters summed across seeds (cache hit rates,
+    /// admission-pruning totals).
+    pub eval_stats: EvalStats,
 }
 
 /// Derive the i-th run seed from the configured base seed.
@@ -103,9 +111,11 @@ pub fn run_seeds_t(
     let mut feas = Vec::new();
     let mut failures = 0usize;
     let mut pareto = ParetoArchive::new();
+    let mut eval_stats = EvalStats::default();
     for r in &results {
         feas.push(r.feasible_count as f64 / r.total_episodes.max(1) as f64);
         pareto.merge(&r.pareto);
+        eval_stats.merge(&r.eval_stats);
         match &r.best {
             Some(b) => {
                 toks.push(b.outcome.ppa.tokens_per_s);
@@ -126,6 +136,7 @@ pub fn run_seeds_t(
         feasible_frac: SeedStat::from_samples(&feas),
         failures,
         pareto,
+        eval_stats,
     }
 }
 
@@ -133,7 +144,10 @@ pub fn run_seeds_t(
 pub fn seeds_table(results: &[MultiSeedResult]) -> Table {
     let mut t = Table::new(
         "multi-seed evaluation (mean ± 95% CI)",
-        &["node", "seeds", "tok_s", "power_mw", "area_mm2", "score", "feas_frac", "failed"],
+        &[
+            "node", "seeds", "tok_s", "power_mw", "area_mm2", "score", "feas_frac",
+            "failed", "pruned",
+        ],
     );
     let pm = |s: &SeedStat, d: usize| format!("{} ±{}", fnum(s.mean, d), fnum(s.ci95, d));
     for r in results {
@@ -146,6 +160,7 @@ pub fn seeds_table(results: &[MultiSeedResult]) -> Table {
             pm(&r.score, 3),
             pm(&r.feasible_frac, 2),
             r.failures.to_string(),
+            format!("{:.0}%", r.eval_stats.prune_rate() * 100.0),
         ]);
     }
     t
