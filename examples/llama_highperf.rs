@@ -77,7 +77,7 @@ fn main() -> Result<()> {
         report::nodes_table(&rows),
         report::power_breakdown(&rows),
         report::efficiency_table(&rows),
-        report::run_stats(&results, cfg.mode.name),
+        report::run_stats(&results, cfg.mode.name, &cfg.scenario()),
         report::industry_comparison(rows.first()),
     ] {
         println!("\n{}", t.to_text());

@@ -13,7 +13,7 @@ fn main() {
 
     // Table 9: workload statistics straight from the graph generator
     let graph = cfg.workload.build();
-    println!("{}", report::model_stats(&graph).to_text());
+    println!("{}", report::model_stats(&graph, cfg.kv_strategy).to_text());
 
     let mut env = Env::new(&cfg, 3);
     println!(

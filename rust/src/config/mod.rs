@@ -1,4 +1,5 @@
-//! Run configuration: workload selection, process nodes, PPA weights and
+//! Run configuration: workload selection (registry-backed), the scenario
+//! axis (phase / context length / batch), process nodes, PPA weights and
 //! per-node constraint budgets, RL hyperparameters (Table 6 defaults),
 //! and execution knobs (placement granularity, episode budget, seed).
 //!
@@ -6,28 +7,58 @@
 //! toml crate) and everything has paper defaults, so `RunConfig::default()`
 //! reproduces the paper's high-performance Llama setup.
 
+use crate::ir::registry;
+use crate::ir::spec::{Phase, Scenario, WorkloadSpec};
 use crate::ppa::PpaWeights;
 
-/// Which workload graph to optimize for.
+/// The workload graph to optimize for — a handle onto one
+/// [`registry`] entry, resolved from `workload=<name>` (canonical name
+/// or alias).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Workload {
-    Llama31_8B,
-    SmolVlm,
+pub struct Workload {
+    name: &'static str,
 }
 
 impl Workload {
-    pub fn build(&self) -> crate::ir::Graph {
-        match self {
-            Workload::Llama31_8B => crate::ir::llama::build(),
-            Workload::SmolVlm => crate::ir::smolvlm::build(),
+    /// Llama 3.1 8B Instruct FP16 (the paper's headline workload).
+    pub const LLAMA31_8B: Workload = Workload { name: registry::LLAMA31_8B.name };
+    /// SmolVLM-256M (the §4.12 low-power validation workload).
+    pub const SMOLVLM: Workload = Workload { name: registry::SMOLVLM.name };
+
+    /// Resolve a `workload=` value; the error lists every registered name.
+    pub fn parse(value: &str) -> Result<Workload, String> {
+        match registry::get(value) {
+            Some(spec) => Ok(Workload { name: spec.name }),
+            None => Err(format!(
+                "unknown workload {value}; registered: {}",
+                registry::names().join(", ")
+            )),
         }
     }
 
+    /// Canonical registry name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The backing spec.
+    pub fn spec(&self) -> &'static WorkloadSpec {
+        registry::get(self.name).expect("Workload always holds a registered name")
+    }
+
+    /// Build the graph at the workload's default scenario.
+    pub fn build(&self) -> crate::ir::Graph {
+        self.spec().build_default()
+    }
+
+    /// Build the graph for an explicit scenario.
+    pub fn build_scenario(&self, scn: &Scenario) -> crate::ir::Graph {
+        self.spec().build(scn)
+    }
+
+    /// Default evaluation context length (§4.1).
     pub fn seq_len(&self) -> u32 {
-        match self {
-            Workload::Llama31_8B => 2048,
-            Workload::SmolVlm => 1024,
-        }
+        self.spec().default_seq_len
     }
 }
 
@@ -223,6 +254,15 @@ impl Default for RlConfig {
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub workload: Workload,
+    /// Scenario axis (§3.8): inference phase. Threaded through the graph
+    /// builder (attention span, φ), KV footprint, roofline and
+    /// throughput models.
+    pub phase: Phase,
+    /// Context-length override; `None` = the workload's default.
+    pub seq_len: Option<u32>,
+    /// Batch-size override; `None` = the workload's default (3 for the
+    /// paper's Llama evaluation, 1 elsewhere).
+    pub batch: Option<u32>,
     pub nodes_nm: Vec<u32>,
     pub mode: ModeConfig,
     pub rl: RlConfig,
@@ -245,7 +285,10 @@ pub struct RunConfig {
 impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
-            workload: Workload::Llama31_8B,
+            workload: Workload::LLAMA31_8B,
+            phase: Phase::Decode,
+            seq_len: None,
+            batch: None,
             nodes_nm: vec![3, 5, 7, 10, 14, 22, 28],
             mode: ModeConfig::high_performance(),
             rl: RlConfig::default(),
@@ -263,7 +306,7 @@ impl Default for RunConfig {
 impl RunConfig {
     pub fn smolvlm_low_power() -> Self {
         RunConfig {
-            workload: Workload::SmolVlm,
+            workload: Workload::SMOLVLM,
             mode: ModeConfig::low_power(),
             // tiny on-device VLM: INT4 KV with a short sliding window so
             // the cache fits the compact meshes' DMEM (§3.9 compaction;
@@ -278,12 +321,24 @@ impl RunConfig {
         crate::eval::parallel::resolve(self.rl.eval_threads)
     }
 
+    /// The resolved evaluation scenario: explicit `phase=` / `seq_len=` /
+    /// `batch=` overrides on top of the workload's defaults.
+    pub fn scenario(&self) -> Scenario {
+        let spec = self.workload.spec();
+        Scenario {
+            phase: self.phase,
+            seq_len: self.seq_len.unwrap_or(spec.default_seq_len).max(1),
+            batch: self.batch.unwrap_or(spec.default_batch).max(1),
+        }
+    }
+
     /// Apply `key=value` overrides (CLI / config file lines). Supported
     /// keys: episodes, warmup, seed, granularity (op|group), workload
-    /// (llama|smolvlm), mode (hp|lp), nodes (comma list), out_dir,
-    /// artifacts_dir, kv (full|int8|int4|window:N|int8win:N), threads
-    /// (0 = auto), candidate_batch, parallel_nodes (true|false),
-    /// prune (true|false — roofline admission pruning on argmax paths).
+    /// (any registry name/alias), phase (prefill|decode), seq_len, batch,
+    /// mode (hp|lp), nodes (comma list), out_dir, artifacts_dir, kv
+    /// (full|int8|int4|window:N|int8win:N), threads (0 = auto),
+    /// candidate_batch, parallel_nodes (true|false), prune (true|false —
+    /// roofline admission pruning on argmax paths).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -302,12 +357,22 @@ impl RunConfig {
                     _ => return Err(format!("bad granularity {value}")),
                 }
             }
-            "workload" => {
-                self.workload = match value {
-                    "llama" => Workload::Llama31_8B,
-                    "smolvlm" => Workload::SmolVlm,
-                    _ => return Err(format!("bad workload {value}")),
+            "workload" => self.workload = Workload::parse(value)?,
+            "phase" => self.phase = Phase::parse(value)?,
+            "seq_len" => {
+                let n: u32 =
+                    value.parse().map_err(|_| format!("bad seq_len {value}"))?;
+                if n == 0 {
+                    return Err("seq_len must be >= 1".to_string());
                 }
+                self.seq_len = Some(n);
+            }
+            "batch" => {
+                let n: u32 = value.parse().map_err(|_| format!("bad batch {value}"))?;
+                if n == 0 {
+                    return Err("batch must be >= 1".to_string());
+                }
+                self.batch = Some(n);
             }
             "mode" => {
                 self.mode = match value {
@@ -438,7 +503,7 @@ mod tests {
         assert!(c.rl.prune && c.prune_explicit);
         assert_eq!(c.rl.episodes_per_node, 100);
         assert_eq!(c.granularity, Granularity::Op);
-        assert_eq!(c.workload, Workload::SmolVlm);
+        assert_eq!(c.workload, Workload::SMOLVLM);
         assert_eq!(c.nodes_nm, vec![3, 28]);
         assert_eq!(c.rl.eval_threads, 4);
         assert_eq!(c.rl.candidate_batch, 16);
@@ -451,13 +516,68 @@ mod tests {
     }
 
     #[test]
+    fn scenario_keys_apply_and_resolve() {
+        let mut c = RunConfig::default();
+        // defaults: decode at the workload's seq_len/batch (llama: 2048/3)
+        let scn = c.scenario();
+        assert_eq!(scn.phase, Phase::Decode);
+        assert_eq!((scn.seq_len, scn.batch), (2048, 3));
+
+        c.apply("phase", "prefill").unwrap();
+        c.apply("seq_len", "8192").unwrap();
+        c.apply("batch", "2").unwrap();
+        let scn = c.scenario();
+        assert_eq!(scn.phase, Phase::Prefill);
+        assert_eq!((scn.seq_len, scn.batch), (8192, 2));
+
+        // smolvlm defaults: 1024-token context, batch 1
+        let mut lp = RunConfig::smolvlm_low_power();
+        assert_eq!((lp.scenario().seq_len, lp.scenario().batch), (1024, 1));
+        lp.apply("batch", "4").unwrap();
+        assert_eq!(lp.scenario().batch, 4);
+
+        assert!(c.apply("seq_len", "0").is_err());
+        assert!(c.apply("batch", "0").is_err());
+        assert!(c.apply("seq_len", "abc").is_err());
+    }
+
+    #[test]
+    fn workload_and_phase_errors_list_options() {
+        let mut c = RunConfig::default();
+        let err = c.apply("workload", "gpt-17").unwrap_err();
+        for name in crate::ir::registry::names() {
+            assert!(err.contains(name), "error must list {name}: {err}");
+        }
+        let err = c.apply("phase", "training").unwrap_err();
+        assert!(err.contains("prefill") && err.contains("decode"), "{err}");
+    }
+
+    #[test]
+    fn workload_aliases_resolve_to_canonical() {
+        let mut c = RunConfig::default();
+        c.apply("workload", "llama").unwrap();
+        assert_eq!(c.workload, Workload::LLAMA31_8B);
+        c.apply("workload", "llama-3.2-1b").unwrap();
+        assert_eq!(c.workload.name(), "llama-3.2-1b");
+        assert_eq!(c.workload.seq_len(), 2048);
+        c.apply("workload", "vit").unwrap();
+        assert_eq!(c.workload.name(), "vit-base");
+    }
+
+    #[test]
     fn config_file_round_trip() {
         let path = "/tmp/silicon_rl_test_cfg.txt";
-        std::fs::write(path, "episodes = 42 # comment\nworkload = smolvlm\n\n# full line comment\n").unwrap();
+        std::fs::write(
+            path,
+            "episodes = 42 # comment\nworkload = smolvlm\nphase = prefill\nseq_len = 512\n\n# full line comment\n",
+        )
+        .unwrap();
         let mut c = RunConfig::default();
         c.load_file(path).unwrap();
         assert_eq!(c.rl.episodes_per_node, 42);
-        assert_eq!(c.workload, Workload::SmolVlm);
+        assert_eq!(c.workload, Workload::SMOLVLM);
+        assert_eq!(c.phase, Phase::Prefill);
+        assert_eq!(c.seq_len, Some(512));
         let _ = std::fs::remove_file(path);
     }
 

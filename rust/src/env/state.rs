@@ -187,7 +187,7 @@ pub fn encode_full(inp: &StateInputs) -> [f64; FULL_STATE_DIM] {
     s[69] = (noc.mean_latency_s() * 1e7).min(1.0);
 
     // --- 70-72 LLM config
-    s[70] = inp.batch_size as f64 / 8.0;
+    s[70] = (inp.batch_size as f64 / 8.0).min(1.0);
     s[71] = match inp.kv_strategy {
         KvStrategy::Full => 0.0,
         KvStrategy::Quantized { .. } => 0.25,

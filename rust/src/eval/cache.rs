@@ -28,9 +28,12 @@
 use std::collections::HashMap;
 
 use crate::arch::MeshConfig;
+use crate::config::{ModeConfig, NodeBudget};
 use crate::env::Action;
 use crate::eval::{EvalOutcome, EvalScratch, Evaluator};
 use crate::hazard::Mitigation;
+use crate::ir::spec::{Phase, Scenario};
+use crate::kv::KvStrategy;
 use crate::partition::{self, PartitionKnobs, PlaceScratch, Placement, Unit};
 
 /// FNV-1a accumulator — the one hash implementation behind every memo
@@ -82,6 +85,73 @@ pub fn fingerprint_parts(mesh: &MeshConfig, cont: &[f64], deltas: &[i32]) -> u64
 /// FNV-1a fingerprint of an evaluation input `(mesh, action)`.
 pub fn input_key(mesh: &MeshConfig, a: &Action) -> u64 {
     fingerprint_parts(mesh, &a.cont, &a.deltas)
+}
+
+/// [`input_key`] salted with an evaluator identity
+/// ([`Evaluator::eval_salt`]) — the [`EvalCache`] key, so a cache shared
+/// across evaluators or scenarios can never replay a foreign outcome.
+pub fn salted_input_key(salt: u64, mesh: &MeshConfig, a: &Action) -> u64 {
+    let mut h = Fnv::new();
+    h.mix(salt);
+    h.mix(input_key(mesh, a));
+    h.finish()
+}
+
+/// FNV-1a fingerprint of an evaluation *context*: the unit-list salt
+/// plus everything else outcome-relevant that is not part of the raw
+/// `(mesh, action)` input — process node, scenario (phase, context
+/// length, batch), the base KV strategy, and the optimization mode /
+/// node budget (decode reads the mode's clock/α/activity profile, reward
+/// reads the weights and budget). Two evaluators agree on this salt only
+/// if [`Evaluator::evaluate`] is the same pure function for both, so
+/// whole-outcome memo hits can never cross scenarios or modes.
+pub fn scenario_salt(
+    units_key: u64,
+    nm: u32,
+    scn: &Scenario,
+    kv: KvStrategy,
+    mode: &ModeConfig,
+    budget: &NodeBudget,
+) -> u64 {
+    let mut h = Fnv::new();
+    h.mix(units_key);
+    h.mix(nm as u64);
+    h.mix(scn.seq_len as u64);
+    h.mix(scn.batch as u64);
+    h.mix(match scn.phase {
+        Phase::Prefill => 1,
+        Phase::Decode => 2,
+    });
+    let (tag, p0, p1) = match kv {
+        KvStrategy::Full => (0u64, 0u64, 0u64),
+        KvStrategy::Quantized { bits } => (1, bits as u64, 0),
+        KvStrategy::Window { tokens } => (2, tokens as u64, 0),
+        KvStrategy::QuantizedWindow { bits, tokens } => (3, bits as u64, tokens as u64),
+        KvStrategy::Paged { page_kb } => (4, page_kb as u64, 0),
+    };
+    h.mix(tag);
+    h.mix(p0);
+    h.mix(p1);
+    // optimization mode: everything decode/reward reads from it
+    h.mix(mode.name.len() as u64);
+    for b in mode.name.bytes() {
+        h.mix(b as u64);
+    }
+    h.mix(mode.weights.perf.to_bits());
+    h.mix(mode.weights.power.to_bits());
+    h.mix(mode.weights.area.to_bits());
+    h.mix(mode.pin_clock_to_fmax as u64);
+    h.mix(match mode.clock_mhz_fixed {
+        Some(f) => f.to_bits(),
+        None => 1,
+    });
+    h.mix(mode.alpha_spec.to_bits());
+    h.mix(mode.activity.to_bits());
+    // node budget (normalization ranges + feasibility surface)
+    h.mix(budget.power_budget_mw.to_bits());
+    h.mix(budget.area_budget_mm2.to_bits());
+    h.mix(budget.perf_max_gops.to_bits());
+    h.finish()
 }
 
 /// FNV-1a fingerprint of a placement-unit list — the per-Evaluator salt
@@ -157,10 +227,12 @@ impl EvalCache {
     }
 
     /// Evaluate through the cache: replay a stored outcome when the exact
-    /// `(mesh, action)` input has been scored before, else compute and
-    /// store. When full, the cache resets wholesale — a deterministic
-    /// eviction policy (no clock, no access order) so cached and
-    /// uncached runs stay reproducible.
+    /// `(mesh, action)` input has been scored before *by an equivalent
+    /// evaluator* (keys carry [`Evaluator::eval_salt`], so entries never
+    /// leak across workloads, nodes, scenarios or KV strategies), else
+    /// compute and store. When full, the cache resets wholesale — a
+    /// deterministic eviction policy (no clock, no access order) so
+    /// cached and uncached runs stay reproducible.
     pub fn evaluate(
         &mut self,
         ev: &Evaluator,
@@ -171,7 +243,7 @@ impl EvalCache {
         if self.capacity == 0 {
             return ev.evaluate(mesh, a, scratch);
         }
-        let key = input_key(mesh, a);
+        let key = salted_input_key(ev.eval_salt(), mesh, a);
         if let Some(out) = self.map.get(&key) {
             self.hits += 1;
             return out.clone();
@@ -451,6 +523,53 @@ mod tests {
             .iter()
             .zip(&pb.loads)
             .any(|(x, y)| x.flops.to_bits() != y.flops.to_bits()));
+    }
+
+    #[test]
+    fn eval_cache_never_replays_across_scenarios() {
+        // same raw (mesh, action), different scenario axes: the salted
+        // keys must miss, and the outcomes must genuinely differ
+        let base = {
+            let mut c = RunConfig::default();
+            c.granularity = Granularity::Group;
+            c
+        };
+        let mut long_ctx = base.clone();
+        long_ctx.seq_len = Some(8192);
+        let mut single = base.clone();
+        single.batch = Some(1);
+        let mut prefill = base.clone();
+        prefill.phase = crate::ir::Phase::Prefill;
+
+        let ev = Evaluator::new(&base, 3);
+        for other_cfg in [&long_ctx, &single, &prefill] {
+            let other = Evaluator::new(other_cfg, 3);
+            assert_ne!(ev.eval_salt(), other.eval_salt());
+        }
+        // and a different node or optimization mode re-salts too (decode
+        // and reward read the mode's clock/α/weights and the budget)
+        assert_ne!(ev.eval_salt(), Evaluator::new(&base, 7).eval_salt());
+        let mut lp_mode = base.clone();
+        lp_mode.mode = ModeConfig::low_power();
+        assert_ne!(ev.eval_salt(), Evaluator::new(&lp_mode, 3).eval_salt());
+
+        let mesh = MeshConfig::new(8, 8);
+        let mut cache = EvalCache::new(16);
+        let mut scratch = EvalScratch::default();
+        let a = Action::neutral();
+        let o_base = cache.evaluate(&ev, &mesh, &a, &mut scratch);
+        let ev_batch1 = Evaluator::new(&single, 3);
+        let o_b1 = cache.evaluate(&ev_batch1, &mesh, &a, &mut scratch);
+        assert_eq!((cache.hits, cache.misses), (0, 2), "scenario replayed");
+        // batch amortization moves the memory ceiling (Eq 22)
+        assert!(o_b1.ppa.ceilings.memory < o_base.ppa.ceilings.memory);
+        // identical evaluator context still hits
+        let again = cache.evaluate(&ev, &mesh, &a, &mut scratch);
+        assert_eq!(cache.hits, 1);
+        assert_eq!(
+            again.reward.score.to_bits(),
+            o_base.reward.score.to_bits()
+        );
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::env::action::{self, Action, DecodedAction};
 use crate::env::reward::{self, RewardTerms};
 use crate::env::state::{self, FULL_STATE_DIM};
 use crate::hazard::Mitigation;
+use crate::ir::spec::{Family, Phase, Scenario};
 use crate::ir::stats::WorkloadStats;
 use crate::ir::Graph;
 use crate::kv::{self, KvStrategy};
@@ -138,20 +139,31 @@ pub struct Evaluator {
     pub mode: ModeConfig,
     pub ranges: ParamRanges,
     pub kv_strategy: KvStrategy,
-    pub seq_len: u32,
-    pub batch_size: u32,
+    /// The resolved evaluation scenario (phase, context length, batch)
+    /// the graph, KV footprint and throughput models are built for — the
+    /// single source of truth for seq_len/batch.
+    pub scenario: Scenario,
     /// Σ weight bytes of the graph, hoisted off the per-episode path.
     total_weights: f64,
     /// Model FLOPs per generated token, hoisted off the per-episode path.
     flops_per_token: f64,
+    /// Scenario-amortized per-token weight read traffic (Eq 22's weight
+    /// term; equals `total_weights` at decode/batch-1).
+    weight_traffic: f64,
     /// [`cache::units_key`] fingerprint of `units` — the placement-memo
     /// salt, so scratches shared across evaluators stay correct.
     units_key: u64,
+    /// [`cache::scenario_salt`] over (units, node, scenario, KV
+    /// strategy, mode, budget) — the whole-outcome memo salt, so an
+    /// [`EvalCache`] can never replay an outcome across scenarios or
+    /// optimization modes.
+    eval_salt: u64,
 }
 
 impl Evaluator {
     pub fn new(cfg: &RunConfig, nm: u32) -> Self {
-        let graph = cfg.workload.build();
+        let scenario = cfg.scenario();
+        let graph = cfg.workload.build_scenario(&scenario);
         let units = match cfg.granularity {
             Granularity::Op => partition::units_from_ops(&graph),
             Granularity::Group => partition::groups::units_from_groups(&graph),
@@ -161,24 +173,71 @@ impl Evaluator {
         let node =
             table.get(nm).unwrap_or_else(|| panic!("unknown node {nm}nm")).clone();
         let budget = *cfg.mode.budget(nm);
+        // speculative decoding accelerates the autoregressive decode loop
+        // only; prefill scores every prompt token in one pass (§3.8)
+        let mut mode = cfg.mode.clone();
+        if scenario.phase == Phase::Prefill {
+            mode.alpha_spec = 1.0;
+        }
         let total_weights = graph.total_weight_bytes();
         let flops_per_token = graph.flops_per_token_model();
+        // the prompt axis only exists for decoder-bearing families: an
+        // image encoder has no prefill pass to amortize the weight sweep
+        // over, so only the batch axis applies there
+        let traffic_phase = match cfg.workload.spec().family {
+            Family::VisionEncoder => Phase::Decode,
+            Family::Decoder | Family::VisionLanguage => scenario.phase,
+        };
+        let weight_traffic = ppa::throughput::weight_traffic_per_token(
+            total_weights,
+            traffic_phase,
+            scenario.seq_len,
+            scenario.batch,
+        );
         let units_key = cache::units_key(&units);
+        // salt over the *effective* mode (post prefill α override)
+        let eval_salt = cache::scenario_salt(
+            units_key,
+            nm,
+            &scenario,
+            cfg.kv_strategy,
+            &mode,
+            &budget,
+        );
         Evaluator {
             graph,
             units,
             wstats,
             node,
             budget,
-            mode: cfg.mode.clone(),
+            mode,
             ranges: ParamRanges::paper(),
             kv_strategy: cfg.kv_strategy,
-            seq_len: cfg.workload.seq_len(),
-            batch_size: 3, // paper's Llama evaluation batch (Table 9)
+            scenario,
             total_weights,
             flops_per_token,
+            weight_traffic,
             units_key,
+            eval_salt,
         }
+    }
+
+    /// Evaluation context length (the scenario's `seq_len`).
+    pub fn seq_len(&self) -> u32 {
+        self.scenario.seq_len
+    }
+
+    /// Evaluation batch size (the scenario's `batch`).
+    pub fn batch_size(&self) -> u32 {
+        self.scenario.batch
+    }
+
+    /// Whole-outcome memo salt: distinct for any two evaluators that
+    /// could produce different outcomes for the same raw `(mesh, action)`
+    /// input (different workload/granularity units, node, scenario, KV
+    /// strategy, optimization mode or budget).
+    pub fn eval_salt(&self) -> u64 {
+        self.eval_salt
     }
 
     /// Initial mesh m₀(n) of Algorithm 1 for this workload/mode.
@@ -196,7 +255,7 @@ impl Evaluator {
             &self.mode,
             &self.ranges,
             self.kv_strategy,
-            self.seq_len,
+            self.scenario.seq_len,
         );
         action::project(decoded, &self.node, &self.budget, self.total_weights)
     }
@@ -226,7 +285,12 @@ impl Evaluator {
             &mut scratch.place,
         );
         let kv_total = match self.graph.kv {
-            Some(kvc) => kv::total_bytes(&kvc, self.seq_len, decoded.kv_strategy),
+            Some(kvc) => kv::total_bytes_batched(
+                &kvc,
+                self.scenario.seq_len,
+                decoded.kv_strategy,
+                self.scenario.batch,
+            ),
             None => 0.0,
         };
         partition::distribute_kv(&mut placement.loads, kv_total);
@@ -306,9 +370,9 @@ impl Evaluator {
             ppa: Some(&ppa_result),
             hazards: &placement.hazards,
             kv_strategy: decoded.kv_strategy,
-            seq_len: self.seq_len,
+            seq_len: self.scenario.seq_len,
             weight_total_bytes: self.total_weights,
-            batch_size: self.batch_size,
+            batch_size: self.scenario.batch,
         });
 
         EvalOutcome {
@@ -362,7 +426,7 @@ impl Evaluator {
     pub fn admission_bound(&self, decoded: &DecodedAction) -> f64 {
         let kv_traffic = match self.graph.kv {
             Some(kvc) => kv::bytes_per_token(&kvc)
-                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
+                / kv::compaction_factor(decoded.kv_strategy, self.scenario.seq_len),
             None => 0.0,
         };
         let rb = ppa::roofline_bound(
@@ -370,6 +434,7 @@ impl Evaluator {
             &self.node,
             &self.ranges,
             self.total_weights,
+            self.weight_traffic,
             self.flops_per_token,
             kv_traffic,
         );
@@ -492,15 +557,16 @@ impl Evaluator {
         let eta_util =
             (1.0 - 0.35 * hazard - 0.15 * pressure_excess - 0.2 * spill).clamp(0.3, 1.0);
 
-        // per-token memory traffic: full weight sweep + compacted KV
-        // (Eq 33) + cross-tile activations
+        // per-token memory traffic: the scenario-amortized weight sweep
+        // (one sweep serves the batch; prefill amortizes over the whole
+        // prompt) + compacted KV (Eq 33) + cross-tile activations
         let kv_traffic = match self.graph.kv {
             Some(kvc) => kv::bytes_per_token(&kvc)
-                / kv::compaction_factor(decoded.kv_strategy, self.seq_len),
+                / kv::compaction_factor(decoded.kv_strategy, self.scenario.seq_len),
             None => 0.0,
         };
         let mem_bytes_per_token =
-            self.total_weights + kv_traffic + placement.traffic.cross_tile_bytes;
+            self.weight_traffic + kv_traffic + placement.traffic.cross_tile_bytes;
 
         // aggregate bandwidth: two ROM/SRAM ports of VLEN width per tile
         let f_hz = decoded.avg.clock_mhz * 1e6;

@@ -1,6 +1,8 @@
-//! Synthetic Llama 3.1 8B Instruct FP16 graph generator.
+//! Llama 3.1 8B Instruct FP16 — the paper's headline workload, now a
+//! declarative spec instance ([`crate::ir::registry::LLAMA31_8B`]) of the
+//! generic builder in [`crate::ir::spec`].
 //!
-//! Reproduces the paper's Table 8/9 statistics exactly:
+//! The spec reproduces the paper's Table 8/9 statistics exactly:
 //! * 7,489 unified graph operators (32 decoder layers × 233 ops + 33
 //!   global ops — the fine-grained ONNX decomposition where every
 //!   norm/rope/softmax is a chain of micro-ops plus shape plumbing),
@@ -9,10 +11,14 @@
 //! * 66 graph inputs / 65 outputs (KV-cache in/out per layer + ids/mask),
 //! * 597 M total instructions,
 //! * GQA: 32 query heads, 8 KV heads, head_dim 128 (Eq 25 ⇒ 128 KB/token).
+//!
+//! These pins are enforced by the golden suite in `tests/workloads.rs`
+//! and the tests below.
 
-use super::{Graph, KvConfig, Op, OpId, OpKind};
+use super::registry;
+use super::{Graph, WorkloadSpec};
 
-/// Llama 3.1 8B architecture constants.
+/// Llama 3.1 8B architecture constants (mirrors the registry spec).
 pub const N_LAYERS: u32 = 32;
 pub const D_MODEL: u64 = 4096;
 pub const N_HEADS: u64 = 32;
@@ -20,188 +26,45 @@ pub const N_KV_HEADS: u64 = 8;
 pub const HEAD_DIM: u64 = 128;
 pub const D_FFN: u64 = 14336;
 pub const VOCAB: u64 = 128_256;
-/// Evaluation sequence length (§4.1).
+/// Default evaluation sequence length (§4.1).
 pub const SEQ_LEN: u64 = 2048;
-/// Paper-reported totals this generator must reproduce.
+/// Paper-reported totals the spec-built graph must reproduce.
 pub const PAPER_OPS: usize = 7489;
 pub const PAPER_WEIGHT_TENSORS: usize = 291;
 pub const PAPER_INSTRS: f64 = 597e6;
 
-const FP16: f64 = 2.0;
-
-struct Builder {
-    ops: Vec<Op>,
+/// The registered spec.
+pub fn spec() -> &'static WorkloadSpec {
+    &registry::LLAMA31_8B
 }
 
-impl Builder {
-    fn push(
-        &mut self,
-        kind: OpKind,
-        layer: i32,
-        flops: f64,
-        weight_bytes: f64,
-        out_bytes: f64,
-        inputs: Vec<OpId>,
-    ) -> OpId {
-        let id = self.ops.len() as OpId;
-        self.ops.push(Op {
-            id,
-            kind,
-            layer,
-            flops,
-            weight_bytes,
-            out_bytes,
-            inputs,
-            instrs: 0.0, // filled by calibrate_instrs
-        });
-        id
-    }
-
-    /// Chain of `n` micro-ops of `kind` threading one activation tensor.
-    fn chain(&mut self, kind: OpKind, layer: i32, n: usize, bytes: f64, mut prev: OpId) -> OpId {
-        for _ in 0..n {
-            prev = self.push(kind, layer, bytes / FP16, 0.0, bytes, vec![prev]);
-        }
-        prev
-    }
-}
-
-/// Build the Llama 3.1 8B decode-step graph (costs are per generated
-/// token at the paper's 2,048-token evaluation context).
+/// Build the Llama 3.1 8B decode-step graph at the paper's default
+/// scenario (decode, 2,048-token context).
 pub fn build() -> Graph {
-    let mut b = Builder { ops: Vec::with_capacity(PAPER_OPS) };
-    let d_bytes = D_MODEL as f64 * FP16; // 8 KB hidden vector
-    let kv_dim = (N_KV_HEADS * HEAD_DIM) as f64; // 1024
-
-    // ---- global prologue: token embedding gather (2 ops: ids→gather)
-    let ids = b.push(OpKind::Other, -1, 0.0, 0.0, 8.0, vec![]);
-    let embed_w = (VOCAB * D_MODEL) as f64 * FP16;
-    let mut h = b.push(OpKind::Embed, -1, D_MODEL as f64, embed_w, d_bytes, vec![ids]);
-
-    for layer in 0..N_LAYERS as i32 {
-        h = build_layer(&mut b, layer, h, d_bytes, kv_dim);
-    }
-
-    // ---- global epilogue: final RMSNorm (7) + lm_head matmul + softmax(5)
-    // + argmax/sampling plumbing — 31 ops total with the prologue's 2.
-    let norm_w = D_MODEL as f64 * FP16;
-    let mut x = b.chain(OpKind::Norm, -1, 6, d_bytes, h);
-    x = b.push(OpKind::Norm, -1, D_MODEL as f64, norm_w, d_bytes, vec![x]);
-    let head_w = (VOCAB * D_MODEL) as f64 * FP16;
-    let logits_bytes = VOCAB as f64 * FP16;
-    x = b.push(
-        OpKind::MatMul,
-        -1,
-        2.0 * (VOCAB * D_MODEL) as f64,
-        head_w,
-        logits_bytes,
-        vec![x],
-    );
-    x = b.chain(OpKind::Softmax, -1, 5, logits_bytes, x);
-    x = b.chain(OpKind::Reduce, -1, 2, 8.0, x); // argmax + gather
-    let _out = b.chain(OpKind::Other, -1, 16, 8.0, x); // sampling plumbing
-
-    assert_eq!(b.ops.len(), PAPER_OPS, "op count drifted from Table 8");
-
-    let mut g = Graph {
-        name: "llama-3.1-8b-fp16".into(),
-        ops: b.ops,
-        weight_tensors: PAPER_WEIGHT_TENSORS,
-        n_inputs: 66,  // ids + mask + 2 KV tensors x 32 layers
-        n_outputs: 65, // logits + 2 KV tensors x 32 layers
-        kv: Some(KvConfig {
-            n_layers: N_LAYERS,
-            n_kv_heads: N_KV_HEADS as u32,
-            head_dim: HEAD_DIM as u32,
-            elem_bytes: 2,
-        }),
-        params: 0.0,       // set below from weights
-        phi_decode: 0.97,  // §3.8 (GQA models)
-    };
-    g.params = g.total_weight_bytes() / FP16;
-    calibrate_instrs(&mut g);
-    g
-}
-
-/// One decoder layer = exactly 233 operators:
-///   rmsnorm(7) + qkv proj(3) + rope(2×10) + kv update(2) + attention(12)
-///   + o_proj/resid(2) + rmsnorm(7) + mlp(7) = 60 semantic ops,
-///   + 173 shape-infrastructure ops (the Shape/Gather/Unsqueeze/Concat
-///   plumbing real ONNX exports carry for dynamic shapes).
-fn build_layer(b: &mut Builder, layer: i32, h_in: OpId, d_bytes: f64, kv_dim: f64) -> OpId {
-    let norm_w = D_MODEL as f64 * FP16;
-    let kv_bytes = kv_dim * FP16;
-
-    // --- input RMSNorm: 6 micro ops + weighted mul (owns the norm tensor)
-    let mut x = b.chain(OpKind::Norm, layer, 6, d_bytes, h_in);
-    x = b.push(OpKind::Norm, layer, D_MODEL as f64, norm_w, d_bytes, vec![x]);
-
-    // --- Q/K/V projections (Table 2 "attention projections")
-    let wq = (D_MODEL * D_MODEL) as f64 * FP16;
-    let wkv = (D_MODEL as f64) * kv_dim * FP16;
-    let q = b.push(OpKind::MatMul, layer, 2.0 * (D_MODEL * D_MODEL) as f64, wq, d_bytes, vec![x]);
-    let k = b.push(OpKind::MatMul, layer, 2.0 * D_MODEL as f64 * kv_dim, wkv, kv_bytes, vec![x]);
-    let v = b.push(OpKind::MatMul, layer, 2.0 * D_MODEL as f64 * kv_dim, wkv, kv_bytes, vec![x]);
-
-    // --- RoPE on q and k: 10 micro-ops each (split/neg/concat/cos/sin...)
-    let q = b.chain(OpKind::Rope, layer, 10, d_bytes, q);
-    let k = b.chain(OpKind::Rope, layer, 10, kv_bytes, k);
-
-    // --- KV cache append (bandwidth-only)
-    let k = b.push(OpKind::KvUpdate, layer, 0.0, 0.0, kv_bytes, vec![k]);
-    let v = b.push(OpKind::KvUpdate, layer, 0.0, 0.0, kv_bytes, vec![v]);
-
-    // --- attention: scores + scale + softmax(5) + AV + 4 reshape/transpose
-    let score_flops = 2.0 * (N_HEADS * HEAD_DIM) as f64 * SEQ_LEN as f64;
-    let score_bytes = (N_HEADS * SEQ_LEN) as f64 * FP16;
-    let s = b.push(OpKind::MatMul, layer, score_flops, 0.0, score_bytes, vec![q, k]);
-    let s = b.push(OpKind::Elementwise, layer, score_bytes / FP16, 0.0, score_bytes, vec![s]);
-    let s = b.chain(OpKind::Softmax, layer, 5, score_bytes, s);
-    let att = b.push(OpKind::MatMul, layer, score_flops, 0.0, d_bytes, vec![s, v]);
-    let att = b.chain(OpKind::Reshape, layer, 4, d_bytes, att);
-
-    // --- output projection + residual
-    let wo = (D_MODEL * D_MODEL) as f64 * FP16;
-    let o = b.push(OpKind::MatMul, layer, 2.0 * (D_MODEL * D_MODEL) as f64, wo, d_bytes, vec![att]);
-    let h1 = b.push(OpKind::Elementwise, layer, D_MODEL as f64, 0.0, d_bytes, vec![h_in, o]);
-
-    // --- post-attention RMSNorm
-    let mut y = b.chain(OpKind::Norm, layer, 6, d_bytes, h1);
-    y = b.push(OpKind::Norm, layer, D_MODEL as f64, norm_w, d_bytes, vec![y]);
-
-    // --- SwiGLU MLP: gate/up (2 matmul) + silu(2) + mul + down + residual
-    let wff = (D_MODEL * D_FFN) as f64 * FP16;
-    let ffn_bytes = D_FFN as f64 * FP16;
-    let gate = b.push(OpKind::MatMul, layer, 2.0 * (D_MODEL * D_FFN) as f64, wff, ffn_bytes, vec![y]);
-    let up = b.push(OpKind::MatMul, layer, 2.0 * (D_MODEL * D_FFN) as f64, wff, ffn_bytes, vec![y]);
-    let silu = b.chain(OpKind::Elementwise, layer, 2, ffn_bytes, gate);
-    let prod = b.push(OpKind::Elementwise, layer, D_FFN as f64, 0.0, ffn_bytes, vec![silu, up]);
-    let down = b.push(OpKind::MatMul, layer, 2.0 * (D_FFN * D_MODEL) as f64, wff, d_bytes, vec![prod]);
-    let h2 = b.push(OpKind::Elementwise, layer, D_MODEL as f64, 0.0, d_bytes, vec![h1, down]);
-
-    // --- shape infrastructure: 173 near-zero-cost plumbing ops
-    b.chain(OpKind::Reshape, layer, 173, 64.0, h2);
-    h2
-}
-
-/// Distribute the paper's 597 M static instructions across ops:
-/// proportional to FLOPs with a per-op floor (shape ops still decode).
-fn calibrate_instrs(g: &mut Graph) {
-    let floor = 20.0;
-    let total_flops: f64 = g.ops.iter().map(|o| o.flops).sum();
-    let budget = PAPER_INSTRS - floor * g.ops.len() as f64;
-    for op in &mut g.ops {
-        op.instrs = floor + budget * (op.flops / total_flops);
-    }
+    spec().build_default()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::OpKind;
+
+    #[test]
+    fn spec_constants_match_module_constants() {
+        let s = spec();
+        assert_eq!(s.dims.n_layers, N_LAYERS);
+        assert_eq!(s.dims.d_model, D_MODEL);
+        assert_eq!(s.dims.n_heads, N_HEADS);
+        assert_eq!(s.dims.n_kv_heads, N_KV_HEADS);
+        assert_eq!(s.dims.head_dim, HEAD_DIM);
+        assert_eq!(s.dims.d_ffn, D_FFN);
+        assert_eq!(s.dims.vocab, VOCAB);
+        assert_eq!(s.default_seq_len as u64, SEQ_LEN);
+    }
 
     #[test]
     fn op_count_matches_table8() {
-        assert_eq!(build().ops.len(), 7489);
+        assert_eq!(build().ops.len(), PAPER_OPS);
     }
 
     #[test]
@@ -211,13 +74,13 @@ mod tests {
         assert!((gb - 14.96).abs() < 0.05, "weights {gb} GiB");
         let params_b = g.params / 1e9;
         assert!((params_b - 8.03).abs() < 0.03, "params {params_b}B");
-        assert_eq!(g.weight_tensors, 291);
+        assert_eq!(g.weight_tensors, PAPER_WEIGHT_TENSORS);
     }
 
     #[test]
     fn instrs_match_table9() {
         let g = build();
-        assert!((g.total_instrs() - 597e6).abs() / 597e6 < 1e-6);
+        assert!((g.total_instrs() - PAPER_INSTRS).abs() / PAPER_INSTRS < 1e-6);
     }
 
     #[test]

@@ -2,15 +2,20 @@
 //!
 //! The paper ingests ONNX (Llama 3.1 8B Instruct FP16: 7,489 graph
 //! operators, 291 weight tensors, 14.96 GB; SmolVLM: 0.48 GB). We have no
-//! ONNX models in this environment, so [`llama`] and [`smolvlm`] generate
-//! graphs with the paper's exact statistics from the published
-//! architectures (DESIGN.md §4 substitution table) — the optimizer only
-//! consumes per-op FLOPs/bytes/dependencies and aggregate statistics, all
-//! of which are architecture-derived.
+//! ONNX models in this environment, so graphs are generated from
+//! declarative [`spec::WorkloadSpec`]s with the paper's exact statistics
+//! (DESIGN.md §4) — the optimizer only consumes per-op
+//! FLOPs/bytes/dependencies and aggregate statistics, all of which are
+//! architecture-derived. [`registry`] holds every selectable spec;
+//! [`llama`] and [`smolvlm`] re-export the paper's two pinned instances.
 
 pub mod llama;
+pub mod registry;
 pub mod smolvlm;
+pub mod spec;
 pub mod stats;
+
+pub use spec::{Phase, Scenario, WorkloadSpec};
 
 
 
@@ -105,8 +110,11 @@ pub struct Graph {
     pub kv: Option<KvConfig>,
     /// Total parameter count (for FLOPs-per-token, Eq 21 denominator).
     pub params: f64,
-    /// Decode-active FLOP fraction φ_decode (≈0.97 for GQA models).
-    pub phi_decode: f64,
+    /// Active FLOP fraction φ for the built scenario's phase (≈0.97 in
+    /// decode for GQA models, ≈1.0 in prefill).
+    pub phi: f64,
+    /// The (phase, context length, batch) point this graph was built for.
+    pub scenario: Scenario,
 }
 
 /// KV-cache relevant architecture constants (Eq 25).
@@ -132,10 +140,10 @@ impl Graph {
         self.ops.iter().map(|o| o.instrs).sum()
     }
 
-    /// FLOPs per generated token per the paper's throughput model:
-    /// 2 · P_total · φ_decode (§3.8).
+    /// FLOPs per processed token per the paper's throughput model:
+    /// 2 · P_total · φ (§3.8).
     pub fn flops_per_token_model(&self) -> f64 {
-        2.0 * self.params * self.phi_decode
+        2.0 * self.params * self.phi
     }
 
     /// Validate structural invariants (DAG, edges in range, costs finite).
@@ -210,7 +218,8 @@ mod tests {
             n_outputs: 0,
             kv: None,
             params: 0.0,
-            phi_decode: 1.0,
+            phi: 1.0,
+            scenario: Scenario::decode(1),
         };
         assert!(g.validate().is_err());
     }

@@ -1,0 +1,318 @@
+//! Workload registry: every [`WorkloadSpec`] the CLI can select with
+//! `workload=<name>`, with alias resolution and the closed-form Table-8
+//! statistics the `help`/`info` listings print.
+//!
+//! Adding a workload is adding one ~30-line spec constant to
+//! [`REGISTRY`]; the generic builder ([`crate::ir::spec::build_graph`]),
+//! the partitioner, the scenario axis and every report table pick it up
+//! unchanged. The Llama 3.1 8B and SmolVLM entries reproduce the paper's
+//! Table 8/9 pins exactly (golden tests in `tests/workloads.rs`).
+
+use super::spec::{
+    DecoderDims, EpilogueSpec, Family, InstrModel, MicroOps, VisionSpec, WorkloadSpec,
+};
+
+/// Llama-style micro-op decomposition: RMSNorm as a 6-op chain plus a
+/// weighted γ op, 10-op RoPE, scaled 5-op softmax attention with 4
+/// reshape ops, SwiGLU with a 2-op SiLU, and the 173 shape-plumbing ops
+/// per layer real ONNX exports carry for dynamic shapes.
+const LLAMA_MICRO: MicroOps = MicroOps {
+    norm_chain: 6,
+    norm_weighted: true,
+    rope: 10,
+    attn_scale: true,
+    softmax: 5,
+    attn_reshape: 4,
+    act_chain: 2,
+    shape_plumbing: 173,
+};
+
+/// Full sampling epilogue: final norm, lm head, 5-op softmax, argmax +
+/// gather, 16 sampling-plumbing ops.
+const LLAMA_EPILOGUE: EpilogueSpec =
+    EpilogueSpec { final_norm: true, softmax: 5, argmax_reduce: 2, sampling_plumbing: 16 };
+
+/// Compact-export decomposition (SmolVLM-style): 4-op norms without a
+/// weighted γ op, 6-op RoPE, unscaled 4-op softmax, no reshape/plumbing.
+const COMPACT_MICRO: MicroOps = MicroOps {
+    norm_chain: 4,
+    norm_weighted: false,
+    rope: 6,
+    attn_scale: false,
+    softmax: 4,
+    attn_reshape: 0,
+    act_chain: 2,
+    shape_plumbing: 0,
+};
+
+/// Head-only epilogue (logits out, no sampling ops in the export).
+const COMPACT_EPILOGUE: EpilogueSpec =
+    EpilogueSpec { final_norm: false, softmax: 5, argmax_reduce: 0, sampling_plumbing: 0 };
+
+/// Llama 3.1 8B Instruct FP16 — the paper's headline workload. Table 8/9
+/// pins: 7,489 operators, 291 weight tensors, 14.96 GB / 8.03 B params,
+/// 66/65 interface tensors, 597 M instructions, Eq 25 ⇒ 128 KB/token KV.
+pub const LLAMA31_8B: WorkloadSpec = WorkloadSpec {
+    name: "llama-3.1-8b",
+    aliases: &["llama", "llama31-8b", "llama-8b"],
+    graph_name: "llama-3.1-8b-fp16",
+    family: Family::Decoder,
+    dims: DecoderDims {
+        n_layers: 32,
+        d_model: 4096,
+        n_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ffn: 14336,
+        vocab: 128_256,
+    },
+    vision: None,
+    micro: LLAMA_MICRO,
+    epilogue: LLAMA_EPILOGUE,
+    kv_elem_bytes: 2,
+    phi_decode: 0.97,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::ExactTotal { total: 597e6, floor: 20.0 },
+    default_seq_len: 2048,
+    default_batch: 3, // the paper's Llama evaluation batch (Table 9)
+};
+
+/// SmolVLM-256M-style encoder-decoder VLM (§4.12 low-power validation):
+/// a SigLIP-style vision encoder feeding a compact 30-layer decoder;
+/// FP16 footprint calibrated to the paper's 0.48 GB.
+pub const SMOLVLM: WorkloadSpec = WorkloadSpec {
+    name: "smolvlm-256m",
+    aliases: &["smolvlm", "smolvlm-256"],
+    graph_name: "smolvlm",
+    family: Family::VisionLanguage,
+    dims: DecoderDims {
+        n_layers: 30,
+        d_model: 576,
+        n_heads: 9,
+        n_kv_heads: 3,
+        head_dim: 64,
+        d_ffn: 1536,
+        vocab: 49_152,
+    },
+    vision: Some(VisionSpec {
+        n_layers: 12,
+        d: 768,
+        d_ffn: 3072,
+        patch: 14,
+        in_channels: 3,
+        tokens: 729,
+        amortized: 0.25, // vision tokens processed per generated text token
+        norm_chain: 4,
+        softmax: 3,
+        act_chain: 2,
+        img_bytes: 150_528.0,
+    }),
+    micro: COMPACT_MICRO,
+    epilogue: COMPACT_EPILOGUE,
+    kv_elem_bytes: 2,
+    phi_decode: 0.95,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::FloorPlusBudget { floor: 20.0, budget: 12e6 },
+    default_seq_len: 1024,
+    default_batch: 1,
+};
+
+/// Llama 3.2 1B — the small on-device decoder of the same family
+/// (16 layers, d=2048, 32/8 GQA heads at d_head=64, FFN 8192).
+pub const LLAMA32_1B: WorkloadSpec = WorkloadSpec {
+    name: "llama-3.2-1b",
+    aliases: &["llama-1b", "llama32-1b"],
+    graph_name: "llama-3.2-1b-fp16",
+    family: Family::Decoder,
+    dims: DecoderDims {
+        n_layers: 16,
+        d_model: 2048,
+        n_heads: 32,
+        n_kv_heads: 8,
+        head_dim: 64,
+        d_ffn: 8192,
+        vocab: 128_256,
+    },
+    vision: None,
+    micro: LLAMA_MICRO,
+    epilogue: LLAMA_EPILOGUE,
+    kv_elem_bytes: 2,
+    phi_decode: 0.97,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::FloorPlusBudget { floor: 20.0, budget: 110e6 },
+    default_seq_len: 2048,
+    default_batch: 1,
+};
+
+/// Llama 3.2 3B (28 layers, d=3072, 24/8 GQA heads at d_head=128,
+/// FFN 8192).
+pub const LLAMA32_3B: WorkloadSpec = WorkloadSpec {
+    name: "llama-3.2-3b",
+    aliases: &["llama-3b", "llama32-3b"],
+    graph_name: "llama-3.2-3b-fp16",
+    family: Family::Decoder,
+    dims: DecoderDims {
+        n_layers: 28,
+        d_model: 3072,
+        n_heads: 24,
+        n_kv_heads: 8,
+        head_dim: 128,
+        d_ffn: 8192,
+        vocab: 128_256,
+    },
+    vision: None,
+    micro: LLAMA_MICRO,
+    epilogue: LLAMA_EPILOGUE,
+    kv_elem_bytes: 2,
+    phi_decode: 0.97,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::FloorPlusBudget { floor: 20.0, budget: 260e6 },
+    default_seq_len: 2048,
+    default_batch: 1,
+};
+
+/// Qwen2-style 0.5B decoder (24 layers, d=896, 14/2 GQA heads at
+/// d_head=64, FFN 4864, 152K vocab; untied embeddings, compact export).
+pub const QWEN2_0_5B: WorkloadSpec = WorkloadSpec {
+    name: "qwen2-0.5b",
+    aliases: &["qwen", "qwen-0.5b", "qwen2-05b"],
+    graph_name: "qwen2-0.5b-fp16",
+    family: Family::Decoder,
+    dims: DecoderDims {
+        n_layers: 24,
+        d_model: 896,
+        n_heads: 14,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ffn: 4864,
+        vocab: 151_936,
+    },
+    vision: None,
+    micro: COMPACT_MICRO,
+    epilogue: COMPACT_EPILOGUE,
+    kv_elem_bytes: 2,
+    phi_decode: 0.96,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::FloorPlusBudget { floor: 20.0, budget: 55e6 },
+    default_seq_len: 4096,
+    default_batch: 1,
+};
+
+/// ViT-Base image encoder (12 layers, d=768, 196 patch tokens at patch
+/// 16, 1000-class head) — a pure vision workload: Conv-heavy partition
+/// classes, no KV cache, every step runs the full image.
+pub const VIT_BASE: WorkloadSpec = WorkloadSpec {
+    name: "vit-base",
+    aliases: &["vit", "vit-b16"],
+    graph_name: "vit-base-patch16-fp16",
+    family: Family::VisionEncoder,
+    dims: DecoderDims {
+        // d_model mirrors the vision width; vocab is the class head
+        n_layers: 12,
+        d_model: 768,
+        n_heads: 12,
+        n_kv_heads: 12,
+        head_dim: 64,
+        d_ffn: 3072,
+        vocab: 1000,
+    },
+    vision: Some(VisionSpec {
+        n_layers: 12,
+        d: 768,
+        d_ffn: 3072,
+        patch: 16,
+        in_channels: 3,
+        tokens: 196,
+        amortized: 1.0, // every inference processes the full image
+        norm_chain: 4,
+        softmax: 3,
+        act_chain: 2,
+        img_bytes: 150_528.0, // 224 × 224 × 3
+    }),
+    micro: COMPACT_MICRO,
+    epilogue: COMPACT_EPILOGUE,
+    kv_elem_bytes: 0, // no KV cache
+    phi_decode: 1.0,
+    phi_prefill: 1.0,
+    instr_model: InstrModel::FloorPlusBudget { floor: 20.0, budget: 9e6 },
+    default_seq_len: 196,
+    default_batch: 1,
+};
+
+/// Every registered workload, in listing order.
+pub static REGISTRY: &[WorkloadSpec] =
+    &[LLAMA31_8B, SMOLVLM, LLAMA32_1B, LLAMA32_3B, QWEN2_0_5B, VIT_BASE];
+
+/// All registered specs.
+pub fn all() -> &'static [WorkloadSpec] {
+    REGISTRY
+}
+
+/// Resolve a `workload=` value against canonical names and aliases.
+pub fn get(name: &str) -> Option<&'static WorkloadSpec> {
+    REGISTRY
+        .iter()
+        .find(|s| s.name == name || s.aliases.contains(&name))
+}
+
+/// Canonical workload names, in listing order (for error messages and
+/// the CLI listing).
+pub fn names() -> Vec<&'static str> {
+    REGISTRY.iter().map(|s| s.name).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_names_and_aliases_resolve() {
+        assert_eq!(get("llama-3.1-8b").unwrap().name, "llama-3.1-8b");
+        assert_eq!(get("llama").unwrap().name, "llama-3.1-8b");
+        assert_eq!(get("smolvlm").unwrap().name, "smolvlm-256m");
+        assert_eq!(get("qwen").unwrap().name, "qwen2-0.5b");
+        assert_eq!(get("vit").unwrap().name, "vit-base");
+        assert!(get("gpt-17").is_none());
+    }
+
+    #[test]
+    fn names_are_unique_including_aliases() {
+        let mut seen = std::collections::HashSet::new();
+        for s in all() {
+            assert!(seen.insert(s.name), "duplicate name {}", s.name);
+            for a in s.aliases {
+                assert!(seen.insert(*a), "duplicate alias {a}");
+            }
+        }
+        assert!(names().len() >= 5, "registry must hold ≥5 workloads");
+    }
+
+    #[test]
+    fn llama_closed_forms_hit_table8() {
+        let s = &LLAMA31_8B;
+        assert_eq!(s.expected_ops(), 7489);
+        assert_eq!(s.expected_weight_tensors(), 291);
+        assert_eq!(s.expected_instrs(), 597e6);
+        let gb = s.expected_weight_bytes() / (1u64 << 30) as f64;
+        assert!((gb - 14.96).abs() < 0.05, "weights {gb} GiB");
+        assert_eq!(s.interface_tensors(), (66, 65));
+    }
+
+    #[test]
+    fn new_specs_have_plausible_scale() {
+        // untied embeddings, so the 1B/3B land slightly above the tied
+        // checkpoint sizes (1.24B/3.21B)
+        let b = |s: &WorkloadSpec| s.expected_params() / 1e9;
+        assert!((1.3..1.7).contains(&b(&LLAMA32_1B)), "1B params {}", b(&LLAMA32_1B));
+        assert!((3.3..3.9).contains(&b(&LLAMA32_3B)), "3B params {}", b(&LLAMA32_3B));
+        assert!((0.4..0.8).contains(&b(&QWEN2_0_5B)), "qwen params {}", b(&QWEN2_0_5B));
+        assert!((0.07..0.11).contains(&b(&VIT_BASE)), "vit params {}", b(&VIT_BASE));
+    }
+
+    #[test]
+    fn vit_has_no_kv_and_single_interface() {
+        assert!(VIT_BASE.kv_config().is_none());
+        assert_eq!(VIT_BASE.interface_tensors(), (1, 1));
+        assert!(LLAMA31_8B.kv_config().is_some());
+    }
+}

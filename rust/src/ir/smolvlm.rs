@@ -1,12 +1,16 @@
-//! Synthetic SmolVLM graph generator (§4.12 low-power validation).
+//! SmolVLM graph (§4.12 low-power validation) — a declarative spec
+//! instance ([`crate::ir::registry::SMOLVLM`]) of the generic builder in
+//! [`crate::ir::spec`].
 //!
 //! SmolVLM-256M-style encoder-decoder VLM: a SigLIP-style vision encoder
 //! (12 ViT layers, d=768, patch-embedding conv) feeding a compact decoder
 //! (30 layers, d=576, GQA). Total FP16 weight footprint calibrated to the
-//! paper's 0.48 GB.
+//! paper's 0.48 GB; pins enforced by `tests/workloads.rs` and below.
 
-use super::{Graph, KvConfig, Op, OpId, OpKind};
+use super::registry;
+use super::{Graph, WorkloadSpec};
 
+/// Architecture constants (mirror the registry spec).
 pub const VIT_LAYERS: u32 = 12;
 pub const VIT_D: u64 = 768;
 pub const VIT_FFN: u64 = 3072;
@@ -21,169 +25,39 @@ pub const SEQ_LEN: u64 = 1024;
 /// Vision tokens processed per generated text token (amortized).
 pub const VIS_TOKENS_AMORTIZED: f64 = 0.25;
 
-const FP16: f64 = 2.0;
-
-struct B {
-    ops: Vec<Op>,
+/// The registered spec.
+pub fn spec() -> &'static WorkloadSpec {
+    &registry::SMOLVLM
 }
 
-impl B {
-    fn push(
-        &mut self,
-        kind: OpKind,
-        layer: i32,
-        flops: f64,
-        w: f64,
-        out: f64,
-        inputs: Vec<OpId>,
-    ) -> OpId {
-        let id = self.ops.len() as OpId;
-        self.ops.push(Op { id, kind, layer, flops, weight_bytes: w, out_bytes: out, inputs, instrs: 0.0 });
-        id
-    }
-
-    fn chain(&mut self, kind: OpKind, layer: i32, n: usize, bytes: f64, mut prev: OpId) -> OpId {
-        for _ in 0..n {
-            prev = self.push(kind, layer, bytes / FP16, 0.0, bytes, vec![prev]);
-        }
-        prev
-    }
-}
-
+/// Build the SmolVLM graph at its default scenario (decode, 1,024-token
+/// context).
 pub fn build() -> Graph {
-    let mut b = B { ops: Vec::new() };
-
-    // ---- vision encoder (amortized per generated token)
-    let vd = VIT_D as f64 * FP16;
-    let amort = VIS_TOKENS_AMORTIZED;
-    // patch embedding conv: 14x14x3 -> 768
-    let patch_w = 14.0 * 14.0 * 3.0 * VIT_D as f64 * FP16;
-    let img = b.push(OpKind::Other, -1, 0.0, 0.0, 150528.0, vec![]);
-    let mut h = b.push(
-        OpKind::Conv,
-        -1,
-        amort * 2.0 * 14.0 * 14.0 * 3.0 * VIT_D as f64,
-        patch_w,
-        vd,
-        vec![img],
-    );
-    for layer in 0..VIT_LAYERS as i32 {
-        h = vit_layer(&mut b, layer, h, vd, amort);
-    }
-    // modality projection into decoder space
-    let proj_w = (VIT_D * DEC_D) as f64 * FP16;
-    let dd = DEC_D as f64 * FP16;
-    let vis = b.push(
-        OpKind::MatMul,
-        -1,
-        amort * 2.0 * (VIT_D * DEC_D) as f64,
-        proj_w,
-        dd,
-        vec![h],
-    );
-
-    // ---- text decoder
-    let embed_w = (VOCAB * DEC_D) as f64 * FP16;
-    let ids = b.push(OpKind::Other, -1, 0.0, 0.0, 8.0, vec![]);
-    let mut t = b.push(OpKind::Embed, -1, DEC_D as f64, embed_w, dd, vec![ids]);
-    // fuse vision tokens at layer 0 input
-    t = b.push(OpKind::Elementwise, -1, DEC_D as f64, 0.0, dd, vec![t, vis]);
-    for layer in 0..DEC_LAYERS as i32 {
-        t = dec_layer(&mut b, layer, t, dd);
-    }
-    let head_w = (VOCAB * DEC_D) as f64 * FP16;
-    let t = b.push(
-        OpKind::MatMul,
-        -1,
-        2.0 * (VOCAB * DEC_D) as f64,
-        head_w,
-        VOCAB as f64 * FP16,
-        vec![t],
-    );
-    b.chain(OpKind::Softmax, -1, 5, VOCAB as f64 * FP16, t);
-
-    let n_weight_tensors = b
-        .ops
-        .iter()
-        .filter(|o| o.weight_bytes > 0.0)
-        .count();
-    let mut g = Graph {
-        name: "smolvlm".into(),
-        ops: b.ops,
-        weight_tensors: n_weight_tensors,
-        n_inputs: 2 + 2 * DEC_LAYERS as usize,
-        n_outputs: 1 + 2 * DEC_LAYERS as usize,
-        kv: Some(KvConfig {
-            n_layers: DEC_LAYERS,
-            n_kv_heads: DEC_KV_HEADS as u32,
-            head_dim: DEC_HEAD_DIM as u32,
-            elem_bytes: 2,
-        }),
-        params: 0.0,
-        phi_decode: 0.95,
-    };
-    g.params = g.total_weight_bytes() / FP16;
-    // spread a plausible static instruction budget (~12M for 240M params)
-    let total_flops: f64 = g.ops.iter().map(|o| o.flops).sum();
-    for op in &mut g.ops {
-        op.instrs = 20.0 + 12e6 * (op.flops / total_flops);
-    }
-    g
-}
-
-fn vit_layer(b: &mut B, layer: i32, h_in: OpId, vd: f64, amort: f64) -> OpId {
-    let d = VIT_D;
-    let w_attn = (d * d) as f64 * FP16;
-    let w_ffn = (d * VIT_FFN) as f64 * FP16;
-    let mut x = b.chain(OpKind::Norm, layer, 4, vd, h_in);
-    let q = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
-    let k = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
-    let v = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
-    let s = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * 729) as f64, 0.0, vd, vec![q, k]);
-    let s = b.chain(OpKind::Softmax, layer, 3, vd, s);
-    let a = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * 729) as f64, 0.0, vd, vec![s, v]);
-    let o = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![a]);
-    let h1 = b.push(OpKind::Elementwise, layer, d as f64, 0.0, vd, vec![h_in, o]);
-    x = b.chain(OpKind::Norm, layer, 4, vd, h1);
-    let up = b.push(OpKind::MatMul, layer, amort * 2.0 * (d * VIT_FFN) as f64, w_ffn, vd, vec![x]);
-    let g1 = b.chain(OpKind::Elementwise, layer, 2, vd, up);
-    let dn = b.push(OpKind::MatMul, layer, amort * 2.0 * (VIT_FFN * d) as f64, w_ffn, vd, vec![g1]);
-    b.push(OpKind::Elementwise, layer, d as f64, 0.0, vd, vec![h1, dn])
-}
-
-fn dec_layer(b: &mut B, layer: i32, h_in: OpId, dd: f64) -> OpId {
-    let d = DEC_D;
-    let lyr = 100 + layer; // decoder layers numbered after encoder
-    let kv_dim = (DEC_KV_HEADS * DEC_HEAD_DIM) as f64;
-    let w_q = (d * d) as f64 * FP16;
-    let w_kv = d as f64 * kv_dim * FP16;
-    let w_ffn = (d * DEC_FFN) as f64 * FP16;
-    let mut x = b.chain(OpKind::Norm, lyr, 4, dd, h_in);
-    let q = b.push(OpKind::MatMul, lyr, 2.0 * (d * d) as f64, w_q, dd, vec![x]);
-    let k = b.push(OpKind::MatMul, lyr, 2.0 * d as f64 * kv_dim, w_kv, kv_dim * FP16, vec![x]);
-    let v = b.push(OpKind::MatMul, lyr, 2.0 * d as f64 * kv_dim, w_kv, kv_dim * FP16, vec![x]);
-    let q = b.chain(OpKind::Rope, lyr, 6, dd, q);
-    let k = b.chain(OpKind::Rope, lyr, 6, kv_dim * FP16, k);
-    let k = b.push(OpKind::KvUpdate, lyr, 0.0, 0.0, kv_dim * FP16, vec![k]);
-    let v = b.push(OpKind::KvUpdate, lyr, 0.0, 0.0, kv_dim * FP16, vec![v]);
-    let sc = 2.0 * (DEC_HEADS * DEC_HEAD_DIM) as f64 * SEQ_LEN as f64;
-    let s = b.push(OpKind::MatMul, lyr, sc, 0.0, (DEC_HEADS * SEQ_LEN) as f64 * FP16, vec![q, k]);
-    let s = b.chain(OpKind::Softmax, lyr, 4, (DEC_HEADS * SEQ_LEN) as f64 * FP16, s);
-    let a = b.push(OpKind::MatMul, lyr, sc, 0.0, dd, vec![s, v]);
-    let o = b.push(OpKind::MatMul, lyr, 2.0 * (d * d) as f64, w_q, dd, vec![a]);
-    let h1 = b.push(OpKind::Elementwise, lyr, d as f64, 0.0, dd, vec![h_in, o]);
-    x = b.chain(OpKind::Norm, lyr, 4, dd, h1);
-    let gate = b.push(OpKind::MatMul, lyr, 2.0 * (d * DEC_FFN) as f64, w_ffn, DEC_FFN as f64 * FP16, vec![x]);
-    let up = b.push(OpKind::MatMul, lyr, 2.0 * (d * DEC_FFN) as f64, w_ffn, DEC_FFN as f64 * FP16, vec![x]);
-    let si = b.chain(OpKind::Elementwise, lyr, 2, DEC_FFN as f64 * FP16, gate);
-    let pr = b.push(OpKind::Elementwise, lyr, DEC_FFN as f64, 0.0, DEC_FFN as f64 * FP16, vec![si, up]);
-    let dn = b.push(OpKind::MatMul, lyr, 2.0 * (DEC_FFN * d) as f64, w_ffn, dd, vec![pr]);
-    b.push(OpKind::Elementwise, lyr, d as f64, 0.0, dd, vec![h1, dn])
+    spec().build_default()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ir::OpKind;
+
+    #[test]
+    fn spec_constants_match_module_constants() {
+        let s = spec();
+        let v = s.vision.unwrap();
+        assert_eq!(v.n_layers, VIT_LAYERS);
+        assert_eq!(v.d, VIT_D);
+        assert_eq!(v.d_ffn, VIT_FFN);
+        assert_eq!(v.amortized, VIS_TOKENS_AMORTIZED);
+        assert_eq!(s.dims.n_layers, DEC_LAYERS);
+        assert_eq!(s.dims.d_model, DEC_D);
+        assert_eq!(s.dims.d_ffn, DEC_FFN);
+        assert_eq!(s.dims.n_heads, DEC_HEADS);
+        assert_eq!(s.dims.n_kv_heads, DEC_KV_HEADS);
+        assert_eq!(s.dims.head_dim, DEC_HEAD_DIM);
+        assert_eq!(s.dims.vocab, VOCAB);
+        assert_eq!(s.default_seq_len as u64, SEQ_LEN);
+    }
 
     #[test]
     fn weight_footprint_near_0p48_gb() {
@@ -201,6 +75,15 @@ mod tests {
     fn has_conv_for_vision_patches() {
         let g = build();
         assert!(g.ops.iter().any(|o| o.kind == OpKind::Conv));
+    }
+
+    #[test]
+    fn decoder_layers_numbered_after_encoder() {
+        // decoder layer ids start at 100 so per-layer grouping keeps the
+        // vision tower and the text trunk apart
+        let g = build();
+        assert!(g.ops.iter().any(|o| o.layer >= 100));
+        assert!(g.ops.iter().any(|o| (0..100).contains(&o.layer)));
     }
 
     #[test]

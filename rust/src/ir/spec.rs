@@ -1,0 +1,789 @@
+//! Declarative workload layer: [`WorkloadSpec`] + the generic
+//! transformer-family graph builder.
+//!
+//! The paper's compiler is workload-agnostic — it ingests an operator
+//! graph and optimizes mesh/microarchitecture/placement for any model.
+//! Instead of one hand-rolled builder per workload, a workload is a
+//! declarative spec: core decoder dimensions (layers, d_model, GQA
+//! heads, FFN width, vocab), the micro-op decomposition counts of the
+//! ONNX-style export (norm/rope/softmax chains, shape plumbing), an
+//! optional vision encoder, the epilogue shape, the KV configuration and
+//! the instruction-budget model. [`build_graph`] turns any spec into the
+//! fine-grained micro-op graph the partitioner consumes; the Llama 3.1
+//! 8B and SmolVLM specs reproduce the former hand-rolled builders
+//! op-for-op (golden-pinned by `tests/workloads.rs`).
+//!
+//! The builder is also parameterized on a [`Scenario`] — the inference
+//! phase (prefill vs decode), context length and batch size — so the
+//! same spec yields the phase-correct graph: decode attends to the full
+//! context per generated token, causal prefill to the running prefix
+//! ((L+1)/2 on average), and the decode-active FLOP fraction φ switches
+//! between the spec's `phi_decode` and `phi_prefill`.
+
+use super::{Graph, KvConfig, Op, OpId, OpKind};
+
+/// FP16 bytes per element — the weight/activation precision every spec
+/// is calibrated at (Table 8 footprints).
+pub const FP16_BYTES: f64 = 2.0;
+
+/// Inference phase of the scenario axis (§3.8): autoregressive decode
+/// (one generated token per forward pass) or prompt prefill (the whole
+/// context in one weight-stationary pass).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Phase {
+    Prefill,
+    #[default]
+    Decode,
+}
+
+impl Phase {
+    /// Parse a `phase=` config value; the error lists the valid options.
+    pub fn parse(value: &str) -> Result<Phase, String> {
+        match value {
+            "prefill" => Ok(Phase::Prefill),
+            "decode" => Ok(Phase::Decode),
+            _ => Err(format!("bad phase {value}; expected prefill|decode")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// One evaluation scenario: the (phase, context length, batch) point the
+/// graph, KV footprint, roofline and throughput models are built for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Scenario {
+    pub phase: Phase,
+    pub seq_len: u32,
+    /// Concurrent sequences served per step (Table 9's evaluation batch).
+    pub batch: u32,
+}
+
+impl Scenario {
+    /// Decode-phase scenario at batch 1.
+    pub fn decode(seq_len: u32) -> Scenario {
+        Scenario { phase: Phase::Decode, seq_len, batch: 1 }
+    }
+
+    /// Mean attention span per processed token: decode attends to the
+    /// full context; causal prefill attends to the running prefix,
+    /// (L+1)/2 tokens on average.
+    pub fn attn_span(&self) -> f64 {
+        match self.phase {
+            Phase::Decode => self.seq_len as f64,
+            Phase::Prefill => (self.seq_len as f64 + 1.0) / 2.0,
+        }
+    }
+}
+
+/// Workload family — selects the graph skeleton the spec instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Autoregressive text decoder (Llama-style).
+    Decoder,
+    /// Vision encoder feeding a text decoder (SmolVLM-style).
+    VisionLanguage,
+    /// Pure vision encoder with a classification head (ViT-style).
+    VisionEncoder,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Decoder => "decoder",
+            Family::VisionLanguage => "vision-language",
+            Family::VisionEncoder => "vision-encoder",
+        }
+    }
+}
+
+/// Core decoder dimensions (the Table 8 architecture row). For
+/// [`Family::VisionEncoder`] specs, `d_model` mirrors the vision width
+/// and `vocab` is the classification head size.
+#[derive(Debug, Clone, Copy)]
+pub struct DecoderDims {
+    pub n_layers: u32,
+    pub d_model: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub head_dim: u64,
+    pub d_ffn: u64,
+    pub vocab: u64,
+}
+
+impl DecoderDims {
+    /// Query projection width n_heads · d_head (= d_model for every
+    /// registered spec).
+    pub fn q_dim(&self) -> u64 {
+        self.n_heads * self.head_dim
+    }
+
+    /// KV projection width n_kv_heads · d_head (GQA).
+    pub fn kv_dim(&self) -> u64 {
+        self.n_kv_heads * self.head_dim
+    }
+}
+
+/// Micro-op decomposition counts: how the ONNX-style export shreds each
+/// semantic decoder op into micro-op chains plus shape plumbing.
+#[derive(Debug, Clone, Copy)]
+pub struct MicroOps {
+    /// Unweighted norm micro-ops per normalization site.
+    pub norm_chain: usize,
+    /// Whether each norm ends in a weighted (γ-owning) micro-op.
+    pub norm_weighted: bool,
+    /// RoPE micro-ops per rotated tensor (split/neg/concat/cos/sin...).
+    pub rope: usize,
+    /// Whether attention scores get an explicit scale op.
+    pub attn_scale: bool,
+    /// Softmax micro-ops inside attention.
+    pub softmax: usize,
+    /// Reshape/transpose plumbing after the attention output.
+    pub attn_reshape: usize,
+    /// Activation micro-ops in the gated MLP (SiLU/GELU decomposition).
+    pub act_chain: usize,
+    /// Near-zero-cost shape-infrastructure ops per layer (the
+    /// Shape/Gather/Unsqueeze/Concat plumbing real exports carry).
+    pub shape_plumbing: usize,
+}
+
+/// Global epilogue after the decoder trunk (lm head side).
+#[derive(Debug, Clone, Copy)]
+pub struct EpilogueSpec {
+    /// Final norm before the head (chain + weighted per [`MicroOps`]).
+    pub final_norm: bool,
+    /// Softmax micro-ops over the logits.
+    pub softmax: usize,
+    /// Argmax/gather micro-ops.
+    pub argmax_reduce: usize,
+    /// Sampling plumbing ops.
+    pub sampling_plumbing: usize,
+}
+
+/// Vision encoder spec (ViT-style tower).
+#[derive(Debug, Clone, Copy)]
+pub struct VisionSpec {
+    pub n_layers: u32,
+    pub d: u64,
+    pub d_ffn: u64,
+    /// Patch side length (patch embedding conv kernel).
+    pub patch: u64,
+    pub in_channels: u64,
+    /// Vision tokens per image (attention span of the encoder).
+    pub tokens: u64,
+    /// Vision tokens processed per generated text token (amortization
+    /// of the encoder cost onto the per-token graph; 1.0 = every step
+    /// runs the full encoder).
+    pub amortized: f64,
+    pub norm_chain: usize,
+    pub softmax: usize,
+    pub act_chain: usize,
+    /// Input image bytes (graph source tensor).
+    pub img_bytes: f64,
+}
+
+/// Static-instruction calibration model.
+#[derive(Debug, Clone, Copy)]
+pub enum InstrModel {
+    /// Distribute exactly `total` instructions: per-op floor plus a
+    /// FLOPs-proportional share of the remainder (Llama's Table 9 pin).
+    ExactTotal { total: f64, floor: f64 },
+    /// Per-op floor plus a FLOPs-proportional `budget` on top.
+    FloorPlusBudget { floor: f64, budget: f64 },
+}
+
+/// A declarative workload: everything the generic builder needs, plus
+/// the closed-form totals the property tests and the registry listing
+/// derive without building a graph.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadSpec {
+    /// Canonical registry name (`workload=<name>`).
+    pub name: &'static str,
+    /// Accepted `workload=` aliases.
+    pub aliases: &'static [&'static str],
+    /// Graph display name (Table 9 "model" row).
+    pub graph_name: &'static str,
+    pub family: Family,
+    pub dims: DecoderDims,
+    pub vision: Option<VisionSpec>,
+    pub micro: MicroOps,
+    pub epilogue: EpilogueSpec,
+    /// KV-cache element bytes; 0 = no KV cache (encoder family).
+    pub kv_elem_bytes: u32,
+    /// Decode-active FLOP fraction φ_decode (§3.8).
+    pub phi_decode: f64,
+    /// Prefill-active FLOP fraction (≈1: every parameter works).
+    pub phi_prefill: f64,
+    pub instr_model: InstrModel,
+    /// Default evaluation context length (§4.1).
+    pub default_seq_len: u32,
+    /// Default evaluation batch (Table 9; 3 for the paper's Llama run).
+    pub default_batch: u32,
+}
+
+impl WorkloadSpec {
+    /// The spec's default evaluation scenario.
+    pub fn default_scenario(&self) -> Scenario {
+        Scenario {
+            phase: Phase::Decode,
+            seq_len: self.default_seq_len,
+            batch: self.default_batch,
+        }
+    }
+
+    /// Build the graph at the default scenario.
+    pub fn build_default(&self) -> Graph {
+        self.build(&self.default_scenario())
+    }
+
+    /// Build the micro-op graph for one scenario.
+    pub fn build(&self, scn: &Scenario) -> Graph {
+        build_graph(self, scn)
+    }
+
+    /// KV-cache architecture constants (Eq 25), if the family carries a
+    /// cache.
+    pub fn kv_config(&self) -> Option<KvConfig> {
+        if self.kv_elem_bytes == 0 || self.family == Family::VisionEncoder {
+            return None;
+        }
+        Some(KvConfig {
+            n_layers: self.dims.n_layers,
+            n_kv_heads: self.dims.n_kv_heads as u32,
+            head_dim: self.dims.head_dim as u32,
+            elem_bytes: self.kv_elem_bytes,
+        })
+    }
+
+    /// Graph interface tensors: ids + mask + per-layer KV in/out for
+    /// decoder-bearing families (Table 8's 66/65 for Llama), image →
+    /// logits for encoders.
+    pub fn interface_tensors(&self) -> (usize, usize) {
+        match self.family {
+            Family::VisionEncoder => (1, 1),
+            Family::Decoder | Family::VisionLanguage => (
+                2 + 2 * self.dims.n_layers as usize,
+                1 + 2 * self.dims.n_layers as usize,
+            ),
+        }
+    }
+
+    /// Closed-form operator count of one decoder layer.
+    pub fn decoder_layer_ops(&self) -> usize {
+        let m = &self.micro;
+        let norm = m.norm_chain + m.norm_weighted as usize;
+        2 * norm                                   // pre/post-attention norms
+            + 3                                    // q/k/v projections
+            + 2 * m.rope                           // RoPE on q and k
+            + 2                                    // KV-cache appends
+            + 1                                    // attention scores
+            + m.attn_scale as usize
+            + m.softmax
+            + 1                                    // attention · V
+            + m.attn_reshape
+            + 2                                    // output proj + residual
+            + 2                                    // gate + up projections
+            + m.act_chain
+            + 1                                    // gate ⊙ up
+            + 1                                    // down projection
+            + 1                                    // MLP residual
+            + m.shape_plumbing
+    }
+
+    /// Closed-form operator count of one vision layer.
+    pub fn vit_layer_ops(v: &VisionSpec) -> usize {
+        2 * v.norm_chain                           // pre/post norms
+            + 3                                    // q/k/v
+            + 1 + v.softmax + 1                    // scores, softmax, AV
+            + 1 + 1                                // output proj + residual
+            + 1 + v.act_chain + 1 + 1              // up, act, down, residual
+    }
+
+    /// Closed-form total operator count — what [`build_graph`] must emit
+    /// (Table 8's 7,489 for Llama 3.1 8B).
+    pub fn expected_ops(&self) -> usize {
+        match self.family {
+            Family::VisionEncoder => {
+                let v = self.vision.expect("vision-encoder spec without vision tower");
+                2 + v.n_layers as usize * Self::vit_layer_ops(&v)  // img + conv + layers
+                    + 2                                            // pool + head
+                    + self.epilogue.softmax
+            }
+            Family::Decoder | Family::VisionLanguage => {
+                let vision = match &self.vision {
+                    Some(v) => 2 + v.n_layers as usize * Self::vit_layer_ops(v) + 1, // + proj
+                    None => 0,
+                };
+                let trunk = 2 + self.vision.is_some() as usize; // ids + embed (+ fuse)
+                let ep = &self.epilogue;
+                let final_norm = if ep.final_norm {
+                    self.micro.norm_chain + self.micro.norm_weighted as usize
+                } else {
+                    0
+                };
+                let epilogue =
+                    final_norm + 1 + ep.softmax + ep.argmax_reduce + ep.sampling_plumbing;
+                vision
+                    + trunk
+                    + self.dims.n_layers as usize * self.decoder_layer_ops()
+                    + epilogue
+            }
+        }
+    }
+
+    /// Closed-form count of weight-owning operators (Table 8's 291 for
+    /// Llama: embed + 9/layer + final norm + head).
+    pub fn expected_weight_tensors(&self) -> usize {
+        let mut n = 0usize;
+        if let Some(v) = &self.vision {
+            n += 1 + v.n_layers as usize * 6; // patch conv + q/k/v/o/up/down per layer
+            if self.family == Family::VisionLanguage {
+                n += 1; // modality projection
+            }
+        }
+        if self.family == Family::VisionEncoder {
+            return n + 1; // classification head
+        }
+        let per_layer = 3 + 1 + 3 + if self.micro.norm_weighted { 2 } else { 0 };
+        n += 1 // embedding
+            + self.dims.n_layers as usize * per_layer
+            + (self.epilogue.final_norm && self.micro.norm_weighted) as usize
+            + 1; // lm head
+        n
+    }
+
+    /// Closed-form total FP16 weight bytes (Table 8's 14.96 GB for Llama).
+    pub fn expected_weight_bytes(&self) -> f64 {
+        let mut w = 0.0;
+        if let Some(v) = &self.vision {
+            let per_layer = 4.0 * (v.d * v.d) as f64 + 2.0 * (v.d * v.d_ffn) as f64;
+            w += (v.patch * v.patch * v.in_channels * v.d) as f64
+                + v.n_layers as f64 * per_layer;
+            if self.family == Family::VisionLanguage {
+                w += (v.d * self.dims.d_model) as f64;
+            }
+        }
+        let d = &self.dims;
+        match self.family {
+            Family::VisionEncoder => {
+                let v = self.vision.expect("vision-encoder spec without vision tower");
+                w += (d.vocab * v.d) as f64; // classification head
+            }
+            Family::Decoder | Family::VisionLanguage => {
+                let dm = d.d_model as f64;
+                let norms = if self.micro.norm_weighted { 2.0 * dm } else { 0.0 };
+                let per_layer = dm * d.q_dim() as f64      // Wq
+                    + 2.0 * dm * d.kv_dim() as f64         // Wk, Wv
+                    + dm * d.q_dim() as f64                // Wo
+                    + 3.0 * dm * d.d_ffn as f64            // gate/up/down
+                    + norms;
+                let final_norm = if self.epilogue.final_norm && self.micro.norm_weighted {
+                    dm
+                } else {
+                    0.0
+                };
+                w += d.n_layers as f64 * per_layer
+                    + 2.0 * d.vocab as f64 * dm            // embed + head
+                    + final_norm;
+            }
+        }
+        w * FP16_BYTES
+    }
+
+    /// Closed-form parameter count.
+    pub fn expected_params(&self) -> f64 {
+        self.expected_weight_bytes() / FP16_BYTES
+    }
+
+    /// Closed-form total static instructions (Table 9's 597 M for Llama).
+    pub fn expected_instrs(&self) -> f64 {
+        match self.instr_model {
+            InstrModel::ExactTotal { total, .. } => total,
+            InstrModel::FloorPlusBudget { floor, budget } => {
+                floor * self.expected_ops() as f64 + budget
+            }
+        }
+    }
+}
+
+/// Incremental graph builder: ops push in topological order by
+/// construction (an op's id is its index, inputs are earlier pushes).
+struct B {
+    ops: Vec<Op>,
+}
+
+impl B {
+    fn push(
+        &mut self,
+        kind: OpKind,
+        layer: i32,
+        flops: f64,
+        weight_bytes: f64,
+        out_bytes: f64,
+        inputs: Vec<OpId>,
+    ) -> OpId {
+        let id = self.ops.len() as OpId;
+        self.ops.push(Op {
+            id,
+            kind,
+            layer,
+            flops,
+            weight_bytes,
+            out_bytes,
+            inputs,
+            instrs: 0.0, // filled by calibrate_instrs
+        });
+        id
+    }
+
+    /// Chain of `n` micro-ops of `kind` threading one activation tensor.
+    fn chain(&mut self, kind: OpKind, layer: i32, n: usize, bytes: f64, mut prev: OpId) -> OpId {
+        for _ in 0..n {
+            prev = self.push(kind, layer, bytes / FP16_BYTES, 0.0, bytes, vec![prev]);
+        }
+        prev
+    }
+}
+
+/// Build the micro-op graph for `spec` at scenario `scn`. Costs are per
+/// processed token: a generated token in decode, a prompt token in
+/// prefill (attention spanning [`Scenario::attn_span`]).
+pub fn build_graph(spec: &WorkloadSpec, scn: &Scenario) -> Graph {
+    let mut b = B { ops: Vec::with_capacity(spec.expected_ops()) };
+    let d = &spec.dims;
+    let d_bytes = d.d_model as f64 * FP16_BYTES;
+
+    // ---- vision tower (VLM prologue or the whole encoder workload)
+    let mut vis_feed: Option<OpId> = None;
+    if let Some(v) = &spec.vision {
+        let vh = build_vision(&mut b, v);
+        if spec.family == Family::VisionEncoder {
+            // classification epilogue: pool + head + softmax
+            let vd = v.d as f64 * FP16_BYTES;
+            let logits = d.vocab as f64 * FP16_BYTES;
+            let pooled = b.push(OpKind::Reduce, -1, v.d as f64, 0.0, vd, vec![vh]);
+            let head_w = (d.vocab * v.d) as f64 * FP16_BYTES;
+            let x = b.push(
+                OpKind::MatMul,
+                -1,
+                2.0 * (d.vocab * v.d) as f64,
+                head_w,
+                logits,
+                vec![pooled],
+            );
+            b.chain(OpKind::Softmax, -1, spec.epilogue.softmax, logits, x);
+            return finish(spec, scn, b);
+        }
+        // modality projection into decoder space
+        let proj_w = (v.d * d.d_model) as f64 * FP16_BYTES;
+        vis_feed = Some(b.push(
+            OpKind::MatMul,
+            -1,
+            v.amortized * 2.0 * (v.d * d.d_model) as f64,
+            proj_w,
+            d_bytes,
+            vec![vh],
+        ));
+    }
+
+    // ---- decoder trunk: embedding gather (+ vision fusion for VLMs)
+    let embed_w = (d.vocab * d.d_model) as f64 * FP16_BYTES;
+    let ids = b.push(OpKind::Other, -1, 0.0, 0.0, 8.0, vec![]);
+    let mut h = b.push(OpKind::Embed, -1, d.d_model as f64, embed_w, d_bytes, vec![ids]);
+    if let Some(vis) = vis_feed {
+        h = b.push(OpKind::Elementwise, -1, d.d_model as f64, 0.0, d_bytes, vec![h, vis]);
+    }
+
+    // decoder layers of a VLM are numbered after the encoder's
+    let layer_base = if spec.vision.is_some() { 100 } else { 0 };
+    for layer in 0..d.n_layers as i32 {
+        h = decoder_layer(&mut b, spec, scn, layer_base + layer, h);
+    }
+
+    // ---- epilogue: (final norm) + lm head + softmax + sampling
+    let mut x = h;
+    if spec.epilogue.final_norm {
+        x = b.chain(OpKind::Norm, -1, spec.micro.norm_chain, d_bytes, x);
+        if spec.micro.norm_weighted {
+            let norm_w = d.d_model as f64 * FP16_BYTES;
+            x = b.push(OpKind::Norm, -1, d.d_model as f64, norm_w, d_bytes, vec![x]);
+        }
+    }
+    let head_w = (d.vocab * d.d_model) as f64 * FP16_BYTES;
+    let logits_bytes = d.vocab as f64 * FP16_BYTES;
+    x = b.push(
+        OpKind::MatMul,
+        -1,
+        2.0 * (d.vocab * d.d_model) as f64,
+        head_w,
+        logits_bytes,
+        vec![x],
+    );
+    x = b.chain(OpKind::Softmax, -1, spec.epilogue.softmax, logits_bytes, x);
+    x = b.chain(OpKind::Reduce, -1, spec.epilogue.argmax_reduce, 8.0, x);
+    let _out = b.chain(OpKind::Other, -1, spec.epilogue.sampling_plumbing, 8.0, x);
+
+    finish(spec, scn, b)
+}
+
+/// One decoder layer: norm → QKV → RoPE → KV append → attention → output
+/// proj/residual → norm → gated MLP/residual → shape plumbing, with the
+/// micro-op counts taken from the spec.
+fn decoder_layer(b: &mut B, spec: &WorkloadSpec, scn: &Scenario, lyr: i32, h_in: OpId) -> OpId {
+    let d = &spec.dims;
+    let m = &spec.micro;
+    let dm = d.d_model as f64;
+    let d_bytes = dm * FP16_BYTES;
+    let q_dim = d.q_dim() as f64;
+    let kv_dim = d.kv_dim() as f64;
+    let kv_bytes = kv_dim * FP16_BYTES;
+    let norm_w = dm * FP16_BYTES;
+    let span = scn.attn_span();
+
+    // --- input norm
+    let mut x = b.chain(OpKind::Norm, lyr, m.norm_chain, d_bytes, h_in);
+    if m.norm_weighted {
+        x = b.push(OpKind::Norm, lyr, dm, norm_w, d_bytes, vec![x]);
+    }
+
+    // --- Q/K/V projections (GQA: K/V at kv_dim width)
+    let wq = dm * q_dim * FP16_BYTES;
+    let wkv = dm * kv_dim * FP16_BYTES;
+    let q = b.push(OpKind::MatMul, lyr, 2.0 * dm * q_dim, wq, d_bytes, vec![x]);
+    let k = b.push(OpKind::MatMul, lyr, 2.0 * dm * kv_dim, wkv, kv_bytes, vec![x]);
+    let v = b.push(OpKind::MatMul, lyr, 2.0 * dm * kv_dim, wkv, kv_bytes, vec![x]);
+
+    // --- RoPE on q and k
+    let q = b.chain(OpKind::Rope, lyr, m.rope, d_bytes, q);
+    let k = b.chain(OpKind::Rope, lyr, m.rope, kv_bytes, k);
+
+    // --- KV cache append (bandwidth-only)
+    let k = b.push(OpKind::KvUpdate, lyr, 0.0, 0.0, kv_bytes, vec![k]);
+    let v = b.push(OpKind::KvUpdate, lyr, 0.0, 0.0, kv_bytes, vec![v]);
+
+    // --- attention over the scenario's span
+    let score_flops = 2.0 * q_dim * span;
+    let score_bytes = d.n_heads as f64 * span * FP16_BYTES;
+    let mut s = b.push(OpKind::MatMul, lyr, score_flops, 0.0, score_bytes, vec![q, k]);
+    if m.attn_scale {
+        s = b.push(
+            OpKind::Elementwise,
+            lyr,
+            score_bytes / FP16_BYTES,
+            0.0,
+            score_bytes,
+            vec![s],
+        );
+    }
+    let s = b.chain(OpKind::Softmax, lyr, m.softmax, score_bytes, s);
+    let att = b.push(OpKind::MatMul, lyr, score_flops, 0.0, d_bytes, vec![s, v]);
+    let att = b.chain(OpKind::Reshape, lyr, m.attn_reshape, d_bytes, att);
+
+    // --- output projection + residual
+    let wo = dm * q_dim * FP16_BYTES;
+    let o = b.push(OpKind::MatMul, lyr, 2.0 * dm * q_dim, wo, d_bytes, vec![att]);
+    let h1 = b.push(OpKind::Elementwise, lyr, dm, 0.0, d_bytes, vec![h_in, o]);
+
+    // --- post-attention norm
+    let mut y = b.chain(OpKind::Norm, lyr, m.norm_chain, d_bytes, h1);
+    if m.norm_weighted {
+        y = b.push(OpKind::Norm, lyr, dm, norm_w, d_bytes, vec![y]);
+    }
+
+    // --- gated MLP: gate/up + act + mul + down + residual
+    let d_ffn = d.d_ffn as f64;
+    let wff = dm * d_ffn * FP16_BYTES;
+    let ffn_bytes = d_ffn * FP16_BYTES;
+    let gate = b.push(OpKind::MatMul, lyr, 2.0 * dm * d_ffn, wff, ffn_bytes, vec![y]);
+    let up = b.push(OpKind::MatMul, lyr, 2.0 * dm * d_ffn, wff, ffn_bytes, vec![y]);
+    let act = b.chain(OpKind::Elementwise, lyr, m.act_chain, ffn_bytes, gate);
+    let prod = b.push(OpKind::Elementwise, lyr, d_ffn, 0.0, ffn_bytes, vec![act, up]);
+    let down = b.push(OpKind::MatMul, lyr, 2.0 * d_ffn * dm, wff, d_bytes, vec![prod]);
+    let h2 = b.push(OpKind::Elementwise, lyr, dm, 0.0, d_bytes, vec![h1, down]);
+
+    // --- shape infrastructure: near-zero-cost plumbing ops
+    b.chain(OpKind::Reshape, lyr, m.shape_plumbing, 64.0, h2);
+    h2
+}
+
+/// Vision tower: patch-embedding conv + ViT layers, costs amortized per
+/// generated token by `v.amortized`.
+fn build_vision(b: &mut B, v: &VisionSpec) -> OpId {
+    let vd = v.d as f64 * FP16_BYTES;
+    let patch_in = (v.patch * v.patch * v.in_channels) as f64;
+    let patch_w = patch_in * v.d as f64 * FP16_BYTES;
+    let img = b.push(OpKind::Other, -1, 0.0, 0.0, v.img_bytes, vec![]);
+    let mut h = b.push(
+        OpKind::Conv,
+        -1,
+        v.amortized * 2.0 * patch_in * v.d as f64,
+        patch_w,
+        vd,
+        vec![img],
+    );
+    for layer in 0..v.n_layers as i32 {
+        h = vit_layer(b, v, layer, h);
+    }
+    h
+}
+
+fn vit_layer(b: &mut B, v: &VisionSpec, lyr: i32, h_in: OpId) -> OpId {
+    let d = v.d;
+    let vd = d as f64 * FP16_BYTES;
+    let amort = v.amortized;
+    let w_attn = (d * d) as f64 * FP16_BYTES;
+    let w_ffn = (d * v.d_ffn) as f64 * FP16_BYTES;
+    let mut x = b.chain(OpKind::Norm, lyr, v.norm_chain, vd, h_in);
+    let q = b.push(OpKind::MatMul, lyr, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
+    let k = b.push(OpKind::MatMul, lyr, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
+    let vv = b.push(OpKind::MatMul, lyr, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![x]);
+    let s = b.push(
+        OpKind::MatMul,
+        lyr,
+        amort * 2.0 * (d * v.tokens) as f64,
+        0.0,
+        vd,
+        vec![q, k],
+    );
+    let s = b.chain(OpKind::Softmax, lyr, v.softmax, vd, s);
+    let a = b.push(
+        OpKind::MatMul,
+        lyr,
+        amort * 2.0 * (d * v.tokens) as f64,
+        0.0,
+        vd,
+        vec![s, vv],
+    );
+    let o = b.push(OpKind::MatMul, lyr, amort * 2.0 * (d * d) as f64, w_attn, vd, vec![a]);
+    let h1 = b.push(OpKind::Elementwise, lyr, d as f64, 0.0, vd, vec![h_in, o]);
+    x = b.chain(OpKind::Norm, lyr, v.norm_chain, vd, h1);
+    let up = b.push(
+        OpKind::MatMul,
+        lyr,
+        amort * 2.0 * (d * v.d_ffn) as f64,
+        w_ffn,
+        vd,
+        vec![x],
+    );
+    let g1 = b.chain(OpKind::Elementwise, lyr, v.act_chain, vd, up);
+    let dn = b.push(
+        OpKind::MatMul,
+        lyr,
+        amort * 2.0 * (v.d_ffn * d) as f64,
+        w_ffn,
+        vd,
+        vec![g1],
+    );
+    b.push(OpKind::Elementwise, lyr, d as f64, 0.0, vd, vec![h1, dn])
+}
+
+/// Assemble the [`Graph`] from the built ops: interface/KV/φ metadata,
+/// parameter count from the weight sweep, instruction calibration.
+fn finish(spec: &WorkloadSpec, scn: &Scenario, b: B) -> Graph {
+    debug_assert_eq!(
+        b.ops.len(),
+        spec.expected_ops(),
+        "{}: builder drifted from the closed-form op count",
+        spec.name
+    );
+    let weight_tensors = b.ops.iter().filter(|o| o.weight_bytes > 0.0).count();
+    let (n_inputs, n_outputs) = spec.interface_tensors();
+    let phi = match scn.phase {
+        Phase::Decode => spec.phi_decode,
+        Phase::Prefill => spec.phi_prefill,
+    };
+    let mut g = Graph {
+        name: spec.graph_name.into(),
+        ops: b.ops,
+        weight_tensors,
+        n_inputs,
+        n_outputs,
+        kv: spec.kv_config(),
+        params: 0.0, // set below from the weight sweep
+        phi,
+        scenario: *scn,
+    };
+    g.params = g.total_weight_bytes() / FP16_BYTES;
+    calibrate_instrs(&mut g, spec.instr_model);
+    g
+}
+
+/// Distribute static instructions across ops: a per-op floor (shape ops
+/// still decode) plus a FLOPs-proportional share of the budget.
+fn calibrate_instrs(g: &mut Graph, model: InstrModel) {
+    let total_flops: f64 = g.ops.iter().map(|o| o.flops).sum();
+    let (floor, budget) = match model {
+        InstrModel::ExactTotal { total, floor } => {
+            (floor, total - floor * g.ops.len() as f64)
+        }
+        InstrModel::FloorPlusBudget { floor, budget } => (floor, budget),
+    };
+    for op in &mut g.ops {
+        op.instrs = floor + budget * (op.flops / total_flops.max(1.0));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_parse_round_trips_and_rejects() {
+        assert_eq!(Phase::parse("prefill").unwrap(), Phase::Prefill);
+        assert_eq!(Phase::parse("decode").unwrap(), Phase::Decode);
+        let err = Phase::parse("training").unwrap_err();
+        assert!(err.contains("prefill") && err.contains("decode"), "{err}");
+        assert_eq!(Phase::default(), Phase::Decode);
+    }
+
+    #[test]
+    fn attn_span_decode_vs_prefill() {
+        let d = Scenario::decode(2048);
+        assert_eq!(d.attn_span(), 2048.0);
+        let p = Scenario { phase: Phase::Prefill, seq_len: 2048, batch: 1 };
+        assert_eq!(p.attn_span(), 1024.5);
+        assert!(p.attn_span() < d.attn_span());
+    }
+
+    #[test]
+    fn seq_len_scales_attention_flops_only() {
+        let spec = crate::ir::registry::get("llama-3.1-8b").unwrap();
+        let short = spec.build(&Scenario::decode(1024));
+        let long = spec.build(&Scenario::decode(8192));
+        assert_eq!(short.ops.len(), long.ops.len());
+        assert!(
+            (long.total_weight_bytes() - short.total_weight_bytes()).abs() < 1.0,
+            "weights must not depend on context length"
+        );
+        assert!(long.total_flops_per_token() > short.total_flops_per_token());
+    }
+
+    #[test]
+    fn prefill_uses_phi_prefill_and_shorter_span() {
+        let spec = crate::ir::registry::get("llama-3.1-8b").unwrap();
+        let dec = spec.build(&Scenario::decode(2048));
+        let pre = spec.build(&Scenario { phase: Phase::Prefill, seq_len: 2048, batch: 1 });
+        assert_eq!(dec.phi, spec.phi_decode);
+        assert_eq!(pre.phi, spec.phi_prefill);
+        // shorter average span ⇒ fewer attention FLOPs per token
+        assert!(pre.total_flops_per_token() < dec.total_flops_per_token());
+    }
+
+    #[test]
+    fn batch_does_not_change_the_graph() {
+        let spec = crate::ir::registry::get("llama-3.1-8b").unwrap();
+        let b1 = spec.build(&Scenario { phase: Phase::Decode, seq_len: 2048, batch: 1 });
+        let b8 = spec.build(&Scenario { phase: Phase::Decode, seq_len: 2048, batch: 8 });
+        assert_eq!(b1.ops.len(), b8.ops.len());
+        assert_eq!(
+            b1.total_flops_per_token().to_bits(),
+            b8.total_flops_per_token().to_bits()
+        );
+        assert_eq!(b8.scenario.batch, 8);
+    }
+}

@@ -22,6 +22,21 @@ pub enum KvStrategy {
     Paged { page_kb: u32 },
 }
 
+impl KvStrategy {
+    /// Short config-style label (the `kv=` vocabulary) for reports.
+    pub fn label(&self) -> String {
+        match self {
+            KvStrategy::Full => "full".to_string(),
+            KvStrategy::Quantized { bits } => format!("int{bits}"),
+            KvStrategy::Window { tokens } => format!("window:{tokens}"),
+            KvStrategy::QuantizedWindow { bits, tokens } => {
+                format!("int{bits}win:{tokens}")
+            }
+            KvStrategy::Paged { page_kb } => format!("paged:{page_kb}k"),
+        }
+    }
+}
+
 /// Eq 25: bytes per token = 2 · n_L · n_kv · d_h · elem_bytes.
 pub fn bytes_per_token(kv: &KvConfig) -> f64 {
     2.0 * kv.n_layers as f64 * kv.n_kv_heads as f64 * kv.head_dim as f64
@@ -45,6 +60,18 @@ pub fn compaction_factor(strategy: KvStrategy, seq_len: u32) -> f64 {
 /// Eq 26 with compaction: total KV footprint at sequence length L.
 pub fn total_bytes(kv: &KvConfig, seq_len: u32, strategy: KvStrategy) -> f64 {
     seq_len as f64 * bytes_per_token(kv) / compaction_factor(strategy, seq_len)
+}
+
+/// Eq 26 across `batch` concurrent sequences: each served sequence owns
+/// an independent cache at length L, so the resident footprint scales
+/// linearly with the scenario's batch axis.
+pub fn total_bytes_batched(
+    kv: &KvConfig,
+    seq_len: u32,
+    strategy: KvStrategy,
+    batch: u32,
+) -> f64 {
+    batch.max(1) as f64 * total_bytes(kv, seq_len, strategy)
 }
 
 /// Eq 31: page count for paged allocation.
@@ -112,6 +139,15 @@ mod tests {
     #[test]
     fn window_larger_than_seq_is_noop() {
         assert_eq!(compaction_factor(KvStrategy::Window { tokens: 4096 }, 2048), 1.0);
+    }
+
+    #[test]
+    fn batched_footprint_scales_linearly() {
+        let kv = llama_kv();
+        let one = total_bytes(&kv, 2048, KvStrategy::Full);
+        assert_eq!(total_bytes_batched(&kv, 2048, KvStrategy::Full, 3), 3.0 * one);
+        // batch 0 is clamped to a single sequence
+        assert_eq!(total_bytes_batched(&kv, 2048, KvStrategy::Full, 0), one);
     }
 
     #[test]

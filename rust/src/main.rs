@@ -6,11 +6,14 @@
 //!                                convergence traces and all report tables
 //!   baselines [key=value ...]  — SAC vs random vs grid (Table 21)
 //!   report    [key=value ...]  — workload statistics (Tables 8/9)
+//!   workloads                  — registered workload specs (Table 8)
 //!   info                       — runtime/platform/manifest diagnostics
+//!                                + the workload registry
 //!
-//! Config keys (see config::RunConfig::apply): workload=llama|smolvlm,
-//! mode=hp|lp, nodes=3,5,..., episodes=N, warmup=N, seed=N,
-//! granularity=op|group, kv=..., out_dir=..., artifacts_dir=...
+//! Config keys (see config::RunConfig::apply): workload=<registry name>,
+//! phase=prefill|decode, seq_len=N, batch=N, mode=hp|lp, nodes=3,5,...,
+//! episodes=N, warmup=N, seed=N, granularity=op|group, kv=...,
+//! out_dir=..., artifacts_dir=...
 //!
 //! (The image vendors no CLI crate; parsing is a ~40-line hand-rolled
 //! key=value scheme — DESIGN.md §4.)
@@ -22,6 +25,7 @@ use silicon_rl::bail;
 use silicon_rl::config::RunConfig;
 use silicon_rl::error::{Context, Error, Result};
 use silicon_rl::eval::parallel;
+use silicon_rl::ir::registry;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, baselines, SacAgent};
 use silicon_rl::runtime::Runtime;
@@ -83,17 +87,23 @@ fn run(args: &[String]) -> Result<()> {
         "baselines" => run_baselines(&args[1..]),
         "seeds" => run_multiseed(&args[1..]),
         "report" => workload_report(&args[1..]),
+        "workloads" => {
+            println!("{}", report::workload_registry(registry::all()).to_text());
+            Ok(())
+        }
         "info" => info(&args[1..]),
         "help" | "--help" | "-h" => {
             println!(
                 "silicon-rl — RL-driven ASIC architecture exploration\n\n\
-                 usage: silicon-rl <optimize|baselines|seeds|report|info> [key=value ...]\n\
-                 keys:  workload=llama|smolvlm mode=hp|lp nodes=3,5,7 episodes=N\n\
+                 usage: silicon-rl <optimize|baselines|seeds|report|workloads|info> [key=value ...]\n\
+                 keys:  workload=<name> (see below) mode=hp|lp nodes=3,5,7 episodes=N\n\
+                 \u{20}      phase=prefill|decode seq_len=N batch=N (scenario axes)\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
                  \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
-                 \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE"
+                 \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE\n"
             );
+            println!("{}", report::workload_registry(registry::all()).to_text());
             Ok(())
         }
         other => bail!("unknown command {other} (try `silicon-rl help`)"),
@@ -111,6 +121,15 @@ fn optimize(args: &[String]) -> Result<()> {
     let cfg = cfg;
     let out_dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(out_dir)?;
+    let scn = cfg.scenario();
+    println!(
+        "workload={} phase={} seq_len={} batch={} mode={}",
+        cfg.workload.name(),
+        scn.phase.name(),
+        scn.seq_len,
+        scn.batch,
+        cfg.mode.name
+    );
 
     let results = if cfg.parallel_nodes {
         optimize_nodes_parallel(&cfg)?
@@ -223,7 +242,10 @@ fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> 
         ("table12_power.csv", report::power_breakdown(&rows)),
         ("table13_scaling.csv", report::scaling_analysis(&rows)),
         ("table18_efficiency.csv", report::efficiency_table(&rows)),
-        ("table14_run_stats.csv", report::run_stats(results, cfg.mode.name)),
+        (
+            "table14_run_stats.csv",
+            report::run_stats(results, cfg.mode.name, &cfg.scenario()),
+        ),
         ("table20_industry.csv", report::industry_comparison(rows.first())),
     ];
     for (file, t) in &tables {
@@ -347,11 +369,12 @@ fn run_multiseed(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Tables 8/9 from the workload generators (no RL run needed).
+/// Tables 8/9 from the spec-driven builder at the configured scenario
+/// (no RL run needed).
 fn workload_report(args: &[String]) -> Result<()> {
     let cfg = parse_config(args)?;
-    let g = cfg.workload.build();
-    println!("{}", report::model_stats(&g).to_text());
+    let g = cfg.workload.build_scenario(&cfg.scenario());
+    println!("{}", report::model_stats(&g, cfg.kv_strategy).to_text());
     let stats = silicon_rl::ir::stats::compute(&g);
     println!(
         "ilp={:.1} mem_intensity={:.2} vector_util={:.2} matmul_ratio={:.3} rho_comm={:.4}",
@@ -373,5 +396,7 @@ fn info(args: &[String]) -> Result<()> {
             ep.file
         );
     }
+    println!();
+    println!("{}", report::workload_registry(registry::all()).to_text());
     Ok(())
 }

@@ -37,13 +37,18 @@ pub struct RooflineBound {
 
 /// Compute the O(1) roofline envelope. `kv_traffic_per_token` is the
 /// compacted KV read traffic (Eq 33) for the decoded KV strategy;
-/// `weight_bytes` / `flops_per_token` are the workload invariants the
-/// evaluator hoists.
+/// `weight_bytes` (resident footprint: ROM power/area) and
+/// `weight_traffic_per_token` (the scenario-amortized Eq 22 weight
+/// sweep, ≤ `weight_bytes`) plus `flops_per_token` are the workload
+/// invariants the evaluator hoists. Keeping the traffic term identical
+/// to the one the full pipeline uses preserves admissibility under the
+/// scenario axis (prefill/batch amortization).
 pub fn roofline_bound(
     d: &DecodedAction,
     n: &NodeSpec,
     ranges: &ParamRanges,
     weight_bytes: f64,
+    weight_traffic_per_token: f64,
     flops_per_token: f64,
     kv_traffic_per_token: f64,
 ) -> RooflineBound {
@@ -63,7 +68,7 @@ pub fn roofline_bound(
         / flops_per_token.max(1.0);
     // Eq 22 with maximum per-tile bandwidth over the minimum possible
     // per-token traffic (cross-tile activation bytes ≥ 0).
-    let mem_floor = (weight_bytes + kv_traffic_per_token).max(1.0);
+    let mem_floor = (weight_traffic_per_token + kv_traffic_per_token).max(1.0);
     let memory_ub = cores * 2.0 * (vlen_ub / 8.0) * f_hz / mem_floor;
     // Eq 23 optimistically unbounded (bisection traffic could be zero).
     let tokens_ub = compute_ub.min(memory_ub);
@@ -135,11 +140,13 @@ mod tests {
     fn bound_components_are_finite_and_positive() {
         let d = decode_at(MeshConfig::new(16, 16), &Action::neutral(), 3);
         let t = NodeTable::paper();
+        let w = 14.96 * (1u64 << 30) as f64;
         let b = roofline_bound(
             &d,
             t.get(3).unwrap(),
             &ParamRanges::paper(),
-            14.96 * (1u64 << 30) as f64,
+            w,
+            w,
             2.0 * 8.03e9,
             131_072.0,
         );
@@ -147,6 +154,22 @@ mod tests {
         assert!(b.perf_gops.is_finite() && b.perf_gops > 0.0);
         assert!(b.power_mw.is_finite() && b.power_mw > 0.0);
         assert!(b.area_mm2.is_finite() && b.area_mm2 > 0.0);
+    }
+
+    #[test]
+    fn amortized_weight_traffic_raises_memory_roof_only() {
+        // scenario amortization (batch/prefill) relieves the Eq 22 term
+        // but leaves the residency-driven power/area floors untouched
+        let d = decode_at(MeshConfig::new(8, 8), &Action::neutral(), 7);
+        let t = NodeTable::paper();
+        let n = t.get(7).unwrap();
+        let r = ParamRanges::paper();
+        let w = 2e9;
+        let full = roofline_bound(&d, n, &r, w, w, 1e9, 0.0);
+        let amort = roofline_bound(&d, n, &r, w, w / 3.0, 1e9, 0.0);
+        assert!(amort.tokens_per_s >= full.tokens_per_s);
+        assert_eq!(amort.power_mw.to_bits(), full.power_mw.to_bits());
+        assert_eq!(amort.area_mm2.to_bits(), full.area_mm2.to_bits());
     }
 
     #[test]
@@ -158,8 +181,8 @@ mod tests {
         let w = 1e9;
         let small = decode_at(MeshConfig::new(4, 4), &Action::neutral(), 7);
         let big = decode_at(MeshConfig::new(16, 16), &Action::neutral(), 7);
-        let bs = roofline_bound(&small, n, &r, w, 1e9, 0.0);
-        let bb = roofline_bound(&big, n, &r, w, 1e9, 0.0);
+        let bs = roofline_bound(&small, n, &r, w, w, 1e9, 0.0);
+        let bb = roofline_bound(&big, n, &r, w, w, 1e9, 0.0);
         assert!(bb.tokens_per_s > bs.tokens_per_s);
         assert!(bb.power_mw > bs.power_mw);
         assert!(bb.area_mm2 > bs.area_mm2);

@@ -1,9 +1,36 @@
 //! Inference throughput model (§3.8): compute (Eq 21), memory (Eq 22) and
-//! NoC (Eq 23) ceilings; realized tok/s is their minimum (Eq 24).
+//! NoC (Eq 23) ceilings; realized tok/s is their minimum (Eq 24). The
+//! scenario axis (phase/batch) enters through
+//! [`weight_traffic_per_token`], which amortizes the Eq 22 weight sweep.
 
+use crate::ir::spec::Phase;
 use crate::node::NodeSpec;
 
 use super::DesignPoint;
+
+/// Per-processed-token weight read traffic for a scenario (the weight
+/// term of Eq 22's Bytes_per_token):
+///
+/// * **decode** — one weight sweep serves the `batch` concurrent
+///   sequences' next tokens, so per-token traffic is W / batch;
+/// * **prefill** — the prompt is processed in one weight-stationary
+///   pass, so the sweep amortizes across all `batch × seq_len` prompt
+///   tokens (the idealized chunked-prefill limit).
+///
+/// The resident footprint (ROM read power, Eq 64 area) stays the full
+/// `weight_bytes` either way — only the traffic amortizes.
+pub fn weight_traffic_per_token(
+    weight_bytes: f64,
+    phase: Phase,
+    seq_len: u32,
+    batch: u32,
+) -> f64 {
+    let tokens_per_sweep = match phase {
+        Phase::Decode => batch.max(1) as f64,
+        Phase::Prefill => batch.max(1) as f64 * seq_len.max(1) as f64,
+    };
+    weight_bytes / tokens_per_sweep
+}
 
 /// The three throughput ceilings in tokens/s.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -109,6 +136,23 @@ mod tests {
         d.mem_bytes_per_token *= 0.5; // Eq 33 relief
         let m2 = ceilings(&d, n).memory;
         assert!((m2 / m1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_traffic_amortizes_with_batch_and_prefill() {
+        let w = 16e9;
+        assert_eq!(weight_traffic_per_token(w, Phase::Decode, 2048, 1), w);
+        assert_eq!(weight_traffic_per_token(w, Phase::Decode, 2048, 4), w / 4.0);
+        assert_eq!(
+            weight_traffic_per_token(w, Phase::Prefill, 2048, 1),
+            w / 2048.0
+        );
+        assert_eq!(
+            weight_traffic_per_token(w, Phase::Prefill, 2048, 2),
+            w / 4096.0
+        );
+        // degenerate zeros clamp to one token per sweep
+        assert_eq!(weight_traffic_per_token(w, Phase::Decode, 2048, 0), w);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 
 use crate::arch::{region_of, MeshConfig, Region, TileConfig};
 use crate::eval::EvalStats;
+use crate::ir::spec::{Scenario, WorkloadSpec};
 use crate::ir::Graph;
 use crate::ppa::PowerBreakdown;
 use crate::rl::{EpisodeLog, NodeResult};
@@ -60,8 +61,10 @@ impl NodeSummary {
     }
 }
 
-/// Table 8/9: workload characteristics.
-pub fn model_stats(g: &Graph) -> Table {
+/// Table 8/9: workload characteristics for one run configuration
+/// (`kv_strategy` is the run's configured compaction, so the footprint
+/// row matches what the evaluator actually models).
+pub fn model_stats(g: &Graph, kv_strategy: crate::kv::KvStrategy) -> Table {
     let mut t = Table::new(
         "Table 9 — model characteristics",
         &["characteristic", "value"],
@@ -84,6 +87,49 @@ pub fn model_stats(g: &Graph) -> Table {
         t.row(vec![
             "KV bytes/token (KB)".into(),
             fnum(crate::kv::bytes_per_token(&kv) / 1024.0, 0),
+        ]);
+    }
+    // scenario axis the graph was built for (phase / context / batch)
+    let scn = &g.scenario;
+    t.row(vec!["phase".into(), scn.phase.name().into()]);
+    t.row(vec!["context length".into(), scn.seq_len.to_string()]);
+    t.row(vec!["batch size".into(), scn.batch.to_string()]);
+    if let Some(kv) = g.kv {
+        let total =
+            crate::kv::total_bytes_batched(&kv, scn.seq_len, kv_strategy, scn.batch);
+        t.row(vec!["KV strategy".into(), kv_strategy.label()]);
+        t.row(vec![
+            "KV footprint @ scenario (MiB)".into(),
+            fnum(total / (1u64 << 20) as f64, 0),
+        ]);
+    }
+    t
+}
+
+/// Registry listing for `help`/`info`: every registered workload with
+/// its closed-form Table-8 statistics (no graph build needed).
+pub fn workload_registry(specs: &[WorkloadSpec]) -> Table {
+    let mut t = Table::new(
+        "Registered workloads (Table 8 statistics)",
+        &[
+            "name", "family", "layers", "d_model", "heads", "d_ffn", "params_B",
+            "ops", "tensors", "seq", "batch", "aliases",
+        ],
+    );
+    for s in specs {
+        t.row(vec![
+            s.name.to_string(),
+            s.family.name().to_string(),
+            s.dims.n_layers.to_string(),
+            s.dims.d_model.to_string(),
+            format!("{}/{}", s.dims.n_heads, s.dims.n_kv_heads),
+            s.dims.d_ffn.to_string(),
+            fnum(s.expected_params() / 1e9, 2),
+            s.expected_ops().to_string(),
+            s.expected_weight_tensors().to_string(),
+            s.default_seq_len.to_string(),
+            s.default_batch.to_string(),
+            s.aliases.join(","),
         ]);
     }
     t
@@ -393,14 +439,17 @@ pub fn convergence_csv(eps: &[EpisodeLog]) -> Table {
     t
 }
 
-/// Table 14-style run statistics.
-pub fn run_stats(results: &[NodeResult], mode: &str) -> Table {
+/// Table 14-style run statistics for one (mode, scenario) run.
+pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario) -> Table {
     let mut t = Table::new("Table 14 — run statistics", &["metric", "value"]);
     let best = results
         .iter()
         .filter_map(|r| NodeSummary::from_result(r).map(|s| (r.nm, s)))
         .min_by(|a, b| a.1.ppa_score.total_cmp(&b.1.ppa_score));
     t.row(vec!["evaluated nodes".into(), results.len().to_string()]);
+    t.row(vec!["phase".into(), scn.phase.name().into()]);
+    t.row(vec!["context length (seq_len)".into(), scn.seq_len.to_string()]);
+    t.row(vec!["batch size".into(), scn.batch.to_string()]);
     if let Some((nm, s)) = best {
         t.row(vec!["best node".into(), format!("{nm}nm")]);
         t.row(vec!["best mesh".into(), format!("{}x{}", s.mesh_w, s.mesh_h)]);
@@ -526,11 +575,49 @@ mod tests {
     #[test]
     fn model_stats_matches_llama() {
         let g = crate::ir::llama::build();
-        let t = model_stats(&g);
+        let t = model_stats(&g, crate::kv::KvStrategy::Full);
         let txt = t.to_text();
         assert!(txt.contains("7489"));
         assert!(txt.contains("291"));
         assert!(txt.contains("14.96"));
+        // scenario rows surface the active phase/context/batch (Table 9)
+        assert!(txt.contains("decode"));
+        assert!(txt.contains("2048"));
+        let batch_row = t.rows.iter().find(|r| r[0] == "batch size").unwrap();
+        assert_eq!(batch_row[1], "3");
+        // footprint row reflects the configured compaction, not Full
+        let row = |t: &Table| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == "KV footprint @ scenario (MiB)")
+                .unwrap()[1]
+                .parse::<f64>()
+                .unwrap()
+        };
+        let full = row(&t);
+        let int4 = row(&model_stats(&g, crate::kv::KvStrategy::Quantized { bits: 4 }));
+        assert!((full / int4 - 4.0).abs() < 0.1, "full {full} vs int4 {int4}");
+    }
+
+    #[test]
+    fn run_stats_surfaces_scenario() {
+        let scn = Scenario { phase: crate::ir::Phase::Prefill, seq_len: 8192, batch: 2 };
+        let t = run_stats(&[], "test", &scn);
+        let txt = t.to_text();
+        assert!(txt.contains("prefill"));
+        assert!(txt.contains("8192"));
+        let batch_row = t.rows.iter().find(|r| r[0] == "batch size").unwrap();
+        assert_eq!(batch_row[1], "2");
+    }
+
+    #[test]
+    fn workload_registry_lists_every_spec_with_pins() {
+        let t = workload_registry(crate::ir::registry::all());
+        assert!(t.rows.len() >= 5);
+        let llama = t.rows.iter().find(|r| r[0] == "llama-3.1-8b").unwrap();
+        assert_eq!(llama[7], "7489");
+        assert_eq!(llama[8], "291");
+        assert!(t.to_text().contains("vision-language"));
     }
 
     #[test]

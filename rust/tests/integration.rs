@@ -39,7 +39,7 @@ fn random_search_two_nodes_generates_full_reports() {
         report::nodes_table(&rows),
         report::power_breakdown(&rows),
         report::efficiency_table(&rows),
-        report::run_stats(&results, "test"),
+        report::run_stats(&results, "test", &cfg.scenario()),
         report::industry_comparison(rows.first()),
         report::cross_node_compare(r3, r28),
         report::search_comparison(&[("rand", &results[0])]),
@@ -125,11 +125,59 @@ fn design_artifacts_round_trip_through_json() {
 
 #[test]
 fn workloads_build_and_validate() {
-    for w in [Workload::Llama31_8B, Workload::SmolVlm] {
+    for w in [Workload::LLAMA31_8B, Workload::SMOLVLM] {
         let g = w.build();
         g.validate().unwrap();
         assert!(g.params > 0.0);
     }
+}
+
+#[test]
+fn new_workload_scenario_runs_end_to_end_and_is_feasible() {
+    // the ISSUE acceptance scenario: a registry-only workload at an
+    // explicit (phase, seq_len, batch) point, through the same
+    // config → registry → Evaluator → search → report pipeline the
+    // `optimize` CLI drives (minus the artifact-backed SAC agent)
+    let mut cfg = small_cfg(60);
+    cfg.apply("workload", "llama-3.2-1b").unwrap();
+    cfg.apply("phase", "decode").unwrap();
+    cfg.apply("seq_len", "8192").unwrap();
+    cfg.apply("batch", "1").unwrap();
+    let mut rng = Rng::new(21);
+    let r = baselines::random_search(&cfg, 7, &mut rng);
+    let best = r.best.as_ref().expect("feasible design at 7nm");
+    let o = &best.outcome;
+    assert!(o.reward.feasible);
+    assert!(o.ppa.tokens_per_s.is_finite() && o.ppa.tokens_per_s > 0.0);
+
+    // the report pipeline renders for the scenario run
+    let rows: Vec<NodeSummary> = NodeSummary::from_result(&r).into_iter().collect();
+    assert_eq!(rows.len(), 1);
+    let t = report::run_stats(std::slice::from_ref(&r), "hp", &cfg.scenario());
+    let txt = t.to_text();
+    assert!(txt.contains("8192"), "{txt}");
+    assert!(txt.contains("decode"), "{txt}");
+}
+
+#[test]
+fn prefill_scenario_runs_without_spec_decode_boost() {
+    let mut cfg = small_cfg(1);
+    cfg.apply("phase", "prefill").unwrap();
+    let mut env = Env::new(&cfg, 7);
+    let out = env.eval_action(&Action::neutral());
+    // speculative decoding must be off in prefill
+    assert_eq!(out.decoded.alpha_spec, 1.0);
+    assert!(out.ppa.tokens_per_s.is_finite() && out.ppa.tokens_per_s > 0.0);
+}
+
+#[test]
+fn vision_encoder_workload_runs_without_kv() {
+    let mut cfg = small_cfg(12);
+    cfg.apply("workload", "vit-base").unwrap();
+    let mut rng = Rng::new(13);
+    let r = baselines::random_search(&cfg, 14, &mut rng);
+    assert_eq!(r.episodes.len(), 12);
+    assert!(r.episodes.iter().all(|e| e.reward.is_finite()));
 }
 
 #[test]

@@ -1,0 +1,328 @@
+//! Workload-layer contract suite:
+//!
+//! 1. **Property suite over every registry entry** — graph
+//!    well-formedness (inputs precede their op / acyclic by topological
+//!    id order, finite costs) and agreement with the spec's closed
+//!    forms (op count, weight-tensor count, instruction total, parameter
+//!    count, interface tensors).
+//! 2. **Golden pins** — the spec-built Llama 3.1 8B and SmolVLM graphs
+//!    reproduce the removed hand-rolled builders' paper statistics
+//!    exactly (Table 8/9: 7,489 ops / 291 tensors / 597 M instrs /
+//!    14.96 GB; SmolVLM: 1,488 ops / 286 tensors / 0.48 GB / 62/61
+//!    interfaces), plus per-op structural invariants the old builders
+//!    guaranteed.
+//! 3. **Scenario axis** — phase/seq_len/batch reach the graph, the KV
+//!    footprint and the throughput model, and salt the evaluation
+//!    caches.
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::env::Action;
+use silicon_rl::eval::{EvalScratch, Evaluator};
+use silicon_rl::ir::spec::{Phase, Scenario};
+use silicon_rl::ir::{registry, stats, OpKind};
+use silicon_rl::partition::groups::units_from_groups;
+
+#[test]
+fn every_registry_entry_builds_a_well_formed_graph() {
+    for spec in registry::all() {
+        let g = spec.build_default();
+        // structural invariants: topological edges, finite costs
+        g.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        // every non-source op has at least one input; sources are the
+        // graph's ids/image feeds
+        let sources = g.ops.iter().filter(|o| o.inputs.is_empty()).count();
+        assert!(
+            (1..=2).contains(&sources),
+            "{}: {sources} source ops",
+            spec.name
+        );
+        // closed-form totals match the built graph exactly
+        assert_eq!(g.ops.len(), spec.expected_ops(), "{}: op count", spec.name);
+        assert_eq!(
+            g.weight_tensors,
+            spec.expected_weight_tensors(),
+            "{}: weight tensors",
+            spec.name
+        );
+        let instrs = g.total_instrs();
+        let expect = spec.expected_instrs();
+        assert!(
+            (instrs - expect).abs() / expect < 1e-6,
+            "{}: instrs {instrs} vs closed form {expect}",
+            spec.name
+        );
+        let w = g.total_weight_bytes();
+        let we = spec.expected_weight_bytes();
+        assert!(
+            (w - we).abs() / we < 1e-9,
+            "{}: weights {w} vs closed form {we}",
+            spec.name
+        );
+        assert!(
+            (g.params - spec.expected_params()).abs() / spec.expected_params() < 1e-9,
+            "{}: params",
+            spec.name
+        );
+        assert_eq!(
+            (g.n_inputs, g.n_outputs),
+            spec.interface_tensors(),
+            "{}: interface tensors",
+            spec.name
+        );
+        // workload statistics stay finite and sane
+        let s = stats::compute(&g);
+        assert!(s.ilp.is_finite() && s.ilp > 1.0, "{}: ilp {}", spec.name, s.ilp);
+        assert!(
+            (0.0..=1.0).contains(&s.matmul_ratio),
+            "{}: matmul ratio",
+            spec.name
+        );
+        assert!(
+            s.matmul_ratio > 0.5,
+            "{}: transformers are matmul-dominated ({})",
+            spec.name,
+            s.matmul_ratio
+        );
+        // the graph-summed FLOPs track the 2·P·φ model within 2x
+        let ratio = g.total_flops_per_token() / g.flops_per_token_model();
+        assert!(
+            (0.5..=2.0).contains(&ratio),
+            "{}: flops ratio {ratio}",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn every_registry_entry_groups_and_preserves_totals() {
+    for spec in registry::all() {
+        let g = spec.build_default();
+        let units = units_from_groups(&g);
+        assert!(!units.is_empty(), "{}", spec.name);
+        let uf: f64 = units.iter().map(|u| u.flops).sum();
+        let uw: f64 = units.iter().map(|u| u.weight_bytes).sum();
+        assert!(
+            (uf - g.total_flops_per_token()).abs() / uf.max(1.0) < 1e-9,
+            "{}: grouped flops drift",
+            spec.name
+        );
+        assert!(
+            (uw - g.total_weight_bytes()).abs() / uw.max(1.0) < 1e-9,
+            "{}: grouped weights drift",
+            spec.name
+        );
+        // grouped units stay topologically ordered
+        for (i, u) in units.iter().enumerate() {
+            for &p in &u.inputs {
+                assert!((p as usize) < i, "{}: unit edge order", spec.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_llama_pins_table8_and_9() {
+    let g = silicon_rl::ir::llama::build();
+    assert_eq!(g.ops.len(), 7489);
+    assert_eq!(g.weight_tensors, 291);
+    assert!((g.total_instrs() - 597e6).abs() / 597e6 < 1e-6);
+    let gb = g.total_weight_bytes() / (1u64 << 30) as f64;
+    assert!((gb - 14.96).abs() < 0.05, "weights {gb} GiB");
+    assert!((g.params / 1e9 - 8.03).abs() < 0.03);
+    assert_eq!((g.n_inputs, g.n_outputs), (66, 65));
+    let kv = g.kv.unwrap();
+    assert_eq!(
+        (kv.n_layers, kv.n_kv_heads, kv.head_dim, kv.elem_bytes),
+        (32, 8, 128, 2)
+    );
+    // per-layer structure of the hand-rolled builder: 233 ops per layer
+    for layer in 0..32 {
+        let n = g.ops.iter().filter(|o| o.layer == layer).count();
+        assert_eq!(n, 233, "layer {layer}");
+    }
+    // 33 global ops (2 prologue + 31 epilogue)
+    assert_eq!(g.ops.iter().filter(|o| o.layer == -1).count(), 33);
+    // 9 weight tensors per layer
+    for layer in 0..32 {
+        let n = g
+            .ops
+            .iter()
+            .filter(|o| o.layer == layer && o.weight_bytes > 0.0)
+            .count();
+        assert_eq!(n, 9, "layer {layer} weight tensors");
+    }
+    // critical path in the hand-rolled builder's range
+    let cp = stats::critical_path_len(&g);
+    assert!(cp > 500 && cp < 7489, "critical path {cp}");
+}
+
+#[test]
+fn golden_smolvlm_pins() {
+    let g = silicon_rl::ir::smolvlm::build();
+    // op-for-op equivalents of the removed hand-rolled builder:
+    //   vision: img + conv + 12×23 + proj = 279
+    //   text:   ids + embed + fuse + 30×40 + head + softmax(5) = 1,209
+    assert_eq!(g.ops.len(), 1488);
+    // conv + 12×6 vit + proj + embed + 30×7 dec + head = 286
+    assert_eq!(g.weight_tensors, 286);
+    let gb = g.total_weight_bytes() / (1u64 << 30) as f64;
+    assert!((gb - 0.48).abs() < 0.08, "weights {gb} GiB");
+    assert_eq!((g.n_inputs, g.n_outputs), (62, 61));
+    // instruction model: 20/op floor + 12M budget
+    let expect = 20.0 * 1488.0 + 12e6;
+    assert!((g.total_instrs() - expect).abs() / expect < 1e-9);
+    let kv = g.kv.unwrap();
+    assert_eq!(
+        (kv.n_layers, kv.n_kv_heads, kv.head_dim, kv.elem_bytes),
+        (30, 3, 64, 2)
+    );
+    // vision tower present: conv + per-vit-layer 23 ops at layers 0..12
+    assert!(g.ops.iter().any(|o| o.kind == OpKind::Conv));
+    for layer in 0..12 {
+        assert_eq!(
+            g.ops.iter().filter(|o| o.layer == layer).count(),
+            23,
+            "vit layer {layer}"
+        );
+    }
+    // decoder layers at 100.. with 40 ops each
+    for layer in 100..130 {
+        assert_eq!(
+            g.ops.iter().filter(|o| o.layer == layer).count(),
+            40,
+            "decoder layer {layer}"
+        );
+    }
+}
+
+#[test]
+fn scenario_reaches_kv_footprint_and_memory_ceiling() {
+    // longer context ⇒ bigger resident KV ⇒ more per-tile KV bytes
+    let mut short = RunConfig::default();
+    short.apply("seq_len", "1024").unwrap();
+    let mut long = RunConfig::default();
+    long.apply("seq_len", "8192").unwrap();
+    let ev_s = Evaluator::new(&short, 7);
+    let ev_l = Evaluator::new(&long, 7);
+    let mesh = ev_s.initial_mesh();
+    let a = Action::neutral();
+    let (ds, _) = ev_s.stage_decode(&mesh, &a);
+    let (dl, _) = ev_l.stage_decode(&mesh, &a);
+    let mut scratch = EvalScratch::default();
+    let ps = ev_s.stage_place(&ds, &mut scratch);
+    let pl = ev_l.stage_place(&dl, &mut scratch);
+    let kv_s: f64 = ps.loads.iter().map(|l| l.kv_bytes).sum();
+    let kv_l: f64 = pl.loads.iter().map(|l| l.kv_bytes).sum();
+    assert!(
+        kv_l > 4.0 * kv_s,
+        "8K context must hold ≥4x the KV of 1K: {kv_s} vs {kv_l}"
+    );
+
+    // a bigger batch amortizes the weight sweep ⇒ higher memory ceiling
+    let mut b1 = RunConfig::default();
+    b1.apply("batch", "1").unwrap();
+    let mut b4 = RunConfig::default();
+    b4.apply("batch", "4").unwrap();
+    let o1 = Evaluator::new(&b1, 7).evaluate(&mesh, &a, &mut EvalScratch::default());
+    let o4 = Evaluator::new(&b4, 7).evaluate(&mesh, &a, &mut EvalScratch::default());
+    assert!(o4.ppa.ceilings.memory > o1.ppa.ceilings.memory);
+}
+
+#[test]
+fn prefill_graph_differs_and_admission_stays_admissible() {
+    let mut cfg = RunConfig::default();
+    cfg.apply("phase", "prefill").unwrap();
+    let ev = Evaluator::new(&cfg, 3);
+    assert_eq!(ev.scenario.phase, Phase::Prefill);
+    // the admission bound must stay sound under the scenario axis
+    let mesh = ev.initial_mesh();
+    let mut scratch = EvalScratch::default();
+    for i in 0..6 {
+        let mut a = Action::neutral();
+        a.cont[2] = -1.0 + 0.4 * i as f64;
+        a.cont[19] = 0.3;
+        let (d, _) = ev.stage_decode(&mesh, &a);
+        let bound = ev.admission_bound(&d);
+        let out = ev.evaluate(&mesh, &a, &mut scratch);
+        assert!(
+            bound <= out.reward.score + 1e-9,
+            "prefill bound {bound} exceeds score {}",
+            out.reward.score
+        );
+    }
+}
+
+#[test]
+fn encoder_has_no_prompt_axis_to_amortize() {
+    // an image encoder has no prefill pass: phase=prefill must not
+    // inflate the Eq 22 memory ceiling by a phantom seq_len amortization
+    let mut dec = RunConfig::default();
+    dec.apply("workload", "vit-base").unwrap();
+    dec.apply("batch", "1").unwrap();
+    let mut pre = dec.clone();
+    pre.apply("phase", "prefill").unwrap();
+    pre.apply("seq_len", "8192").unwrap();
+    let ev_d = Evaluator::new(&dec, 7);
+    let ev_p = Evaluator::new(&pre, 7);
+    let mesh = ev_d.initial_mesh();
+    let a = Action::neutral();
+    let od = ev_d.evaluate(&mesh, &a, &mut EvalScratch::default());
+    let op = ev_p.evaluate(&mesh, &a, &mut EvalScratch::default());
+    assert_eq!(
+        od.ppa.ceilings.memory.to_bits(),
+        op.ppa.ceilings.memory.to_bits(),
+        "encoder memory ceiling must be phase-independent"
+    );
+}
+
+#[test]
+fn batch_salts_eval_but_not_placement() {
+    // batch does not reach the (pre-KV) placement: same units, same
+    // placement key — but the whole-outcome salt must differ
+    let mut b1 = RunConfig::default();
+    b1.apply("batch", "1").unwrap();
+    let mut b4 = RunConfig::default();
+    b4.apply("batch", "4").unwrap();
+    let e1 = Evaluator::new(&b1, 3);
+    let e4 = Evaluator::new(&b4, 3);
+    assert_ne!(e1.eval_salt(), e4.eval_salt());
+    let mesh = e1.initial_mesh();
+    let a = Action::neutral();
+    let mut shared = EvalScratch::default();
+    let (d1, _) = e1.stage_decode(&mesh, &a);
+    let (d4, _) = e4.stage_decode(&mesh, &a);
+    e1.stage_place(&d1, &mut shared);
+    let misses = shared.stages.misses;
+    e4.stage_place(&d4, &mut shared);
+    assert_eq!(
+        shared.stages.misses, misses,
+        "identical units must replay placement across batch scenarios"
+    );
+    assert!(shared.stages.hits > 0);
+}
+
+#[test]
+fn default_batch_is_3_for_llama_and_1_for_smolvlm() {
+    // the former hardcoded `batch_size: 3` is now the Llama Table 9
+    // default; the low-power SmolVLM profile serves a single sequence
+    let hp = RunConfig::default();
+    assert_eq!(Evaluator::new(&hp, 3).batch_size(), 3);
+    let lp = RunConfig::smolvlm_low_power();
+    assert_eq!(Evaluator::new(&lp, 3).batch_size(), 1);
+}
+
+#[test]
+fn scenario_spec_defaults_round_trip() {
+    for spec in registry::all() {
+        let scn = spec.default_scenario();
+        assert_eq!(scn.phase, Phase::Decode);
+        assert_eq!(scn.seq_len, spec.default_seq_len);
+        let g = spec.build(&scn);
+        assert_eq!(g.scenario, scn);
+        // prefill builds too, with φ at the prefill value
+        let pre = Scenario { phase: Phase::Prefill, ..scn };
+        let gp = spec.build(&pre);
+        assert_eq!(gp.phi, spec.phi_prefill);
+        assert_eq!(gp.ops.len(), g.ops.len());
+    }
+}
