@@ -7,12 +7,10 @@
 //!
 //! Run: cargo run --release --example ablation_mpc [-- episodes=N]
 
-use std::path::Path;
-
 use silicon_rl::config::RunConfig;
 use silicon_rl::error::{Error, Result};
+use silicon_rl::nn::backend;
 use silicon_rl::rl::{self, SacAgent};
-use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
 
 fn run_variant(
@@ -20,9 +18,9 @@ fn run_variant(
     cfg: &RunConfig,
     rng_seed: u64,
 ) -> Result<(String, f64, f64, usize)> {
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     let mut rng = Rng::new(rng_seed);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
     let r = rl::run_node(cfg, 3, &mut agent, &mut rng)?;
     let (score, toks) = r
         .best

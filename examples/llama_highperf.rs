@@ -17,9 +17,9 @@ use std::path::Path;
 use silicon_rl::artifacts_out;
 use silicon_rl::config::RunConfig;
 use silicon_rl::error::{Error, Result};
+use silicon_rl::nn::backend;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, SacAgent};
-use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
 
 fn main() -> Result<()> {
@@ -34,15 +34,10 @@ fn main() -> Result<()> {
         }
     }
 
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    println!(
-        "PJRT platform: {} | {} entrypoints | mode: {}",
-        runtime.platform(),
-        runtime.manifest.entrypoints.len(),
-        cfg.mode.name
-    );
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {} | mode: {}", be.describe(), cfg.mode.name);
     let mut rng = Rng::new(cfg.seed);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
 
     let out_dir = Path::new(&cfg.out_dir);
     std::fs::create_dir_all(out_dir)?;

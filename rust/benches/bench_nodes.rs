@@ -1,6 +1,7 @@
 //! Regenerates the paper's per-node evaluation — Tables 10/11/12/13/15/16
 //! /17/18/19 and the Fig 3–12 data series — by running the full
-//! Algorithm 1 (SAC over PJRT artifacts) per process node for both
+//! Algorithm 1 (SAC over the configured NN backend: PJRT artifacts when
+//! built, the native kernels otherwise) per process node for both
 //! workloads, at a CI-scale episode budget.
 //!
 //! Episode budget: SILICON_RL_BENCH_EPISODES (default 1000; the paper used
@@ -11,9 +12,9 @@ use std::path::Path;
 
 use silicon_rl::config::RunConfig;
 use silicon_rl::error::Result;
+use silicon_rl::nn::backend;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, SacAgent};
-use silicon_rl::runtime::{self, Runtime};
 use silicon_rl::util::Rng;
 
 fn episodes() -> usize {
@@ -25,14 +26,7 @@ fn episodes() -> usize {
 
 fn main() -> Result<()> {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("bench_nodes: artifacts not built (run `make artifacts`); skipping");
-        return Ok(());
-    }
-    if !runtime::backend_available() {
-        println!("bench_nodes: PJRT backend unavailable (offline xla stub); skipping");
-        return Ok(());
-    }
+    let artifacts_dir = dir.to_string_lossy().to_string();
     let out = Path::new("out/bench");
     std::fs::create_dir_all(out)?;
     let eps = episodes();
@@ -41,9 +35,11 @@ fn main() -> Result<()> {
     let mut cfg = RunConfig::default();
     cfg.rl.episodes_per_node = eps;
     cfg.rl.warmup_steps = 256.min(eps / 2 + 1);
-    let runtime = Runtime::load(&dir)?;
+    cfg.artifacts_dir = artifacts_dir.clone();
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {}", be.describe());
     let mut rng = Rng::new(cfg.seed);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
 
     println!("== bench_nodes: Llama 3.1 8B high-performance, {eps} episodes/node ==");
     let mut results = Vec::new();
@@ -105,8 +101,9 @@ fn main() -> Result<()> {
     let mut cfg_lp = RunConfig::smolvlm_low_power();
     cfg_lp.rl.episodes_per_node = eps;
     cfg_lp.rl.warmup_steps = 256.min(eps / 2 + 1);
-    let runtime = Runtime::load(&dir)?;
-    let mut agent = SacAgent::new(runtime, cfg_lp.rl, &mut rng)?;
+    cfg_lp.artifacts_dir = artifacts_dir;
+    let be = backend::load(&cfg_lp.artifacts_dir, cfg_lp.backend)?;
+    let mut agent = SacAgent::new(be, cfg_lp.rl, &mut rng)?;
     println!("== bench_nodes: SmolVLM low-power, {eps} episodes/node ==");
     let mut lp_results = Vec::new();
     for &nm in &cfg_lp.nodes_nm.clone() {

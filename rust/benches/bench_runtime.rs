@@ -1,38 +1,29 @@
-//! L2/L1 runtime benchmarks (EXPERIMENTS.md §Perf): latency/throughput of
-//! the AOT-compiled HLO entrypoints through the PJRT CPU client — actor
-//! inference (B=1), the fused SAC update (B=256, ~30 Pallas-kernel
-//! instances fwd+bwd), world-model rollout (B=64) and a full MPC refine
-//! (K×H = 64×5 forwards). Skips cleanly when artifacts are not built.
+//! Agent-loop benchmarks (EXPERIMENTS.md §Perf): the NN hot path of
+//! Algorithm 1 — B=1 actor inference, the fused B=256 SAC update,
+//! world-model/surrogate updates, the K=64 batched MPC surrogate forward
+//! and a full MPC refine (K×H = 64×5 rollout) — on the native backend,
+//! head-to-head against PJRT when AOT artifacts are built.
+//!
+//! The native backend needs no artifacts, so this bench runs everywhere;
+//! set `BENCH_SMOKE=1` for the CI short mode. Both modes emit
+//! `out/bench/BENCH_agent.json` so the perf trajectory finally has
+//! agent-loop numbers next to the evaluator's `BENCH_eval.json`.
 
 use std::path::Path;
 
 use silicon_rl::config::RunConfig;
-use silicon_rl::env::SAC_STATE_DIM;
+use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
+use silicon_rl::nn::backend::{self, BackendSel};
 use silicon_rl::rl::{SacAgent, Transition};
-use silicon_rl::runtime::Runtime;
+use silicon_rl::runtime;
 use silicon_rl::util::bench::Bencher;
-use silicon_rl::util::Rng;
+use silicon_rl::util::{json, Rng};
 
-fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
-        return;
-    }
-    if !silicon_rl::runtime::backend_available() {
-        println!("bench_runtime: PJRT backend unavailable (offline xla stub); skipping");
-        return;
-    }
-    let runtime = Runtime::load(&dir).expect("runtime");
-    let mut rng = Rng::new(1);
-    let cfg = RunConfig::default().rl;
-    let mut agent = SacAgent::new(runtime, cfg, &mut rng).expect("agent");
-
-    // populate replay so update/wm/sur paths have data
+fn populate_replay(agent: &mut SacAgent, rng: &mut Rng) {
     for i in 0..300 {
         let mut t = Transition {
             s: [0.0; SAC_STATE_DIM],
-            a_cont: [0.0; 30],
+            a_cont: [0.0; ACT_DIM],
             a_disc: [0.0; 20],
             r: (i % 5) as f32 * 0.2,
             s2: [0.0; SAC_STATE_DIM],
@@ -48,32 +39,129 @@ fn main() {
         t.a_disc[rng.below(5)] = 1.0;
         agent.push_transition(t);
     }
+}
 
-    let mut b = Bencher::default();
-    println!("== bench_runtime: PJRT entrypoint performance ==");
-
+/// Benchmark one agent; returns (metric name, mean seconds) rows.
+fn bench_agent(tag: &str, agent: &mut SacAgent, b: &mut Bencher) -> Vec<(String, f64)> {
+    let mut rng = Rng::new(99);
+    populate_replay(agent, &mut rng);
+    let mut rows = Vec::new();
     let s = [0.3f32; SAC_STATE_DIM];
-    b.bench("actor_fwd_b1 (policy latency)", || {
-        agent.act(&s, true, &mut rng).unwrap()
-    });
 
-    b.bench("sac_update (B=256 fused HLO)", || {
-        agent.update(&mut rng).unwrap()
-    });
+    let t = b
+        .bench(&format!("[{tag}] actor_fwd b=1 (policy latency)"), || {
+            agent.act(&s, true, &mut rng).unwrap()
+        })
+        .mean_s();
+    rows.push(("actor_b1_s".to_string(), t));
 
-    b.bench("wm_update (B=256)", || {
-        agent.train_world_model(&mut rng).unwrap()
-    });
+    let t = b
+        .bench(&format!("[{tag}] sac_update (B=256 fused)"), || {
+            agent.update(&mut rng).unwrap()
+        })
+        .mean_s();
+    rows.push(("sac_update_s".to_string(), t));
 
-    b.bench("sur_update (B=256)", || {
-        agent.train_surrogate(&mut rng).unwrap()
-    });
+    let t = b
+        .bench(&format!("[{tag}] wm_update (B=256)"), || {
+            agent.train_world_model(&mut rng).unwrap()
+        })
+        .mean_s();
+    rows.push(("wm_update_s".to_string(), t));
+
+    let t = b
+        .bench(&format!("[{tag}] sur_update (B=256)"), || {
+            agent.train_surrogate(&mut rng).unwrap()
+        })
+        .mean_s();
+    rows.push(("sur_update_s".to_string(), t));
+
+    // the MPC planner's surrogate scoring: ONE forward per candidate set
+    let k = agent.mpc_batch();
+    let states: Vec<f32> = (0..k * SAC_STATE_DIM).map(|i| (i % 13) as f32 * 0.05).collect();
+    let actions: Vec<f32> = (0..k * ACT_DIM).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect();
+    let t = b
+        .bench(&format!("[{tag}] sur_fwd batch K={k} (MPC scoring)"), || {
+            agent.backend.sur_fwd(&agent.store, &states, &actions).unwrap().len()
+        })
+        .mean_s();
+    rows.push(("sur_batch_s".to_string(), t));
 
     let base = agent.act(&s, false, &mut rng).unwrap();
-    b.bench("mpc_refine (K=64, H=5)", || {
-        agent.mpc_refine(&s, &base, None, &mut rng).unwrap()
-    });
+    let t = b
+        .bench(&format!("[{tag}] mpc_refine (K={k}, H=5)"), || {
+            agent.mpc_refine(&s, &base, None, &mut rng).unwrap()
+        })
+        .mean_s();
+    rows.push(("mpc_refine_s".to_string(), t));
+    rows
+}
 
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let mut b = Bencher::default();
+    if smoke {
+        b.warmup = std::time::Duration::from_millis(50);
+        b.budget = std::time::Duration::from_millis(800);
+        b.max_samples = 20;
+    }
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let artifacts_dir = dir.to_string_lossy().to_string();
+    let cfg = RunConfig::default().rl;
+
+    println!("== bench_runtime: agent-loop NN backends ==");
+
+    // ---- native: always available (no artifacts needed)
+    let be = backend::load(&artifacts_dir, BackendSel::Native).expect("native backend");
+    println!("native backend: {}", be.describe());
+    let mut rng = Rng::new(1);
+    let mut agent = SacAgent::new(be, cfg, &mut rng).expect("agent");
+    let native_rows = bench_agent("native", &mut agent, &mut b);
+
+    // ---- pjrt: only when artifacts are built and the runtime is linked
+    let pjrt_rows = if dir.join("manifest.json").exists() && runtime::backend_available() {
+        let be = backend::load(&artifacts_dir, BackendSel::Pjrt).expect("pjrt backend");
+        println!("pjrt backend:   {}", be.describe());
+        let mut rng = Rng::new(1);
+        let mut agent = SacAgent::new(be, cfg, &mut rng).expect("agent");
+        Some(bench_agent("pjrt", &mut agent, &mut b))
+    } else {
+        println!("pjrt backend:   unavailable (no artifacts or offline stub) — native only");
+        None
+    };
+
+    // ---- perf record
+    let to_obj = |rows: &[(String, f64)]| {
+        json::obj(rows.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect())
+    };
+    let mut record = vec![
+        ("bench", json::s("bench_runtime")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("native", to_obj(&native_rows)),
+    ];
+    if let Some(pjrt) = &pjrt_rows {
+        record.push(("pjrt", to_obj(pjrt)));
+        let speedups: Vec<(&str, json::Json)> = native_rows
+            .iter()
+            .zip(pjrt)
+            .map(|((k, n), (_, p))| (k.as_str(), json::num(p / n.max(1e-12))))
+            .collect();
+        record.push(("native_speedup_over_pjrt", json::obj(speedups)));
+        let actor_speedup = pjrt[0].1 / native_rows[0].1.max(1e-12);
+        println!("\nnative speedup over pjrt (actor b=1): {actor_speedup:.1}x");
+    } else {
+        println!(
+            "\nnative actor b=1: {:.1} µs (acceptance: < 50 µs without PJRT)",
+            native_rows[0].1 * 1e6
+        );
+    }
+    let record = json::obj(record);
+    if let Err(e) = std::fs::create_dir_all("out/bench") {
+        eprintln!("out/bench: {e}");
+    }
+    let _ = std::fs::write("out/bench/BENCH_agent.json", record.to_string_pretty());
     b.write_csv("out/bench/bench_runtime.csv");
-    println!("csv: out/bench/bench_runtime.csv");
+    println!("records: out/bench/BENCH_agent.json, out/bench/bench_runtime.csv");
 }

@@ -13,9 +13,9 @@ use std::path::Path;
 use silicon_rl::config::RunConfig;
 use silicon_rl::error::Result;
 use silicon_rl::eval::parallel;
+use silicon_rl::nn::backend;
 use silicon_rl::report;
 use silicon_rl::rl::{self, baselines, SacAgent};
-use silicon_rl::runtime::{self, Runtime};
 use silicon_rl::util::Rng;
 
 fn main() -> Result<()> {
@@ -40,21 +40,20 @@ fn main() -> Result<()> {
     println!("grid search:   {:.1}s", t0.elapsed().as_secs_f64());
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let sac_r = if dir.join("manifest.json").exists() && runtime::backend_available() {
+    let sac_r = {
         // strict evaluation-count parity with the baselines: disable the
         // MPC real-eval re-ranking so every strategy performs exactly one
         // evaluation per budgeted episode
         let mut sac_cfg = cfg.clone();
         sac_cfg.rl.mpc_rerank = 0;
-        let runtime = Runtime::load(&dir)?;
-        let mut agent = SacAgent::new(runtime, sac_cfg.rl, &mut rng)?;
+        sac_cfg.artifacts_dir = dir.to_string_lossy().to_string();
+        let be = backend::load(&sac_cfg.artifacts_dir, sac_cfg.backend)?;
+        println!("SAC backend:   {}", be.describe());
+        let mut agent = SacAgent::new(be, sac_cfg.rl, &mut rng)?;
         let t0 = std::time::Instant::now();
         let r = rl::run_node(&sac_cfg, nm, &mut agent, &mut rng)?;
         println!("SAC:           {:.1}s", t0.elapsed().as_secs_f64());
         Some(r)
-    } else {
-        println!("SAC: skipped (artifacts not built or PJRT backend unavailable)");
-        None
     };
 
     let mut entries: Vec<(&str, &rl::NodeResult)> =

@@ -9,6 +9,7 @@
 
 use crate::ir::registry;
 use crate::ir::spec::{Phase, Scenario, WorkloadSpec};
+use crate::nn::BackendSel;
 use crate::ppa::PpaWeights;
 
 /// The workload graph to optimize for — a handle onto one
@@ -270,6 +271,10 @@ pub struct RunConfig {
     pub seed: u64,
     /// KV compaction strategy for the run (§3.9).
     pub kv_strategy: crate::kv::KvStrategy,
+    /// NN backend for the SAC agent (`backend=native|pjrt|auto`): `auto`
+    /// uses PJRT when AOT artifacts are present and executable, native
+    /// otherwise — so `optimize` runs with no artifacts at all.
+    pub backend: BackendSel,
     pub artifacts_dir: String,
     pub out_dir: String,
     /// `optimize` driver: run the per-node sweeps concurrently, one agent
@@ -295,6 +300,7 @@ impl Default for RunConfig {
             granularity: Granularity::Group,
             seed: 0xA51C,
             kv_strategy: crate::kv::KvStrategy::Full,
+            backend: BackendSel::Auto,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
             parallel_nodes: false,
@@ -335,10 +341,10 @@ impl RunConfig {
     /// Apply `key=value` overrides (CLI / config file lines). Supported
     /// keys: episodes, warmup, seed, granularity (op|group), workload
     /// (any registry name/alias), phase (prefill|decode), seq_len, batch,
-    /// mode (hp|lp), nodes (comma list), out_dir, artifacts_dir, kv
-    /// (full|int8|int4|window:N|int8win:N), threads (0 = auto),
-    /// candidate_batch, parallel_nodes (true|false), prune (true|false —
-    /// roofline admission pruning on argmax paths).
+    /// mode (hp|lp), nodes (comma list), out_dir, artifacts_dir, backend
+    /// (native|pjrt|auto), kv (full|int8|int4|window:N|int8win:N),
+    /// threads (0 = auto), candidate_batch, parallel_nodes (true|false),
+    /// prune (true|false — roofline admission pruning on argmax paths).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -390,6 +396,7 @@ impl RunConfig {
             }
             "out_dir" => self.out_dir = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
+            "backend" => self.backend = BackendSel::parse(value)?,
             "threads" => {
                 self.rl.eval_threads =
                     value.parse().map_err(|_| format!("bad threads {value}"))?
@@ -508,6 +515,14 @@ mod tests {
         assert_eq!(c.rl.eval_threads, 4);
         assert_eq!(c.rl.candidate_batch, 16);
         assert!(c.parallel_nodes);
+        assert_eq!(c.backend, BackendSel::Auto);
+        c.apply("backend", "native").unwrap();
+        assert_eq!(c.backend, BackendSel::Native);
+        c.apply("backend", "pjrt").unwrap();
+        assert_eq!(c.backend, BackendSel::Pjrt);
+        c.apply("backend", "auto").unwrap();
+        assert_eq!(c.backend, BackendSel::Auto);
+        assert!(c.apply("backend", "tpu").is_err());
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("episodes", "xyz").is_err());
         assert!(c.apply("candidate_batch", "0").is_err());

@@ -8,10 +8,12 @@
 //! * **L3 (this crate)** — the coordinator: workload IR, analytical PPA
 //!   models, operator partitioning, the MDP environment, and the SAC +
 //!   PER + world-model/MPC optimization loop of Algorithm 1.
-//! * **L2/L1 (build-time Python)** — JAX networks built on a Pallas fused
-//!   linear kernel, AOT-lowered to HLO text in `artifacts/` and executed
-//!   here through the PJRT CPU client ([`runtime`]). Python never runs on
-//!   the optimization path.
+//! * **L2/L1 (NN backends)** — every network call goes through the
+//!   [`nn::backend::Backend`] trait: the pure-Rust [`nn::native`] kernels
+//!   (no artifacts needed; the default when none are built) or the JAX
+//!   networks built on a Pallas fused linear kernel, AOT-lowered to HLO
+//!   text in `artifacts/` and executed through the PJRT CPU client
+//!   ([`runtime`]). Python never runs on the optimization path.
 //!
 //! Entry points: [`rl::loop_::run_node`] optimizes one process node per
 //! Algorithm 1; [`report`] regenerates every table/figure of the paper's

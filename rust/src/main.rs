@@ -13,7 +13,7 @@
 //! Config keys (see config::RunConfig::apply): workload=<registry name>,
 //! phase=prefill|decode, seq_len=N, batch=N, mode=hp|lp, nodes=3,5,...,
 //! episodes=N, warmup=N, seed=N, granularity=op|group, kv=...,
-//! out_dir=..., artifacts_dir=...
+//! backend=native|pjrt|auto, out_dir=..., artifacts_dir=...
 //!
 //! (The image vendors no CLI crate; parsing is a ~40-line hand-rolled
 //! key=value scheme — DESIGN.md §4.)
@@ -26,9 +26,9 @@ use silicon_rl::config::RunConfig;
 use silicon_rl::error::{Context, Error, Result};
 use silicon_rl::eval::parallel;
 use silicon_rl::ir::registry;
+use silicon_rl::nn::backend;
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, baselines, SacAgent};
-use silicon_rl::runtime::Runtime;
 use silicon_rl::util::Rng;
 
 fn main() {
@@ -101,6 +101,7 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
                  \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
+                 \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
                  \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE\n"
             );
             println!("{}", report::workload_registry(registry::all()).to_text());
@@ -168,15 +169,10 @@ fn optimize(args: &[String]) -> Result<()> {
 }
 
 fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    println!(
-        "platform={} entrypoints={} stores={}",
-        runtime.platform(),
-        runtime.manifest.entrypoints.len(),
-        runtime.manifest.stores.len()
-    );
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {}", be.describe());
     let mut rng = Rng::new(cfg.seed);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng)?;
+    let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
     println!(
         "parameter store: {} arrays, {} elements",
         agent.store.data.len(),
@@ -220,9 +216,9 @@ fn optimize_nodes_parallel(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, 
         || (),
         |_, _i, (nm, rng)| -> Result<(u32, rl::NodeResult, f64)> {
             let t0 = std::time::Instant::now();
-            let runtime = Runtime::load(Path::new(&worker_cfg.artifacts_dir))?;
+            let be = backend::load(&worker_cfg.artifacts_dir, worker_cfg.backend)?;
             let mut rng = rng.clone();
-            let mut agent = SacAgent::new(runtime, worker_cfg.rl, &mut rng)?;
+            let mut agent = SacAgent::new(be, worker_cfg.rl, &mut rng)?;
             let result = rl::run_node(worker_cfg, *nm, &mut agent, &mut rng)?;
             Ok((*nm, result, t0.elapsed().as_secs_f64()))
         },
@@ -318,8 +314,9 @@ fn run_baselines(args: &[String]) -> Result<()> {
     // spends exactly one evaluation per budgeted episode
     let mut sac_cfg = cfg.clone();
     sac_cfg.rl.mpc_rerank = 0;
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    let mut agent = SacAgent::new(runtime, sac_cfg.rl, &mut rng)?;
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {}", be.describe());
+    let mut agent = SacAgent::new(be, sac_cfg.rl, &mut rng)?;
     let sac_r = rl::run_node(&sac_cfg, nm, &mut agent, &mut rng)?;
 
     let t = report::search_comparison(&[
@@ -385,10 +382,13 @@ fn workload_report(args: &[String]) -> Result<()> {
 
 fn info(args: &[String]) -> Result<()> {
     let cfg = parse_config(args)?;
-    let runtime = Runtime::load(Path::new(&cfg.artifacts_dir))?;
-    println!("platform: {}", runtime.platform());
-    println!("hyper: {:?}", runtime.manifest.hyper);
-    for (name, ep) in &runtime.manifest.entrypoints {
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {}", be.describe());
+    println!("hyper: {:?}", be.manifest().hyper);
+    if be.manifest().entrypoints.is_empty() {
+        println!("entrypoints: (native kernels; no lowered HLO needed)");
+    }
+    for (name, ep) in &be.manifest().entrypoints {
         println!(
             "  {name}: {} inputs, {} outputs ({})",
             ep.inputs.len(),

@@ -1,0 +1,366 @@
+//! The backend layer between the manifest contract and the search loop:
+//! a [`Backend`] trait exposing every entrypoint the SAC agent calls with
+//! borrowed-slice inputs and outputs (no string-keyed maps, no per-call
+//! output cloning), implemented by the PJRT runtime ([`PjrtBackend`]) and
+//! the pure-Rust executor ([`super::native::NativeBackend`]).
+//!
+//! Both backends operate on the same [`Store`] (initialized from the same
+//! manifest shapes/inits), so parameters and checkpoints are
+//! backend-portable: a store trained under PJRT can be driven by the
+//! native kernels and vice versa. Selection (`backend=native|pjrt|auto`)
+//! lives in [`BackendSel`]; `auto` prefers PJRT when AOT artifacts are
+//! present and executable, and falls back to native otherwise — which is
+//! what makes `silicon-rl optimize` runnable with no artifacts at all.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::nn::native::NativeBackend;
+use crate::nn::Store;
+use crate::runtime::{self, Manifest, Runtime};
+
+/// One batched actor forward's outputs, borrowed from backend scratch
+/// (valid until the next backend call).
+pub struct ActorOut<'a> {
+    /// MoE-mixed continuous means, `[b, ACT_DIM]` (pre-squash).
+    pub mu: &'a [f32],
+    /// Clamped log-stds, `[b, ACT_DIM]`.
+    pub log_std: &'a [f32],
+    /// Discrete mesh/SC logits, `[b, 20]`.
+    pub disc_logits: &'a [f32],
+}
+
+/// One PER minibatch for [`Backend::sac_update`], borrowed from the
+/// agent's marshalling buffers.
+pub struct SacBatch<'a> {
+    pub b: usize,
+    pub s: &'a [f32],
+    pub a: &'a [f32],
+    pub ad: &'a [f32],
+    pub r: &'a [f32],
+    pub s2: &'a [f32],
+    pub done: &'a [f32],
+    pub w: &'a [f32],
+    pub eps_cur: &'a [f32],
+    pub eps_next: &'a [f32],
+}
+
+/// Metrics from one SAC update step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpdateMetrics {
+    pub critic_loss: f64,
+    pub actor_loss: f64,
+    pub alpha_loss: f64,
+    pub alpha: f64,
+    pub entropy: f64,
+}
+
+/// [`Backend::sac_update`] result: metrics plus the |TD| priorities,
+/// borrowed from backend scratch.
+pub struct SacStepOut<'a> {
+    pub metrics: UpdateMetrics,
+    pub td_abs: &'a [f32],
+}
+
+/// Every NN computation the SAC+MoE search loop performs. Batch sizes are
+/// inferred from slice lengths; the native backend accepts any batch,
+/// the PJRT backend only the batch sizes baked into the lowered HLO
+/// (1, `mpc_batch`, `batch`).
+pub trait Backend {
+    /// `"native"` or `"pjrt"`.
+    fn kind(&self) -> &'static str;
+
+    /// One-line human description for run banners.
+    fn describe(&self) -> String;
+
+    fn manifest(&self) -> &Manifest;
+
+    /// Batched actor forward: `s` is `[b, 52]` row-major.
+    fn actor_fwd(&mut self, store: &Store, s: &[f32]) -> Result<ActorOut<'_>>;
+
+    /// World-model forward `ŝ' = s + f_ω([s;a])`: returns `[b, 52]`.
+    fn wm_fwd(&mut self, store: &Store, s: &[f32], a: &[f32]) -> Result<&[f32]>;
+
+    /// Surrogate PPA forward: returns `[b, 3]` (power, perf, area).
+    fn sur_fwd(&mut self, store: &Store, s: &[f32], a: &[f32]) -> Result<&[f32]>;
+
+    /// Fused SAC update (critics + actor + α + Polyak + Adam), writing
+    /// updated parameters back into `store`.
+    fn sac_update(&mut self, store: &mut Store, batch: &SacBatch) -> Result<SacStepOut<'_>>;
+
+    /// World-model MSE update; returns the loss.
+    fn wm_update(&mut self, store: &mut Store, s: &[f32], a: &[f32], s2: &[f32]) -> Result<f64>;
+
+    /// Surrogate MSE update; returns the loss.
+    fn sur_update(&mut self, store: &mut Store, s: &[f32], a: &[f32], ppa: &[f32]) -> Result<f64>;
+}
+
+/// Backend selection (`backend=` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendSel {
+    /// PJRT when artifacts exist and the PJRT runtime is linked;
+    /// native otherwise.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl BackendSel {
+    pub fn parse(value: &str) -> Result<BackendSel, String> {
+        match value {
+            "auto" => Ok(BackendSel::Auto),
+            "native" => Ok(BackendSel::Native),
+            "pjrt" => Ok(BackendSel::Pjrt),
+            _ => Err(format!("bad backend {value} (native|pjrt|auto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendSel::Auto => "auto",
+            BackendSel::Native => "native",
+            BackendSel::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Resolve a selection against an artifacts directory and construct the
+/// backend. The native path prefers the on-disk manifest when one exists
+/// (identical hyper/stores to the AOT build) and falls back to the
+/// builtin manifest, so `optimize` runs with no artifacts present.
+pub fn load(artifacts_dir: &str, sel: BackendSel) -> Result<Box<dyn Backend>> {
+    let manifest_path = Path::new(artifacts_dir).join("manifest.json");
+    let artifacts = manifest_path.exists();
+    match sel {
+        BackendSel::Pjrt => {
+            if !runtime::backend_available() {
+                bail!(
+                    "backend=pjrt requested but the PJRT runtime is unavailable \
+                     (offline xla stub); use backend=native"
+                );
+            }
+            Ok(Box::new(PjrtBackend::new(Runtime::load(Path::new(artifacts_dir))?)))
+        }
+        BackendSel::Auto if artifacts && runtime::backend_available() => {
+            Ok(Box::new(PjrtBackend::new(Runtime::load(Path::new(artifacts_dir))?)))
+        }
+        BackendSel::Native | BackendSel::Auto => {
+            let manifest = if artifacts {
+                let text = std::fs::read_to_string(&manifest_path)
+                    .with_context(|| format!("reading {}", manifest_path.display()))?;
+                Manifest::parse(&text).map_err(crate::error::Error::msg)?
+            } else {
+                Manifest::builtin()
+            };
+            Ok(Box::new(NativeBackend::new(manifest)?))
+        }
+    }
+}
+
+/// Convenience constructor used by tests/benches that already hold a
+/// loaded [`Runtime`].
+pub fn pjrt(runtime: Runtime) -> Box<dyn Backend> {
+    Box::new(PjrtBackend::new(runtime))
+}
+
+/// Convenience constructor for the artifact-free native backend.
+pub fn native_builtin() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::builtin()?))
+}
+
+/// Infer the batch size from a flat tensor length (shared by both
+/// backends' input validation).
+pub(crate) fn batch_of(len: usize, dim: usize, what: &str) -> Result<usize> {
+    if len == 0 || dim == 0 || len % dim != 0 {
+        bail!("{what}: length {len} not a positive multiple of {dim}");
+    }
+    Ok(len / dim)
+}
+
+// -------------------------------------------------------------------- PJRT
+
+/// [`Backend`] over the AOT-compiled HLO artifacts. Marshals borrowed
+/// slices into the string-keyed form the PJRT runtime expects and keeps
+/// per-entrypoint output buffers so callers receive borrowed views with
+/// the same shape contract as the native backend.
+pub struct PjrtBackend {
+    runtime: Runtime,
+    state_dim: usize,
+    act_dim: usize,
+    mu: Vec<f32>,
+    log_std: Vec<f32>,
+    disc: Vec<f32>,
+    fwd_out: Vec<f32>,
+    td_abs: Vec<f32>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> PjrtBackend {
+        let state_dim = runtime.manifest.hyper_or("state_dim", 52.0) as usize;
+        let act_dim = runtime.manifest.hyper_or("act_dim", 30.0) as usize;
+        PjrtBackend {
+            runtime,
+            state_dim,
+            act_dim,
+            mu: Vec::new(),
+            log_std: Vec::new(),
+            disc: Vec::new(),
+            fwd_out: Vec::new(),
+            td_abs: Vec::new(),
+        }
+    }
+
+    /// Move one named output out of a call result (no clone).
+    fn take_output(outs: &mut Vec<(String, Vec<f32>)>, name: &str) -> Result<Vec<f32>> {
+        let idx = outs
+            .iter()
+            .position(|(n, _)| n == name)
+            .with_context(|| format!("entrypoint output {name} missing"))?;
+        Ok(outs.swap_remove(idx).1)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "pjrt (platform {}, {} entrypoints, {} stores)",
+            self.runtime.platform(),
+            self.runtime.manifest.entrypoints.len(),
+            self.runtime.manifest.stores.len()
+        )
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.runtime.manifest
+    }
+
+    fn actor_fwd(&mut self, store: &Store, s: &[f32]) -> Result<ActorOut<'_>> {
+        let b = batch_of(s.len(), self.state_dim, "actor_fwd state")?;
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), s.to_vec());
+        let mut outs =
+            self.runtime.call(&format!("actor_fwd_b{b}"), store.resolver(&call))?;
+        self.mu = Self::take_output(&mut outs, "mu")?;
+        self.log_std = Self::take_output(&mut outs, "log_std")?;
+        self.disc = Self::take_output(&mut outs, "disc_logits")?;
+        Ok(ActorOut { mu: &self.mu, log_std: &self.log_std, disc_logits: &self.disc })
+    }
+
+    fn wm_fwd(&mut self, store: &Store, s: &[f32], a: &[f32]) -> Result<&[f32]> {
+        let b = batch_of(s.len(), self.state_dim, "wm_fwd state")?;
+        if a.len() != b * self.act_dim {
+            bail!("wm_fwd: action batch {} != state batch {b}", a.len() / self.act_dim);
+        }
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), s.to_vec());
+        call.insert("a".to_string(), a.to_vec());
+        let mut outs = self.runtime.call(&format!("wm_fwd_b{b}"), store.resolver(&call))?;
+        self.fwd_out = Self::take_output(&mut outs, "s_next")?;
+        Ok(&self.fwd_out)
+    }
+
+    fn sur_fwd(&mut self, store: &Store, s: &[f32], a: &[f32]) -> Result<&[f32]> {
+        let b = batch_of(s.len(), self.state_dim, "sur_fwd state")?;
+        if a.len() != b * self.act_dim {
+            bail!("sur_fwd: action batch {} != state batch {b}", a.len() / self.act_dim);
+        }
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), s.to_vec());
+        call.insert("a".to_string(), a.to_vec());
+        let mut outs = self.runtime.call(&format!("sur_fwd_b{b}"), store.resolver(&call))?;
+        self.fwd_out = Self::take_output(&mut outs, "ppa")?;
+        Ok(&self.fwd_out)
+    }
+
+    fn sac_update(&mut self, store: &mut Store, batch: &SacBatch) -> Result<SacStepOut<'_>> {
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), batch.s.to_vec());
+        call.insert("a".to_string(), batch.a.to_vec());
+        call.insert("ad".to_string(), batch.ad.to_vec());
+        call.insert("r".to_string(), batch.r.to_vec());
+        call.insert("s2".to_string(), batch.s2.to_vec());
+        call.insert("done".to_string(), batch.done.to_vec());
+        call.insert("w".to_string(), batch.w.to_vec());
+        call.insert("eps_cur".to_string(), batch.eps_cur.to_vec());
+        call.insert("eps_next".to_string(), batch.eps_next.to_vec());
+        let outs = self.runtime.call("sac_update", store.resolver(&call))?;
+        let mut metrics = store.absorb(outs)?;
+        self.td_abs = metrics.remove("metrics/td_abs").unwrap_or_default();
+        let scalar = |k: &str| {
+            metrics.get(k).and_then(|v| v.first()).copied().unwrap_or(0.0) as f64
+        };
+        Ok(SacStepOut {
+            metrics: UpdateMetrics {
+                critic_loss: scalar("metrics/critic_loss"),
+                actor_loss: scalar("metrics/actor_loss"),
+                alpha_loss: scalar("metrics/alpha_loss"),
+                alpha: scalar("metrics/alpha"),
+                entropy: scalar("metrics/entropy"),
+            },
+            td_abs: &self.td_abs,
+        })
+    }
+
+    fn wm_update(&mut self, store: &mut Store, s: &[f32], a: &[f32], s2: &[f32]) -> Result<f64> {
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), s.to_vec());
+        call.insert("a".to_string(), a.to_vec());
+        call.insert("s2".to_string(), s2.to_vec());
+        let outs = self.runtime.call("wm_update", store.resolver(&call))?;
+        let metrics = store.absorb(outs)?;
+        Ok(metrics
+            .get("metrics/loss")
+            .and_then(|v| v.first())
+            .copied()
+            .unwrap_or(f32::NAN) as f64)
+    }
+
+    fn sur_update(&mut self, store: &mut Store, s: &[f32], a: &[f32], ppa: &[f32]) -> Result<f64> {
+        let mut call = BTreeMap::new();
+        call.insert("s".to_string(), s.to_vec());
+        call.insert("a".to_string(), a.to_vec());
+        call.insert("ppa".to_string(), ppa.to_vec());
+        let outs = self.runtime.call("sur_update", store.resolver(&call))?;
+        let metrics = store.absorb(outs)?;
+        Ok(metrics
+            .get("metrics/loss")
+            .and_then(|v| v.first())
+            .copied()
+            .unwrap_or(f32::NAN) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_sel_parses() {
+        assert_eq!(BackendSel::parse("native").unwrap(), BackendSel::Native);
+        assert_eq!(BackendSel::parse("pjrt").unwrap(), BackendSel::Pjrt);
+        assert_eq!(BackendSel::parse("auto").unwrap(), BackendSel::Auto);
+        assert!(BackendSel::parse("cuda").is_err());
+        assert_eq!(BackendSel::default().name(), "auto");
+    }
+
+    #[test]
+    fn auto_without_artifacts_resolves_native() {
+        let b = load("/nonexistent/artifacts-dir", BackendSel::Auto).unwrap();
+        assert_eq!(b.kind(), "native");
+    }
+
+    #[test]
+    fn explicit_pjrt_without_runtime_errors() {
+        if runtime::backend_available() {
+            return; // real bindings linked: selection would be valid
+        }
+        assert!(load("/nonexistent/artifacts-dir", BackendSel::Pjrt).is_err());
+    }
+}

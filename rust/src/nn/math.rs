@@ -1,0 +1,310 @@
+//! f32 MLP kernels for the native backend: cache-blocked matmuls (forward
+//! and both backward forms), the tanh-approximate GELU the Pallas kernel
+//! bakes into the HLO (`python/compile/kernels/ref.py`), row softmax, and
+//! bias-corrected Adam over store slices.
+//!
+//! Weight layout matches the manifest: `W[k, n]` row-major (`[in, out]`),
+//! so the forward inner loop is an axpy over contiguous output rows —
+//! auto-vectorizable, and the `LB`-row panel blocking keeps the streamed
+//! weight panel resident in L1/L2 across the batch dimension.
+
+#![allow(clippy::needless_range_loop)] // kernel loops index several slices
+
+/// Panel height (rows of `W` per block) for the cache-blocked loops. A
+/// 64×256 f32 panel is 64 KiB — comfortably cache-resident while the
+/// batch dimension streams past it.
+const LB: usize = 64;
+
+/// tanh-approximate GELU constant: sqrt(2/π).
+pub const GELU_C: f32 = 0.797_884_56;
+
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d/dx of the tanh-approximate GELU (mirrors `gelu_grad_ref`).
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    let t = (GELU_C * (x + 0.044715 * x * x * x)).tanh();
+    let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * dt
+}
+
+/// `y[m,n] = x[m,k] · w[k,n] + b[n]` (w row-major `[in, out]`).
+pub fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(y.len(), m * n);
+    for row in y.chunks_exact_mut(n) {
+        row.copy_from_slice(b);
+    }
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + LB).min(k);
+        for i in 0..m {
+            let xr = &x[i * k..(i + 1) * k];
+            let yr = &mut y[i * n..(i + 1) * n];
+            for l in l0..l1 {
+                let xv = xr[l];
+                if xv != 0.0 {
+                    let wr = &w[l * n..(l + 1) * n];
+                    for j in 0..n {
+                        yr[j] += xv * wr[j];
+                    }
+                }
+            }
+        }
+        l0 = l1;
+    }
+}
+
+/// `dx[m,k] = g[m,n] · wᵀ` (w row-major `[k, n]`): per-element dot of a
+/// `g` row with a `w` row, both contiguous.
+pub fn matmul_wt(g: &[f32], w: &[f32], dx: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(dx.len(), m * k);
+    let mut i0 = 0;
+    while i0 < m {
+        let i1 = (i0 + LB / 2).min(m);
+        for l in 0..k {
+            let wr = &w[l * n..(l + 1) * n];
+            for i in i0..i1 {
+                let gr = &g[i * n..(i + 1) * n];
+                let mut acc = 0.0f32;
+                for j in 0..n {
+                    acc += gr[j] * wr[j];
+                }
+                dx[i * k + l] = acc;
+            }
+        }
+        i0 = i1;
+    }
+}
+
+/// `dw[k,n] = xᵀ · g`, `db[n] = Σ_rows g` (overwrites both).
+pub fn grad_w_b(
+    x: &[f32],
+    g: &[f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(dw.len(), k * n);
+    debug_assert_eq!(db.len(), n);
+    dw.fill(0.0);
+    db.fill(0.0);
+    let mut l0 = 0;
+    while l0 < k {
+        let l1 = (l0 + LB).min(k);
+        for i in 0..m {
+            let gr = &g[i * n..(i + 1) * n];
+            for l in l0..l1 {
+                let xv = x[i * k + l];
+                if xv != 0.0 {
+                    let dwr = &mut dw[l * n..(l + 1) * n];
+                    for j in 0..n {
+                        dwr[j] += xv * gr[j];
+                    }
+                }
+            }
+        }
+        l0 = l1;
+    }
+    for gr in g.chunks_exact(n) {
+        for j in 0..n {
+            db[j] += gr[j];
+        }
+    }
+}
+
+/// `h[i] = gelu(z[i])` (separate buffers so `z` survives for backward).
+pub fn gelu_map(z: &[f32], h: &mut [f32]) {
+    debug_assert_eq!(z.len(), h.len());
+    for (o, &v) in h.iter_mut().zip(z) {
+        *o = gelu(v);
+    }
+}
+
+/// `g[i] *= gelu'(z[i])` — activation backward, in place on the gradient.
+pub fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
+    debug_assert_eq!(g.len(), z.len());
+    for (gv, &zv) in g.iter_mut().zip(z) {
+        *gv *= gelu_grad(zv);
+    }
+}
+
+/// In-place softmax over each `n`-wide row (max-subtracted, like
+/// `jax.nn.softmax`).
+pub fn softmax_rows(z: &mut [f32], n: usize) {
+    debug_assert_eq!(z.len() % n, 0);
+    for row in z.chunks_exact_mut(n) {
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Adam hyperparameters + the shared bias-correction terms for one step.
+/// `corr1/corr2` are computed once per update from the *pre-increment*
+/// step counter (`t+1`), exactly as the lowered `adam_step` does.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamStep {
+    pub lr: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+    pub corr1: f32,
+    pub corr2: f32,
+}
+
+impl AdamStep {
+    pub fn new(lr: f64, b1: f64, b2: f64, eps: f64, step: f64) -> AdamStep {
+        let t = step + 1.0;
+        AdamStep {
+            lr: lr as f32,
+            b1: b1 as f32,
+            b2: b2 as f32,
+            eps: eps as f32,
+            corr1: (1.0 - b1.powf(t)) as f32,
+            corr2: (1.0 - b2.powf(t)) as f32,
+        }
+    }
+
+    /// `m ← β₁m + (1-β₁)g`, `v ← β₂v + (1-β₂)g²`,
+    /// `p ← p − lr·(m̂)/(√v̂ + ε)` — all in place.
+    pub fn apply(&self, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
+        debug_assert_eq!(p.len(), g.len());
+        debug_assert_eq!(p.len(), m.len());
+        debug_assert_eq!(p.len(), v.len());
+        for i in 0..p.len() {
+            m[i] = self.b1 * m[i] + (1.0 - self.b1) * g[i];
+            v[i] = self.b2 * v[i] + (1.0 - self.b2) * g[i] * g[i];
+            p[i] -= self.lr * (m[i] / self.corr1) / ((v[i] / self.corr2).sqrt() + self.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = b[j];
+                for l in 0..k {
+                    acc += x[i * k + l] * w[l * n + j];
+                }
+                y[i * n + j] = acc;
+            }
+        }
+        y
+    }
+
+    fn ramp(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 19) as f32 - 9.0) * scale).collect()
+    }
+
+    #[test]
+    fn matmul_matches_naive_across_blocking_boundaries() {
+        for (m, k, n) in [(1, 52, 256), (3, 82, 256), (7, 256, 120), (2, 130, 5)] {
+            let x = ramp(m * k, 0.05);
+            let w = ramp(k * n, 0.01);
+            let b = ramp(n, 0.1);
+            let mut y = vec![0.0f32; m * n];
+            matmul_bias(&x, &w, &b, &mut y, m, k, n);
+            let want = naive_matmul(&x, &w, &b, m, k, n);
+            for (a, e) in y.iter().zip(&want) {
+                assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_forms_match_naive() {
+        let (m, k, n) = (5, 70, 33);
+        let x = ramp(m * k, 0.03);
+        let w = ramp(k * n, 0.02);
+        let g = ramp(m * n, 0.04);
+        let mut dx = vec![0.0f32; m * k];
+        matmul_wt(&g, &w, &mut dx, m, k, n);
+        for i in 0..m {
+            for l in 0..k {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += g[i * n + j] * w[l * n + j];
+                }
+                assert!((dx[i * k + l] - acc).abs() < 1e-4);
+            }
+        }
+        let mut dw = vec![0.0f32; k * n];
+        let mut db = vec![0.0f32; n];
+        grad_w_b(&x, &g, &mut dw, &mut db, m, k, n);
+        for l in 0..k {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for i in 0..m {
+                    acc += x[i * k + l] * g[i * n + j];
+                }
+                assert!((dw[l * n + j] - acc).abs() < 1e-4);
+            }
+        }
+        for j in 0..n {
+            let acc: f32 = (0..m).map(|i| g[i * n + j]).sum();
+            assert!((db[j] - acc).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        // values from the python oracle (kernels/ref.py, f32)
+        assert!((gelu(0.0) - 0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-5);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-5);
+        // grad ≈ finite difference
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let h = 1e-3;
+            let fd = (gelu(x + h) - gelu(x - h)) / (2.0 * h);
+            assert!((gelu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut z = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        softmax_rows(&mut z, 4);
+        for row in z.chunks_exact(4) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "monotone logits");
+        }
+    }
+
+    #[test]
+    fn adam_step_first_iteration() {
+        // t=0: corr1=1-0.9=0.1, m=0.1g, m̂=g, v̂=g² → p -= lr·g/(|g|+eps)
+        let a = AdamStep::new(3e-4, 0.9, 0.999, 1e-8, 0.0);
+        let mut p = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        a.apply(&mut p, &[0.5], &mut m, &mut v);
+        assert!((p[0] - (1.0 - 3e-4)).abs() < 1e-6, "{}", p[0]);
+        assert!((m[0] - 0.05).abs() < 1e-7);
+        assert!((v[0] - 0.001 * 0.25).abs() < 1e-9);
+    }
+}

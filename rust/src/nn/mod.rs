@@ -2,11 +2,20 @@
 //! moments, Polyak targets, entropy temperature — all named per the
 //! manifest) and the sampling heads that turn actor outputs into actions.
 //!
-//! All the math (forward passes, gradients, Adam) runs inside the
-//! AOT-lowered HLO modules; this module owns the *data* between calls and
-//! the RNG-dependent sampling (kept Rust-side so seeds live in one place).
+//! The math (forward passes, gradients, Adam) runs behind the
+//! [`backend::Backend`] trait — either inside AOT-lowered HLO modules via
+//! PJRT or in the pure-Rust [`native`] kernels; this module owns the
+//! *data* between calls and the RNG-dependent sampling (kept Rust-side so
+//! seeds live in one place). The [`Store`] layout is backend-agnostic, so
+//! checkpoints are portable between backends.
 
+pub mod backend;
+pub mod math;
+pub mod native;
 pub mod policy;
+
+pub use backend::{Backend, BackendSel, UpdateMetrics};
+pub use native::NativeBackend;
 
 use std::collections::BTreeMap;
 
@@ -26,32 +35,59 @@ pub struct Store {
 impl Store {
     /// Initialize every entry per the manifest recipes (He for GELU-trunk
     /// weights, zeros for biases/moments, const for log α, copies for the
-    /// Polyak targets). Deterministic under `rng`'s seed.
+    /// Polyak targets). Deterministic under `rng`'s seed: He draws happen
+    /// in manifest store order, copies never consume randomness.
+    ///
+    /// Copy inits resolve by fixed point, so a copy whose source is
+    /// itself a copy appearing *later* in the manifest ordering (chained
+    /// copies) still materializes; only a missing or cyclic source
+    /// errors.
     pub fn from_manifest(m: &Manifest, rng: &mut Rng) -> Result<Store> {
         let mut store = Store::default();
-        // two passes: non-copies first so copy sources exist
-        for pass in 0..2 {
-            for si in &m.stores {
-                let is_copy = matches!(si.init, InitKind::Copy(_));
-                if (pass == 0) == is_copy {
-                    continue;
+        // non-copies first, in manifest order (fixes the RNG draw order)
+        for si in &m.stores {
+            let n: usize = si.shape.iter().product::<usize>().max(1);
+            let data = match &si.init {
+                InitKind::Copy(_) => continue,
+                InitKind::Zeros => vec![0.0; n],
+                InitKind::Const(c) => vec![*c as f32; n],
+                InitKind::He => {
+                    let fan_in = si.shape.first().copied().unwrap_or(1).max(1);
+                    let std = (2.0 / fan_in as f64).sqrt();
+                    (0..n).map(|_| (rng.gaussian() * std) as f32).collect()
                 }
-                let n: usize = si.shape.iter().product::<usize>().max(1);
-                let data = match &si.init {
-                    InitKind::Zeros => vec![0.0; n],
-                    InitKind::Const(c) => vec![*c as f32; n],
-                    InitKind::He => {
-                        let fan_in = si.shape.first().copied().unwrap_or(1).max(1);
-                        let std = (2.0 / fan_in as f64).sqrt();
-                        (0..n).map(|_| (rng.gaussian() * std) as f32).collect()
+            };
+            store.shapes.insert(si.name.clone(), si.shape.clone());
+            store.data.insert(si.name.clone(), data);
+        }
+        // copies to fixed point (each round materializes every copy whose
+        // source already exists; no progress ⇒ missing/cyclic sources)
+        let mut pending: Vec<&crate::runtime::StoreInit> = m
+            .stores
+            .iter()
+            .filter(|si| matches!(si.init, InitKind::Copy(_)))
+            .collect();
+        while !pending.is_empty() {
+            let before = pending.len();
+            pending.retain(|si| {
+                let InitKind::Copy(src) = &si.init else { return false };
+                match store.data.get(src) {
+                    Some(v) => {
+                        let data = v.clone();
+                        store.shapes.insert(si.name.clone(), si.shape.clone());
+                        store.data.insert(si.name.clone(), data);
+                        false
                     }
-                    InitKind::Copy(src) => match store.data.get(src) {
-                        Some(v) => v.clone(),
-                        None => bail!("copy source {src} missing for {}", si.name),
-                    },
-                };
-                store.shapes.insert(si.name.clone(), si.shape.clone());
-                store.data.insert(si.name.clone(), data);
+                    None => true,
+                }
+            });
+            if pending.len() == before {
+                let stuck: Vec<&str> =
+                    pending.iter().map(|si| si.name.as_str()).collect();
+                bail!(
+                    "copy inits with missing or cyclic sources: {}",
+                    stuck.join(", ")
+                );
             }
         }
         Ok(store)
@@ -192,5 +228,72 @@ mod tests {
         let mut s = store();
         assert!(s.set("actor/b1", vec![0.0; 3]).is_err());
         assert!(s.set("unknown", vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn chained_copy_inits_resolve() {
+        // Parsed store order is lexicographic ("b" before "c"), so the
+        // copy chain b→c→a only resolves with fixed-point resolution:
+        // b's source c is itself a copy appearing later in the pass.
+        const CHAIN: &str = r#"{
+          "entrypoints": {},
+          "stores": {
+            "a": {"shape": [4], "init": "he"},
+            "b": {"shape": [4], "init": "copy:c"},
+            "c": {"shape": [4], "init": "copy:a"}
+          },
+          "hyper": {}
+        }"#;
+        let m = Manifest::parse(CHAIN).unwrap();
+        let s = Store::from_manifest(&m, &mut Rng::new(3)).unwrap();
+        assert_eq!(s.get("b").unwrap(), s.get("a").unwrap());
+        assert_eq!(s.get("c").unwrap(), s.get("a").unwrap());
+        assert_eq!(s.shapes["b"], vec![4]);
+    }
+
+    #[test]
+    fn cyclic_or_missing_copy_sources_error() {
+        const CYCLE: &str = r#"{
+          "entrypoints": {},
+          "stores": {
+            "x": {"shape": [2], "init": "copy:y"},
+            "y": {"shape": [2], "init": "copy:x"}
+          },
+          "hyper": {}
+        }"#;
+        let m = Manifest::parse(CYCLE).unwrap();
+        let err = Store::from_manifest(&m, &mut Rng::new(1)).unwrap_err();
+        assert!(format!("{err}").contains("cyclic"), "{err}");
+
+        const MISSING: &str = r#"{
+          "entrypoints": {},
+          "stores": {"z": {"shape": [2], "init": "copy:nope"}},
+          "hyper": {}
+        }"#;
+        let m = Manifest::parse(MISSING).unwrap();
+        assert!(Store::from_manifest(&m, &mut Rng::new(1)).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_initializes_bit_identically_to_parsed_layout() {
+        // The builtin manifest is the native backend's store contract;
+        // seed-determinism across constructions is what makes native runs
+        // reproducible and PJRT checkpoints portable.
+        let m = Manifest::builtin();
+        let a = Store::from_manifest(&m, &mut Rng::new(42)).unwrap();
+        let b = Store::from_manifest(&Manifest::builtin(), &mut Rng::new(42)).unwrap();
+        assert_eq!(a.data, b.data);
+        assert_eq!(a.get("t1/Wa").unwrap(), a.get("c1/Wa").unwrap());
+        assert_eq!(a.get("t2/Wc").unwrap(), a.get("c2/Wc").unwrap());
+        assert!((a.get("log_alpha").unwrap()[0] - (-1.6094379)).abs() < 1e-6);
+        assert_eq!(a.get("step").unwrap(), &[0.0][..]);
+        // paper §5.3: policy network under 100 K weights (actor arrays)
+        let actor_elems: usize = a
+            .data
+            .iter()
+            .filter(|(k, _)| k.starts_with("actor/"))
+            .map(|(_, v)| v.len())
+            .sum();
+        assert!(actor_elems < 100_000, "{actor_elems}");
     }
 }

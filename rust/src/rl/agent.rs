@@ -1,12 +1,12 @@
-//! SAC agent driver: wraps the PJRT runtime + parameter store and drives
-//! the AOT-lowered `actor_fwd_*`, `sac_update`, `wm_fwd_*`/`wm_update`
-//! and `sur_*` computations. Also hosts the MPC planner (§3.16).
+//! SAC agent driver: owns the parameter [`Store`] and drives the NN
+//! [`Backend`] (native kernels or AOT HLO via PJRT) for actor forwards,
+//! the fused `sac_update`, world-model rollouts and surrogate scoring.
+//! Also hosts the MPC planner (§3.16).
 //!
-//! The division of labour: HLO does ALL differentiable math; this module
-//! does batching, RNG (noise tensors are inputs), priority bookkeeping
-//! and the MPC candidate search.
-
-use std::collections::BTreeMap;
+//! The division of labour: the backend does ALL differentiable math; this
+//! module does batching (through reusable marshalling buffers — no
+//! per-step heap traffic), RNG (noise tensors are inputs), priority
+//! bookkeeping and the MPC candidate search.
 
 use crate::arch::MeshConfig;
 use crate::config::RlConfig;
@@ -14,31 +14,63 @@ use crate::env::state::subset_index;
 use crate::env::{Action, ACT_DIM, SAC_STATE_DIM};
 use crate::error::Result;
 use crate::eval::{parallel, EvalScratch, EvalStats, Evaluator};
+use crate::nn::backend::{Backend, SacBatch};
 use crate::nn::{policy, Store};
 use crate::rl::per::{PerBuffer, Transition};
-use crate::runtime::Runtime;
 use crate::util::Rng;
 
-/// Metrics from one SAC update step.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct UpdateMetrics {
-    pub critic_loss: f64,
-    pub actor_loss: f64,
-    pub alpha_loss: f64,
-    pub alpha: f64,
-    pub entropy: f64,
+pub use crate::nn::UpdateMetrics;
+
+/// Reusable minibatch marshalling buffers (cleared and refilled each
+/// update; never reallocated after the first full batch).
+#[derive(Default)]
+struct BatchBufs {
+    s: Vec<f32>,
+    a: Vec<f32>,
+    ad: Vec<f32>,
+    r: Vec<f32>,
+    s2: Vec<f32>,
+    done: Vec<f32>,
+    ppa: Vec<f32>,
+    eps_cur: Vec<f32>,
+    eps_next: Vec<f32>,
+}
+
+/// Which replay tensors a backend update consumes (the rest are not
+/// marshalled).
+#[derive(Clone, Copy)]
+enum GatherSet {
+    Sac,
+    WorldModel,
+    Surrogate,
+}
+
+impl BatchBufs {
+    fn clear(&mut self) {
+        self.s.clear();
+        self.a.clear();
+        self.ad.clear();
+        self.r.clear();
+        self.s2.clear();
+        self.done.clear();
+        self.ppa.clear();
+    }
 }
 
 pub struct SacAgent {
-    pub runtime: Runtime,
+    pub backend: Box<dyn Backend>,
     pub store: Store,
     pub buffer: PerBuffer,
     pub cfg: RlConfig,
     batch: usize,
+    mpc_batch: usize,
     /// Last actor log-std head output (policy-entropy trace for Fig 3).
     pub last_entropy: f64,
     pub updates_done: usize,
     pub wm_trained: bool,
+    /// Surrogate heads trained at least once — gates the batched
+    /// surrogate scoring term in [`Self::mpc_refine`].
+    pub sur_trained: bool,
     /// MPC rerank admission-pruning counters since the last
     /// [`Self::take_eval_stats`]: (pruned, fully evaluated).
     prune_counters: (u64, u64),
@@ -46,26 +78,41 @@ pub struct SacAgent {
     /// placement-stage memos stay warm across exploitation episodes (the
     /// common SAC case the stage split targets).
     rerank_scratches: Vec<EvalScratch>,
+    bb: BatchBufs,
 }
 
 impl SacAgent {
-    pub fn new(runtime: Runtime, cfg: RlConfig, rng: &mut Rng) -> Result<Self> {
-        let store = Store::from_manifest(&runtime.manifest, rng)?;
-        let batch = runtime.manifest.hyper_or("batch", 256.0) as usize;
+    pub fn new(backend: Box<dyn Backend>, cfg: RlConfig, rng: &mut Rng) -> Result<Self> {
+        let store = Store::from_manifest(backend.manifest(), rng)?;
+        let batch = backend.manifest().hyper_or("batch", 256.0) as usize;
+        let mpc_batch = backend.manifest().hyper_or("mpc_batch", 64.0) as usize;
         let buffer =
             PerBuffer::new(cfg.buffer_capacity, cfg.per_alpha, cfg.per_beta0, cfg.per_beta_step);
         Ok(SacAgent {
-            runtime,
+            backend,
             store,
             buffer,
             cfg,
             batch,
+            mpc_batch,
             last_entropy: 0.0,
             updates_done: 0,
             wm_trained: false,
+            sur_trained: false,
             prune_counters: (0, 0),
             rerank_scratches: Vec::new(),
+            bb: BatchBufs::default(),
         })
+    }
+
+    /// SAC minibatch size (baked into the manifest).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// MPC candidate-set size K (baked into the manifest).
+    pub fn mpc_batch(&self) -> usize {
+        self.mpc_batch
     }
 
     /// Drain the rerank evaluation counters (admission pruning + stage
@@ -89,29 +136,25 @@ impl SacAgent {
 
     /// Policy action for one state (B=1 actor forward + Rust sampling).
     /// `stochastic` = sample (training) vs mean/argmax (exploitation).
-    pub fn act(&mut self, s: &[f32; SAC_STATE_DIM], stochastic: bool, rng: &mut Rng) -> Result<Action> {
-        let mut call_in = BTreeMap::new();
-        call_in.insert("s".to_string(), s.to_vec());
-        let outs = self.runtime.call("actor_fwd_b1", self.store.resolver(&call_in))?;
-        let get = |name: &str| {
-            outs.iter()
-                .find(|(n, _)| n == name)
-                .map(|(_, v)| v.clone())
-                .expect("actor output missing")
-        };
-        let mu = get("mu");
-        let log_std = get("log_std");
-        let disc = get("disc_logits");
-        self.last_entropy = policy::gaussian_entropy(&log_std);
+    /// Output tensors are consumed as borrowed, indexed slices — no
+    /// per-step cloning or name lookups.
+    pub fn act(
+        &mut self,
+        s: &[f32; SAC_STATE_DIM],
+        stochastic: bool,
+        rng: &mut Rng,
+    ) -> Result<Action> {
+        let out = self.backend.actor_fwd(&self.store, s.as_slice())?;
+        self.last_entropy = policy::gaussian_entropy(out.log_std);
         let cont = if stochastic {
-            policy::sample_continuous(&mu, &log_std, rng)
+            policy::sample_continuous(out.mu, out.log_std, rng)
         } else {
-            policy::mean_continuous(&mu)
+            policy::mean_continuous(out.mu)
         };
         let (deltas, _) = if stochastic {
-            policy::sample_discrete(&disc, rng)
+            policy::sample_discrete(out.disc_logits, rng)
         } else {
-            policy::argmax_discrete(&disc)
+            policy::argmax_discrete(out.disc_logits)
         };
         Ok(Action { cont, deltas })
     }
@@ -120,98 +163,78 @@ impl SacAgent {
         self.buffer.push(t);
     }
 
-    /// One SAC update (Algorithm 1 line 12): PER sample → `sac_update`
-    /// HLO (critics, actor, α, Polyak targets, Adam — all inside) →
-    /// write-back + priority refresh.
+    /// Fill the marshalling buffers from sampled replay indices — only
+    /// the tensors `set`'s update consumes.
+    fn gather(&mut self, idxs: &[usize], set: GatherSet) {
+        self.bb.clear();
+        for &i in idxs {
+            let t = self.buffer.get(i);
+            self.bb.s.extend_from_slice(&t.s);
+            self.bb.a.extend_from_slice(&t.a_cont);
+            match set {
+                GatherSet::Sac => {
+                    self.bb.ad.extend_from_slice(&t.a_disc);
+                    self.bb.r.push(t.r);
+                    self.bb.s2.extend_from_slice(&t.s2);
+                    self.bb.done.push(t.done);
+                }
+                GatherSet::WorldModel => self.bb.s2.extend_from_slice(&t.s2),
+                GatherSet::Surrogate => self.bb.ppa.extend_from_slice(&t.ppa),
+            }
+        }
+    }
+
+    /// One SAC update (Algorithm 1 line 12): PER sample → backend
+    /// `sac_update` (critics, actor, α, Polyak targets, Adam — all
+    /// inside) → priority refresh.
     pub fn update(&mut self, rng: &mut Rng) -> Result<UpdateMetrics> {
         let b = self.batch;
         if self.buffer.len() < b {
             return Ok(UpdateMetrics::default());
         }
         let (idxs, is_w) = self.buffer.sample(b, rng);
-
-        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
-        let mut a = Vec::with_capacity(b * ACT_DIM);
-        let mut ad = Vec::with_capacity(b * 20);
-        let mut r = Vec::with_capacity(b);
-        let mut s2 = Vec::with_capacity(b * SAC_STATE_DIM);
-        let mut done = Vec::with_capacity(b);
-        for &i in &idxs {
-            let t = self.buffer.get(i);
-            s.extend_from_slice(&t.s);
-            a.extend_from_slice(&t.a_cont);
-            ad.extend_from_slice(&t.a_disc);
-            r.push(t.r);
-            s2.extend_from_slice(&t.s2);
-            done.push(t.done);
+        self.gather(&idxs, GatherSet::Sac);
+        if self.bb.eps_cur.len() < b * ACT_DIM {
+            self.bb.eps_cur.resize(b * ACT_DIM, 0.0);
+            self.bb.eps_next.resize(b * ACT_DIM, 0.0);
         }
-        let mut eps_cur = vec![0f32; b * ACT_DIM];
-        let mut eps_next = vec![0f32; b * ACT_DIM];
-        rng.fill_gaussian_f32(&mut eps_cur);
-        rng.fill_gaussian_f32(&mut eps_next);
-
-        let mut batch = BTreeMap::new();
-        batch.insert("s".into(), s);
-        batch.insert("a".into(), a);
-        batch.insert("ad".into(), ad);
-        batch.insert("r".into(), r);
-        batch.insert("s2".into(), s2);
-        batch.insert("done".into(), done);
-        batch.insert("w".into(), is_w);
-        batch.insert("eps_cur".into(), eps_cur);
-        batch.insert("eps_next".into(), eps_next);
-
-        let outs = self.runtime.call("sac_update", self.store.resolver(&batch))?;
-        let metrics = self.store.absorb(outs)?;
-        let td_abs = metrics.get("metrics/td_abs").cloned().unwrap_or_default();
-        self.buffer.update_priorities(&idxs, &td_abs);
-        self.updates_done += 1;
-
-        let scalar = |k: &str| {
-            metrics
-                .get(k)
-                .and_then(|v| v.first())
-                .copied()
-                .unwrap_or(0.0) as f64
+        rng.fill_gaussian_f32(&mut self.bb.eps_cur[..b * ACT_DIM]);
+        rng.fill_gaussian_f32(&mut self.bb.eps_next[..b * ACT_DIM]);
+        let metrics = {
+            let bb = &self.bb;
+            let batch = SacBatch {
+                b,
+                s: &bb.s,
+                a: &bb.a,
+                ad: &bb.ad,
+                r: &bb.r,
+                s2: &bb.s2,
+                done: &bb.done,
+                w: &is_w,
+                eps_cur: &bb.eps_cur[..b * ACT_DIM],
+                eps_next: &bb.eps_next[..b * ACT_DIM],
+            };
+            let out = self.backend.sac_update(&mut self.store, &batch)?;
+            self.buffer.update_priorities(&idxs, out.td_abs);
+            out.metrics
         };
-        Ok(UpdateMetrics {
-            critic_loss: scalar("metrics/critic_loss"),
-            actor_loss: scalar("metrics/actor_loss"),
-            alpha_loss: scalar("metrics/alpha_loss"),
-            alpha: scalar("metrics/alpha"),
-            entropy: scalar("metrics/entropy"),
-        })
+        self.updates_done += 1;
+        Ok(metrics)
     }
 
     /// Train the world model on a replay minibatch (§3.16, half critic LR
-    /// — baked into the lowered `wm_update`).
+    /// — baked into the backend's `wm_update`).
     pub fn train_world_model(&mut self, rng: &mut Rng) -> Result<f64> {
         let b = self.batch;
         if self.buffer.len() < b {
             return Ok(f64::NAN);
         }
         let (idxs, _) = self.buffer.sample(b, rng);
-        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
-        let mut a = Vec::with_capacity(b * ACT_DIM);
-        let mut s2 = Vec::with_capacity(b * SAC_STATE_DIM);
-        for &i in &idxs {
-            let t = self.buffer.get(i);
-            s.extend_from_slice(&t.s);
-            a.extend_from_slice(&t.a_cont);
-            s2.extend_from_slice(&t.s2);
-        }
-        let mut batch = BTreeMap::new();
-        batch.insert("s".into(), s);
-        batch.insert("a".into(), a);
-        batch.insert("s2".into(), s2);
-        let outs = self.runtime.call("wm_update", self.store.resolver(&batch))?;
-        let metrics = self.store.absorb(outs)?;
+        self.gather(&idxs, GatherSet::WorldModel);
+        let bb = &self.bb;
+        let loss = self.backend.wm_update(&mut self.store, &bb.s, &bb.a, &bb.s2)?;
         self.wm_trained = true;
-        Ok(metrics
-            .get("metrics/loss")
-            .and_then(|v| v.first())
-            .copied()
-            .unwrap_or(f32::NAN) as f64)
+        Ok(loss)
     }
 
     /// Train the PPA surrogate heads (Eq 65).
@@ -221,34 +244,20 @@ impl SacAgent {
             return Ok(f64::NAN);
         }
         let (idxs, _) = self.buffer.sample(b, rng);
-        let mut s = Vec::with_capacity(b * SAC_STATE_DIM);
-        let mut a = Vec::with_capacity(b * ACT_DIM);
-        let mut ppa = Vec::with_capacity(b * 3);
-        for &i in &idxs {
-            let t = self.buffer.get(i);
-            s.extend_from_slice(&t.s);
-            a.extend_from_slice(&t.a_cont);
-            ppa.extend_from_slice(&t.ppa);
-        }
-        let mut batch = BTreeMap::new();
-        batch.insert("s".into(), s);
-        batch.insert("a".into(), a);
-        batch.insert("ppa".into(), ppa);
-        let outs = self.runtime.call("sur_update", self.store.resolver(&batch))?;
-        let metrics = self.store.absorb(outs)?;
-        Ok(metrics
-            .get("metrics/loss")
-            .and_then(|v| v.first())
-            .copied()
-            .unwrap_or(f32::NAN) as f64)
+        self.gather(&idxs, GatherSet::Surrogate);
+        let bb = &self.bb;
+        let loss = self.backend.sur_update(&mut self.store, &bb.s, &bb.a, &bb.ppa)?;
+        self.sur_trained = true;
+        Ok(loss)
     }
 
     /// MPC refinement (§3.16, Eqs 70–72): K candidate first actions
-    /// (policy mean + N(0, 0.3²) noise), rolled out H steps through the
-    /// world model with the policy providing future actions; surrogate
-    /// reward read from the predicted PPA-observation dims; best
-    /// candidate blended 70/30 with the SAC action on the TCC-parameter
-    /// dims (discrete mesh deltas stay SAC-only).
+    /// (policy mean + N(0, 0.3²) noise), scored by ONE batched surrogate
+    /// forward over the whole candidate set (Eq 72's r̂ term, when the
+    /// surrogate is trained) plus an H-step world-model rollout with the
+    /// policy providing future actions; best candidate blended 70/30 with
+    /// the SAC action on the TCC-parameter dims (discrete mesh deltas
+    /// stay SAC-only).
     ///
     /// With `eval_ctx = Some((evaluator, mesh))`, the surrogate's top
     /// `cfg.mpc_rerank` candidates are re-scored through the *real*
@@ -265,8 +274,9 @@ impl SacAgent {
         if !self.wm_trained {
             return Ok(sac_action.clone());
         }
-        // K is baked into the lowered wm_fwd_b64/actor_fwd_b64 batch dim
-        let k = self.runtime.manifest.hyper_or("mpc_batch", 64.0) as usize;
+        // K is baked into the lowered b64 entrypoints on the PJRT path;
+        // the native kernels accept any batch
+        let k = self.mpc_batch;
         let h = self.cfg.mpc_horizon;
         let gamma = self.cfg.gamma;
 
@@ -280,7 +290,7 @@ impl SacAgent {
             cand.push(c);
         }
 
-        // batched rollout: states [K, 52]
+        // batched rollout state/action tensors: [K, 52] / [K, 30]
         let mut states: Vec<f32> = Vec::with_capacity(k * SAC_STATE_DIM);
         for _ in 0..k {
             states.extend_from_slice(s);
@@ -289,13 +299,22 @@ impl SacAgent {
             cand.iter().flat_map(|c| c.iter().map(|&v| v as f32)).collect();
         let mut returns = vec![0.0f64; k];
 
+        // surrogate immediate term (Eq 72): one forward per candidate
+        // SET, not per candidate — [K, 3] (power, perf, area) predictions
+        if self.sur_trained {
+            let ppa = self.backend.sur_fwd(&self.store, &states, &actions)?;
+            for (c, ret) in returns.iter_mut().enumerate() {
+                let power = ppa[c * 3] as f64;
+                let perf = ppa[c * 3 + 1] as f64;
+                let area = ppa[c * 3 + 2] as f64;
+                *ret += perf - 0.3 * power - 0.2 * area;
+            }
+        }
+
         for step in 0..h {
             // ŝ_{k+1} = ŝ_k + f_ω([ŝ_k; a_k])  (Eq 71)
-            let mut call = BTreeMap::new();
-            call.insert("s".to_string(), states.clone());
-            call.insert("a".to_string(), actions.clone());
-            let outs = self.runtime.call("wm_fwd_b64", self.store.resolver(&call))?;
-            states = outs.into_iter().next().map(|(_, v)| v).unwrap();
+            let next = self.backend.wm_fwd(&self.store, &states, &actions)?;
+            states.copy_from_slice(next);
 
             // surrogate PPA reward from predicted observation dims (Eq 72)
             let pi = subset_index(51).unwrap(); // perf
@@ -311,16 +330,10 @@ impl SacAgent {
 
             if step + 1 < h {
                 // future actions from the policy at predicted states
-                let mut call = BTreeMap::new();
-                call.insert("s".to_string(), states.clone());
-                let outs =
-                    self.runtime.call("actor_fwd_b64", self.store.resolver(&call))?;
-                let mu = outs
-                    .iter()
-                    .find(|(n, _)| n == "mu")
-                    .map(|(_, v)| v.clone())
-                    .unwrap();
-                actions = mu.iter().map(|&m| m.tanh()).collect();
+                let out = self.backend.actor_fwd(&self.store, &states)?;
+                for (av, &m) in actions.iter_mut().zip(out.mu) {
+                    *av = m.tanh();
+                }
             }
         }
 
@@ -398,7 +411,8 @@ impl SacAgent {
 
 #[cfg(test)]
 mod tests {
-    // SacAgent requires compiled artifacts; its end-to-end behaviour is
-    // covered by rust/tests/runtime_e2e.rs. The pure helpers are tested in
-    // nn::policy and rl::per.
+    // SacAgent paths over the native backend are covered by
+    // rust/tests/native_backend.rs (golden, determinism) and, when AOT
+    // artifacts exist, by rust/tests/runtime_e2e.rs over PJRT. The pure
+    // helpers are tested in nn::policy and rl::per.
 }

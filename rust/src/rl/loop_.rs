@@ -224,12 +224,14 @@ pub fn run_node(
 }
 
 fn agent_batch(agent: &SacAgent) -> usize {
-    agent.runtime.manifest.hyper_or("batch", 256.0) as usize
+    agent.batch()
 }
 
 #[cfg(test)]
 mod tests {
-    // run_node requires compiled artifacts; exercised by
-    // rust/tests/runtime_e2e.rs and the benches. The evaluation layer it
-    // drives is covered in eval::* and tests/eval_parallel.rs.
+    // run_node over the artifact-free native backend is exercised by
+    // rust/tests/native_backend.rs (short runs, seed determinism); the
+    // PJRT path by rust/tests/runtime_e2e.rs when artifacts are built.
+    // The evaluation layer it drives is covered in eval::* and
+    // tests/eval_parallel.rs.
 }

@@ -141,6 +141,133 @@ impl Manifest {
     pub fn hyper_or(&self, key: &str, default: f64) -> f64 {
         self.hyper.get(key).copied().unwrap_or(default)
     }
+
+    /// The builtin manifest: the same stores (shapes + init recipes) and
+    /// Table-6 hyperparameters `python/compile/aot.py` writes into
+    /// `artifacts/manifest.json`, constructed without artifacts. Store
+    /// order matches a parsed manifest (lexicographic — aot.py dumps with
+    /// `sort_keys=True` and [`Json`] objects are `BTreeMap`s), so
+    /// [`crate::nn::Store::from_manifest`] draws He-init values in the
+    /// same RNG order and produces bit-identical parameters either way.
+    /// `entrypoints` is empty: the native backend needs no lowered HLO.
+    pub fn builtin() -> Manifest {
+        fn scalar(name: &str, init: InitKind) -> StoreInit {
+            StoreInit { name: name.to_string(), shape: vec![], init }
+        }
+        fn net(
+            stores: &mut Vec<StoreInit>,
+            prefix: &str,
+            shapes: &[(&str, &[usize])],
+        ) {
+            for (k, shape) in shapes {
+                let init =
+                    if k.starts_with('W') { InitKind::He } else { InitKind::Zeros };
+                stores.push(StoreInit {
+                    name: format!("{prefix}/{k}"),
+                    shape: shape.to_vec(),
+                    init,
+                });
+                for moment in ["m", "v"] {
+                    stores.push(StoreInit {
+                        name: format!("{prefix}_{moment}/{k}"),
+                        shape: shape.to_vec(),
+                        init: InitKind::Zeros,
+                    });
+                }
+            }
+        }
+
+        let actor: [(&str, &[usize]); 12] = [
+            ("W1", &[52, 256]),
+            ("b1", &[256]),
+            ("W5", &[256, 256]),
+            ("b5", &[256]),
+            ("W2", &[256, 20]),
+            ("b2", &[20]),
+            ("Wg", &[52, 4]),
+            ("bg", &[4]),
+            ("W3", &[256, 120]),
+            ("b3", &[120]),
+            ("W4", &[256, 120]),
+            ("b4", &[120]),
+        ];
+        let critic: [(&str, &[usize]); 6] = [
+            ("Wa", &[82, 256]),
+            ("ba", &[256]),
+            ("Wb", &[256, 256]),
+            ("bb", &[256]),
+            ("Wc", &[256, 1]),
+            ("bc", &[1]),
+        ];
+        let wm: [(&str, &[usize]); 6] = [
+            ("W1", &[82, 128]),
+            ("b1", &[128]),
+            ("W2", &[128, 64]),
+            ("b2", &[64]),
+            ("W3", &[64, 52]),
+            ("b3", &[52]),
+        ];
+        let sur: [(&str, &[usize]); 6] = [
+            ("W1", &[82, 128]),
+            ("b1", &[128]),
+            ("W2", &[128, 64]),
+            ("b2", &[64]),
+            ("W3", &[64, 3]),
+            ("b3", &[3]),
+        ];
+
+        let mut stores = Vec::new();
+        net(&mut stores, "actor", &actor);
+        net(&mut stores, "c1", &critic);
+        net(&mut stores, "c2", &critic);
+        for (tgt, src) in [("t1", "c1"), ("t2", "c2")] {
+            for (k, shape) in &critic {
+                stores.push(StoreInit {
+                    name: format!("{tgt}/{k}"),
+                    shape: shape.to_vec(),
+                    init: InitKind::Copy(format!("{src}/{k}")),
+                });
+            }
+        }
+        // log α starts at ln(0.2): initial entropy coefficient (Table 6)
+        stores.push(scalar("log_alpha", InitKind::Const(-1.6094379)));
+        stores.push(scalar("la_m", InitKind::Zeros));
+        stores.push(scalar("la_v", InitKind::Zeros));
+        stores.push(scalar("step", InitKind::Zeros));
+        net(&mut stores, "wm", &wm);
+        net(&mut stores, "sur", &sur);
+        stores.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let hyper: BTreeMap<String, f64> = [
+            ("state_dim", 52.0),
+            ("full_state_dim", 73.0),
+            ("act_dim", 30.0),
+            ("disc_dim", 20.0),
+            ("hidden", 256.0),
+            ("n_experts", 4.0),
+            ("lr", 3e-4),
+            ("gamma", 0.99),
+            ("tau", 0.005),
+            ("target_entropy", -30.0),
+            ("logstd_min", -20.0),
+            ("logstd_max", 2.0),
+            ("log_alpha_min", -10.0),
+            ("log_alpha_max", 10.0),
+            ("lambda_lb", 0.01),
+            ("wm_lr", 1.5e-4),
+            ("sur_lr", 3e-4),
+            ("batch", 256.0),
+            ("mpc_batch", 64.0),
+            ("adam_b1", 0.9),
+            ("adam_b2", 0.999),
+            ("adam_eps", 1e-8),
+        ]
+        .into_iter()
+        .map(|(k, v)| (k.to_string(), v))
+        .collect();
+
+        Manifest { entrypoints: BTreeMap::new(), stores, hyper }
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +313,48 @@ mod tests {
     fn rejects_bad_init() {
         let bad = SAMPLE.replace("\"he\"", "\"bogus\"");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_is_sorted_and_complete() {
+        let m = Manifest::builtin();
+        // sorted like a parsed manifest.json (He-draw order contract)
+        assert!(m.stores.windows(2).all(|w| w[0].name < w[1].name));
+        // 3 nets with Adam moments + 2 targets + alpha/step scalars + 2 mlp3s
+        assert_eq!(m.stores.len(), 12 * 3 + 6 * 3 * 2 + 6 * 2 + 4 + 6 * 3 * 2);
+        let find = |n: &str| m.stores.iter().find(|s| s.name == n).unwrap();
+        assert_eq!(find("actor/W1").shape, vec![52, 256]);
+        assert_eq!(find("actor/W1").init, InitKind::He);
+        assert_eq!(find("actor_m/W1").init, InitKind::Zeros);
+        assert_eq!(find("t1/Wa").init, InitKind::Copy("c1/Wa".into()));
+        assert_eq!(find("log_alpha").shape, Vec::<usize>::new());
+        assert_eq!(m.hyper_or("batch", 0.0), 256.0);
+        assert_eq!(m.hyper_or("state_dim", 0.0), 52.0);
+        assert!(m.entrypoints.is_empty());
+        // every sac state array has both Adam moments or is a target/scalar
+        for s in &m.stores {
+            assert!(!s.shape.iter().any(|&d| d == 0), "{} empty dim", s.name);
+        }
+    }
+
+    #[test]
+    fn builtin_matches_real_manifest_when_built() {
+        // When the AOT artifacts exist, the builtin manifest must agree
+        // with them exactly (names, shapes, init recipes, hyper): this is
+        // the backend-portability contract for checkpoints.
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        let Ok(text) = std::fs::read_to_string(path) else { return };
+        let real = Manifest::parse(&text).unwrap();
+        let builtin = Manifest::builtin();
+        assert_eq!(real.stores.len(), builtin.stores.len());
+        for (r, b) in real.stores.iter().zip(&builtin.stores) {
+            assert_eq!(r.name, b.name);
+            assert_eq!(r.shape, b.shape, "{}", r.name);
+            assert_eq!(r.init, b.init, "{}", r.name);
+        }
+        for (k, v) in &builtin.hyper {
+            assert_eq!(real.hyper_or(k, f64::NAN), *v, "hyper {k}");
+        }
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Native-backend integration tests: golden-pinned forward/update values
+//! from a fixed seed + the builtin manifest (generated from a numpy f32
+//! reference whose gradients were validated against JAX autodiff in f64),
+//! PJRT↔native parity when AOT artifacts are available, and full-loop
+//! seed determinism of `run_node` over the artifact-free native backend.
+
+use std::path::Path;
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
+use silicon_rl::nn::backend::{self, Backend, BackendSel, SacBatch};
+use silicon_rl::nn::{NativeBackend, Store};
+use silicon_rl::rl::{run_node, SacAgent};
+use silicon_rl::runtime::{self, Manifest};
+use silicon_rl::util::Rng;
+
+const B: usize = 8;
+
+fn close(got: f64, want: f64, tol: f64, what: &str) {
+    assert!(
+        (got - want).abs() <= tol,
+        "{what}: got {got}, want {want} (tol {tol})"
+    );
+}
+
+fn golden_store() -> Store {
+    Store::from_manifest(&Manifest::builtin(), &mut Rng::new(42)).unwrap()
+}
+
+/// The formula state used for forward goldens (no RNG: reproducible in
+/// the python generator without porting more of the rng).
+fn formula_state() -> Vec<f32> {
+    (0..SAC_STATE_DIM).map(|j| ((j * 37 % 19) as f32 - 9.0) / 10.0).collect()
+}
+
+fn formula_action() -> Vec<f32> {
+    (0..ACT_DIM).map(|j| ((j * 13 % 17) as f32 - 8.0) / 9.0).collect()
+}
+
+/// Deterministic SAC batch (B=8 form mirrored in the golden generator;
+/// the PJRT parity test builds it at the manifest batch size, which is
+/// baked into the lowered HLO).
+struct FormulaBatch {
+    n: usize,
+    s: Vec<f32>,
+    a: Vec<f32>,
+    ad: Vec<f32>,
+    r: Vec<f32>,
+    s2: Vec<f32>,
+    done: Vec<f32>,
+    w: Vec<f32>,
+    eps_cur: Vec<f32>,
+    eps_next: Vec<f32>,
+}
+
+fn formula_batch_n(n: usize) -> FormulaBatch {
+    let mut fb = FormulaBatch {
+        n,
+        s: Vec::new(),
+        a: Vec::new(),
+        ad: vec![0.0; n * 20],
+        r: Vec::new(),
+        s2: Vec::new(),
+        done: Vec::new(),
+        w: Vec::new(),
+        eps_cur: Vec::new(),
+        eps_next: Vec::new(),
+    };
+    for b in 0..n {
+        for j in 0..SAC_STATE_DIM {
+            fb.s.push(((b * 31 + j * 7) % 23) as f32 - 11.0);
+            fb.s2.push(((b * 13 + j * 11) % 29) as f32 - 14.0);
+        }
+        for j in 0..ACT_DIM {
+            fb.a.push((((b * 17 + j * 5) % 19) as f32 - 9.0) / 10.0);
+            fb.eps_cur.push((((b * 7 + j * 3) % 11) as f32 - 5.0) / 5.0);
+            fb.eps_next.push((((b * 5 + j * 7) % 13) as f32 - 6.0) / 6.0);
+        }
+        for hd in 0..4 {
+            fb.ad[b * 20 + hd * 5 + (b + hd) % 5] = 1.0;
+        }
+        fb.r.push((b % 5) as f32 / 5.0 - 0.4);
+        fb.done.push(if b % 8 == 7 { 1.0 } else { 0.0 });
+        fb.w.push(0.5 + (b % 4) as f32 * 0.25);
+    }
+    for v in fb.s.iter_mut() {
+        *v /= 12.0;
+    }
+    for v in fb.s2.iter_mut() {
+        *v /= 15.0;
+    }
+    fb
+}
+
+fn formula_batch() -> FormulaBatch {
+    formula_batch_n(B)
+}
+
+impl FormulaBatch {
+    fn as_sac(&self) -> SacBatch<'_> {
+        SacBatch {
+            b: self.n,
+            s: &self.s,
+            a: &self.a,
+            ad: &self.ad,
+            r: &self.r,
+            s2: &self.s2,
+            done: &self.done,
+            w: &self.w,
+            eps_cur: &self.eps_cur,
+            eps_next: &self.eps_next,
+        }
+    }
+}
+
+#[test]
+fn golden_store_init_from_seed_42() {
+    let store = golden_store();
+    let w1 = store.get("actor/W1").unwrap();
+    let want = [-0.052678239, 0.114133917, -0.010680910, -0.033688478];
+    for (i, &w) in want.iter().enumerate() {
+        close(w1[i] as f64, w, 2e-6, &format!("actor/W1[{i}]"));
+    }
+    let ca = store.get("c1/Wa").unwrap();
+    close(ca[0] as f64, 0.100990601, 2e-6, "c1/Wa[0]");
+    close(
+        store.get("wm/W1").unwrap()[0] as f64,
+        -0.126766846,
+        2e-6,
+        "wm/W1[0]",
+    );
+    close(
+        store.get("sur/W3").unwrap()[0] as f64,
+        0.318256617,
+        2e-6,
+        "sur/W3[0]",
+    );
+    assert_eq!(store.get("t1/Wa").unwrap(), store.get("c1/Wa").unwrap());
+}
+
+#[test]
+fn golden_actor_forward_b1() {
+    let store = golden_store();
+    let mut be = NativeBackend::builtin().unwrap();
+    let s = formula_state();
+    let out = be.actor_fwd(&store, &s).unwrap();
+    let want_mu = [-0.42056733, -0.31121859, 0.25972190, -0.09461465, -0.07781739];
+    let want_ls = [0.06612194, 0.06876212, 0.35633886, 0.25192374, -0.45657659];
+    let want_dl = [0.67383415, 0.37733328, -0.03722780, 0.27964407, 0.53762186];
+    for i in 0..5 {
+        close(out.mu[i] as f64, want_mu[i], 5e-4, &format!("mu[{i}]"));
+        close(out.log_std[i] as f64, want_ls[i], 5e-4, &format!("log_std[{i}]"));
+        close(out.disc_logits[i] as f64, want_dl[i], 5e-4, &format!("dl[{i}]"));
+    }
+}
+
+#[test]
+fn golden_wm_and_sur_forward() {
+    let store = golden_store();
+    let mut be = NativeBackend::builtin().unwrap();
+    let s = formula_state();
+    let a = formula_action();
+    let want_wm = [-0.92537057, 1.48420942, 1.09680748, 1.13664031, -0.02855498];
+    {
+        let out = be.wm_fwd(&store, &s, &a).unwrap();
+        for (i, &w) in want_wm.iter().enumerate() {
+            close(out[i] as f64, w, 1e-3, &format!("wm_fwd[{i}]"));
+        }
+    }
+    let want_sur = [0.16345751, 0.59510183, 0.08470958];
+    let out = be.sur_fwd(&store, &s, &a).unwrap();
+    for (i, &w) in want_sur.iter().enumerate() {
+        close(out[i] as f64, w, 1e-3, &format!("sur_fwd[{i}]"));
+    }
+}
+
+#[test]
+fn golden_sac_update_metrics_and_parameters() {
+    let mut store = golden_store();
+    let mut be = NativeBackend::builtin().unwrap();
+    let fb = formula_batch();
+    let (metrics, td) = {
+        let out = be.sac_update(&mut store, &fb.as_sac()).unwrap();
+        (out.metrics, out.td_abs.to_vec())
+    };
+    close(metrics.critic_loss, 10.092409, 0.02, "critic_loss");
+    close(metrics.actor_loss, -2.8521314, 0.02, "actor_loss");
+    close(metrics.alpha_loss, -78.378113, 0.1, "alpha_loss");
+    close(metrics.alpha, 0.19993998, 2e-4, "alpha");
+    close(metrics.entropy, 18.689980, 0.05, "entropy");
+    let want_td = [2.3433924, 3.1790543, 2.7728374, 4.5941362];
+    for (i, &w) in want_td.iter().enumerate() {
+        close(td[i] as f64, w, 0.02, &format!("td_abs[{i}]"));
+    }
+    close(store.get("log_alpha").unwrap()[0] as f64, -1.6097380, 1e-5, "log_alpha'");
+    assert_eq!(store.get("step").unwrap()[0], 1.0);
+    close(store.get("actor/b1").unwrap()[0] as f64, -2.9999955e-4, 2e-5, "actor/b1'");
+    close(store.get("c1/bc").unwrap()[0] as f64, 3.0000001e-4, 2e-5, "c1/bc'");
+    close(store.get("t1/Wa").unwrap()[0] as f64, 0.10099210, 1e-5, "t1/Wa'");
+}
+
+#[test]
+fn golden_wm_and_sur_update_losses() {
+    let mut store = golden_store();
+    let mut be = NativeBackend::builtin().unwrap();
+    let fb = formula_batch();
+    let loss = be.wm_update(&mut store, &fb.s, &fb.a, &fb.s2).unwrap();
+    close(loss, 47.006027, 0.05, "wm loss");
+    let ppa: Vec<f32> = (0..B).flat_map(|_| [0.4f32, 0.5, 0.3]).collect();
+    let loss = be.sur_update(&mut store, &fb.s, &fb.a, &ppa).unwrap();
+    close(loss, 1.3077564, 0.005, "sur loss");
+}
+
+/// Short Algorithm 1 run over the native backend with NO artifacts
+/// required, twice with the same seed: the per-episode logs and the best
+/// outcome must be bit-identical.
+#[test]
+fn native_run_node_is_seed_deterministic() {
+    let run = || {
+        let mut cfg = RunConfig::default();
+        cfg.backend = BackendSel::Native;
+        cfg.artifacts_dir = "/nonexistent-artifacts".into();
+        cfg.granularity = Granularity::Group;
+        cfg.rl.episodes_per_node = 30;
+        cfg.rl.warmup_steps = 10_000; // skip updates: keep the test fast
+        let be = backend::load(&cfg.artifacts_dir, cfg.backend).unwrap();
+        assert_eq!(be.kind(), "native");
+        let mut rng = Rng::new(5);
+        let mut agent = SacAgent::new(be, cfg.rl, &mut rng).unwrap();
+        run_node(&cfg, 3, &mut agent, &mut rng).unwrap()
+    };
+    let r1 = run();
+    let r2 = run();
+    assert_eq!(r1.episodes.len(), 30);
+    assert!(r1.feasible_count > 0, "no feasible configs in 30 episodes");
+    assert!(r1.best.is_some());
+    for (a, b) in r1.episodes.iter().zip(&r2.episodes) {
+        assert_eq!(a.reward.to_bits(), b.reward.to_bits(), "ep {}", a.episode);
+        assert_eq!(a.score.to_bits(), b.score.to_bits(), "ep {}", a.episode);
+        assert_eq!(a.entropy.to_bits(), b.entropy.to_bits(), "ep {}", a.episode);
+        assert_eq!((a.mesh_w, a.mesh_h), (b.mesh_w, b.mesh_h), "ep {}", a.episode);
+        assert_eq!(a.unique_configs, b.unique_configs, "ep {}", a.episode);
+    }
+    assert_eq!(
+        r1.best.as_ref().unwrap().episode,
+        r2.best.as_ref().unwrap().episode
+    );
+}
+
+/// PJRT ↔ native parity over the same manifest + store: gated on built
+/// artifacts and a linked PJRT runtime (skips cleanly otherwise).
+/// Tolerance-based — XLA and the native kernels accumulate f32 in
+/// different orders.
+#[test]
+fn pjrt_native_parity_when_artifacts_available() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() || !runtime::backend_available() {
+        eprintln!("parity: artifacts or PJRT unavailable; skipping");
+        return;
+    }
+    let adir = dir.to_string_lossy().to_string();
+    let mut pjrt = backend::load(&adir, BackendSel::Pjrt).unwrap();
+    let mut native = backend::load(&adir, BackendSel::Native).unwrap();
+    // identical manifests ⇒ identical seed-42 store init on both paths
+    let mut store_p = Store::from_manifest(pjrt.manifest(), &mut Rng::new(42)).unwrap();
+    let mut store_n = Store::from_manifest(native.manifest(), &mut Rng::new(42)).unwrap();
+    assert_eq!(store_p.data, store_n.data, "store init differs across manifests");
+
+    let s = formula_state();
+    {
+        let op = pjrt.actor_fwd(&store_p, &s).unwrap();
+        let mu_p = op.mu.to_vec();
+        let ls_p = op.log_std.to_vec();
+        let dl_p = op.disc_logits.to_vec();
+        let on = native.actor_fwd(&store_n, &s).unwrap();
+        for i in 0..ACT_DIM {
+            close(on.mu[i] as f64, mu_p[i] as f64, 1e-3, &format!("parity mu[{i}]"));
+            close(on.log_std[i] as f64, ls_p[i] as f64, 1e-3, &format!("parity ls[{i}]"));
+        }
+        for i in 0..20 {
+            close(on.disc_logits[i] as f64, dl_p[i] as f64, 1e-3, &format!("parity dl[{i}]"));
+        }
+    }
+
+    // one fused SAC step on the same batch (at the manifest batch size —
+    // baked into the lowered HLO): metrics and every updated store array
+    // agree within tolerance
+    let bsz = pjrt.manifest().hyper_or("batch", 256.0) as usize;
+    let fb = formula_batch_n(bsz);
+    let mp = pjrt.sac_update(&mut store_p, &fb.as_sac()).unwrap().metrics;
+    let mn = native.sac_update(&mut store_n, &fb.as_sac()).unwrap().metrics;
+    close(mn.critic_loss, mp.critic_loss, 0.05, "parity critic_loss");
+    close(mn.actor_loss, mp.actor_loss, 0.05, "parity actor_loss");
+    close(mn.alpha, mp.alpha, 1e-3, "parity alpha");
+    close(mn.entropy, mp.entropy, 0.1, "parity entropy");
+    for (name, vp) in &store_p.data {
+        let vn = &store_n.data[name];
+        assert_eq!(vp.len(), vn.len(), "{name} length");
+        let scale = vp.iter().fold(1.0f32, |m, v| m.max(v.abs())) as f64;
+        for (i, (&a, &b)) in vp.iter().zip(vn).enumerate() {
+            let d = (a as f64 - b as f64).abs();
+            assert!(
+                d <= 1e-4 + 1e-3 * scale,
+                "parity {name}[{i}]: pjrt {a} native {b}"
+            );
+        }
+    }
+
+    // world-model update losses agree
+    let lp = pjrt.wm_update(&mut store_p, &fb.s, &fb.a, &fb.s2).unwrap();
+    let ln = native.wm_update(&mut store_n, &fb.s, &fb.a, &fb.s2).unwrap();
+    close(ln, lp, 0.05, "parity wm loss");
+}

@@ -8,7 +8,7 @@ use std::path::{Path, PathBuf};
 
 use silicon_rl::config::{Granularity, RunConfig};
 use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
-use silicon_rl::nn::Store;
+use silicon_rl::nn::{backend, Store};
 use silicon_rl::rl::{run_node, SacAgent, Transition};
 use silicon_rl::runtime::{self, Runtime};
 use silicon_rl::util::Rng;
@@ -35,7 +35,7 @@ fn agent(seed: u64) -> Option<(SacAgent, Rng)> {
     let runtime = Runtime::load(&dir).expect("runtime loads");
     let mut rng = Rng::new(seed);
     let cfg = RunConfig::default().rl;
-    let agent = SacAgent::new(runtime, cfg, &mut rng).expect("agent init");
+    let agent = SacAgent::new(backend::pjrt(runtime), cfg, &mut rng).expect("agent init");
     Some((agent, rng))
 }
 
@@ -169,7 +169,7 @@ fn short_algorithm1_run_completes() {
     cfg.rl.episodes_per_node = 25;
     cfg.rl.warmup_steps = 10_000; // skip updates: keep the test fast
     let mut rng = Rng::new(5);
-    let mut agent = SacAgent::new(runtime, cfg.rl, &mut rng).unwrap();
+    let mut agent = SacAgent::new(backend::pjrt(runtime), cfg.rl, &mut rng).unwrap();
     let r = run_node(&cfg, 3, &mut agent, &mut rng).expect("run_node");
     assert_eq!(r.episodes.len(), 25);
     assert!(r.feasible_count > 0, "no feasible configs in 25 episodes");
