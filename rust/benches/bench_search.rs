@@ -7,22 +7,29 @@
 //!
 //! Budget: SILICON_RL_BENCH_EPISODES (default 1000; paper used ~4,600).
 //! Sweep budget: SILICON_RL_BENCH_SWEEP_EPISODES (default 60/node/seed).
+//! `BENCH_SMOKE=1` shrinks every budget to a CI-sized short mode; the
+//! vec-env lane sweep always emits `out/bench/BENCH_vecenv.json`.
 
 use std::path::Path;
+use std::time::{Duration, Instant};
 
 use silicon_rl::config::RunConfig;
+use silicon_rl::env::SAC_STATE_DIM;
 use silicon_rl::error::Result;
 use silicon_rl::eval::parallel;
-use silicon_rl::nn::backend;
+use silicon_rl::nn::backend::{self, Backend, BackendSel};
+use silicon_rl::nn::policy;
 use silicon_rl::report;
-use silicon_rl::rl::{self, baselines, SacAgent};
-use silicon_rl::util::Rng;
+use silicon_rl::rl::{self, baselines, SacAgent, Transition};
+use silicon_rl::util::bench::Bencher;
+use silicon_rl::util::{json, Rng};
 
 fn main() -> Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").ok().as_deref() == Some("1");
     let eps = std::env::var("SILICON_RL_BENCH_EPISODES")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(1000);
+        .unwrap_or(if smoke { 80 } else { 1000 });
     let mut cfg = RunConfig::default();
     cfg.rl.episodes_per_node = eps;
     cfg.rl.warmup_steps = 256.min(eps / 2 + 1);
@@ -77,7 +84,8 @@ fn main() -> Result<()> {
         );
     }
 
-    node_sweep_scaling()?;
+    node_sweep_scaling(smoke)?;
+    vecenv_lane_sweep(smoke)?;
     Ok(())
 }
 
@@ -86,11 +94,11 @@ fn main() -> Result<()> {
 /// the two produce bit-identical statistics, then reports wall-clock
 /// speedup (expect ≳3× on a 4-core machine: seeds × candidate sets both
 /// fan out through the same stateless evaluator).
-fn node_sweep_scaling() -> Result<()> {
+fn node_sweep_scaling(smoke: bool) -> Result<()> {
     let sweep_eps = std::env::var("SILICON_RL_BENCH_SWEEP_EPISODES")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(60);
+        .unwrap_or(if smoke { 16 } else { 60 });
     let n_seeds = 4;
     let workers = parallel::num_threads();
     let mut cfg = RunConfig::default();
@@ -147,5 +155,165 @@ fn node_sweep_scaling() -> Result<()> {
          speedup on {workers} workers",
         dt_serial / dt_par.max(1e-9)
     );
+    Ok(())
+}
+
+/// Fill the replay past the minibatch size so live-update runs train
+/// from the first vec-step at every lane count (fair amortization
+/// comparison).
+fn prefill_replay(agent: &mut SacAgent, rng: &mut Rng) {
+    for i in 0..320 {
+        // one-hot per discrete head, the same encoding real transitions
+        // carry through policy::onehot_from_deltas
+        let deltas: [i32; 4] = std::array::from_fn(|_| rng.below(5) as i32 - 2);
+        let mut t = Transition {
+            s: [0.0; SAC_STATE_DIM],
+            a_cont: [0.0; 30],
+            a_disc: policy::onehot_from_deltas(&deltas),
+            r: (i % 7) as f32 * 0.1 - 0.3,
+            s2: [0.0; SAC_STATE_DIM],
+            done: 0.0,
+            ppa: [0.4, 0.5, 0.3],
+        };
+        for v in t.s.iter_mut().chain(t.s2.iter_mut()) {
+            *v = rng.uniform() as f32;
+        }
+        for v in t.a_cont.iter_mut() {
+            *v = rng.uniform_in(-0.9, 0.9) as f32;
+        }
+        agent.push_transition(t);
+    }
+}
+
+/// Vec-env lane sweep (DESIGN.md §9): lane-steps/sec at lanes ∈
+/// {1, 4, 8, 16} over the native backend, in two modes — pure rollout
+/// (batched actor forward + parallel env fan-out) and live updates
+/// (adds the shared-step-counter amortization of SAC/wm/sur training) —
+/// plus the raw batched actor-forward efficiency. Emits
+/// `out/bench/BENCH_vecenv.json` in both normal and `BENCH_SMOKE` modes.
+fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
+    let lane_counts = [1usize, 4, 8, 16];
+    let threads = parallel::num_threads();
+    let rollout_eps = if smoke { 20 } else { 96 };
+    let live_eps = if smoke { 12 } else { 48 };
+
+    println!(
+        "\n== bench_search: vec-env lane sweep (native backend, {threads} workers) =="
+    );
+
+    let run_mode = |label: &str, episodes: usize, live: bool| -> Result<Vec<(String, f64)>> {
+        let mut rows = Vec::new();
+        for &lanes in &lane_counts {
+            let mut cfg = RunConfig::default();
+            cfg.backend = BackendSel::Native;
+            cfg.artifacts_dir = "/nonexistent-artifacts".into();
+            cfg.rl.episodes_per_node = episodes;
+            cfg.rl.warmup_steps = if live { 1 } else { 10_000 };
+            let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+            let mut rng = Rng::new(42);
+            let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
+            if live {
+                prefill_replay(&mut agent, &mut rng);
+            }
+            let jobs: Vec<rl::LaneSpec> = (0..lanes)
+                .map(|i| rl::LaneSpec {
+                    nm: 7,
+                    seed: rl::multiseed::derive_seed(cfg.seed, i),
+                })
+                .collect();
+            let t0 = Instant::now();
+            let results = rl::run_jobs(&cfg, &jobs, lanes, &mut agent, threads)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let sps = (lanes * episodes) as f64 / dt.max(1e-9);
+            let rs = rl::vecenv::reward_stats(&results);
+            println!(
+                "  [{label:<7}] lanes={lanes:<2} {sps:>8.1} lane-steps/s \
+                 ({dt:>6.2}s, {} episodes, reward mean {:.3})",
+                rs.count(),
+                rs.mean()
+            );
+            rows.push((format!("{label}_steps_per_s_lanes{lanes}"), sps));
+        }
+        Ok(rows)
+    };
+
+    let rollout = run_mode("rollout", rollout_eps, false)?;
+    let live = run_mode("live", live_eps, true)?;
+
+    // batched actor-forward efficiency: t(B=1)·B / t(B), measured on the
+    // raw backend (efficiency 1.0 = batching is free linear scaling)
+    let mut bench = Bencher {
+        warmup: Duration::from_millis(50),
+        budget: Duration::from_millis(if smoke { 250 } else { 1000 }),
+        max_samples: 2000,
+        results: Vec::new(),
+    };
+    let mut agent = {
+        let be = backend::load("/nonexistent-artifacts", BackendSel::Native)?;
+        SacAgent::new(be, RunConfig::default().rl, &mut Rng::new(42))?
+    };
+    let states: Vec<f32> = (0..16 * SAC_STATE_DIM)
+        .map(|j| ((j * 37 % 23) as f32 - 11.0) / 12.0)
+        .collect();
+    let t1 = bench
+        .bench("actor_fwd b=1", || {
+            agent.backend.actor_fwd(&agent.store, &states[..SAC_STATE_DIM]).unwrap();
+        })
+        .min_s();
+    let mut eff_rows: Vec<(String, f64)> = Vec::new();
+    for b in [4usize, 8, 16] {
+        let tb = bench
+            .bench(&format!("actor_fwd b={b}"), || {
+                agent
+                    .backend
+                    .actor_fwd(&agent.store, &states[..b * SAC_STATE_DIM])
+                    .unwrap();
+            })
+            .min_s();
+        eff_rows.push((format!("actor_fwd_batch_eff_b{b}"), t1 * b as f64 / tb.max(1e-12)));
+    }
+
+    let val = |rows: &[(String, f64)], suffix: &str| {
+        rows.iter().find(|(k, _)| k.ends_with(suffix)).map(|(_, v)| *v).unwrap_or(f64::NAN)
+    };
+    let rollout_8v1 = val(&rollout, "lanes8") / val(&rollout, "lanes1").max(1e-12);
+    let live_8v1 = val(&live, "lanes8") / val(&live, "lanes1").max(1e-12);
+    println!(
+        "vec-env speedup lanes=8 vs lanes=1: rollout {rollout_8v1:.2}x, live \
+         {live_8v1:.2}x"
+    );
+
+    let section = |rows: &[(String, f64)]| {
+        json::obj(rows.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect())
+    };
+    let record = json::obj(vec![
+        ("bench", json::s("bench_vecenv")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("workers", json::num(threads as f64)),
+        ("rollout_episodes", json::num(rollout_eps as f64)),
+        ("live_episodes", json::num(live_eps as f64)),
+        ("rollout", section(&rollout)),
+        ("live", section(&live)),
+        ("actor_fwd", section(&eff_rows)),
+        ("rollout_speedup_lanes8_vs_1", json::num(rollout_8v1)),
+        ("live_speedup_lanes8_vs_1", json::num(live_8v1)),
+    ]);
+    std::fs::create_dir_all("out/bench")?;
+    std::fs::write("out/bench/BENCH_vecenv.json", record.to_string_pretty())?;
+    println!("record: out/bench/BENCH_vecenv.json");
+
+    // acceptance gate: ≥2× lane-steps/sec at lanes=8 vs lanes=1 on the
+    // native backend. Checked after the record is written (the artifact
+    // survives a failure), and only in full-budget runs with parallel
+    // headroom — the CI smoke's tiny budgets make wall-clock ratios too
+    // noisy to gate a pipeline on (the JSON still records them).
+    if !smoke && threads >= 4 {
+        let best = rollout_8v1.max(live_8v1);
+        assert!(
+            best >= 2.0,
+            "vec-env lanes=8 speedup {best:.2}x < 2x on {threads} workers \
+             (rollout {rollout_8v1:.2}x, live {live_8v1:.2}x)"
+        );
+    }
     Ok(())
 }

@@ -212,6 +212,11 @@ pub struct RlConfig {
     /// Memo-cache capacity (design points) for Algorithm 1's episode
     /// loop; 0 disables caching.
     pub eval_cache: usize,
+    /// Vec-env width for the SAC drivers (`lanes=` / `--lanes=N`): how
+    /// many (node, seed) search lanes step in lockstep per batched actor
+    /// forward. 0 = auto (`min(jobs, cores)`); 1 = the serial loop.
+    /// Jobs beyond the width run in consecutive waves sharing the agent.
+    pub lanes: usize,
     /// Roofline admission pruning on argmax-only batch paths (baseline
     /// candidate rounds, MPC re-ranking, multiseed sweeps): candidates
     /// whose O(1) optimistic bound cannot beat the batch incumbent skip
@@ -246,6 +251,7 @@ impl Default for RlConfig {
             candidate_batch: 8,
             mpc_rerank: 8,
             eval_cache: 256,
+            lanes: 0,
             prune: false,
         }
     }
@@ -327,6 +333,18 @@ impl RunConfig {
         crate::eval::parallel::resolve(self.rl.eval_threads)
     }
 
+    /// Resolve the vec-env width for a job list: `lanes=0` (auto) takes
+    /// one lane per job up to the worker-thread count; an explicit width
+    /// is clamped to the job count (a wave can't be wider than its jobs).
+    pub fn resolve_lanes(&self, jobs: usize) -> usize {
+        let width = if self.rl.lanes == 0 {
+            crate::eval::parallel::num_threads()
+        } else {
+            self.rl.lanes
+        };
+        width.min(jobs).max(1)
+    }
+
     /// The resolved evaluation scenario: explicit `phase=` / `seq_len=` /
     /// `batch=` overrides on top of the workload's defaults.
     pub fn scenario(&self) -> Scenario {
@@ -343,7 +361,8 @@ impl RunConfig {
     /// (any registry name/alias), phase (prefill|decode), seq_len, batch,
     /// mode (hp|lp), nodes (comma list), out_dir, artifacts_dir, backend
     /// (native|pjrt|auto), kv (full|int8|int4|window:N|int8win:N),
-    /// threads (0 = auto), candidate_batch, parallel_nodes (true|false),
+    /// threads (0 = auto), lanes (vec-env width, 0 = auto),
+    /// candidate_batch, parallel_nodes (true|false),
     /// prune (true|false — roofline admission pruning on argmax paths).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
@@ -400,6 +419,10 @@ impl RunConfig {
             "threads" => {
                 self.rl.eval_threads =
                     value.parse().map_err(|_| format!("bad threads {value}"))?
+            }
+            "lanes" => {
+                self.rl.lanes =
+                    value.parse().map_err(|_| format!("bad lanes {value}"))?
             }
             "candidate_batch" => {
                 let n: usize =
@@ -528,6 +551,22 @@ mod tests {
         assert!(c.apply("candidate_batch", "0").is_err());
         assert!(c.apply("parallel_nodes", "maybe").is_err());
         assert!(c.apply("prune", "maybe").is_err());
+        assert_eq!(c.rl.lanes, 0);
+        c.apply("lanes", "4").unwrap();
+        assert_eq!(c.rl.lanes, 4);
+        assert!(c.apply("lanes", "many").is_err());
+    }
+
+    #[test]
+    fn lanes_resolve_auto_and_clamp() {
+        let mut c = RunConfig::default();
+        // auto: at least 1, never wider than the job list
+        assert_eq!(c.resolve_lanes(1), 1);
+        assert!(c.resolve_lanes(64) >= 1);
+        c.rl.lanes = 4;
+        assert_eq!(c.resolve_lanes(7), 4);
+        assert_eq!(c.resolve_lanes(2), 2);
+        assert_eq!(c.resolve_lanes(0), 1);
     }
 
     #[test]

@@ -133,6 +133,51 @@ where
     out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
 }
 
+/// Map `f` over *mutable* items with up to `threads` workers, preserving
+/// input order in the output — the vec-env shape: each item is one lane
+/// owning its own scratch/cache/RNG state, mutated in place while a
+/// result is collected. `f` receives `(item_index, item)`. Chunking is
+/// contiguous and outputs are written by input position, so results (and
+/// all per-item state mutations) are bit-identical to the `threads <= 1`
+/// serial loop — per-item work must not depend on other items, which
+/// `&mut` disjointness already enforces at compile time.
+pub fn scoped_chunk_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    if threads <= 1 || items.len() == 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    let chunk = items.len().div_ceil(threads.min(items.len()));
+    let n = items.len();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        for (ci, (in_chunk, out_chunk)) in
+            items.chunks_mut(chunk).zip(out.chunks_mut(chunk)).enumerate()
+        {
+            let base = ci * chunk;
+            let f = &f;
+            scope.spawn(move || {
+                for (j, (item, slot)) in
+                    in_chunk.iter_mut().zip(out_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(f(base + j, item));
+                }
+            });
+        }
+    });
+
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,6 +225,25 @@ mod tests {
     fn resolve_zero_is_auto() {
         assert!(resolve(0) >= 1);
         assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn mut_variant_matches_serial_and_mutates_items() {
+        let mut serial: Vec<u64> = (0..23).collect();
+        let mut par = serial.clone();
+        let r_s = scoped_chunk_map_mut(&mut serial, 1, |i, x| {
+            *x += 100;
+            *x * 10 + i as u64
+        });
+        let r_p = scoped_chunk_map_mut(&mut par, 4, |i, x| {
+            *x += 100;
+            *x * 10 + i as u64
+        });
+        assert_eq!(r_s, r_p);
+        assert_eq!(serial, par);
+        assert_eq!(serial[3], 103);
+        let mut empty: Vec<u8> = vec![];
+        assert!(scoped_chunk_map_mut(&mut empty, 4, |_, _| ()).is_empty());
     }
 
     #[test]

@@ -53,6 +53,11 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
             cfg.prune_explicit = true;
             continue;
         }
+        if let Some(v) = a.strip_prefix("--lanes=") {
+            // CLI alias for the `lanes=` config key (vec-env width)
+            cfg.apply("lanes", v).map_err(Error::msg)?;
+            continue;
+        }
         if let Some(path) = a.strip_prefix("config=") {
             cfg.load_file(path).map_err(Error::msg)?;
             continue;
@@ -100,6 +105,8 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      phase=prefill|decode seq_len=N batch=N (scenario axes)\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
                  \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
+                 \u{20}      lanes=N | --lanes=N (vec-env width, 0 = auto; seeds also\n\
+                 \u{20}      takes search=random|sac — sac drives nodes x seeds as lanes)\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
                  \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
                  \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE\n"
@@ -111,10 +118,14 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-/// Full Algorithm 1 run. Default: one shared agent, sequential nodes
-/// (Eq 50's cross-node transfer). With `parallel_nodes=true`: one agent
-/// per node, nodes fanned across worker threads — deterministic per node
-/// (each gets an index-derived RNG), reported in configured node order.
+/// Full Algorithm 1 run. Default (`lanes=0` auto on a multicore
+/// machine): the node sweep runs as lanes of ONE vec-env — a shared
+/// agent (Eq 50's cross-node transfer), batched actor forwards, per-lane
+/// derived seeds, updates amortized on the shared step counter
+/// (DESIGN.md §9). `lanes=1` falls back to the legacy serial loop (one
+/// shared agent, sequential nodes, one RNG stream). With
+/// `parallel_nodes=true`: one agent per node, nodes fanned across worker
+/// threads — deterministic per node, reported in configured node order.
 fn optimize(args: &[String]) -> Result<()> {
     let mut cfg = parse_config(args)?;
     // only the MPC rerank argmax prunes here — outputs are identical
@@ -132,8 +143,11 @@ fn optimize(args: &[String]) -> Result<()> {
         cfg.mode.name
     );
 
+    let lanes = cfg.resolve_lanes(cfg.nodes_nm.len());
     let results = if cfg.parallel_nodes {
         optimize_nodes_parallel(&cfg)?
+    } else if lanes > 1 {
+        optimize_nodes_vec(&cfg, lanes)?
     } else {
         optimize_nodes_serial(&cfg)?
     };
@@ -186,6 +200,53 @@ fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f6
         results.push((nm, result, t0.elapsed().as_secs_f64()));
     }
     Ok(results)
+}
+
+/// Vec-env node sweep: every configured node is one lane of a single
+/// vectorized rollout (waves of `lanes`), sharing ONE agent — so the
+/// sweep keeps Eq 50's cross-node transfer learning (unlike
+/// `parallel_nodes=true`) while the hot loop runs one batched actor
+/// forward per step and fans env transitions across cores. Per-lane
+/// rollouts are deterministic from their derived seeds; updates are
+/// amortized on the shared step counter (DESIGN.md §9).
+fn optimize_nodes_vec(cfg: &RunConfig, lanes: usize) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    println!("backend: {}", be.describe());
+    let mut rng = Rng::new(cfg.seed);
+    let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
+    println!(
+        "parameter store: {} arrays, {} elements",
+        agent.store.data.len(),
+        agent.store.total_elems()
+    );
+    let jobs: Vec<rl::LaneSpec> = cfg
+        .nodes_nm
+        .iter()
+        .enumerate()
+        .map(|(i, &nm)| rl::LaneSpec { nm, seed: rl::multiseed::derive_seed(cfg.seed, i) })
+        .collect();
+    let threads = cfg.eval_threads();
+    println!(
+        "vec-env sweep: {} node lanes in waves of {lanes} (shared agent, {} eval \
+         thread(s))",
+        jobs.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    let results = rl::run_jobs(cfg, &jobs, lanes, &mut agent, threads)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let rs = rl::vecenv::reward_stats(&results);
+    println!(
+        "vec-env: {} lane-episodes in {dt:.1}s ({:.0} steps/s), reward mean {:.3} \
+         std {:.3}",
+        rs.count(),
+        rs.count() as f64 / dt.max(1e-9),
+        rs.mean(),
+        rs.std()
+    );
+    // wall-clock is shared across concurrently-stepped lanes; report the
+    // sweep total per node
+    Ok(cfg.nodes_nm.iter().zip(results).map(|(&nm, r)| (nm, r, dt)).collect())
 }
 
 fn optimize_nodes_parallel(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
@@ -335,10 +396,13 @@ fn run_baselines(args: &[String]) -> Result<()> {
 /// search-variance picture the paper calls for.)
 fn run_multiseed(args: &[String]) -> Result<()> {
     let mut n_seeds = 5usize;
+    let mut search = "random".to_string();
     let mut rest = Vec::new();
     for a in args {
         if let Some(v) = a.strip_prefix("n_seeds=") {
             n_seeds = v.parse().context("bad n_seeds")?;
+        } else if let Some(v) = a.strip_prefix("search=") {
+            search = v.to_string();
         } else {
             rest.push(a.clone());
         }
@@ -350,15 +414,37 @@ fn run_multiseed(args: &[String]) -> Result<()> {
     if cfg.rl.prune {
         println!("roofline admission pruning: on (--no-prune for the exact path)");
     }
-    // seeds fan out across workers; each seed's search runs serially so
-    // the machine is not oversubscribed
     let threads = cfg.eval_threads();
-    let mut results = Vec::new();
-    for &nm in &cfg.nodes_nm {
-        results.push(rl::run_seeds_t(&cfg, nm, n_seeds, threads, |c, nm, rng| {
-            baselines::random_search_t(c, nm, rng, 1)
-        }));
-    }
+    let results = match search.as_str() {
+        "random" => {
+            // seeds fan out across workers; each seed's search runs
+            // serially so the machine is not oversubscribed
+            let mut rows = Vec::new();
+            for &nm in &cfg.nodes_nm {
+                rows.push(rl::run_seeds_t(&cfg, nm, n_seeds, threads, |c, nm, rng| {
+                    baselines::random_search_t(c, nm, rng, 1)
+                }));
+            }
+            rows
+        }
+        "sac" => {
+            // every (node, seed) point is one lane of a single vec-env:
+            // one shared agent, batched actor forwards, waves of `lanes`
+            let jobs = cfg.nodes_nm.len() * n_seeds;
+            let lanes = cfg.resolve_lanes(jobs);
+            let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+            println!("backend: {}", be.describe());
+            println!("vec-env: {jobs} (node, seed) lanes in waves of {lanes}");
+            println!(
+                "note: lanes share one agent (live learning), so per-seed results \
+                 are correlated — CI columns are not independent-run variance"
+            );
+            let mut rng = Rng::new(cfg.seed);
+            let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
+            rl::multiseed::run_seeds_vec(&cfg, n_seeds, &mut agent, lanes, threads)?
+        }
+        other => bail!("bad search {other} (random|sac)"),
+    };
     let t = rl::seeds_table(&results);
     println!("{}", t.to_text());
     std::fs::create_dir_all(&cfg.out_dir)?;

@@ -11,7 +11,7 @@
 use crate::arch::MeshConfig;
 use crate::config::RlConfig;
 use crate::env::state::subset_index;
-use crate::env::{Action, ACT_DIM, SAC_STATE_DIM};
+use crate::env::{Action, ACT_DIM, DISC_DIM, SAC_STATE_DIM};
 use crate::error::Result;
 use crate::eval::{parallel, EvalScratch, EvalStats, Evaluator};
 use crate::nn::backend::{Backend, SacBatch};
@@ -34,6 +34,16 @@ struct BatchBufs {
     ppa: Vec<f32>,
     eps_cur: Vec<f32>,
     eps_next: Vec<f32>,
+}
+
+/// One lane's action-selection branch for [`SacAgent::act_lanes`]: the
+/// ε-greedy coin is drawn by the rollout engine (from the lane's RNG,
+/// before the batched forward) so the per-lane RNG stream matches the
+/// serial loop's draw order exactly.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneDecision {
+    /// ε-branch: uniform action from the lane RNG, no policy sampling.
+    pub explore: bool,
 }
 
 /// Which replay tensors a backend update consumes (the rest are not
@@ -157,6 +167,48 @@ impl SacAgent {
             policy::argmax_discrete(out.disc_logits)
         };
         Ok(Action { cont, deltas })
+    }
+
+    /// Batched action selection for a vec-env step: ONE actor forward over
+    /// all `B` lane states (`states` is `[B, SAC_STATE_DIM]` row-major),
+    /// then per-lane sampling in lane order from each lane's own RNG.
+    /// Exploring lanes (`decisions[i].explore`) draw a uniform action from
+    /// their RNG instead — their forward row is computed but discarded,
+    /// which cannot perturb other rows (the native kernels accumulate each
+    /// row independently in a fixed order, so row `i` of a `B`-row forward
+    /// is bitwise identical to a B=1 forward of that row; pinned by
+    /// `tests/vecenv.rs`).
+    ///
+    /// Outputs are lane-indexed borrowed slices of the backend's batched
+    /// tensors — no per-lane marshalling clones. Returns per-lane
+    /// `(action, entropy)`, entropy `None` for exploring lanes (the
+    /// serial loop's `last_entropy` is only refreshed on policy actions;
+    /// callers keep the per-lane stale-entropy bookkeeping).
+    pub fn act_lanes(
+        &mut self,
+        states: &[f32],
+        decisions: &[LaneDecision],
+        rngs: &mut [Rng],
+    ) -> Result<Vec<(Action, Option<f64>)>> {
+        let b = decisions.len();
+        debug_assert_eq!(states.len(), b * SAC_STATE_DIM);
+        debug_assert_eq!(rngs.len(), b);
+        let out = self.backend.actor_fwd(&self.store, states)?;
+        let mut lanes = Vec::with_capacity(b);
+        for (i, (d, rng)) in decisions.iter().zip(rngs.iter_mut()).enumerate() {
+            if d.explore {
+                lanes.push((policy::uniform_action(rng), None));
+                continue;
+            }
+            let mu = &out.mu[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let log_std = &out.log_std[i * ACT_DIM..(i + 1) * ACT_DIM];
+            let dl = &out.disc_logits[i * DISC_DIM..(i + 1) * DISC_DIM];
+            let entropy = policy::gaussian_entropy(log_std);
+            let cont = policy::sample_continuous(mu, log_std, rng);
+            let (deltas, _) = policy::sample_discrete(dl, rng);
+            lanes.push((Action { cont, deltas }, Some(entropy)));
+        }
+        Ok(lanes)
     }
 
     pub fn push_transition(&mut self, t: Transition) {

@@ -142,6 +142,32 @@ impl EpisodeTracker {
     }
 }
 
+/// Marshal one evaluated episode into a replay [`Transition`] — shared by
+/// the serial loop and the vec-env so a lane's stored transitions are
+/// field-for-field the ones a serial run would store.
+pub(crate) fn make_transition(
+    s: [f32; crate::env::SAC_STATE_DIM],
+    action: &Action,
+    out: &crate::eval::EvalOutcome,
+    s2: [f32; crate::env::SAC_STATE_DIM],
+) -> Transition {
+    let a_cont: [f32; 30] = std::array::from_fn(|i| action.cont[i] as f32);
+    let a_disc = policy::onehot_from_deltas(&action.deltas);
+    Transition {
+        s,
+        a_cont,
+        a_disc,
+        r: out.reward.total as f32,
+        s2,
+        done: 0.0,
+        ppa: [
+            out.reward.p_power as f32,
+            out.reward.p_norm as f32,
+            out.reward.a_norm as f32,
+        ],
+    }
+}
+
 /// Run Algorithm 1 for one node with the SAC agent.
 pub fn run_node(
     cfg: &RunConfig,
@@ -182,21 +208,7 @@ pub fn run_node(
         let s2 = state::sac_subset(&out.full_state);
 
         // ---- store transition
-        let a_cont: [f32; 30] = std::array::from_fn(|i| action.cont[i] as f32);
-        let a_disc = policy::onehot_from_deltas(&action.deltas);
-        agent.push_transition(Transition {
-            s,
-            a_cont,
-            a_disc,
-            r: out.reward.total as f32,
-            s2,
-            done: 0.0,
-            ppa: [
-                out.reward.p_power as f32,
-                out.reward.p_norm as f32,
-                out.reward.a_norm as f32,
-            ],
-        });
+        agent.push_transition(make_transition(s, &action, &out, s2));
 
         // ---- learning (after warmup)
         if agent.buffer.len() >= rl.warmup_steps.max(agent_batch(agent)) {

@@ -1,7 +1,9 @@
 //! The RL optimizer (§3.11–§3.16, Algorithm 1): SAC driver over the
 //! AOT-compiled networks, prioritized replay, adaptive ε-greedy
-//! exploration, world-model MPC planning, the Pareto archive, and the
-//! random/grid search baselines of §4.14.
+//! exploration, world-model MPC planning, the Pareto archive, the
+//! random/grid search baselines of §4.14, and the vectorized multi-env
+//! rollout engine ([`vecenv`]) that steps (node, seed) lanes in lockstep
+//! through batched actor forwards (DESIGN.md §9).
 
 pub mod agent;
 pub mod baselines;
@@ -10,10 +12,12 @@ pub mod loop_;
 pub mod multiseed;
 pub mod pareto;
 pub mod per;
+pub mod vecenv;
 
-pub use agent::{SacAgent, UpdateMetrics};
+pub use agent::{LaneDecision, SacAgent, UpdateMetrics};
 pub use explore::EpsSchedule;
 pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
 pub use multiseed::{run_seeds, run_seeds_t, seeds_table, MultiSeedResult, SeedStat};
 pub use pareto::{ParetoArchive, ParetoPoint};
 pub use per::{PerBuffer, Transition};
+pub use vecenv::{run_jobs, run_vec, LaneSpec};

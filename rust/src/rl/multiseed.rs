@@ -103,7 +103,14 @@ pub fn run_seeds_t(
         },
     );
 
-    // deterministic reduction: walk results in seed order
+    aggregate(nm, seeds, &results)
+}
+
+/// Deterministic reduction over per-seed results: walk `results` in seed
+/// order (never completion order) and fold the Table-style statistics.
+/// Shared by the thread fan-out and the vec-env seed driver so both
+/// aggregate identically.
+pub fn aggregate(nm: u32, seeds: Vec<u64>, results: &[NodeResult]) -> MultiSeedResult {
     let mut toks = Vec::new();
     let mut power = Vec::new();
     let mut area = Vec::new();
@@ -112,7 +119,7 @@ pub fn run_seeds_t(
     let mut failures = 0usize;
     let mut pareto = ParetoArchive::new();
     let mut eval_stats = EvalStats::default();
-    for r in &results {
+    for r in results {
         feas.push(r.feasible_count as f64 / r.total_episodes.max(1) as f64);
         pareto.merge(&r.pareto);
         eval_stats.merge(&r.eval_stats);
@@ -138,6 +145,41 @@ pub fn run_seeds_t(
         pareto,
         eval_stats,
     }
+}
+
+/// Multi-seed SAC evaluation through the vec-env: every configured node ×
+/// derived seed becomes one lane of a single vectorized rollout (waves of
+/// `lanes`, one shared agent — seeds amortize each other's updates and
+/// batched forwards), aggregated per node in (node, seed) order. Seed
+/// derivation matches [`run_seeds_t`], so the per-node seed sets are
+/// identical to the thread-fan-out driver's.
+///
+/// Statistical caveat: with live learning the lanes share one policy and
+/// replay buffer, so per-seed outcomes are *correlated* — the CI columns
+/// of [`seeds_table`] quantify rollout-seed variance under shared
+/// learning, NOT independent-run variance, and are not comparable to the
+/// independent-seed `search=random` rows. For independent SAC runs, use
+/// `optimize seed=…` per seed (or disable updates with a large warmup).
+pub fn run_seeds_vec(
+    cfg: &RunConfig,
+    n_seeds: usize,
+    agent: &mut crate::rl::SacAgent,
+    lanes: usize,
+    threads: usize,
+) -> crate::error::Result<Vec<MultiSeedResult>> {
+    let seeds: Vec<u64> = (0..n_seeds).map(|i| derive_seed(cfg.seed, i)).collect();
+    let jobs: Vec<crate::rl::LaneSpec> = cfg
+        .nodes_nm
+        .iter()
+        .flat_map(|&nm| seeds.iter().map(move |&seed| crate::rl::LaneSpec { nm, seed }))
+        .collect();
+    let results = crate::rl::vecenv::run_jobs(cfg, &jobs, lanes, agent, threads)?;
+    Ok(cfg
+        .nodes_nm
+        .iter()
+        .zip(results.chunks(n_seeds.max(1)))
+        .map(|(&nm, chunk)| aggregate(nm, seeds.clone(), chunk))
+        .collect())
 }
 
 /// Render a multi-seed summary table (mean ± 95% CI).

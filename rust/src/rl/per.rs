@@ -109,6 +109,32 @@ impl PerBuffer {
         }
     }
 
+    /// Batched insert, consuming `ts` in iteration order. The vec-env
+    /// inserts one step's transitions lane-major through this, so the
+    /// buffer contents of a B-lane run interleave the B serial runs'
+    /// streams in a fixed, lane-count-independent order.
+    pub fn push_batch(&mut self, ts: impl IntoIterator<Item = Transition>) {
+        for t in ts {
+            self.push(t);
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current priority of slot `i` (test/diagnostic accessor).
+    pub fn priority(&self, i: usize) -> f64 {
+        self.tree.get(i)
+    }
+
+    /// Root of the sum-tree: Σ of every stored priority. Invariant pinned
+    /// by `tests/proptests.rs`: equals the leaf sum after any interleaving
+    /// of batched inserts, priority updates and samples.
+    pub fn priority_total(&self) -> f64 {
+        self.tree.total()
+    }
+
     /// Stochastic prioritized sample of `k` transitions. Returns indices
     /// and normalized importance-sampling weights (max weight = 1).
     /// Anneals β by `beta_step` per sampled transition.

@@ -1,0 +1,298 @@
+//! Vectorized multi-env rollout engine: step B search lanes — across
+//! seeds, process nodes and scenario points — in lockstep, with ONE
+//! batched actor forward per step instead of B sequential B=1 calls and
+//! the env transitions fanned out across worker threads.
+//!
+//! ## Lane determinism contract (DESIGN.md §9)
+//!
+//! Each lane owns *all* of its rollout state: RNG (seeded from the lane's
+//! own seed), ε schedule, walking mesh, outcome memo ([`EvalCache`]),
+//! worker scratch and episode tracker. The shared pieces are exactly the
+//! SAC agent's parameter [`crate::nn::Store`] (read by the batched
+//! forward) and the PER replay buffer (written lane-major). Because
+//!
+//! * the native kernels accumulate every output row independently in a
+//!   fixed order (row `i` of a `[B, ·]` forward is bitwise identical to a
+//!   B=1 forward of that row),
+//! * per-lane sampling draws from the lane's RNG in the same order as the
+//!   serial loop (ε coin → action sampling → MPC noise), and
+//! * env evaluation is a pure per-lane function fanned out by input index,
+//!
+//! a B-lane run with updates disabled is **bit-identical per lane** to B
+//! serial [`crate::rl::run_node`] runs driven by `Rng::new(lane_seed)`
+//! against the same initial store — episode logs, Pareto frontiers and
+//! the lane-major-interleaved replay contents all match exactly (pinned
+//! by `tests/vecenv.rs`).
+//!
+//! ## Update amortization
+//!
+//! With live learning, SAC / world-model / surrogate updates run on the
+//! **shared vec-step counter**: one SAC update per lockstep step (where B
+//! serial runs would perform B), and wm/sur updates at their configured
+//! per-step cadences. Update randomness draws from a dedicated update
+//! stream owned by the caller — never from lane RNGs — so rollout
+//! streams stay serial-identical and the only cross-lane coupling is the
+//! (intended) shared learning through the store. A full vec run is still
+//! deterministic from `(cfg.seed, lane seeds)` for any worker count.
+
+use crate::config::RunConfig;
+use crate::env::{state, Action, SAC_STATE_DIM};
+use crate::error::Result;
+use crate::eval::{parallel, EvalCache, EvalScratch, EvalStats, Evaluator};
+use crate::rl::agent::{LaneDecision, SacAgent};
+use crate::rl::explore::EpsSchedule;
+use crate::rl::loop_::{make_transition, EpisodeTracker};
+use crate::rl::NodeResult;
+use crate::util::stats::RunningStat;
+use crate::util::Rng;
+
+/// One lane's job: which process node to optimize and the seed of its
+/// private RNG stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneSpec {
+    pub nm: u32,
+    pub seed: u64,
+}
+
+/// One rollout lane: everything Algorithm 1 keeps per (node, seed) run.
+/// The lane's RNG lives in a parallel `Vec<Rng>` owned by [`run_vec`] so
+/// the batched action selection can borrow all lane RNGs as one slice
+/// while the lanes themselves stay untouched.
+struct Lane {
+    nm: u32,
+    eval: Evaluator,
+    mesh: crate::arch::MeshConfig,
+    scratch: EvalScratch,
+    cache: EvalCache,
+    eps: EpsSchedule,
+    tracker: EpisodeTracker,
+    s: [f32; SAC_STATE_DIM],
+    /// Mirrors the serial loop's stale-entropy bookkeeping: refreshed
+    /// only when the lane takes a policy action.
+    last_entropy: f64,
+    /// This lane's share of the shared agent's MPC-rerank counters
+    /// (admission pruning + persistent-scratch memos), drained right
+    /// after each of the lane's `mpc_refine` calls — so per-node stats
+    /// rows never absorb another lane's rerank work.
+    stats: EvalStats,
+}
+
+impl Lane {
+    fn new(cfg: &RunConfig, spec: &LaneSpec) -> Lane {
+        let eval = Evaluator::new(cfg, spec.nm);
+        let mesh0 = eval.initial_mesh();
+        let mut scratch = EvalScratch::default();
+        let mut cache = EvalCache::new(cfg.rl.eval_cache);
+        // bootstrap: evaluate the neutral action to get s₀ (no RNG)
+        let prev = cache.evaluate(&eval, &mesh0, &Action::neutral(), &mut scratch);
+        let mesh = prev.decoded.mesh;
+        let s = state::sac_subset(&prev.full_state);
+        Lane {
+            nm: spec.nm,
+            eval,
+            mesh,
+            scratch,
+            cache,
+            eps: EpsSchedule::new(cfg.rl.eps0, cfg.rl.eps_min, cfg.rl.episodes_per_node),
+            tracker: EpisodeTracker::new(cfg.rl.episodes_per_node),
+            s,
+            last_entropy: 0.0,
+            stats: EvalStats::default(),
+        }
+    }
+}
+
+/// Run Algorithm 1 for every lane of `specs` in lockstep: one batched
+/// actor forward per step, env transitions fanned out over up to
+/// `threads` workers, replay insertion in lane-major order, updates
+/// amortized on the shared step counter (drawing from `update_rng`).
+/// Returns one [`NodeResult`] per lane, in `specs` order.
+///
+/// Evaluation counters are attributed per lane: each lane's outcome
+/// memo and worker scratch fold into its own result, and the shared
+/// agent's MPC-rerank counters are drained (`take_eval_stats`) right
+/// after each lane's `mpc_refine` call — so per-node stats rows (the
+/// seeds table, Table 14) never absorb another lane's rerank work.
+pub fn run_vec(
+    cfg: &RunConfig,
+    specs: &[LaneSpec],
+    agent: &mut SacAgent,
+    update_rng: &mut Rng,
+    threads: usize,
+) -> Result<Vec<NodeResult>> {
+    if specs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let rl = &cfg.rl;
+    let b = specs.len();
+    let mut lanes: Vec<Lane> = specs.iter().map(|sp| Lane::new(cfg, sp)).collect();
+    let mut rngs: Vec<Rng> = specs.iter().map(|sp| Rng::new(sp.seed)).collect();
+    let mut states = vec![0.0f32; b * SAC_STATE_DIM];
+    let mut decisions = vec![LaneDecision { explore: false }; b];
+    let mut s2s = vec![[0.0f32; SAC_STATE_DIM]; b];
+
+    for t in 0..rl.episodes_per_node {
+        // ---- ε coins + state gather, lane-major (Algorithm 1 line 6)
+        for (i, lane) in lanes.iter().enumerate() {
+            decisions[i].explore = rngs[i].uniform() < lane.eps.eps;
+            states[i * SAC_STATE_DIM..(i + 1) * SAC_STATE_DIM].copy_from_slice(&lane.s);
+        }
+
+        // ---- ONE batched actor forward + per-lane sampling
+        let picked = agent.act_lanes(&states, &decisions, &mut rngs)?;
+
+        // ---- per-lane MPC refinement (line 14), lane order; each call is
+        // already batched over the K candidates internally
+        let mut actions = Vec::with_capacity(b);
+        for (i, (lane, (action, entropy))) in lanes.iter_mut().zip(picked).enumerate() {
+            if let Some(e) = entropy {
+                lane.last_entropy = e;
+            }
+            let action = if entropy.is_some() && lane.eps.eps < rl.mpc_eps_gate {
+                let ctx = Some((&lane.eval, &lane.mesh));
+                let refined = agent.mpc_refine(&lane.s, &action, ctx, &mut rngs[i])?;
+                // drain the rerank counters this call produced into the
+                // lane so per-node attribution stays exact
+                lane.stats.merge(&agent.take_eval_stats());
+                refined
+            } else {
+                action
+            };
+            actions.push(action);
+        }
+
+        // ---- env transitions: pure per-lane work fanned out by index
+        let actions = &actions;
+        let step_lane = |i: usize, lane: &mut Lane| {
+            let out = lane.cache.evaluate(&lane.eval, &lane.mesh, &actions[i], &mut lane.scratch);
+            lane.mesh = out.decoded.mesh; // the walk (line 8)
+            out
+        };
+        let outs = parallel::scoped_chunk_map_mut(&mut lanes, threads, step_lane);
+        for (s2, out) in s2s.iter_mut().zip(&outs) {
+            *s2 = state::sac_subset(&out.full_state);
+        }
+
+        // ---- replay insertion in fixed lane-major order
+        let step_rows = lanes.iter().zip(actions).zip(&outs).zip(&s2s).map(
+            |(((lane, action), out), s2)| make_transition(lane.s, action, out, *s2),
+        );
+        agent.buffer.push_batch(step_rows);
+
+        // ---- learning, amortized on the shared step counter: one SAC
+        // update per vec-step (B serial runs would perform B), wm/sur at
+        // their per-step cadences, all drawing from the update stream
+        if agent.buffer.len() >= rl.warmup_steps.max(agent.batch()) {
+            agent.update(update_rng)?;
+            if t % rl.wm_train_every == 0 {
+                agent.train_world_model(update_rng)?;
+            }
+            if t % rl.sur_train_every == 0 {
+                agent.train_surrogate(update_rng)?;
+            }
+        }
+
+        // ---- bookkeeping, lane-major
+        for ((lane, out), s2) in lanes.iter_mut().zip(&outs).zip(&s2s) {
+            lane.eps.step(lane.tracker.feasible_count > 0 || out.reward.feasible);
+            lane.tracker.record(t, out, lane.eps.eps, lane.last_entropy);
+            lane.s = *s2;
+        }
+    }
+
+    let results: Vec<NodeResult> = lanes
+        .into_iter()
+        .map(|lane| {
+            let mut r = lane.tracker.finish(lane.nm, rl.episodes_per_node);
+            r.eval_stats.absorb_outcome_cache(&lane.cache);
+            r.eval_stats.absorb_scratch(&lane.scratch);
+            r.eval_stats.merge(&lane.stats);
+            r
+        })
+        .collect();
+    Ok(results)
+}
+
+/// Drive an arbitrary job list through the vec-env in waves of at most
+/// `lanes` concurrent lanes, sharing `agent` (and its replay/learning
+/// state) across waves. Results come back in `jobs` order. With updates
+/// disabled the wave grouping is unobservable — every lane is
+/// self-contained — so `lanes=1` and `lanes=len(jobs)` produce
+/// bit-identical per-job results (pinned by `tests/vecenv.rs`).
+pub fn run_jobs(
+    cfg: &RunConfig,
+    jobs: &[LaneSpec],
+    lanes: usize,
+    agent: &mut SacAgent,
+    threads: usize,
+) -> Result<Vec<NodeResult>> {
+    // one update stream across all waves: wave boundaries must not reset
+    // the learning noise sequence
+    let mut update_rng = Rng::new(cfg.seed).fork(0x0ECE);
+    let mut results = Vec::with_capacity(jobs.len());
+    for wave in jobs.chunks(lanes.max(1)) {
+        results.extend(run_vec(cfg, wave, agent, &mut update_rng, threads)?);
+    }
+    Ok(results)
+}
+
+/// Cross-lane reward statistics over a vec run's episode logs, folded in
+/// lane-major order with f64 accumulation throughout — independent of
+/// worker count and of how jobs were grouped into waves.
+pub fn reward_stats(results: &[NodeResult]) -> RunningStat {
+    let mut rs = RunningStat::new();
+    for r in results {
+        for e in &r.episodes {
+            rs.push(e.reward);
+        }
+    }
+    rs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Granularity;
+    use crate::nn::backend;
+
+    fn tiny_cfg() -> RunConfig {
+        let mut cfg = RunConfig::default();
+        cfg.granularity = Granularity::Group;
+        cfg.rl.episodes_per_node = 6;
+        cfg.rl.warmup_steps = 10_000; // rollout only
+        cfg
+    }
+
+    fn agent(cfg: &RunConfig) -> SacAgent {
+        SacAgent::new(backend::native_builtin().unwrap(), cfg.rl, &mut Rng::new(42)).unwrap()
+    }
+
+    #[test]
+    fn vec_run_shapes_and_order() {
+        let cfg = tiny_cfg();
+        let specs = [
+            LaneSpec { nm: 7, seed: 1 },
+            LaneSpec { nm: 28, seed: 2 },
+            LaneSpec { nm: 7, seed: 3 },
+        ];
+        let mut ag = agent(&cfg);
+        let results = run_jobs(&cfg, &specs, 3, &mut ag, 2).unwrap();
+        assert_eq!(results.len(), 3);
+        for (r, sp) in results.iter().zip(&specs) {
+            assert_eq!(r.nm, sp.nm);
+            assert_eq!(r.episodes.len(), 6);
+        }
+        // lane-major replay: 3 lanes × 6 steps
+        assert_eq!(ag.buffer.len(), 18);
+        let rs = reward_stats(&results);
+        assert_eq!(rs.count(), 18);
+        assert!(rs.mean().is_finite());
+    }
+
+    #[test]
+    fn empty_job_list_is_ok() {
+        let cfg = tiny_cfg();
+        let mut ag = agent(&cfg);
+        assert!(run_jobs(&cfg, &[], 4, &mut ag, 2).unwrap().is_empty());
+    }
+}

@@ -54,6 +54,77 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     percentile_sorted(&sorted, p)
 }
 
+/// Order-stable running statistics (Welford's algorithm, f64 throughout).
+///
+/// The vec-env accumulates cross-lane reward/throughput traces through
+/// this — always in lane-major order — so aggregate statistics depend
+/// only on the sequence of pushed values, never on worker count or on
+/// how lanes were grouped into waves (pinned by `tests/vecenv.rs`).
+/// All accumulation is f64: summing episode rewards in f32 would make
+/// the aggregate drift with lane count once traces get long.
+#[derive(Debug, Clone, Copy)]
+pub struct RunningStat {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for RunningStat {
+    fn default() -> Self {
+        RunningStat::new()
+    }
+}
+
+impl RunningStat {
+    pub fn new() -> RunningStat {
+        RunningStat { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
 /// Pearson correlation coefficient (Fig 8, Table 13 lower half).
 pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
     assert_eq!(x.len(), y.len());
@@ -190,6 +261,21 @@ mod tests {
         let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
         assert!((percentile(&xs, 50.0) - 50.0).abs() < 1e-9);
         assert!((percentile(&xs, 90.0) - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_stat_matches_batch_summary() {
+        let xs = [3.0, -1.0, 4.0, 1.5, -9.0, 2.6];
+        let mut r = RunningStat::new();
+        for &x in &xs {
+            r.push(x);
+        }
+        let s = summary(&xs);
+        assert_eq!(r.count(), xs.len() as u64);
+        assert!((r.mean() - s.mean).abs() < 1e-12);
+        assert!((r.std() - s.std_dev).abs() < 1e-12);
+        assert_eq!((r.min(), r.max()), (s.min, s.max));
+        assert!(RunningStat::new().mean().is_nan());
     }
 
     #[test]

@@ -7,12 +7,13 @@
 use silicon_rl::arch::{derive_tiles, MeshConfig, ParamRanges, TccParams, TileLoad};
 use silicon_rl::arch::ranges::{QuantPolicy, Quantizer};
 use silicon_rl::config::{Granularity, RunConfig};
-use silicon_rl::env::{Action, Env, ACT_DIM, N_DISC};
+use silicon_rl::env::{Action, Env, ACT_DIM, N_DISC, SAC_STATE_DIM};
+use silicon_rl::eval::{EvalCache, EvalScratch, Evaluator};
 use silicon_rl::hazard::Mitigation;
 use silicon_rl::ir::{llama, PartitionClass};
 use silicon_rl::partition::{self, PartitionKnobs, Unit};
 use silicon_rl::ppa::PpaWeights;
-use silicon_rl::rl::{ParetoArchive, ParetoPoint};
+use silicon_rl::rl::{ParetoArchive, ParetoPoint, PerBuffer, Transition};
 use silicon_rl::util::{stats, Rng};
 
 fn random_units(rng: &mut Rng, n: usize) -> Vec<Unit> {
@@ -215,6 +216,172 @@ fn prop_stats_summary_consistency() {
         let g = stats::gini(&xs.iter().map(|x| x.abs()).collect::<Vec<_>>());
         assert!((0.0..=1.0).contains(&g));
     }
+}
+
+fn marker_transition(r: f32) -> Transition {
+    Transition {
+        s: [r; SAC_STATE_DIM],
+        a_cont: [0.0; ACT_DIM],
+        a_disc: [0.0; 20],
+        r,
+        s2: [0.0; SAC_STATE_DIM],
+        done: 0.0,
+        ppa: [0.0; 3],
+    }
+}
+
+/// PER invariants under interleaved batched (lane-major) inserts,
+/// priority refreshes and stratified samples — the vec-env access
+/// pattern: the sum-tree root always equals the leaf priority sum,
+/// priorities stay positive, sampled indices stay in range with
+/// normalized weights, the ring never exceeds capacity, and the whole
+/// op sequence is deterministic from the RNG seed.
+#[test]
+fn prop_per_invariants_under_interleaved_batch_insert_and_sample() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(0xBEEF + case);
+        let cap = 24 + rng.below(48);
+        let mut b = PerBuffer::new(cap, 0.6, 0.4, 0.0005);
+        // shadow receives the identical op sequence: identical trees must
+        // sample identically under identically-seeded RNGs
+        let mut shadow = PerBuffer::new(cap, 0.6, 0.4, 0.0005);
+        let mut pushed = 0usize;
+        for op in 0..80 {
+            match rng.below(3) {
+                0 => {
+                    // batched lane-major insert (possibly wrapping)
+                    let lanes = 1 + rng.below(6);
+                    b.push_batch((0..lanes).map(|l| {
+                        marker_transition((pushed + l) as f32)
+                    }));
+                    shadow.push_batch(
+                        (0..lanes).map(|l| marker_transition((pushed + l) as f32)),
+                    );
+                    pushed += lanes;
+                }
+                1 if !b.is_empty() => {
+                    let k = 1 + rng.below(6);
+                    let idxs: Vec<usize> =
+                        (0..k).map(|_| rng.below(b.len())).collect();
+                    let tds: Vec<f32> = (0..k)
+                        .map(|_| rng.uniform_in(0.0, 8.0) as f32)
+                        .collect();
+                    b.update_priorities(&idxs, &tds);
+                    shadow.update_priorities(&idxs, &tds);
+                }
+                _ if !b.is_empty() => {
+                    let mut sample_rng = Rng::new(case * 1000 + op);
+                    let (ix, w) = b.sample(8, &mut sample_rng);
+                    assert!(ix.iter().all(|&i| i < b.len()), "case {case} op {op}");
+                    assert!(w.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-6));
+                    assert!(w.iter().any(|&x| (x - 1.0).abs() < 1e-6));
+                    // deterministic given the RNG seed and op history
+                    let mut replay_rng = Rng::new(case * 1000 + op);
+                    let (ix2, _) = shadow.sample(8, &mut replay_rng);
+                    assert_eq!(ix, ix2, "case {case} op {op}: sample diverged");
+                }
+                _ => {}
+            }
+            // root == Σ leaves after every op, and the ring is bounded
+            let leaf_sum: f64 = (0..b.len()).map(|i| b.priority(i)).sum();
+            let total = b.priority_total();
+            assert!(
+                (total - leaf_sum).abs() <= 1e-9 * leaf_sum.max(1.0),
+                "case {case} op {op}: root {total} != leaf sum {leaf_sum}"
+            );
+            assert!(b.len() <= b.capacity());
+            assert!((0..b.len()).all(|i| b.priority(i) > 0.0));
+        }
+        assert!(b.len() == pushed.min(cap));
+    }
+}
+
+/// Ordering invariant of the stratified sampler: mass overwhelmingly on
+/// one leaf pulls most stratified draws to it, even after batched
+/// inserts wrapped the ring.
+#[test]
+fn prop_per_sampling_tracks_priority_mass_after_wraparound() {
+    let mut b = PerBuffer::new(32, 0.6, 0.4, 0.0);
+    // 48 inserts into capacity 32: the ring wrapped
+    b.push_batch((0..48).map(|i| marker_transition(i as f32)));
+    assert_eq!(b.len(), 32);
+    let idxs: Vec<usize> = (0..32).collect();
+    let mut tds = vec![0.01f32; 32];
+    tds[11] = 500.0;
+    b.update_priorities(&idxs, &tds);
+    let mut rng = Rng::new(9);
+    let mut hits = 0;
+    for _ in 0..40 {
+        let (ix, _) = b.sample(16, &mut rng);
+        hits += ix.iter().filter(|&&i| i == 11).count();
+    }
+    assert!(hits > 300, "dominant leaf sampled only {hits}/640");
+}
+
+/// Vec-env cache safety: lanes at different nodes and scenario points
+/// share raw `(mesh, action)` fingerprints, but a shared outcome memo
+/// must never replay across them — every cached result equals a fresh
+/// uncached evaluation bitwise, and same-lane repeats do hit.
+#[test]
+fn prop_shared_eval_cache_is_scenario_safe_across_lanes() {
+    let mk = |nm: u32, prefill: bool, seq: Option<u32>| {
+        let mut c = RunConfig::default();
+        c.granularity = Granularity::Group;
+        if prefill {
+            c.phase = silicon_rl::ir::Phase::Prefill;
+        }
+        c.seq_len = seq;
+        Evaluator::new(&c, nm)
+    };
+    // three "lanes": same workload, different node / phase / context
+    let evs = [mk(3, false, None), mk(3, true, None), mk(28, false, Some(4096))];
+    assert!(evs.iter().enumerate().all(|(i, a)| {
+        evs.iter().skip(i + 1).all(|b| a.eval_salt() != b.eval_salt())
+    }));
+
+    let mut rng = Rng::new(0xCAFE);
+    let pool: Vec<Action> = (0..4)
+        .map(|_| {
+            let mut a = Action::neutral();
+            for v in a.cont.iter_mut() {
+                *v = rng.uniform_in(-1.0, 1.0);
+            }
+            for d in a.deltas.iter_mut() {
+                *d = rng.below(5) as i32 - 2;
+            }
+            a
+        })
+        .collect();
+
+    let mut cache = EvalCache::new(64);
+    let mut scratch = EvalScratch::default();
+    for round in 0..36 {
+        let ev = &evs[rng.below(evs.len())];
+        let a = &pool[rng.below(pool.len())];
+        let mesh = ev.initial_mesh();
+        let cached = cache.evaluate(ev, &mesh, a, &mut scratch);
+        let fresh = ev.evaluate(&mesh, a, &mut EvalScratch::default());
+        assert_eq!(
+            cached.reward.total.to_bits(),
+            fresh.reward.total.to_bits(),
+            "round {round}: cached reward != fresh"
+        );
+        assert_eq!(
+            cached.reward.score.to_bits(),
+            fresh.reward.score.to_bits(),
+            "round {round}: cached score != fresh"
+        );
+        assert_eq!(
+            cached.ppa.tokens_per_s.to_bits(),
+            fresh.ppa.tokens_per_s.to_bits(),
+            "round {round}: cached throughput != fresh"
+        );
+        assert_eq!(cached.decoded.mesh, fresh.decoded.mesh, "round {round}");
+    }
+    // the pool is small: same-lane repeats must have hit, and misses are
+    // bounded by |lanes| × |pool| distinct salted keys
+    assert!(cache.hits > 0, "no cache hits across 36 rounds");
+    assert!(cache.misses <= (evs.len() * pool.len()) as u64);
 }
 
 #[test]
