@@ -1,0 +1,194 @@
+//! Per-kernel scalar-vs-SIMD throughput (DESIGN.md §10): the seven
+//! dispatched NN kernels at the SAC hot-loop shapes (B=1 actor forward,
+//! K=64 MPC surrogate batch, B=256 fused update), plus the f64
+//! placement-scoring kernel the evaluator dispatches. Reports ns/op and
+//! GFLOP/s per kernel per mode and emits `out/bench/BENCH_kernels.json`
+//! in both normal and `BENCH_SMOKE=1` modes.
+//!
+//! The bench binary is its own process, so it may flip the process-
+//! global kernel path freely (the same rule the `kernel_parity` test
+//! binary relies on); each measurement installs its mode up front.
+
+use silicon_rl::arch::MeshConfig;
+use silicon_rl::nn::kernels::{self, KernelSel};
+use silicon_rl::nn::math::{self, AdamStep};
+use silicon_rl::noc::{MeshGeom, ScoreParams};
+use silicon_rl::util::bench::Bencher;
+use silicon_rl::util::{json, Rng};
+
+/// (m, k, n) matmul shapes of Algorithm 1's NN hot loop.
+const MM_SHAPES: [(usize, usize, usize); 5] = [
+    (1, 52, 256),    // actor forward, B=1 (policy latency)
+    (1, 256, 256),   // hidden layer, B=1
+    (64, 82, 256),   // MPC surrogate scoring, K=64
+    (256, 256, 256), // fused SAC update, hidden
+    (256, 256, 120), // fused SAC update, joint-action head
+];
+
+fn filled(len: usize, rng: &mut Rng, lo: f64, hi: f64) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform_in(lo, hi) as f32).collect()
+}
+
+/// One full pass over every kernel in mode `sel`; returns
+/// (metric name, mean seconds, flops per op) rows.
+fn bench_mode(sel: KernelSel, b: &mut Bencher) -> Vec<(String, f64, f64)> {
+    kernels::set_global(sel);
+    let tag = kernels::active().name();
+    let mut rng = Rng::new(7);
+    let mut rows = Vec::new();
+
+    for (m, k, n) in MM_SHAPES {
+        let x = filled(m * k, &mut rng, -1.0, 1.0);
+        let w = filled(k * n, &mut rng, -0.5, 0.5);
+        let bias = filled(n, &mut rng, -0.2, 0.2);
+        let dy = filled(m * n, &mut rng, -1.0, 1.0);
+        let mut y = vec![0.0f32; m * n];
+        let mut dx = vec![0.0f32; m * k];
+        let mut dw = vec![0.0f32; k * n];
+        let mut db = vec![0.0f32; n];
+        let flops = 2.0 * (m * k * n) as f64;
+
+        let t = b
+            .bench(&format!("[{tag}] matmul_bias {m}x{k}x{n}"), || {
+                math::matmul_bias(&x, &w, &bias, &mut y, m, k, n)
+            })
+            .mean_s();
+        rows.push((format!("matmul_bias_{m}x{k}x{n}_s"), t, flops));
+        let t = b
+            .bench(&format!("[{tag}] matmul_wt {m}x{k}x{n}"), || {
+                math::matmul_wt(&dy, &w, &mut dx, m, k, n)
+            })
+            .mean_s();
+        rows.push((format!("matmul_wt_{m}x{k}x{n}_s"), t, flops));
+        let t = b
+            .bench(&format!("[{tag}] grad_w_b {m}x{k}x{n}"), || {
+                math::grad_w_b(&x, &dy, &mut dw, &mut db, m, k, n)
+            })
+            .mean_s();
+        rows.push((format!("grad_w_b_{m}x{k}x{n}_s"), t, flops));
+    }
+
+    // elementwise kernels at the fused-update activation size (B=256 x HID)
+    let len = 256 * 256;
+    let z = filled(len, &mut rng, -4.0, 4.0);
+    let mut h = vec![0.0f32; len];
+    let t = b
+        .bench(&format!("[{tag}] gelu_map {len}"), || math::gelu_map(&z, &mut h))
+        .mean_s();
+    rows.push((format!("gelu_map_{len}_s"), t, len as f64));
+    let mut g = filled(len, &mut rng, -1.0, 1.0);
+    let t = b
+        .bench(&format!("[{tag}] gelu_bwd {len}"), || math::gelu_bwd_inplace(&mut g, &z))
+        .mean_s();
+    rows.push((format!("gelu_bwd_{len}_s"), t, len as f64));
+
+    // softmax over the 5-way discrete heads, B=256 rows
+    let logits = filled(256 * 20, &mut rng, -6.0, 6.0);
+    let mut sm = logits.clone();
+    let t = b
+        .bench(&format!("[{tag}] softmax_rows 256x20"), || {
+            sm.copy_from_slice(&logits);
+            math::softmax_rows(&mut sm, 20)
+        })
+        .mean_s();
+    rows.push(("softmax_rows_256x20_s".into(), t, (256 * 20) as f64));
+
+    // one Adam step over a hidden weight matrix
+    let gr = filled(len, &mut rng, -0.1, 0.1);
+    let mut p = filled(len, &mut rng, -1.0, 1.0);
+    let mut m1 = vec![0.0f32; len];
+    let mut v1 = vec![0.001f32; len];
+    let a = AdamStep::new(3e-4, 0.9, 0.999, 1e-8, 10.0);
+    let t = b
+        .bench(&format!("[{tag}] adam_apply {len}"), || {
+            a.apply(&mut p, &gr, &mut m1, &mut v1)
+        })
+        .mean_s();
+    rows.push((format!("adam_apply_{len}_s"), t, len as f64));
+
+    // f64 placement scoring on a 12x12 mesh (the evaluator's inner loop)
+    let geom = MeshGeom::build(&MeshConfig::new(12, 12));
+    let nt = geom.xy.len();
+    let flops_t: Vec<f64> = (0..nt).map(|t| (t * 13 % 29) as f64 * 3.7e7).collect();
+    let weights_t: Vec<f64> = (0..nt).map(|t| (t * 7 % 17) as f64 * 1.1e5).collect();
+    let act_t: Vec<f64> = (0..nt).map(|t| (t * 5 % 11) as f64 * 2048.0).collect();
+    let params = ScoreParams {
+        wl: 1.3,
+        inv_mean_f: 1.0 / 3.7e7,
+        inv_mean_w: 1.0 / 1.1e5,
+        mean_f: 3.7e7,
+        inv_span: 1.0 / 24.0,
+        central_w: 0.3,
+        prod_xy: Some(geom.xy[nt / 2]),
+    };
+    let mut out = vec![0.0f64; nt];
+    let t = b
+        .bench(&format!("[{tag}] score_tiles 12x12"), || {
+            geom.score_tiles(&params, &flops_t, &weights_t, &act_t, &mut out)
+        })
+        .mean_s();
+    rows.push(("score_tiles_12x12_s".into(), t, (nt * 10) as f64));
+
+    kernels::set_global(KernelSel::Scalar);
+    rows
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    let mut b = Bencher::default();
+    if smoke {
+        b.warmup = std::time::Duration::from_millis(20);
+        b.budget = std::time::Duration::from_millis(120);
+        b.max_samples = 30;
+    }
+
+    println!("== bench_kernels: scalar vs SIMD NN/scoring kernels ==");
+    println!("dispatch: {}", kernels::describe(KernelSel::Auto));
+
+    let scalar_rows = bench_mode(KernelSel::Scalar, &mut b);
+    let simd_rows = kernels::detect().map(|_| bench_mode(KernelSel::Simd, &mut b));
+
+    println!("\n{:<34} {:>12} {:>10}", "kernel", "ns/op", "GFLOP/s");
+    let gflops = |t: f64, flops: f64| flops / t.max(1e-12) / 1e9;
+    for (name, t, flops) in &scalar_rows {
+        print!("{:<34} {:>12.0} {:>10.2}", format!("scalar {name}"), t * 1e9, gflops(*t, *flops));
+        if let Some(simd) = &simd_rows {
+            let (_, ts, _) = &simd[scalar_rows.iter().position(|(n, _, _)| n == name).unwrap()];
+            print!("   simd {:>10.0} ns ({:.2}x)", ts * 1e9, t / ts.max(1e-12));
+        }
+        println!();
+    }
+
+    let section = |rows: &[(String, f64, f64)]| {
+        json::obj(rows.iter().map(|(k, v, _)| (k.as_str(), json::num(*v))).collect())
+    };
+    let mut record = vec![
+        ("bench", json::s("bench_kernels")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "detected",
+            json::s(kernels::detect().map(|p| p.name()).unwrap_or("none")),
+        ),
+        ("scalar", section(&scalar_rows)),
+    ];
+    if let Some(simd) = &simd_rows {
+        record.push(("simd", section(simd)));
+        let speedups: Vec<(&str, json::Json)> = scalar_rows
+            .iter()
+            .zip(simd)
+            .map(|((k, s, _), (_, v, _))| (k.as_str(), json::num(s / v.max(1e-12))))
+            .collect();
+        record.push(("simd_speedup", json::obj(speedups)));
+    } else {
+        println!("\nno SIMD path on this host — scalar rows only");
+    }
+    let record = json::obj(record);
+    if let Err(e) = std::fs::create_dir_all("out/bench") {
+        eprintln!("out/bench: {e}");
+    }
+    let _ = std::fs::write("out/bench/BENCH_kernels.json", record.to_string_pretty());
+    b.write_csv("out/bench/bench_kernels.csv");
+    println!("records: out/bench/BENCH_kernels.json, out/bench/bench_kernels.csv");
+}

@@ -14,6 +14,7 @@ use std::path::Path;
 use silicon_rl::config::RunConfig;
 use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
 use silicon_rl::nn::backend::{self, BackendSel};
+use silicon_rl::nn::kernels::{self, KernelSel};
 use silicon_rl::rl::{SacAgent, Transition};
 use silicon_rl::runtime;
 use silicon_rl::util::bench::Bencher;
@@ -113,12 +114,29 @@ fn main() {
 
     println!("== bench_runtime: agent-loop NN backends ==");
 
-    // ---- native: always available (no artifacts needed)
+    // ---- native: always available (no artifacts needed); scalar kernels
+    kernels::set_global(KernelSel::Scalar);
     let be = backend::load(&artifacts_dir, BackendSel::Native).expect("native backend");
     println!("native backend: {}", be.describe());
     let mut rng = Rng::new(1);
     let mut agent = SacAgent::new(be, cfg, &mut rng).expect("agent");
     let native_rows = bench_agent("native", &mut agent, &mut b);
+
+    // ---- native + SIMD kernels (DESIGN.md §10); skipped on hosts with
+    // no vector path so the record never compares simd-resolved-scalar
+    let simd_rows = if kernels::detect().is_some() {
+        kernels::set_global(KernelSel::Simd);
+        let be = backend::load(&artifacts_dir, BackendSel::Native).expect("native backend");
+        println!("native+simd:    {}", be.describe());
+        let mut rng = Rng::new(1);
+        let mut agent = SacAgent::new(be, cfg, &mut rng).expect("agent");
+        let rows = bench_agent("native-simd", &mut agent, &mut b);
+        kernels::set_global(KernelSel::Scalar);
+        Some(rows)
+    } else {
+        println!("native+simd:    no vector path detected — scalar rows only");
+        None
+    };
 
     // ---- pjrt: only when artifacts are built and the runtime is linked
     let pjrt_rows = if dir.join("manifest.json").exists() && runtime::backend_available() {
@@ -139,8 +157,26 @@ fn main() {
     let mut record = vec![
         ("bench", json::s("bench_runtime")),
         ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "kernels_detected",
+            json::s(kernels::detect().map(|p| p.name()).unwrap_or("none")),
+        ),
         ("native", to_obj(&native_rows)),
     ];
+    if let Some(simd) = &simd_rows {
+        record.push(("native_simd", to_obj(simd)));
+        let speedups: Vec<(&str, json::Json)> = native_rows
+            .iter()
+            .zip(simd)
+            .map(|((k, s), (_, v))| (k.as_str(), json::num(s / v.max(1e-12))))
+            .collect();
+        record.push(("simd_speedup", json::obj(speedups)));
+        println!(
+            "\nsimd speedup over scalar: actor b=1 {:.2}x, sac_update {:.2}x",
+            native_rows[0].1 / simd[0].1.max(1e-12),
+            native_rows[1].1 / simd[1].1.max(1e-12)
+        );
+    }
     if let Some(pjrt) = &pjrt_rows {
         record.push(("pjrt", to_obj(pjrt)));
         let speedups: Vec<(&str, json::Json)> = native_rows

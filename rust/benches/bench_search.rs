@@ -18,6 +18,7 @@ use silicon_rl::env::SAC_STATE_DIM;
 use silicon_rl::error::Result;
 use silicon_rl::eval::parallel;
 use silicon_rl::nn::backend::{self, Backend, BackendSel};
+use silicon_rl::nn::kernels::{self, KernelSel};
 use silicon_rl::nn::policy;
 use silicon_rl::report;
 use silicon_rl::rl::{self, baselines, SacAgent, Transition};
@@ -240,6 +241,21 @@ fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
     let rollout = run_mode("rollout", rollout_eps, false)?;
     let live = run_mode("live", live_eps, true)?;
 
+    // the same sweep under `kernels=simd` (DESIGN.md §10) — the
+    // acceptance case is a step-rate gain at lanes ≥ 8, where the
+    // batched actor forward amortizes into wide matmuls; skipped on
+    // hosts with no vector path so simd rows never alias scalar ones
+    let simd_sweeps = if kernels::detect().is_some() {
+        kernels::set_global(KernelSel::Simd);
+        let r = run_mode("rollout+simd", rollout_eps, false)?;
+        let l = run_mode("live+simd", live_eps, true)?;
+        kernels::set_global(KernelSel::Scalar);
+        Some((r, l))
+    } else {
+        println!("  [simd   ] no vector path detected — scalar sweep only");
+        None
+    };
+
     // batched actor-forward efficiency: t(B=1)·B / t(B), measured on the
     // raw backend (efficiency 1.0 = batching is free linear scaling)
     let mut bench = Bencher {
@@ -282,14 +298,24 @@ fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
         "vec-env speedup lanes=8 vs lanes=1: rollout {rollout_8v1:.2}x, live \
          {live_8v1:.2}x"
     );
+    let simd_gain = simd_sweeps.as_ref().map(|(r, l)| {
+        let rg = val(r, "lanes8") / val(&rollout, "lanes8").max(1e-12);
+        let lg = val(l, "lanes8") / val(&live, "lanes8").max(1e-12);
+        println!("simd step-rate gain at lanes=8: rollout {rg:.2}x, live {lg:.2}x");
+        (rg, lg)
+    });
 
     let section = |rows: &[(String, f64)]| {
         json::obj(rows.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect())
     };
-    let record = json::obj(vec![
+    let mut fields = vec![
         ("bench", json::s("bench_vecenv")),
         ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
         ("workers", json::num(threads as f64)),
+        (
+            "kernels_detected",
+            json::s(kernels::detect().map(|p| p.name()).unwrap_or("none")),
+        ),
         ("rollout_episodes", json::num(rollout_eps as f64)),
         ("live_episodes", json::num(live_eps as f64)),
         ("rollout", section(&rollout)),
@@ -297,7 +323,16 @@ fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
         ("actor_fwd", section(&eff_rows)),
         ("rollout_speedup_lanes8_vs_1", json::num(rollout_8v1)),
         ("live_speedup_lanes8_vs_1", json::num(live_8v1)),
-    ]);
+    ];
+    if let Some((r, l)) = &simd_sweeps {
+        fields.push(("rollout_simd", section(r)));
+        fields.push(("live_simd", section(l)));
+    }
+    if let Some((rg, lg)) = simd_gain {
+        fields.push(("simd_rollout_gain_lanes8", json::num(rg)));
+        fields.push(("simd_live_gain_lanes8", json::num(lg)));
+    }
+    let record = json::obj(fields);
     std::fs::create_dir_all("out/bench")?;
     std::fs::write("out/bench/BENCH_vecenv.json", record.to_string_pretty())?;
     println!("record: out/bench/BENCH_vecenv.json");

@@ -9,7 +9,7 @@
 
 use crate::ir::registry;
 use crate::ir::spec::{Phase, Scenario, WorkloadSpec};
-use crate::nn::BackendSel;
+use crate::nn::{BackendSel, KernelSel};
 use crate::ppa::PpaWeights;
 
 /// The workload graph to optimize for — a handle onto one
@@ -281,6 +281,11 @@ pub struct RunConfig {
     /// uses PJRT when AOT artifacts are present and executable, native
     /// otherwise — so `optimize` runs with no artifacts at all.
     pub backend: BackendSel,
+    /// Compute-kernel path (`kernels=scalar|simd|auto`): `scalar` is the
+    /// bit-exact determinism reference, `simd` the vectorized AVX2/NEON
+    /// path (tolerance-parity), `auto` picks SIMD when the CPU supports
+    /// it (DESIGN.md §10).
+    pub kernels: KernelSel,
     pub artifacts_dir: String,
     pub out_dir: String,
     /// `optimize` driver: run the per-node sweeps concurrently, one agent
@@ -307,6 +312,7 @@ impl Default for RunConfig {
             seed: 0xA51C,
             kv_strategy: crate::kv::KvStrategy::Full,
             backend: BackendSel::Auto,
+            kernels: KernelSel::Auto,
             artifacts_dir: "artifacts".into(),
             out_dir: "out".into(),
             parallel_nodes: false,
@@ -360,7 +366,8 @@ impl RunConfig {
     /// keys: episodes, warmup, seed, granularity (op|group), workload
     /// (any registry name/alias), phase (prefill|decode), seq_len, batch,
     /// mode (hp|lp), nodes (comma list), out_dir, artifacts_dir, backend
-    /// (native|pjrt|auto), kv (full|int8|int4|window:N|int8win:N),
+    /// (native|pjrt|auto), kernels (scalar|simd|auto),
+    /// kv (full|int8|int4|window:N|int8win:N),
     /// threads (0 = auto), lanes (vec-env width, 0 = auto),
     /// candidate_batch, parallel_nodes (true|false),
     /// prune (true|false — roofline admission pruning on argmax paths).
@@ -416,6 +423,7 @@ impl RunConfig {
             "out_dir" => self.out_dir = value.to_string(),
             "artifacts_dir" => self.artifacts_dir = value.to_string(),
             "backend" => self.backend = BackendSel::parse(value)?,
+            "kernels" => self.kernels = KernelSel::parse(value)?,
             "threads" => {
                 self.rl.eval_threads =
                     value.parse().map_err(|_| format!("bad threads {value}"))?
@@ -546,6 +554,14 @@ mod tests {
         c.apply("backend", "auto").unwrap();
         assert_eq!(c.backend, BackendSel::Auto);
         assert!(c.apply("backend", "tpu").is_err());
+        assert_eq!(c.kernels, KernelSel::Auto);
+        c.apply("kernels", "scalar").unwrap();
+        assert_eq!(c.kernels, KernelSel::Scalar);
+        c.apply("kernels", "simd").unwrap();
+        assert_eq!(c.kernels, KernelSel::Simd);
+        c.apply("kernels", "auto").unwrap();
+        assert_eq!(c.kernels, KernelSel::Auto);
+        assert!(c.apply("kernels", "avx512").is_err());
         assert!(c.apply("bogus", "1").is_err());
         assert!(c.apply("episodes", "xyz").is_err());
         assert!(c.apply("candidate_batch", "0").is_err());

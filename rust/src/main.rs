@@ -13,7 +13,8 @@
 //! Config keys (see config::RunConfig::apply): workload=<registry name>,
 //! phase=prefill|decode, seq_len=N, batch=N, mode=hp|lp, nodes=3,5,...,
 //! episodes=N, warmup=N, seed=N, granularity=op|group, kv=...,
-//! backend=native|pjrt|auto, out_dir=..., artifacts_dir=...
+//! backend=native|pjrt|auto, kernels=scalar|simd|auto,
+//! out_dir=..., artifacts_dir=...
 //!
 //! (The image vendors no CLI crate; parsing is a ~40-line hand-rolled
 //! key=value scheme — DESIGN.md §4.)
@@ -26,7 +27,7 @@ use silicon_rl::config::RunConfig;
 use silicon_rl::error::{Context, Error, Result};
 use silicon_rl::eval::parallel;
 use silicon_rl::ir::registry;
-use silicon_rl::nn::backend;
+use silicon_rl::nn::{backend, kernels};
 use silicon_rl::report::{self, NodeSummary};
 use silicon_rl::rl::{self, baselines, SacAgent};
 use silicon_rl::util::Rng;
@@ -70,6 +71,10 @@ fn parse_config(args: &[String]) -> Result<RunConfig> {
         }
         cfg.apply(k, v).map_err(Error::msg)?;
     }
+    // install the kernel path once, up front: every compute kernel in
+    // this process (NN forwards/updates, placement scoring) dispatches on
+    // the resolved global from here on
+    kernels::set_global(cfg.kernels);
     Ok(cfg)
 }
 
@@ -109,6 +114,8 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      takes search=random|sac — sac drives nodes x seeds as lanes)\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
                  \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
+                 \u{20}      kernels=scalar|simd|auto (scalar: bit-exact reference;\n\
+                 \u{20}      simd: AVX2/NEON, auto-detected)\n\
                  \u{20}      out_dir=DIR artifacts_dir=DIR config=FILE\n"
             );
             println!("{}", report::workload_registry(registry::all()).to_text());
@@ -185,6 +192,7 @@ fn optimize(args: &[String]) -> Result<()> {
 fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
     let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     println!("backend: {}", be.describe());
+    println!("kernels: {}", kernels::describe(cfg.kernels));
     let mut rng = Rng::new(cfg.seed);
     let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
     println!(
@@ -212,6 +220,7 @@ fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f6
 fn optimize_nodes_vec(cfg: &RunConfig, lanes: usize) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
     let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     println!("backend: {}", be.describe());
+    println!("kernels: {}", kernels::describe(cfg.kernels));
     let mut rng = Rng::new(cfg.seed);
     let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
     println!(
@@ -301,7 +310,12 @@ fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> 
         ("table18_efficiency.csv", report::efficiency_table(&rows)),
         (
             "table14_run_stats.csv",
-            report::run_stats(results, cfg.mode.name, &cfg.scenario()),
+            report::run_stats(
+                results,
+                cfg.mode.name,
+                &cfg.scenario(),
+                &kernels::describe(cfg.kernels),
+            ),
         ),
         ("table20_industry.csv", report::industry_comparison(rows.first())),
     ];
@@ -377,6 +391,7 @@ fn run_baselines(args: &[String]) -> Result<()> {
     sac_cfg.rl.mpc_rerank = 0;
     let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     println!("backend: {}", be.describe());
+    println!("kernels: {}", kernels::describe(cfg.kernels));
     let mut agent = SacAgent::new(be, sac_cfg.rl, &mut rng)?;
     let sac_r = rl::run_node(&sac_cfg, nm, &mut agent, &mut rng)?;
 
@@ -434,6 +449,7 @@ fn run_multiseed(args: &[String]) -> Result<()> {
             let lanes = cfg.resolve_lanes(jobs);
             let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
             println!("backend: {}", be.describe());
+            println!("kernels: {}", kernels::describe(cfg.kernels));
             println!("vec-env: {jobs} (node, seed) lanes in waves of {lanes}");
             println!(
                 "note: lanes share one agent (live learning), so per-seed results \
@@ -470,6 +486,7 @@ fn info(args: &[String]) -> Result<()> {
     let cfg = parse_config(args)?;
     let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     println!("backend: {}", be.describe());
+    println!("kernels: {}", kernels::describe(cfg.kernels));
     println!("hyper: {:?}", be.manifest().hyper);
     if be.manifest().entrypoints.is_empty() {
         println!("entrypoints: (native kernels; no lowered HLO needed)");

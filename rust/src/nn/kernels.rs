@@ -1,0 +1,184 @@
+//! Kernel-path selection for the native compute kernels (`kernels=`
+//! config key): scalar reference vs runtime-detected SIMD.
+//!
+//! The scalar kernels in [`super::math`] (and the scalar tile-scoring
+//! loop in [`crate::noc`]) are the *bit-exact determinism reference* —
+//! every golden pin and the B-lane ≡ B-serial contract (DESIGN.md §9) is
+//! defined against them. The SIMD paths (AVX2+FMA on x86_64, NEON on
+//! aarch64) trade bit-identity of the f32 NN kernels for throughput and
+//! are gated by tolerance-parity tests (`tests/kernel_parity.rs`); the
+//! f64 placement-scoring path is written FMA-free in scalar operation
+//! order, so it stays bit-identical and argmax selections are preserved
+//! (DESIGN.md §10).
+//!
+//! Selection is process-global (one AtomicU8): the kernels are leaf
+//! functions called from deep inside the backend and evaluator hot loops,
+//! so threading a handle through every call site would touch dozens of
+//! signatures for a knob that is set once at startup. The global defaults
+//! to [`KernelPath::Scalar`], so library users and the test suite stay on
+//! the bit-exact reference unless they opt in.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Requested kernel mode (`kernels=scalar|simd|auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelSel {
+    /// Use the vectorized path when the CPU supports one, else scalar.
+    #[default]
+    Auto,
+    /// Bit-exact reference kernels (the determinism contract).
+    Scalar,
+    /// Require the vectorized path; falls back to scalar (with the
+    /// fallback visible in [`describe`]) when the CPU lacks support.
+    Simd,
+}
+
+impl KernelSel {
+    pub fn parse(value: &str) -> Result<KernelSel, String> {
+        match value {
+            "auto" => Ok(KernelSel::Auto),
+            "scalar" => Ok(KernelSel::Scalar),
+            "simd" => Ok(KernelSel::Simd),
+            _ => Err(format!("bad kernels {value} (scalar|simd|auto)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelSel::Auto => "auto",
+            KernelSel::Scalar => "scalar",
+            KernelSel::Simd => "simd",
+        }
+    }
+}
+
+/// Resolved kernel path actually executed by the dispatching kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    Scalar,
+    /// x86_64 AVX2 + FMA (8-wide f32, 4-wide f64).
+    Avx2,
+    /// aarch64 NEON (4-wide f32, 2-wide f64).
+    Neon,
+}
+
+impl KernelPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2 => "avx2+fma",
+            KernelPath::Neon => "neon",
+        }
+    }
+}
+
+/// Runtime capability detection: the SIMD path this CPU can run, if any.
+/// AVX2 and FMA are required together on x86_64 (the f32 kernels lean on
+/// fused multiply-adds); NEON is architecturally guaranteed on aarch64.
+pub fn detect() -> Option<KernelPath> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Some(KernelPath::Avx2);
+        }
+        None
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(KernelPath::Neon)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+/// Resolve a requested mode against the detected capability.
+pub fn resolve(sel: KernelSel) -> KernelPath {
+    match sel {
+        KernelSel::Scalar => KernelPath::Scalar,
+        KernelSel::Auto | KernelSel::Simd => detect().unwrap_or(KernelPath::Scalar),
+    }
+}
+
+// Encoding for the process-global active path.
+const PATH_SCALAR: u8 = 0;
+const PATH_AVX2: u8 = 1;
+const PATH_NEON: u8 = 2;
+
+static ACTIVE: AtomicU8 = AtomicU8::new(PATH_SCALAR);
+
+/// The kernel path the dispatching kernels currently execute. Relaxed
+/// load: the value is set once at startup (or explicitly by a bench) and
+/// carries no data dependencies.
+#[inline]
+pub fn active() -> KernelPath {
+    match ACTIVE.load(Ordering::Relaxed) {
+        PATH_AVX2 => KernelPath::Avx2,
+        PATH_NEON => KernelPath::Neon,
+        _ => KernelPath::Scalar,
+    }
+}
+
+/// Resolve `sel` and install it as the process-global kernel path,
+/// returning what was installed. Call once at startup (the CLI does this
+/// from the parsed config) or from a bench. Tests must not race each
+/// other through this global: only `tests/kernel_parity.rs` (its own
+/// process) flips it, serialized behind a mutex and restoring Scalar.
+pub fn set_global(sel: KernelSel) -> KernelPath {
+    let path = resolve(sel);
+    let code = match path {
+        KernelPath::Scalar => PATH_SCALAR,
+        KernelPath::Avx2 => PATH_AVX2,
+        KernelPath::Neon => PATH_NEON,
+    };
+    ACTIVE.store(code, Ordering::Relaxed);
+    path
+}
+
+/// One-line attribution string for run banners / `info` / Table 14:
+/// requested mode, detected capability, and the path that would resolve.
+pub fn describe(sel: KernelSel) -> String {
+    let detected = detect().map(|p| p.name()).unwrap_or("none");
+    format!("{} (detected {detected}, resolved {})", sel.name(), resolve(sel).name())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sel_parses() {
+        assert_eq!(KernelSel::parse("scalar").unwrap(), KernelSel::Scalar);
+        assert_eq!(KernelSel::parse("simd").unwrap(), KernelSel::Simd);
+        assert_eq!(KernelSel::parse("auto").unwrap(), KernelSel::Auto);
+        assert!(KernelSel::parse("avx512").is_err());
+        assert_eq!(KernelSel::default().name(), "auto");
+    }
+
+    #[test]
+    fn scalar_always_resolves_scalar() {
+        assert_eq!(resolve(KernelSel::Scalar), KernelPath::Scalar);
+    }
+
+    #[test]
+    fn simd_resolution_matches_detection() {
+        // Auto and Simd agree with detect(); on a CPU with no SIMD
+        // support both fall back to the scalar reference.
+        let want = detect().unwrap_or(KernelPath::Scalar);
+        assert_eq!(resolve(KernelSel::Auto), want);
+        assert_eq!(resolve(KernelSel::Simd), want);
+    }
+
+    #[test]
+    fn describe_names_all_three_parts() {
+        let d = describe(KernelSel::Auto);
+        assert!(d.starts_with("auto"), "{d}");
+        assert!(d.contains("detected") && d.contains("resolved"), "{d}");
+    }
+
+    // NOTE: no test flips the global — `cargo test` runs tests as threads
+    // of one process, and the default (Scalar) is what every bit-identity
+    // pin in the suite assumes. `tests/kernel_parity.rs` owns the
+    // explicit-path coverage.
+}

@@ -5,10 +5,21 @@
 //!
 //! Weight layout matches the manifest: `W[k, n]` row-major (`[in, out]`),
 //! so the forward inner loop is an axpy over contiguous output rows —
-//! auto-vectorizable, and the `LB`-row panel blocking keeps the streamed
+//! vectorizable, and the `LB`-row panel blocking keeps the streamed
 //! weight panel resident in L1/L2 across the batch dimension.
+//!
+//! Every public kernel dispatches on the process-global
+//! [`super::kernels`] path: [`scalar`] is the bit-exact determinism
+//! reference (the default; all golden pins are defined against it), and
+//! the [`avx2`] (x86_64) / [`neon`] (aarch64) paths are the
+//! tolerance-parity SIMD implementations selected by `kernels=simd|auto`
+//! (DESIGN.md §10). SIMD reassociates reductions and evaluates
+//! exp/tanh by polynomial, so its outputs are *not* bitwise equal to
+//! scalar — `tests/kernel_parity.rs` pins the tolerance contract.
 
 #![allow(clippy::needless_range_loop)] // kernel loops index several slices
+
+use super::kernels::{self, KernelPath};
 
 /// Panel height (rows of `W` per block) for the cache-blocked loops. A
 /// 64×256 f32 panel is 64 KiB — comfortably cache-resident while the
@@ -18,16 +29,19 @@ const LB: usize = 64;
 /// tanh-approximate GELU constant: sqrt(2/π).
 pub const GELU_C: f32 = 0.797_884_56;
 
+/// Cubic coefficient of the tanh-approximate GELU.
+pub const GELU_A: f32 = 0.044715;
+
 #[inline]
 pub fn gelu(x: f32) -> f32 {
-    0.5 * x * (1.0 + (GELU_C * (x + 0.044715 * x * x * x)).tanh())
+    0.5 * x * (1.0 + (GELU_C * (x + GELU_A * x * x * x)).tanh())
 }
 
 /// d/dx of the tanh-approximate GELU (mirrors `gelu_grad_ref`).
 #[inline]
 pub fn gelu_grad(x: f32) -> f32 {
-    let t = (GELU_C * (x + 0.044715 * x * x * x)).tanh();
-    let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x * x);
+    let t = (GELU_C * (x + GELU_A * x * x * x)).tanh();
+    let dt = (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x);
     0.5 * (1.0 + t) + 0.5 * x * dt
 }
 
@@ -37,26 +51,14 @@ pub fn matmul_bias(x: &[f32], w: &[f32], b: &[f32], y: &mut [f32], m: usize, k: 
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(b.len(), n);
     debug_assert_eq!(y.len(), m * n);
-    for row in y.chunks_exact_mut(n) {
-        row.copy_from_slice(b);
-    }
-    let mut l0 = 0;
-    while l0 < k {
-        let l1 = (l0 + LB).min(k);
-        for i in 0..m {
-            let xr = &x[i * k..(i + 1) * k];
-            let yr = &mut y[i * n..(i + 1) * n];
-            for l in l0..l1 {
-                let xv = xr[l];
-                if xv != 0.0 {
-                    let wr = &w[l * n..(l + 1) * n];
-                    for j in 0..n {
-                        yr[j] += xv * wr[j];
-                    }
-                }
-            }
-        }
-        l0 = l1;
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::matmul_bias(x, w, b, y, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::matmul_bias(x, w, b, y, m, k, n) },
+        _ => scalar::matmul_bias(x, w, b, y, m, k, n),
     }
 }
 
@@ -66,21 +68,14 @@ pub fn matmul_wt(g: &[f32], w: &[f32], dx: &mut [f32], m: usize, k: usize, n: us
     debug_assert_eq!(g.len(), m * n);
     debug_assert_eq!(w.len(), k * n);
     debug_assert_eq!(dx.len(), m * k);
-    let mut i0 = 0;
-    while i0 < m {
-        let i1 = (i0 + LB / 2).min(m);
-        for l in 0..k {
-            let wr = &w[l * n..(l + 1) * n];
-            for i in i0..i1 {
-                let gr = &g[i * n..(i + 1) * n];
-                let mut acc = 0.0f32;
-                for j in 0..n {
-                    acc += gr[j] * wr[j];
-                }
-                dx[i * k + l] = acc;
-            }
-        }
-        i0 = i1;
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::matmul_wt(g, w, dx, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::matmul_wt(g, w, dx, m, k, n) },
+        _ => scalar::matmul_wt(g, w, dx, m, k, n),
     }
 }
 
@@ -98,45 +93,42 @@ pub fn grad_w_b(
     debug_assert_eq!(g.len(), m * n);
     debug_assert_eq!(dw.len(), k * n);
     debug_assert_eq!(db.len(), n);
-    dw.fill(0.0);
-    db.fill(0.0);
-    let mut l0 = 0;
-    while l0 < k {
-        let l1 = (l0 + LB).min(k);
-        for i in 0..m {
-            let gr = &g[i * n..(i + 1) * n];
-            for l in l0..l1 {
-                let xv = x[i * k + l];
-                if xv != 0.0 {
-                    let dwr = &mut dw[l * n..(l + 1) * n];
-                    for j in 0..n {
-                        dwr[j] += xv * gr[j];
-                    }
-                }
-            }
-        }
-        l0 = l1;
-    }
-    for gr in g.chunks_exact(n) {
-        for j in 0..n {
-            db[j] += gr[j];
-        }
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::grad_w_b(x, g, dw, db, m, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::grad_w_b(x, g, dw, db, m, k, n) },
+        _ => scalar::grad_w_b(x, g, dw, db, m, k, n),
     }
 }
 
 /// `h[i] = gelu(z[i])` (separate buffers so `z` survives for backward).
 pub fn gelu_map(z: &[f32], h: &mut [f32]) {
     debug_assert_eq!(z.len(), h.len());
-    for (o, &v) in h.iter_mut().zip(z) {
-        *o = gelu(v);
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::gelu_map(z, h) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::gelu_map(z, h) },
+        _ => scalar::gelu_map(z, h),
     }
 }
 
 /// `g[i] *= gelu'(z[i])` — activation backward, in place on the gradient.
 pub fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
     debug_assert_eq!(g.len(), z.len());
-    for (gv, &zv) in g.iter_mut().zip(z) {
-        *gv *= gelu_grad(zv);
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::gelu_bwd_inplace(g, z) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::gelu_bwd_inplace(g, z) },
+        _ => scalar::gelu_bwd_inplace(g, z),
     }
 }
 
@@ -144,17 +136,14 @@ pub fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
 /// `jax.nn.softmax`).
 pub fn softmax_rows(z: &mut [f32], n: usize) {
     debug_assert_eq!(z.len() % n, 0);
-    for row in z.chunks_exact_mut(n) {
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
-        }
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+    match kernels::active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+        KernelPath::Avx2 => unsafe { avx2::softmax_rows(z, n) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally guaranteed on aarch64.
+        KernelPath::Neon => unsafe { neon::softmax_rows(z, n) },
+        _ => scalar::softmax_rows(z, n),
     }
 }
 
@@ -190,10 +179,811 @@ impl AdamStep {
         debug_assert_eq!(p.len(), g.len());
         debug_assert_eq!(p.len(), m.len());
         debug_assert_eq!(p.len(), v.len());
+        match kernels::active() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: the global path is Avx2 only when avx2+fma are detected.
+            KernelPath::Avx2 => unsafe { avx2::adam_apply(self, p, g, m, v) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is architecturally guaranteed on aarch64.
+            KernelPath::Neon => unsafe { neon::adam_apply(self, p, g, m, v) },
+            _ => scalar::adam_apply(self, p, g, m, v),
+        }
+    }
+}
+
+// ------------------------------------------------------------- scalar path
+
+/// The bit-exact reference kernels. These bodies are byte-for-byte the
+/// pre-SIMD implementations; every golden pin (`tests/native_backend.rs`,
+/// `tests/vecenv.rs`) and the B-lane ≡ B-serial contract is defined
+/// against them, so they must never change observable arithmetic.
+/// Exposed `pub` so parity tests and benches can target this path
+/// explicitly without touching the process-global dispatch mode.
+pub mod scalar {
+    use super::{AdamStep, LB};
+
+    pub fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        y: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for row in y.chunks_exact_mut(n) {
+            row.copy_from_slice(b);
+        }
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let xr = &x[i * k..(i + 1) * k];
+                let yr = &mut y[i * n..(i + 1) * n];
+                for l in l0..l1 {
+                    let xv = xr[l];
+                    if xv != 0.0 {
+                        let wr = &w[l * n..(l + 1) * n];
+                        for j in 0..n {
+                            yr[j] += xv * wr[j];
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+    }
+
+    pub fn matmul_wt(g: &[f32], w: &[f32], dx: &mut [f32], m: usize, k: usize, n: usize) {
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + LB / 2).min(m);
+            for l in 0..k {
+                let wr = &w[l * n..(l + 1) * n];
+                for i in i0..i1 {
+                    let gr = &g[i * n..(i + 1) * n];
+                    let mut acc = 0.0f32;
+                    for j in 0..n {
+                        acc += gr[j] * wr[j];
+                    }
+                    dx[i * k + l] = acc;
+                }
+            }
+            i0 = i1;
+        }
+    }
+
+    pub fn grad_w_b(
+        x: &[f32],
+        g: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        dw.fill(0.0);
+        db.fill(0.0);
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let gr = &g[i * n..(i + 1) * n];
+                for l in l0..l1 {
+                    let xv = x[i * k + l];
+                    if xv != 0.0 {
+                        let dwr = &mut dw[l * n..(l + 1) * n];
+                        for j in 0..n {
+                            dwr[j] += xv * gr[j];
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+        for gr in g.chunks_exact(n) {
+            for j in 0..n {
+                db[j] += gr[j];
+            }
+        }
+    }
+
+    pub fn gelu_map(z: &[f32], h: &mut [f32]) {
+        for (o, &v) in h.iter_mut().zip(z) {
+            *o = super::gelu(v);
+        }
+    }
+
+    pub fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
+        for (gv, &zv) in g.iter_mut().zip(z) {
+            *gv *= super::gelu_grad(zv);
+        }
+    }
+
+    pub fn softmax_rows(z: &mut [f32], n: usize) {
+        for row in z.chunks_exact_mut(n) {
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+
+    pub fn adam_apply(a: &AdamStep, p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32]) {
         for i in 0..p.len() {
-            m[i] = self.b1 * m[i] + (1.0 - self.b1) * g[i];
-            v[i] = self.b2 * v[i] + (1.0 - self.b2) * g[i] * g[i];
-            p[i] -= self.lr * (m[i] / self.corr1) / ((v[i] / self.corr2).sqrt() + self.eps);
+            m[i] = a.b1 * m[i] + (1.0 - a.b1) * g[i];
+            v[i] = a.b2 * v[i] + (1.0 - a.b2) * g[i] * g[i];
+            p[i] -= a.lr * (m[i] / a.corr1) / ((v[i] / a.corr2).sqrt() + a.eps);
+        }
+    }
+}
+
+// --------------------------------------------------------- AVX2+FMA path
+
+/// x86_64 AVX2+FMA kernels: 8-wide f32 with broadcast-FMA axpy bodies,
+/// dot-product reductions with a horizontal sum, and a Cephes-style
+/// polynomial `exp` feeding vectorized tanh (GELU) and softmax. Ragged
+/// tails (`n % 8`) run the scalar formula per element. All functions
+/// require avx2+fma at runtime (enforced by [`super::super::kernels`]
+/// detection before dispatch); reductions reassociate, so results are
+/// tolerance-equal — not bitwise equal — to [`super::scalar`].
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    // Safety contract (all fns): caller must ensure avx2+fma are
+    // available (kernels::detect() == Some(Avx2)); slice lengths must
+    // satisfy the documented m/k/n shapes, as in the dispatching wrappers.
+    #![allow(clippy::missing_safety_doc)]
+
+    use super::{AdamStep, GELU_A, GELU_C, LB};
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of the 8 f32 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_movehdup_ps(s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Horizontal max of the 8 f32 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let s = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_max_ss(s, _mm_movehdup_ps(s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Cephes-style f32 `exp`: range-reduce `x = n·ln2 + r`, degree-5
+    /// polynomial in `r`, scale by `2ⁿ` through the exponent bits.
+    /// Matches libm `expf` to ~1 ulp over the clamped domain.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp8(x: __m256) -> __m256 {
+        let x = _mm256_max_ps(
+            _mm256_min_ps(x, _mm256_set1_ps(88.376_26)),
+            _mm256_set1_ps(-88.376_26),
+        );
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, log2e, _mm256_set1_ps(0.5)));
+        let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(0.693_359_4), x);
+        let r = _mm256_fnmadd_ps(fx, _mm256_set1_ps(-2.121_944_4e-4), r);
+        let r2 = _mm256_mul_ps(r, r);
+        let mut p = _mm256_set1_ps(1.987_569_1e-4);
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.398_199_9e-3));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(8.333_452e-3));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(4.166_579_6e-2));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(1.666_666_5e-1));
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(5.000_000_1e-1));
+        let p = _mm256_fmadd_ps(p, r2, _mm256_add_ps(r, _mm256_set1_ps(1.0)));
+        let pow2n = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+            _mm256_cvttps_epi32(fx),
+            _mm256_set1_epi32(0x7f),
+        )));
+        _mm256_mul_ps(p, pow2n)
+    }
+
+    /// `tanh(y) = 1 − 2/(e^{2y} + 1)`; `exp8`'s clamp saturates the
+    /// large-|y| limits correctly.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn tanh8(y: __m256) -> __m256 {
+        let one = _mm256_set1_ps(1.0);
+        let e = exp8(_mm256_add_ps(y, y));
+        _mm256_sub_ps(one, _mm256_div_ps(_mm256_set1_ps(2.0), _mm256_add_ps(e, one)))
+    }
+
+    pub unsafe fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        y: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for row in y.chunks_exact_mut(n) {
+            row.copy_from_slice(b);
+        }
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let xr = &x[i * k..(i + 1) * k];
+                let yp = y.as_mut_ptr().add(i * n);
+                for l in l0..l1 {
+                    let xv = xr[l];
+                    if xv != 0.0 {
+                        let wp = w.as_ptr().add(l * n);
+                        let vx = _mm256_set1_ps(xv);
+                        let mut j = 0;
+                        while j + 8 <= n {
+                            let acc = _mm256_fmadd_ps(
+                                vx,
+                                _mm256_loadu_ps(wp.add(j)),
+                                _mm256_loadu_ps(yp.add(j)),
+                            );
+                            _mm256_storeu_ps(yp.add(j), acc);
+                            j += 8;
+                        }
+                        while j < n {
+                            *yp.add(j) += xv * *wp.add(j);
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+    }
+
+    pub unsafe fn matmul_wt(g: &[f32], w: &[f32], dx: &mut [f32], m: usize, k: usize, n: usize) {
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + LB / 2).min(m);
+            for l in 0..k {
+                let wp = w.as_ptr().add(l * n);
+                for i in i0..i1 {
+                    let gp = g.as_ptr().add(i * n);
+                    let mut acc = _mm256_setzero_ps();
+                    let mut j = 0;
+                    while j + 8 <= n {
+                        acc = _mm256_fmadd_ps(
+                            _mm256_loadu_ps(gp.add(j)),
+                            _mm256_loadu_ps(wp.add(j)),
+                            acc,
+                        );
+                        j += 8;
+                    }
+                    let mut tail = 0.0f32;
+                    while j < n {
+                        tail += *gp.add(j) * *wp.add(j);
+                        j += 1;
+                    }
+                    dx[i * k + l] = hsum(acc) + tail;
+                }
+            }
+            i0 = i1;
+        }
+    }
+
+    pub unsafe fn grad_w_b(
+        x: &[f32],
+        g: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        dw.fill(0.0);
+        db.fill(0.0);
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let gp = g.as_ptr().add(i * n);
+                for l in l0..l1 {
+                    let xv = x[i * k + l];
+                    if xv != 0.0 {
+                        let dwp = dw.as_mut_ptr().add(l * n);
+                        let vx = _mm256_set1_ps(xv);
+                        let mut j = 0;
+                        while j + 8 <= n {
+                            let acc = _mm256_fmadd_ps(
+                                vx,
+                                _mm256_loadu_ps(gp.add(j)),
+                                _mm256_loadu_ps(dwp.add(j)),
+                            );
+                            _mm256_storeu_ps(dwp.add(j), acc);
+                            j += 8;
+                        }
+                        while j < n {
+                            *dwp.add(j) += xv * *gp.add(j);
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+        let dbp = db.as_mut_ptr();
+        for i in 0..m {
+            let gp = g.as_ptr().add(i * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let acc = _mm256_add_ps(_mm256_loadu_ps(dbp.add(j)), _mm256_loadu_ps(gp.add(j)));
+                _mm256_storeu_ps(dbp.add(j), acc);
+                j += 8;
+            }
+            while j < n {
+                *dbp.add(j) += *gp.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    pub unsafe fn gelu_map(z: &[f32], h: &mut [f32]) {
+        let n = z.len();
+        let c = _mm256_set1_ps(GELU_C);
+        let a = _mm256_set1_ps(GELU_A);
+        let one = _mm256_set1_ps(1.0);
+        let half = _mm256_set1_ps(0.5);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(z.as_ptr().add(j));
+            let x2 = _mm256_mul_ps(x, x);
+            // y = C·(x + A·x³) = C·x·(1 + A·x²)
+            let y = _mm256_mul_ps(c, _mm256_mul_ps(x, _mm256_fmadd_ps(a, x2, one)));
+            let t = tanh8(y);
+            let out = _mm256_mul_ps(_mm256_mul_ps(half, x), _mm256_add_ps(one, t));
+            _mm256_storeu_ps(h.as_mut_ptr().add(j), out);
+            j += 8;
+        }
+        while j < n {
+            h[j] = super::gelu(z[j]);
+            j += 1;
+        }
+    }
+
+    pub unsafe fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
+        let n = z.len();
+        let c = _mm256_set1_ps(GELU_C);
+        let a = _mm256_set1_ps(GELU_A);
+        let a3 = _mm256_set1_ps(3.0 * GELU_A);
+        let one = _mm256_set1_ps(1.0);
+        let half = _mm256_set1_ps(0.5);
+        let mut j = 0;
+        while j + 8 <= n {
+            let x = _mm256_loadu_ps(z.as_ptr().add(j));
+            let x2 = _mm256_mul_ps(x, x);
+            let y = _mm256_mul_ps(c, _mm256_mul_ps(x, _mm256_fmadd_ps(a, x2, one)));
+            let t = tanh8(y);
+            // dt = (1 − t²)·C·(1 + 3A·x²)
+            let dt = _mm256_mul_ps(
+                _mm256_fnmadd_ps(t, t, one),
+                _mm256_mul_ps(c, _mm256_fmadd_ps(a3, x2, one)),
+            );
+            // gelu' = ½(1 + t) + ½·x·dt
+            let grad = _mm256_fmadd_ps(
+                _mm256_mul_ps(half, x),
+                dt,
+                _mm256_mul_ps(half, _mm256_add_ps(one, t)),
+            );
+            let gp = g.as_mut_ptr().add(j);
+            _mm256_storeu_ps(gp, _mm256_mul_ps(_mm256_loadu_ps(gp), grad));
+            j += 8;
+        }
+        while j < n {
+            g[j] *= super::gelu_grad(z[j]);
+            j += 1;
+        }
+    }
+
+    pub unsafe fn softmax_rows(z: &mut [f32], n: usize) {
+        if n < 8 {
+            // gate/head softmaxes are 4–5 wide; the vector setup would
+            // cost more than it saves
+            super::scalar::softmax_rows(z, n);
+            return;
+        }
+        for row in z.chunks_exact_mut(n) {
+            let rp = row.as_mut_ptr();
+            let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut j = 0;
+            while j + 8 <= n {
+                vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(rp.add(j)));
+                j += 8;
+            }
+            let mut m = hmax(vmax);
+            while j < n {
+                m = m.max(*rp.add(j));
+                j += 1;
+            }
+            let vm = _mm256_set1_ps(m);
+            let mut vsum = _mm256_setzero_ps();
+            j = 0;
+            while j + 8 <= n {
+                let e = exp8(_mm256_sub_ps(_mm256_loadu_ps(rp.add(j)), vm));
+                _mm256_storeu_ps(rp.add(j), e);
+                vsum = _mm256_add_ps(vsum, e);
+                j += 8;
+            }
+            let mut sum = hsum(vsum);
+            while j < n {
+                let e = (*rp.add(j) - m).exp();
+                *rp.add(j) = e;
+                sum += e;
+                j += 1;
+            }
+            let vi = _mm256_set1_ps(1.0 / sum);
+            j = 0;
+            while j + 8 <= n {
+                _mm256_storeu_ps(rp.add(j), _mm256_mul_ps(_mm256_loadu_ps(rp.add(j)), vi));
+                j += 8;
+            }
+            let inv = 1.0 / sum;
+            while j < n {
+                *rp.add(j) *= inv;
+                j += 1;
+            }
+        }
+    }
+
+    pub unsafe fn adam_apply(
+        a: &AdamStep,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        let n = p.len();
+        let vb1 = _mm256_set1_ps(a.b1);
+        let vk1 = _mm256_set1_ps(1.0 - a.b1);
+        let vb2 = _mm256_set1_ps(a.b2);
+        let vk2 = _mm256_set1_ps(1.0 - a.b2);
+        let vlr = _mm256_set1_ps(a.lr);
+        let vc1 = _mm256_set1_ps(a.corr1);
+        let vc2 = _mm256_set1_ps(a.corr2);
+        let veps = _mm256_set1_ps(a.eps);
+        let mut j = 0;
+        while j + 8 <= n {
+            let vg = _mm256_loadu_ps(g.as_ptr().add(j));
+            let mp = m.as_mut_ptr().add(j);
+            let vp_ = v.as_mut_ptr().add(j);
+            let pp = p.as_mut_ptr().add(j);
+            let vm = _mm256_fmadd_ps(vb1, _mm256_loadu_ps(mp), _mm256_mul_ps(vk1, vg));
+            let vv = _mm256_fmadd_ps(
+                vb2,
+                _mm256_loadu_ps(vp_),
+                _mm256_mul_ps(_mm256_mul_ps(vk2, vg), vg),
+            );
+            _mm256_storeu_ps(mp, vm);
+            _mm256_storeu_ps(vp_, vv);
+            let num = _mm256_mul_ps(vlr, _mm256_div_ps(vm, vc1));
+            let den = _mm256_add_ps(_mm256_sqrt_ps(_mm256_div_ps(vv, vc2)), veps);
+            let upd = _mm256_div_ps(num, den);
+            _mm256_storeu_ps(pp, _mm256_sub_ps(_mm256_loadu_ps(pp), upd));
+            j += 8;
+        }
+        while j < n {
+            m[j] = a.b1 * m[j] + (1.0 - a.b1) * g[j];
+            v[j] = a.b2 * v[j] + (1.0 - a.b2) * g[j] * g[j];
+            p[j] -= a.lr * (m[j] / a.corr1) / ((v[j] / a.corr2).sqrt() + a.eps);
+            j += 1;
+        }
+    }
+}
+
+// -------------------------------------------------------------- NEON path
+
+/// aarch64 NEON kernels: 4-wide f32 analogues of the [`avx2`] bodies
+/// (FMLA axpy, `vaddvq` horizontal reductions, the same Cephes `exp`
+/// polynomial). NEON is baseline on aarch64, so no runtime detection is
+/// needed beyond the dispatch gate.
+#[cfg(target_arch = "aarch64")]
+pub mod neon {
+    // Safety contract (all fns): NEON baseline on aarch64; slice lengths
+    // must satisfy the documented m/k/n shapes (dispatcher-checked).
+    #![allow(clippy::missing_safety_doc)]
+
+    use super::{AdamStep, GELU_A, GELU_C, LB};
+    use core::arch::aarch64::*;
+
+    /// Cephes-style f32 `exp` (same range reduction + degree-5 polynomial
+    /// as the AVX2 path).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn exp4(x: float32x4_t) -> float32x4_t {
+        let x = vmaxq_f32(vminq_f32(x, vdupq_n_f32(88.376_26)), vdupq_n_f32(-88.376_26));
+        let fx = vrndmq_f32(vfmaq_f32(
+            vdupq_n_f32(0.5),
+            x,
+            vdupq_n_f32(std::f32::consts::LOG2_E),
+        ));
+        let r = vfmsq_f32(x, fx, vdupq_n_f32(0.693_359_4));
+        let r = vfmsq_f32(r, fx, vdupq_n_f32(-2.121_944_4e-4));
+        let r2 = vmulq_f32(r, r);
+        let mut p = vdupq_n_f32(1.987_569_1e-4);
+        p = vfmaq_f32(vdupq_n_f32(1.398_199_9e-3), p, r);
+        p = vfmaq_f32(vdupq_n_f32(8.333_452e-3), p, r);
+        p = vfmaq_f32(vdupq_n_f32(4.166_579_6e-2), p, r);
+        p = vfmaq_f32(vdupq_n_f32(1.666_666_5e-1), p, r);
+        p = vfmaq_f32(vdupq_n_f32(5.000_000_1e-1), p, r);
+        let p = vfmaq_f32(vaddq_f32(r, vdupq_n_f32(1.0)), p, r2);
+        let pow2n = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+            vcvtq_s32_f32(fx),
+            vdupq_n_s32(0x7f),
+        )));
+        vmulq_f32(p, pow2n)
+    }
+
+    /// `tanh(y) = 1 − 2/(e^{2y} + 1)`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn tanh4(y: float32x4_t) -> float32x4_t {
+        let one = vdupq_n_f32(1.0);
+        let e = exp4(vaddq_f32(y, y));
+        vsubq_f32(one, vdivq_f32(vdupq_n_f32(2.0), vaddq_f32(e, one)))
+    }
+
+    pub unsafe fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        b: &[f32],
+        y: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        for row in y.chunks_exact_mut(n) {
+            row.copy_from_slice(b);
+        }
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let xr = &x[i * k..(i + 1) * k];
+                let yp = y.as_mut_ptr().add(i * n);
+                for l in l0..l1 {
+                    let xv = xr[l];
+                    if xv != 0.0 {
+                        let wp = w.as_ptr().add(l * n);
+                        let vx = vdupq_n_f32(xv);
+                        let mut j = 0;
+                        while j + 4 <= n {
+                            let acc = vfmaq_f32(vld1q_f32(yp.add(j)), vx, vld1q_f32(wp.add(j)));
+                            vst1q_f32(yp.add(j), acc);
+                            j += 4;
+                        }
+                        while j < n {
+                            *yp.add(j) += xv * *wp.add(j);
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+    }
+
+    pub unsafe fn matmul_wt(g: &[f32], w: &[f32], dx: &mut [f32], m: usize, k: usize, n: usize) {
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + LB / 2).min(m);
+            for l in 0..k {
+                let wp = w.as_ptr().add(l * n);
+                for i in i0..i1 {
+                    let gp = g.as_ptr().add(i * n);
+                    let mut acc = vdupq_n_f32(0.0);
+                    let mut j = 0;
+                    while j + 4 <= n {
+                        acc = vfmaq_f32(acc, vld1q_f32(gp.add(j)), vld1q_f32(wp.add(j)));
+                        j += 4;
+                    }
+                    let mut tail = 0.0f32;
+                    while j < n {
+                        tail += *gp.add(j) * *wp.add(j);
+                        j += 1;
+                    }
+                    dx[i * k + l] = vaddvq_f32(acc) + tail;
+                }
+            }
+            i0 = i1;
+        }
+    }
+
+    pub unsafe fn grad_w_b(
+        x: &[f32],
+        g: &[f32],
+        dw: &mut [f32],
+        db: &mut [f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        dw.fill(0.0);
+        db.fill(0.0);
+        let mut l0 = 0;
+        while l0 < k {
+            let l1 = (l0 + LB).min(k);
+            for i in 0..m {
+                let gp = g.as_ptr().add(i * n);
+                for l in l0..l1 {
+                    let xv = x[i * k + l];
+                    if xv != 0.0 {
+                        let dwp = dw.as_mut_ptr().add(l * n);
+                        let vx = vdupq_n_f32(xv);
+                        let mut j = 0;
+                        while j + 4 <= n {
+                            let acc = vfmaq_f32(vld1q_f32(dwp.add(j)), vx, vld1q_f32(gp.add(j)));
+                            vst1q_f32(dwp.add(j), acc);
+                            j += 4;
+                        }
+                        while j < n {
+                            *dwp.add(j) += xv * *gp.add(j);
+                            j += 1;
+                        }
+                    }
+                }
+            }
+            l0 = l1;
+        }
+        let dbp = db.as_mut_ptr();
+        for i in 0..m {
+            let gp = g.as_ptr().add(i * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                vst1q_f32(dbp.add(j), vaddq_f32(vld1q_f32(dbp.add(j)), vld1q_f32(gp.add(j))));
+                j += 4;
+            }
+            while j < n {
+                *dbp.add(j) += *gp.add(j);
+                j += 1;
+            }
+        }
+    }
+
+    pub unsafe fn gelu_map(z: &[f32], h: &mut [f32]) {
+        let n = z.len();
+        let c = vdupq_n_f32(GELU_C);
+        let a = vdupq_n_f32(GELU_A);
+        let one = vdupq_n_f32(1.0);
+        let half = vdupq_n_f32(0.5);
+        let mut j = 0;
+        while j + 4 <= n {
+            let x = vld1q_f32(z.as_ptr().add(j));
+            let x2 = vmulq_f32(x, x);
+            let y = vmulq_f32(c, vmulq_f32(x, vfmaq_f32(one, a, x2)));
+            let t = tanh4(y);
+            let out = vmulq_f32(vmulq_f32(half, x), vaddq_f32(one, t));
+            vst1q_f32(h.as_mut_ptr().add(j), out);
+            j += 4;
+        }
+        while j < n {
+            h[j] = super::gelu(z[j]);
+            j += 1;
+        }
+    }
+
+    pub unsafe fn gelu_bwd_inplace(g: &mut [f32], z: &[f32]) {
+        let n = z.len();
+        let c = vdupq_n_f32(GELU_C);
+        let a = vdupq_n_f32(GELU_A);
+        let a3 = vdupq_n_f32(3.0 * GELU_A);
+        let one = vdupq_n_f32(1.0);
+        let half = vdupq_n_f32(0.5);
+        let mut j = 0;
+        while j + 4 <= n {
+            let x = vld1q_f32(z.as_ptr().add(j));
+            let x2 = vmulq_f32(x, x);
+            let y = vmulq_f32(c, vmulq_f32(x, vfmaq_f32(one, a, x2)));
+            let t = tanh4(y);
+            let dt = vmulq_f32(vfmsq_f32(one, t, t), vmulq_f32(c, vfmaq_f32(one, a3, x2)));
+            let grad = vfmaq_f32(vmulq_f32(half, vaddq_f32(one, t)), vmulq_f32(half, x), dt);
+            let gp = g.as_mut_ptr().add(j);
+            vst1q_f32(gp, vmulq_f32(vld1q_f32(gp), grad));
+            j += 4;
+        }
+        while j < n {
+            g[j] *= super::gelu_grad(z[j]);
+            j += 1;
+        }
+    }
+
+    pub unsafe fn softmax_rows(z: &mut [f32], n: usize) {
+        if n < 4 {
+            super::scalar::softmax_rows(z, n);
+            return;
+        }
+        for row in z.chunks_exact_mut(n) {
+            let rp = row.as_mut_ptr();
+            let mut vmax = vdupq_n_f32(f32::NEG_INFINITY);
+            let mut j = 0;
+            while j + 4 <= n {
+                vmax = vmaxq_f32(vmax, vld1q_f32(rp.add(j)));
+                j += 4;
+            }
+            let mut m = vmaxvq_f32(vmax);
+            while j < n {
+                m = m.max(*rp.add(j));
+                j += 1;
+            }
+            let vm = vdupq_n_f32(m);
+            let mut vsum = vdupq_n_f32(0.0);
+            j = 0;
+            while j + 4 <= n {
+                let e = exp4(vsubq_f32(vld1q_f32(rp.add(j)), vm));
+                vst1q_f32(rp.add(j), e);
+                vsum = vaddq_f32(vsum, e);
+                j += 4;
+            }
+            let mut sum = vaddvq_f32(vsum);
+            while j < n {
+                let e = (*rp.add(j) - m).exp();
+                *rp.add(j) = e;
+                sum += e;
+                j += 1;
+            }
+            let inv = 1.0 / sum;
+            let vi = vdupq_n_f32(inv);
+            j = 0;
+            while j + 4 <= n {
+                vst1q_f32(rp.add(j), vmulq_f32(vld1q_f32(rp.add(j)), vi));
+                j += 4;
+            }
+            while j < n {
+                *rp.add(j) *= inv;
+                j += 1;
+            }
+        }
+    }
+
+    pub unsafe fn adam_apply(
+        a: &AdamStep,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        let n = p.len();
+        let vb1 = vdupq_n_f32(a.b1);
+        let vk1 = vdupq_n_f32(1.0 - a.b1);
+        let vb2 = vdupq_n_f32(a.b2);
+        let vk2 = vdupq_n_f32(1.0 - a.b2);
+        let vlr = vdupq_n_f32(a.lr);
+        let vc1 = vdupq_n_f32(a.corr1);
+        let vc2 = vdupq_n_f32(a.corr2);
+        let veps = vdupq_n_f32(a.eps);
+        let mut j = 0;
+        while j + 4 <= n {
+            let vg = vld1q_f32(g.as_ptr().add(j));
+            let mp = m.as_mut_ptr().add(j);
+            let vp_ = v.as_mut_ptr().add(j);
+            let pp = p.as_mut_ptr().add(j);
+            let vm = vfmaq_f32(vmulq_f32(vk1, vg), vb1, vld1q_f32(mp));
+            let vv = vfmaq_f32(vmulq_f32(vmulq_f32(vk2, vg), vg), vb2, vld1q_f32(vp_));
+            vst1q_f32(mp, vm);
+            vst1q_f32(vp_, vv);
+            let num = vmulq_f32(vlr, vdivq_f32(vm, vc1));
+            let den = vaddq_f32(vsqrtq_f32(vdivq_f32(vv, vc2)), veps);
+            vst1q_f32(pp, vsubq_f32(vld1q_f32(pp), vdivq_f32(num, den)));
+            j += 4;
+        }
+        while j < n {
+            m[j] = a.b1 * m[j] + (1.0 - a.b1) * g[j];
+            v[j] = a.b2 * v[j] + (1.0 - a.b2) * g[j] * g[j];
+            p[j] -= a.lr * (m[j] / a.corr1) / ((v[j] / a.corr2).sqrt() + a.eps);
+            j += 1;
         }
     }
 }
@@ -306,5 +1096,84 @@ mod tests {
         assert!((p[0] - (1.0 - 3e-4)).abs() < 1e-6, "{}", p[0]);
         assert!((m[0] - 0.05).abs() < 1e-7);
         assert!((v[0] - 0.001 * 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_dispatch_is_bitwise_scalar() {
+        // the process-global path defaults to scalar, so the dispatching
+        // kernels must be bitwise equal to an explicit scalar call — this
+        // is what keeps every golden pin in the suite on the reference
+        assert_eq!(kernels::active(), KernelPath::Scalar);
+        let (m, k, n) = (3, 82, 120);
+        let x = ramp(m * k, 0.05);
+        let w = ramp(k * n, 0.01);
+        let b = ramp(n, 0.1);
+        let mut y1 = vec![0.0f32; m * n];
+        let mut y2 = vec![0.0f32; m * n];
+        matmul_bias(&x, &w, &b, &mut y1, m, k, n);
+        scalar::matmul_bias(&x, &w, &b, &mut y2, m, k, n);
+        for (a, e) in y1.iter().zip(&y2) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
+    }
+
+    // Inline SIMD smoke checks (full randomized/ragged coverage lives in
+    // tests/kernel_parity.rs): call the explicit per-path functions, so
+    // the process-global dispatch mode is never touched.
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_smoke_matches_scalar() {
+        if super::super::kernels::detect() != Some(KernelPath::Avx2) {
+            eprintln!("skipping: avx2+fma not available");
+            return;
+        }
+        let (m, k, n) = (4, 52, 37); // ragged n on purpose
+        let x = ramp(m * k, 0.05);
+        let w = ramp(k * n, 0.01);
+        let b = ramp(n, 0.1);
+        let mut ys = vec![0.0f32; m * n];
+        let mut yv = vec![0.0f32; m * n];
+        scalar::matmul_bias(&x, &w, &b, &mut ys, m, k, n);
+        // SAFETY: capability checked above
+        unsafe { avx2::matmul_bias(&x, &w, &b, &mut yv, m, k, n) };
+        for (a, e) in yv.iter().zip(&ys) {
+            assert!((a - e).abs() <= 1e-5 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+        let z = ramp(67, 0.3);
+        let mut hs = vec![0.0f32; 67];
+        let mut hv = vec![0.0f32; 67];
+        scalar::gelu_map(&z, &mut hs);
+        // SAFETY: capability checked above
+        unsafe { avx2::gelu_map(&z, &mut hv) };
+        for (a, e) in hv.iter().zip(&hs) {
+            assert!((a - e).abs() <= 1e-5 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_smoke_matches_scalar() {
+        let (m, k, n) = (4, 52, 37);
+        let x = ramp(m * k, 0.05);
+        let w = ramp(k * n, 0.01);
+        let b = ramp(n, 0.1);
+        let mut ys = vec![0.0f32; m * n];
+        let mut yv = vec![0.0f32; m * n];
+        scalar::matmul_bias(&x, &w, &b, &mut ys, m, k, n);
+        // SAFETY: NEON is baseline on aarch64
+        unsafe { neon::matmul_bias(&x, &w, &b, &mut yv, m, k, n) };
+        for (a, e) in yv.iter().zip(&ys) {
+            assert!((a - e).abs() <= 1e-5 * (1.0 + e.abs()), "{a} vs {e}");
+        }
+        let z = ramp(67, 0.3);
+        let mut hs = vec![0.0f32; 67];
+        let mut hv = vec![0.0f32; 67];
+        scalar::gelu_map(&z, &mut hs);
+        // SAFETY: NEON is baseline on aarch64
+        unsafe { neon::gelu_map(&z, &mut hv) };
+        for (a, e) in hv.iter().zip(&hs) {
+            assert!((a - e).abs() <= 1e-5 * (1.0 + e.abs()), "{a} vs {e}");
+        }
     }
 }

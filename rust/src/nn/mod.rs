@@ -10,11 +10,13 @@
 //! checkpoints are portable between backends.
 
 pub mod backend;
+pub mod kernels;
 pub mod math;
 pub mod native;
 pub mod policy;
 
 pub use backend::{Backend, BackendSel, UpdateMetrics};
+pub use kernels::KernelSel;
 pub use native::NativeBackend;
 
 use std::collections::BTreeMap;

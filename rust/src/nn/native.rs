@@ -1014,7 +1014,8 @@ impl Backend for NativeBackend {
 
     fn describe(&self) -> String {
         format!(
-            "native (pure Rust, allocation-free after warmup; {} stores, batch {})",
+            "native (pure Rust, {} kernels, allocation-free after warmup; {} stores, batch {})",
+            super::kernels::active().name(),
             self.manifest.stores.len(),
             self.manifest.hyper_or("batch", 256.0) as usize
         )

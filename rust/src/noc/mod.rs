@@ -4,6 +4,7 @@
 //! power and throughput models.
 
 use crate::arch::MeshConfig;
+use crate::nn::kernels::{self, KernelPath};
 
 /// NoC-level configuration + derived metrics for one candidate design.
 #[derive(Debug, Clone)]
@@ -109,6 +110,11 @@ pub struct MeshGeom {
     pub height: u32,
     /// (x, y) per tile index.
     pub xy: Vec<(u16, u16)>,
+    /// Tile coordinates as f64 SoA lanes for the vectorized scoring loop.
+    /// Coordinates are < 2¹⁶, so f64 subtract/abs on them is exact and
+    /// bit-identical to the integer `abs_diff` path.
+    pub xf: Vec<f64>,
+    pub yf: Vec<f64>,
     /// 1 − centrality(t) per tile (§3.5 step 4 score term).
     pub central_penalty: Vec<f64>,
     /// Whether the tile lies west of the vertical bisection (x < width/2).
@@ -120,16 +126,20 @@ impl MeshGeom {
         let n = mesh.cores();
         let half = mesh.width / 2;
         let mut xy = Vec::with_capacity(n);
+        let mut xf = Vec::with_capacity(n);
+        let mut yf = Vec::with_capacity(n);
         let mut central_penalty = Vec::with_capacity(n);
         let mut west = Vec::with_capacity(n);
         for t in 0..n {
             let x = t as u32 % mesh.width;
             let y = t as u32 / mesh.width;
             xy.push((x as u16, y as u16));
+            xf.push(x as f64);
+            yf.push(y as f64);
             central_penalty.push(1.0 - mesh.centrality(t));
             west.push(x < half);
         }
-        MeshGeom { width: mesh.width, height: mesh.height, xy, central_penalty, west }
+        MeshGeom { width: mesh.width, height: mesh.height, xy, xf, yf, central_penalty, west }
     }
 
     /// Does this table describe `mesh`'s dimensions? (SC overlay does not
@@ -152,6 +162,284 @@ impl MeshGeom {
     #[inline]
     pub fn crosses(&self, a: usize, b: usize) -> bool {
         self.west[a] != self.west[b]
+    }
+
+    /// §3.5 step-4 composite placement score for every tile at once:
+    /// `score(t) = w_load·load(t) + 0.8·hop(t) + 0.5·imbalance(t) +
+    /// central_w·(1 − centrality(t))`, written into `out`.
+    ///
+    /// This is the O(units × cores) inner loop of the placement
+    /// (`partition::place_units_with`). The SIMD paths (AVX2 4-wide f64,
+    /// NEON 2-wide f64) are written **FMA-free in exactly the scalar
+    /// expression tree and operation order**, so every lane is
+    /// bit-identical to the scalar reference — the `evaluate_best`
+    /// pruned≡exact pin rides on the scores' argmin, and bit-identity is
+    /// what guarantees the selected design never changes with the kernel
+    /// mode (DESIGN.md §10).
+    pub fn score_tiles(
+        &self,
+        p: &ScoreParams,
+        flops: &[f64],
+        weights: &[f64],
+        act: &[f64],
+        out: &mut [f64],
+    ) {
+        self.score_tiles_with(kernels::active(), p, flops, weights, act, out)
+    }
+
+    /// [`score_tiles`](Self::score_tiles) on an explicit kernel path —
+    /// used by the parity tests and benches so they never have to touch
+    /// the process-global dispatch mode. Panics if `path` is a SIMD path
+    /// the CPU does not support.
+    pub fn score_tiles_with(
+        &self,
+        path: KernelPath,
+        p: &ScoreParams,
+        flops: &[f64],
+        weights: &[f64],
+        act: &[f64],
+        out: &mut [f64],
+    ) {
+        let n = self.xy.len();
+        debug_assert_eq!(flops.len(), n);
+        debug_assert_eq!(weights.len(), n);
+        debug_assert_eq!(act.len(), n);
+        debug_assert_eq!(out.len(), n);
+        match path {
+            #[cfg(target_arch = "x86_64")]
+            KernelPath::Avx2 => {
+                assert_eq!(kernels::detect(), Some(KernelPath::Avx2), "avx2 not available");
+                // SAFETY: capability asserted above (std caches the check)
+                unsafe { score_avx2(self, p, flops, weights, act, out) }
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is architecturally guaranteed on aarch64.
+            KernelPath::Neon => unsafe { score_neon(self, p, flops, weights, act, out) },
+            _ => score_scalar(self, p, flops, weights, act, out),
+        }
+    }
+}
+
+/// Hoisted per-unit constants of the composite placement score (computed
+/// once per placement unit by `partition::place_units_with`, consumed by
+/// [`MeshGeom::score_tiles`] for all tiles).
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreParams {
+    /// `knobs.w_load` — weight of the load term.
+    pub wl: f64,
+    /// `n_tiles / total_flops_placed` (load + imbalance normalizer).
+    pub inv_mean_f: f64,
+    /// `n_tiles / total_weights_placed`.
+    pub inv_mean_w: f64,
+    /// `total_flops_placed / n_tiles`.
+    pub mean_f: f64,
+    /// `1 / (width + height)` — hop-distance normalizer.
+    pub inv_span: f64,
+    /// Centrality-term weight (fan-in dependent).
+    pub central_w: f64,
+    /// Producer-tile coordinates anchoring the hop term, if the unit has
+    /// a producer; `None` zeroes the hop term exactly like the scalar
+    /// reference does.
+    pub prod_xy: Option<(u16, u16)>,
+}
+
+/// Activation-bytes normalizer of the load term (1/64 KiB).
+const INV_64K: f64 = 1.0 / (64.0 * 1024.0);
+
+/// The scalar reference body of [`MeshGeom::score_tiles`] — byte-for-byte
+/// the arithmetic the placement loop inlined before kernel dispatch
+/// existed (the float `(pxf − xf).abs()` hop equals the old integer
+/// `abs_diff as f64` exactly: coordinates are < 2¹⁶ so the subtraction
+/// is exact).
+fn score_scalar(
+    g: &MeshGeom,
+    p: &ScoreParams,
+    flops: &[f64],
+    weights: &[f64],
+    act: &[f64],
+    out: &mut [f64],
+) {
+    let n = g.xy.len();
+    let (pxf, pyf) = match p.prod_xy {
+        Some((px, py)) => (px as f64, py as f64),
+        None => (0.0, 0.0),
+    };
+    let has_prod = p.prod_xy.is_some();
+    for t in 0..n {
+        let f = flops[t];
+        let load = p.wl
+            * (f * p.inv_mean_f
+                + 0.3 * (weights[t] * p.inv_mean_w)
+                + 0.1 * act[t] * INV_64K);
+        let hop = if has_prod {
+            ((pxf - g.xf[t]).abs() + (pyf - g.yf[t]).abs()) * p.inv_span
+        } else {
+            0.0
+        };
+        let imb = ((f - p.mean_f) * p.inv_mean_f).max(0.0);
+        out[t] = load + 0.8 * hop + 0.5 * imb + p.central_w * g.central_penalty[t];
+    }
+}
+
+/// AVX 4-wide f64 scoring: the same expression tree as [`score_scalar`]
+/// with no FMA contraction, so each lane performs the identical IEEE-754
+/// operation sequence → bit-identical scores. (`abs` is a sign-bit
+/// `andnot`; `max_pd(x, 0)` matches `f64::max(x, 0.0)` because an
+/// exactly-zero imbalance is `+0.0` here — `f − mean_f` cannot produce
+/// `−0.0` under round-to-nearest.)
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn score_avx2(
+    g: &MeshGeom,
+    p: &ScoreParams,
+    flops: &[f64],
+    weights: &[f64],
+    act: &[f64],
+    out: &mut [f64],
+) {
+    use core::arch::x86_64::*;
+    let n = g.xy.len();
+    let vwl = _mm256_set1_pd(p.wl);
+    let vimf = _mm256_set1_pd(p.inv_mean_f);
+    let vimw = _mm256_set1_pd(p.inv_mean_w);
+    let vmf = _mm256_set1_pd(p.mean_f);
+    let vspan = _mm256_set1_pd(p.inv_span);
+    let vcw = _mm256_set1_pd(p.central_w);
+    let v03 = _mm256_set1_pd(0.3);
+    let v01 = _mm256_set1_pd(0.1);
+    let v05 = _mm256_set1_pd(0.5);
+    let v08 = _mm256_set1_pd(0.8);
+    let v64k = _mm256_set1_pd(INV_64K);
+    let vzero = _mm256_setzero_pd();
+    let sign = _mm256_set1_pd(-0.0);
+    let (pxf, pyf) = match p.prod_xy {
+        Some((px, py)) => (px as f64, py as f64),
+        None => (0.0, 0.0),
+    };
+    let has_prod = p.prod_xy.is_some();
+    let vpx = _mm256_set1_pd(pxf);
+    let vpy = _mm256_set1_pd(pyf);
+    let mut t = 0;
+    while t + 4 <= n {
+        let vf = _mm256_loadu_pd(flops.as_ptr().add(t));
+        let vw = _mm256_loadu_pd(weights.as_ptr().add(t));
+        let va = _mm256_loadu_pd(act.as_ptr().add(t));
+        // load = wl·((f·imf + 0.3·(w·imw)) + (0.1·a)·inv64k)
+        let s1 = _mm256_add_pd(
+            _mm256_mul_pd(vf, vimf),
+            _mm256_mul_pd(v03, _mm256_mul_pd(vw, vimw)),
+        );
+        let load =
+            _mm256_mul_pd(vwl, _mm256_add_pd(s1, _mm256_mul_pd(_mm256_mul_pd(v01, va), v64k)));
+        let hop = if has_prod {
+            let dx = _mm256_andnot_pd(
+                sign,
+                _mm256_sub_pd(vpx, _mm256_loadu_pd(g.xf.as_ptr().add(t))),
+            );
+            let dy = _mm256_andnot_pd(
+                sign,
+                _mm256_sub_pd(vpy, _mm256_loadu_pd(g.yf.as_ptr().add(t))),
+            );
+            _mm256_mul_pd(_mm256_add_pd(dx, dy), vspan)
+        } else {
+            vzero
+        };
+        let imb = _mm256_max_pd(_mm256_mul_pd(_mm256_sub_pd(vf, vmf), vimf), vzero);
+        let score = _mm256_add_pd(
+            _mm256_add_pd(_mm256_add_pd(load, _mm256_mul_pd(v08, hop)), _mm256_mul_pd(v05, imb)),
+            _mm256_mul_pd(vcw, _mm256_loadu_pd(g.central_penalty.as_ptr().add(t))),
+        );
+        _mm256_storeu_pd(out.as_mut_ptr().add(t), score);
+        t += 4;
+    }
+    // ragged tail: the scalar expression verbatim
+    while t < n {
+        let f = flops[t];
+        let load = p.wl
+            * (f * p.inv_mean_f
+                + 0.3 * (weights[t] * p.inv_mean_w)
+                + 0.1 * act[t] * INV_64K);
+        let hop = if has_prod {
+            ((pxf - g.xf[t]).abs() + (pyf - g.yf[t]).abs()) * p.inv_span
+        } else {
+            0.0
+        };
+        let imb = ((f - p.mean_f) * p.inv_mean_f).max(0.0);
+        out[t] = load + 0.8 * hop + 0.5 * imb + p.central_w * g.central_penalty[t];
+        t += 1;
+    }
+}
+
+/// NEON 2-wide f64 scoring — same bit-identity contract as [`score_avx2`]
+/// (`vabsq_f64`/`vmaxq_f64` are exact sign-bit/IEEE max operations; no
+/// FMA contraction is used).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn score_neon(
+    g: &MeshGeom,
+    p: &ScoreParams,
+    flops: &[f64],
+    weights: &[f64],
+    act: &[f64],
+    out: &mut [f64],
+) {
+    use core::arch::aarch64::*;
+    let n = g.xy.len();
+    let vwl = vdupq_n_f64(p.wl);
+    let vimf = vdupq_n_f64(p.inv_mean_f);
+    let vimw = vdupq_n_f64(p.inv_mean_w);
+    let vmf = vdupq_n_f64(p.mean_f);
+    let vspan = vdupq_n_f64(p.inv_span);
+    let vcw = vdupq_n_f64(p.central_w);
+    let v03 = vdupq_n_f64(0.3);
+    let v01 = vdupq_n_f64(0.1);
+    let v05 = vdupq_n_f64(0.5);
+    let v08 = vdupq_n_f64(0.8);
+    let v64k = vdupq_n_f64(INV_64K);
+    let vzero = vdupq_n_f64(0.0);
+    let (pxf, pyf) = match p.prod_xy {
+        Some((px, py)) => (px as f64, py as f64),
+        None => (0.0, 0.0),
+    };
+    let has_prod = p.prod_xy.is_some();
+    let vpx = vdupq_n_f64(pxf);
+    let vpy = vdupq_n_f64(pyf);
+    let mut t = 0;
+    while t + 2 <= n {
+        let vf = vld1q_f64(flops.as_ptr().add(t));
+        let vw = vld1q_f64(weights.as_ptr().add(t));
+        let va = vld1q_f64(act.as_ptr().add(t));
+        let s1 = vaddq_f64(vmulq_f64(vf, vimf), vmulq_f64(v03, vmulq_f64(vw, vimw)));
+        let load = vmulq_f64(vwl, vaddq_f64(s1, vmulq_f64(vmulq_f64(v01, va), v64k)));
+        let hop = if has_prod {
+            let dx = vabsq_f64(vsubq_f64(vpx, vld1q_f64(g.xf.as_ptr().add(t))));
+            let dy = vabsq_f64(vsubq_f64(vpy, vld1q_f64(g.yf.as_ptr().add(t))));
+            vmulq_f64(vaddq_f64(dx, dy), vspan)
+        } else {
+            vzero
+        };
+        let imb = vmaxq_f64(vmulq_f64(vsubq_f64(vf, vmf), vimf), vzero);
+        let score = vaddq_f64(
+            vaddq_f64(vaddq_f64(load, vmulq_f64(v08, hop)), vmulq_f64(v05, imb)),
+            vmulq_f64(vcw, vld1q_f64(g.central_penalty.as_ptr().add(t))),
+        );
+        vst1q_f64(out.as_mut_ptr().add(t), score);
+        t += 2;
+    }
+    while t < n {
+        let f = flops[t];
+        let load = p.wl
+            * (f * p.inv_mean_f
+                + 0.3 * (weights[t] * p.inv_mean_w)
+                + 0.1 * act[t] * INV_64K);
+        let hop = if has_prod {
+            ((pxf - g.xf[t]).abs() + (pyf - g.yf[t]).abs()) * p.inv_span
+        } else {
+            0.0
+        };
+        let imb = ((f - p.mean_f) * p.inv_mean_f).max(0.0);
+        out[t] = load + 0.8 * hop + 0.5 * imb + p.central_w * g.central_penalty[t];
+        t += 1;
     }
 }
 
@@ -273,6 +561,8 @@ mod tests {
                 let (x, y) = g.xy[t];
                 assert_eq!(x as u32, t as u32 % w);
                 assert_eq!(y as u32, t as u32 / w);
+                assert_eq!(g.xf[t], x as f64);
+                assert_eq!(g.yf[t], y as f64);
                 assert_eq!(
                     g.central_penalty[t].to_bits(),
                     (1.0 - mesh.centrality(t)).to_bits()
@@ -281,6 +571,98 @@ mod tests {
             for (a, b) in [(0usize, mesh.cores() - 1), (1, 2), (0, 0)] {
                 assert_eq!(g.hop(a, b), mesh.hop_distance(a, b));
                 assert_eq!(g.crosses(a, b), crosses_bisection(&mesh, a, b));
+            }
+        }
+    }
+
+    /// Synthetic-but-representative tile state + per-unit constants for
+    /// the scoring parity tests (sizes deliberately not multiples of the
+    /// f64 vector widths 2 and 4).
+    fn score_fixture(w: u32, h: u32) -> (MeshGeom, ScoreParams, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let mesh = MeshConfig::new(w, h);
+        let g = MeshGeom::build(&mesh);
+        let n = mesh.cores();
+        let flops: Vec<f64> = (0..n).map(|t| ((t * 13 % 29) as f64) * 3.7e7).collect();
+        let weights: Vec<f64> = (0..n).map(|t| ((t * 7 % 17) as f64) * 1.1e5).collect();
+        let act: Vec<f64> = (0..n).map(|t| ((t * 5 % 11) as f64) * 2048.0).collect();
+        let total_f: f64 = 1.0 + flops.iter().sum::<f64>();
+        let total_w: f64 = 1.0 + weights.iter().sum::<f64>();
+        let p = ScoreParams {
+            wl: 1.3,
+            inv_mean_f: n as f64 / total_f,
+            inv_mean_w: n as f64 / total_w,
+            mean_f: total_f / n as f64,
+            inv_span: 1.0 / (w + h) as f64,
+            central_w: 0.3,
+            prod_xy: Some(g.xy[n / 2]),
+        };
+        (g, p, flops, weights, act)
+    }
+
+    #[test]
+    fn score_tiles_scalar_matches_inline_reference() {
+        // the extracted scalar body must reproduce the pre-extraction
+        // inline placement-loop arithmetic bit-for-bit, including the
+        // integer-abs_diff hop term and the zeroed no-producer hop
+        for prod in [true, false] {
+            let (g, mut p, flops, weights, act) = score_fixture(7, 5);
+            if !prod {
+                p.prod_xy = None;
+            }
+            let n = flops.len();
+            let mut got = vec![0.0f64; n];
+            g.score_tiles_with(KernelPath::Scalar, &p, &flops, &weights, &act, &mut got);
+            const INV_64K: f64 = 1.0 / (64.0 * 1024.0);
+            for t in 0..n {
+                let f = flops[t];
+                let load = p.wl
+                    * (f * p.inv_mean_f
+                        + 0.3 * (weights[t] * p.inv_mean_w)
+                        + 0.1 * act[t] * INV_64K);
+                let hop = match p.prod_xy {
+                    Some((px, py)) => {
+                        let (tx, ty) = g.xy[t];
+                        (px.abs_diff(tx) as f64 + py.abs_diff(ty) as f64) * p.inv_span
+                    }
+                    None => 0.0,
+                };
+                let imb = ((f - p.mean_f) * p.inv_mean_f).max(0.0);
+                let want = load + 0.8 * hop + 0.5 * imb + p.central_w * g.central_penalty[t];
+                assert_eq!(got[t].to_bits(), want.to_bits(), "tile {t} prod={prod}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_tiles_simd_is_bit_identical_to_scalar() {
+        // the determinism contract of the f64 scoring path: SIMD lanes
+        // perform the identical operation sequence, so scores (and hence
+        // every argmin/argmax selection built on them) never change with
+        // the kernel mode — including ragged tails
+        let Some(path) = kernels::detect() else {
+            eprintln!("skipping: no SIMD path on this CPU");
+            return;
+        };
+        for (w, h) in [(2u32, 2u32), (5, 7), (9, 3), (12, 12)] {
+            for prod in [true, false] {
+                let (g, mut p, flops, weights, act) = score_fixture(w, h);
+                if !prod {
+                    p.prod_xy = None;
+                }
+                let n = flops.len();
+                let mut scalar = vec![0.0f64; n];
+                let mut simd = vec![0.0f64; n];
+                g.score_tiles_with(KernelPath::Scalar, &p, &flops, &weights, &act, &mut scalar);
+                g.score_tiles_with(path, &p, &flops, &weights, &act, &mut simd);
+                for t in 0..n {
+                    assert_eq!(
+                        simd[t].to_bits(),
+                        scalar[t].to_bits(),
+                        "{w}x{h} tile {t} prod={prod}: {} vs {}",
+                        simd[t],
+                        scalar[t]
+                    );
+                }
             }
         }
     }

@@ -19,7 +19,7 @@ pub mod groups;
 use crate::arch::{MeshConfig, TileLoad};
 use crate::hazard::{self, HazardStats, Mitigation};
 use crate::ir::{Graph, PartitionClass};
-use crate::noc::{GeomCache, TrafficStats};
+use crate::noc::{GeomCache, ScoreParams, TrafficStats};
 use crate::util::clip;
 
 /// RL-controlled partitioning knobs (action groups: Op-Partition
@@ -132,6 +132,9 @@ pub struct PlaceScratch {
     weights: Vec<f64>,
     act: Vec<f64>,
     instrs: Vec<f64>,
+    /// Raw per-tile scores written by the (kernel-dispatched) scoring
+    /// loop, before pairing with tile indices for selection.
+    score_vals: Vec<f64>,
     /// Per-tile composite placement scores for the current unit.
     scores: Vec<(f64, u32)>,
     /// Primary (traffic-anchor) tile per already-placed unit.
@@ -147,8 +150,13 @@ pub struct PlaceScratch {
 impl PlaceScratch {
     fn reset(&mut self, mesh: &MeshConfig) {
         let n = mesh.cores();
-        for buf in [&mut self.flops, &mut self.weights, &mut self.act, &mut self.instrs]
-        {
+        for buf in [
+            &mut self.flops,
+            &mut self.weights,
+            &mut self.act,
+            &mut self.instrs,
+            &mut self.score_vals,
+        ] {
             buf.clear();
             buf.resize(n, 0.0);
         }
@@ -194,12 +202,12 @@ pub fn place_units_with(
         weights: tiles_weights,
         act: tiles_act,
         instrs: tiles_instrs,
+        score_vals,
         scores,
         primary,
         geom,
     } = scratch;
     let geom = geom.get(mesh);
-    let central_penalty = &geom.central_penalty;
     let xy = &geom.xy;
     let mut traffic = TrafficStats::default();
     let mut hazards = HazardStats::default();
@@ -228,17 +236,21 @@ pub fn place_units_with(
         }
         k = k.min(n);
 
-        // Step 4: composite placement score per tile. Hot loop: streams
-        // over the SoA tile state with all per-unit constants hoisted.
-        let inv_mean_f = n as f64 / total_flops_placed;
-        let inv_mean_w = n as f64 / total_weights_placed;
-        let mean_f = total_flops_placed / n as f64;
+        // Step 4: composite placement score per tile. Hot loop: all
+        // per-unit constants are hoisted into ScoreParams and the
+        // kernel-dispatched `MeshGeom::score_tiles` streams over the SoA
+        // tile state (scalar or SIMD f64 — bit-identical either way, so
+        // the selection below never depends on the kernel mode).
         let prod_tile = u.inputs.first().map(|&p| primary[p as usize]);
-        let central_w = if u.inputs.len() > 1 { 0.3 } else { 0.05 };
-        let wl = knobs.w_load;
-        let inv_span = 1.0 / (mesh.width + mesh.height) as f64;
-        let prod_xy = prod_tile.map(|p| xy[p as usize]);
-        const INV_64K: f64 = 1.0 / (64.0 * 1024.0);
+        let params = ScoreParams {
+            wl: knobs.w_load,
+            inv_mean_f: n as f64 / total_flops_placed,
+            inv_mean_w: n as f64 / total_weights_placed,
+            mean_f: total_flops_placed / n as f64,
+            inv_span: 1.0 / (mesh.width + mesh.height) as f64,
+            central_w: if u.inputs.len() > 1 { 0.3 } else { 0.05 },
+            prod_xy: prod_tile.map(|p| xy[p as usize]),
+        };
         let prim = if k == n {
             // whole-mesh split: the uniform shares make the composite
             // ordering irrelevant — skip scoring, pick the least-loaded
@@ -252,28 +264,12 @@ pub fn place_units_with(
             }
             best.1
         } else {
-            for t in 0..n {
-                let f = tiles_flops[t];
-                let load = wl
-                    * (f * inv_mean_f
-                        + 0.3 * (tiles_weights[t] * inv_mean_w)
-                        + 0.1 * tiles_act[t] * INV_64K);
-                let hop = match prod_xy {
-                    Some((px, py)) => {
-                        let (tx, ty) = xy[t];
-                        (px.abs_diff(tx) as f64 + py.abs_diff(ty) as f64) * inv_span
-                    }
-                    None => 0.0,
-                };
-                // imbalance penalty: discourage already-above-mean tiles
-                let imb = ((f - mean_f) * inv_mean_f).max(0.0);
-                // centrality: heavily-connected ops prefer central tiles,
-                // pushing weight-resident ones outward (§4.10's edge-heavy
-                // WMEM pattern emerges from this)
-                scores[t] = (
-                    load + 0.8 * hop + 0.5 * imb + central_w * central_penalty[t],
-                    t as u32,
-                );
+            // load + hop + imbalance + centrality per tile (the centrality
+            // term is what pushes weight-resident ops outward — §4.10's
+            // edge-heavy WMEM pattern emerges from it)
+            geom.score_tiles(&params, tiles_flops, tiles_weights, tiles_act, score_vals);
+            for (t, &s) in score_vals.iter().enumerate() {
+                scores[t] = (s, t as u32);
             }
             // pick the k lowest-scoring tiles (k=1: plain argmin swap —
             // no partition pass needed)

@@ -439,8 +439,12 @@ pub fn convergence_csv(eps: &[EpisodeLog]) -> Table {
     t
 }
 
-/// Table 14-style run statistics for one (mode, scenario) run.
-pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario) -> Table {
+/// Table 14-style run statistics for one (mode, scenario) run. `kernels`
+/// is the kernel-path attribution string (requested mode + detected
+/// capability + resolved path — `nn::kernels::describe`), recorded so
+/// bench/report artifacts are attributable to the compute path that
+/// produced them.
+pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario, kernels: &str) -> Table {
     let mut t = Table::new("Table 14 — run statistics", &["metric", "value"]);
     let best = results
         .iter()
@@ -457,6 +461,7 @@ pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario) -> Table {
         t.row(vec!["best throughput (tok/s)".into(), fnum(s.tokens_per_s, 0)]);
     }
     t.row(vec!["optimization mode".into(), mode.into()]);
+    t.row(vec!["kernel path".into(), kernels.into()]);
     t.row(vec![
         "episodes per node".into(),
         results
@@ -602,12 +607,14 @@ mod tests {
     #[test]
     fn run_stats_surfaces_scenario() {
         let scn = Scenario { phase: crate::ir::Phase::Prefill, seq_len: 8192, batch: 2 };
-        let t = run_stats(&[], "test", &scn);
+        let t = run_stats(&[], "test", &scn, "scalar (detected none, resolved scalar)");
         let txt = t.to_text();
         assert!(txt.contains("prefill"));
         assert!(txt.contains("8192"));
         let batch_row = t.rows.iter().find(|r| r[0] == "batch size").unwrap();
         assert_eq!(batch_row[1], "2");
+        let kern_row = t.rows.iter().find(|r| r[0] == "kernel path").unwrap();
+        assert!(kern_row[1].contains("resolved scalar"), "{}", kern_row[1]);
     }
 
     #[test]

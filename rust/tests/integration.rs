@@ -39,7 +39,12 @@ fn random_search_two_nodes_generates_full_reports() {
         report::nodes_table(&rows),
         report::power_breakdown(&rows),
         report::efficiency_table(&rows),
-        report::run_stats(&results, "test", &cfg.scenario()),
+        report::run_stats(
+            &results,
+            "test",
+            &cfg.scenario(),
+            &silicon_rl::nn::kernels::describe(silicon_rl::nn::KernelSel::Auto),
+        ),
         report::industry_comparison(rows.first()),
         report::cross_node_compare(r3, r28),
         report::search_comparison(&[("rand", &results[0])]),
@@ -153,7 +158,12 @@ fn new_workload_scenario_runs_end_to_end_and_is_feasible() {
     // the report pipeline renders for the scenario run
     let rows: Vec<NodeSummary> = NodeSummary::from_result(&r).into_iter().collect();
     assert_eq!(rows.len(), 1);
-    let t = report::run_stats(std::slice::from_ref(&r), "hp", &cfg.scenario());
+    let t = report::run_stats(
+        std::slice::from_ref(&r),
+        "hp",
+        &cfg.scenario(),
+        &silicon_rl::nn::kernels::describe(silicon_rl::nn::KernelSel::Scalar),
+    );
     let txt = t.to_text();
     assert!(txt.contains("8192"), "{txt}");
     assert!(txt.contains("decode"), "{txt}");
