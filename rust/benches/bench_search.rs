@@ -8,7 +8,8 @@
 //! Budget: SILICON_RL_BENCH_EPISODES (default 1000; paper used ~4,600).
 //! Sweep budget: SILICON_RL_BENCH_SWEEP_EPISODES (default 60/node/seed).
 //! `BENCH_SMOKE=1` shrinks every budget to a CI-sized short mode; the
-//! vec-env lane sweep always emits `out/bench/BENCH_vecenv.json`.
+//! vec-env lane sweep always emits `out/bench/BENCH_vecenv.json` and the
+//! actor-learner mode sweep `out/bench/BENCH_learner.json`.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -87,6 +88,7 @@ fn main() -> Result<()> {
 
     node_sweep_scaling(smoke)?;
     vecenv_lane_sweep(smoke)?;
+    learner_mode_sweep(smoke)?;
     Ok(())
 }
 
@@ -348,6 +350,131 @@ fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
             best >= 2.0,
             "vec-env lanes=8 speedup {best:.2}x < 2x on {threads} workers \
              (rollout {rollout_8v1:.2}x, live {live_8v1:.2}x)"
+        );
+    }
+    Ok(())
+}
+
+/// Actor-learner mode sweep (DESIGN.md §11): live-update lane-steps/sec,
+/// `learner=async` head-to-head against `learner=inline` at lanes ∈
+/// {4, 8, 16} — the async learner moves the SAC/wm/sur update work off
+/// the rollout's critical path onto its reserved core, so the rollout
+/// step rate should rise wherever update time was a visible step-time
+/// share. Emits `out/bench/BENCH_learner.json` (rates, gains and the
+/// learner's own counters) in both normal and `BENCH_SMOKE` modes.
+fn learner_mode_sweep(smoke: bool) -> Result<()> {
+    let lane_counts = [4usize, 8, 16];
+    let episodes = if smoke { 12 } else { 48 };
+    let total = parallel::num_threads();
+
+    println!(
+        "\n== bench_search: actor-learner mode sweep (native backend, {total} \
+         cores, live updates) =="
+    );
+
+    let run_mode = |learner: &str, lanes: usize| -> Result<(f64, Option<rl::LearnerReport>)> {
+        let mut cfg = RunConfig::default();
+        cfg.backend = BackendSel::Native;
+        cfg.artifacts_dir = "/nonexistent-artifacts".into();
+        cfg.rl.episodes_per_node = episodes;
+        cfg.rl.warmup_steps = 1; // prefilled replay: updates from step 0
+        cfg.apply("learner", learner).map_err(silicon_rl::error::Error::msg)?;
+        let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+        let mut rng = Rng::new(42);
+        let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
+        prefill_replay(&mut agent, &mut rng);
+        let jobs: Vec<rl::LaneSpec> = (0..lanes)
+            .map(|i| rl::LaneSpec { nm: 7, seed: rl::multiseed::derive_seed(cfg.seed, i) })
+            .collect();
+        // the async/pinned runs give up one rollout core to the learner —
+        // that cost is part of what's being measured
+        let threads = cfg.rollout_threads();
+        let t0 = Instant::now();
+        let (results, report) =
+            rl::run_jobs_stats(&cfg, &jobs, lanes, &mut agent, threads)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let sps = (lanes * episodes) as f64 / dt.max(1e-9);
+        let rs = rl::vecenv::reward_stats(&results);
+        let counters = report
+            .as_ref()
+            .map(|r| {
+                format!(
+                    ", {} updates, hw {}, behind {:.1}",
+                    r.sac_updates, r.queue_highwater, r.mean_lanes_behind
+                )
+            })
+            .unwrap_or_default();
+        println!(
+            "  [{learner:<6}] lanes={lanes:<2} {sps:>8.1} lane-steps/s ({dt:>6.2}s, \
+             {} episodes{counters})",
+            rs.count()
+        );
+        Ok((sps, report))
+    };
+
+    let mut rows: Vec<(String, f64)> = Vec::new();
+    let mut gains: Vec<(String, f64)> = Vec::new();
+    let mut counter_fields: Vec<(String, json::Json)> = Vec::new();
+    for &lanes in &lane_counts {
+        let (inline_sps, _) = run_mode("inline", lanes)?;
+        let (async_sps, report) = run_mode("async", lanes)?;
+        rows.push((format!("inline_steps_per_s_lanes{lanes}"), inline_sps));
+        rows.push((format!("async_steps_per_s_lanes{lanes}"), async_sps));
+        gains.push((
+            format!("async_gain_lanes{lanes}"),
+            async_sps / inline_sps.max(1e-12),
+        ));
+        if let Some(r) = report {
+            counter_fields.push((
+                format!("async_lanes{lanes}"),
+                json::obj(vec![
+                    ("steps", json::num(r.steps as f64)),
+                    ("sac_updates", json::num(r.sac_updates as f64)),
+                    ("wm_updates", json::num(r.wm_updates as f64)),
+                    ("sur_updates", json::num(r.sur_updates as f64)),
+                    ("snapshots", json::num(r.snapshots as f64)),
+                    ("queue_highwater", json::num(r.queue_highwater as f64)),
+                    ("mean_lanes_behind", json::num(r.mean_lanes_behind)),
+                ]),
+            ));
+        }
+    }
+    for (k, v) in &gains {
+        println!("  {k}: {v:.2}x");
+    }
+
+    let section = |rows: &[(String, f64)]| {
+        json::obj(rows.iter().map(|(k, v)| (k.as_str(), json::num(*v))).collect())
+    };
+    let mut fields = vec![
+        ("bench", json::s("bench_learner")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("cores", json::num(total as f64)),
+        ("episodes", json::num(episodes as f64)),
+        ("rates", section(&rows)),
+        ("gains", section(&gains)),
+    ];
+    let counter_fields: Vec<(&str, json::Json)> =
+        counter_fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+    fields.extend(counter_fields);
+    let record = json::obj(fields);
+    std::fs::create_dir_all("out/bench")?;
+    std::fs::write("out/bench/BENCH_learner.json", record.to_string_pretty())?;
+    println!("record: out/bench/BENCH_learner.json");
+
+    // acceptance gate: a measurable async step-rate gain at lanes ≥ 8.
+    // Full-budget runs with real parallel headroom only — smoke budgets
+    // and starved hosts make wall-clock ratios noise (the JSON records
+    // them regardless).
+    if !smoke && total >= 8 {
+        let best = gains
+            .iter()
+            .filter(|(k, _)| k.ends_with("lanes8") || k.ends_with("lanes16"))
+            .map(|(_, v)| *v)
+            .fold(f64::NAN, f64::max);
+        assert!(
+            best >= 1.05,
+            "async learner gain {best:.2}x < 1.05x at lanes >= 8 on {total} cores"
         );
     }
     Ok(())

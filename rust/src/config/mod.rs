@@ -225,6 +225,19 @@ pub struct RlConfig {
     /// archives, so the library default is the exact path (the CLI's
     /// argmax-only commands enable it, with `--no-prune` as fallback).
     pub prune: bool,
+    /// Where SAC/world-model/surrogate updates run (`learner=`):
+    /// `inline` on the rollout thread between lockstep steps (default),
+    /// `pinned` on a dedicated learner thread replaying the exact inline
+    /// schedule (bit-identical, DESIGN.md §11), or `async` free-running
+    /// for throughput.
+    pub learner: crate::rl::learner::LearnerMode,
+    /// `learner=async` update budget: update rounds earned per absorbed
+    /// rollout step once warmup passes (fractional okay; `0` = uncapped
+    /// free-run). Ignored by `inline`/`pinned`, which are schedule-exact.
+    pub updates_per_step: f64,
+    /// Rollout→learner queue bound, in transitions (`queue_cap=`);
+    /// 0 = auto (8 lockstep steps of backlog, i.e. `8 × lanes`).
+    pub queue_cap: usize,
 }
 
 impl Default for RlConfig {
@@ -253,6 +266,9 @@ impl Default for RlConfig {
             eval_cache: 256,
             lanes: 0,
             prune: false,
+            learner: crate::rl::learner::LearnerMode::Inline,
+            updates_per_step: 1.0,
+            queue_cap: 0,
         }
     }
 }
@@ -340,15 +356,29 @@ impl RunConfig {
     }
 
     /// Resolve the vec-env width for a job list: `lanes=0` (auto) takes
-    /// one lane per job up to the worker-thread count; an explicit width
-    /// is clamped to the job count (a wave can't be wider than its jobs).
+    /// one lane per job up to the worker-thread count — minus one core
+    /// reserved for the learner thread when `learner=pinned|async` — and
+    /// an explicit width is clamped to the job count (a wave can't be
+    /// wider than its jobs).
     pub fn resolve_lanes(&self, jobs: usize) -> usize {
         let width = if self.rl.lanes == 0 {
-            crate::eval::parallel::num_threads()
+            crate::eval::parallel::num_threads_reserving(self.learner_reserve())
         } else {
             self.rl.lanes
         };
         width.min(jobs).max(1)
+    }
+
+    /// Worker threads for the rollout fan-out: [`Self::eval_threads`]
+    /// minus the core reserved for the dedicated learner thread when
+    /// `learner=pinned|async`, floored at one.
+    pub fn rollout_threads(&self) -> usize {
+        self.eval_threads().saturating_sub(self.learner_reserve()).max(1)
+    }
+
+    /// Cores to hold back from rollout work for the learner thread.
+    fn learner_reserve(&self) -> usize {
+        usize::from(self.rl.learner.off_loop())
     }
 
     /// The resolved evaluation scenario: explicit `phase=` / `seq_len=` /
@@ -369,6 +399,9 @@ impl RunConfig {
     /// (native|pjrt|auto), kernels (scalar|simd|auto),
     /// kv (full|int8|int4|window:N|int8win:N),
     /// threads (0 = auto), lanes (vec-env width, 0 = auto),
+    /// learner (inline|pinned|async — where SAC/WM/surrogate updates
+    /// run), updates_per_step (async update budget, 0 = uncapped),
+    /// queue_cap (rollout→learner bound in transitions, 0 = auto),
     /// candidate_batch, parallel_nodes (true|false),
     /// prune (true|false — roofline admission pruning on argmax paths).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
@@ -431,6 +464,20 @@ impl RunConfig {
             "lanes" => {
                 self.rl.lanes =
                     value.parse().map_err(|_| format!("bad lanes {value}"))?
+            }
+            "learner" => self.rl.learner = crate::rl::learner::LearnerMode::parse(value)?,
+            "updates_per_step" => {
+                let n: f64 = value
+                    .parse()
+                    .map_err(|_| format!("bad updates_per_step {value}"))?;
+                if !n.is_finite() || n < 0.0 {
+                    return Err("updates_per_step must be finite and >= 0".to_string());
+                }
+                self.rl.updates_per_step = n;
+            }
+            "queue_cap" => {
+                self.rl.queue_cap =
+                    value.parse().map_err(|_| format!("bad queue_cap {value}"))?
             }
             "candidate_batch" => {
                 let n: usize =
@@ -574,6 +621,32 @@ mod tests {
     }
 
     #[test]
+    fn learner_keys_apply_and_validate() {
+        use crate::rl::learner::LearnerMode;
+        let mut c = RunConfig::default();
+        assert_eq!(c.rl.learner, LearnerMode::Inline);
+        assert!((c.rl.updates_per_step - 1.0).abs() < 1e-12);
+        assert_eq!(c.rl.queue_cap, 0);
+        c.apply("learner", "pinned").unwrap();
+        assert_eq!(c.rl.learner, LearnerMode::Pinned);
+        c.apply("learner", "async").unwrap();
+        assert_eq!(c.rl.learner, LearnerMode::Async);
+        c.apply("learner", "inline").unwrap();
+        assert_eq!(c.rl.learner, LearnerMode::Inline);
+        assert!(c.apply("learner", "offline").is_err());
+        c.apply("updates_per_step", "0.5").unwrap();
+        assert!((c.rl.updates_per_step - 0.5).abs() < 1e-12);
+        c.apply("updates_per_step", "0").unwrap();
+        assert_eq!(c.rl.updates_per_step, 0.0);
+        assert!(c.apply("updates_per_step", "-1").is_err());
+        assert!(c.apply("updates_per_step", "inf").is_err());
+        assert!(c.apply("updates_per_step", "fast").is_err());
+        c.apply("queue_cap", "128").unwrap();
+        assert_eq!(c.rl.queue_cap, 128);
+        assert!(c.apply("queue_cap", "-3").is_err());
+    }
+
+    #[test]
     fn lanes_resolve_auto_and_clamp() {
         let mut c = RunConfig::default();
         // auto: at least 1, never wider than the job list
@@ -583,6 +656,25 @@ mod tests {
         assert_eq!(c.resolve_lanes(7), 4);
         assert_eq!(c.resolve_lanes(2), 2);
         assert_eq!(c.resolve_lanes(0), 1);
+    }
+
+    #[test]
+    fn off_loop_learner_reserves_a_rollout_core() {
+        use crate::eval::parallel::num_threads;
+        let mut c = RunConfig::default();
+        let cores = num_threads();
+        // auto lane sizing holds one core back for the learner thread
+        assert_eq!(c.resolve_lanes(usize::MAX), cores);
+        c.apply("learner", "async").unwrap();
+        assert_eq!(c.resolve_lanes(usize::MAX), cores.saturating_sub(1).max(1));
+        // same reservation in the rollout worker budget
+        assert_eq!(c.rollout_threads(), cores.saturating_sub(1).max(1));
+        c.apply("learner", "inline").unwrap();
+        assert_eq!(c.rollout_threads(), c.eval_threads());
+        // explicit lanes= overrides the reservation entirely
+        c.apply("learner", "pinned").unwrap();
+        c.rl.lanes = 4;
+        assert_eq!(c.resolve_lanes(usize::MAX), 4);
     }
 
     #[test]

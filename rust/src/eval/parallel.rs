@@ -21,6 +21,14 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// [`num_threads`] with `reserve` threads held back for dedicated
+/// non-worker duty (the async actor-learner's update thread), floored at
+/// one worker — the rollout fan-out must keep at least one lane stepping
+/// even on a single-core budget.
+pub fn num_threads_reserving(reserve: usize) -> usize {
+    num_threads().saturating_sub(reserve).max(1)
+}
+
 /// Resolve a configured thread count: 0 means "auto" ([`num_threads`]).
 pub fn resolve(configured: usize) -> usize {
     if configured == 0 {
@@ -225,6 +233,15 @@ mod tests {
     fn resolve_zero_is_auto() {
         assert!(resolve(0) >= 1);
         assert_eq!(resolve(3), 3);
+    }
+
+    #[test]
+    fn reserving_floors_at_one_worker() {
+        let all = num_threads();
+        assert_eq!(num_threads_reserving(0), all);
+        assert_eq!(num_threads_reserving(1), all.saturating_sub(1).max(1));
+        // even absurd reservations leave one rollout worker
+        assert_eq!(num_threads_reserving(usize::MAX), 1);
     }
 
     #[test]

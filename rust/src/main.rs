@@ -112,6 +112,12 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      threads=N candidate_batch=N parallel_nodes=true|false\n\
                  \u{20}      lanes=N | --lanes=N (vec-env width, 0 = auto; seeds also\n\
                  \u{20}      takes search=random|sac — sac drives nodes x seeds as lanes)\n\
+                 \u{20}      learner=inline|pinned|async (where SAC/WM/surrogate updates\n\
+                 \u{20}      run: inline on the rollout thread, pinned = dedicated thread\n\
+                 \u{20}      replaying the exact inline schedule (bit-identical), async =\n\
+                 \u{20}      free-running for throughput)\n\
+                 \u{20}      updates_per_step=X (async update budget, 0 = uncapped)\n\
+                 \u{20}      queue_cap=N (rollout->learner bound in transitions, 0 = auto)\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
                  \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
                  \u{20}      kernels=scalar|simd|auto (scalar: bit-exact reference;\n\
@@ -151,10 +157,15 @@ fn optimize(args: &[String]) -> Result<()> {
     );
 
     let lanes = cfg.resolve_lanes(cfg.nodes_nm.len());
+    let mut learner_report = None;
     let results = if cfg.parallel_nodes {
         optimize_nodes_parallel(&cfg)?
-    } else if lanes > 1 {
-        optimize_nodes_vec(&cfg, lanes)?
+    } else if lanes > 1 || cfg.rl.learner.off_loop() {
+        // an off-loop learner always goes through the vec-env driver —
+        // it owns the rollout/learner split even at a single lane
+        let (r, rep) = optimize_nodes_vec(&cfg, lanes)?;
+        learner_report = rep;
+        r
     } else {
         optimize_nodes_serial(&cfg)?
     };
@@ -186,7 +197,7 @@ fn optimize(args: &[String]) -> Result<()> {
 
     let results: Vec<rl::NodeResult> =
         results.into_iter().map(|(_, r, _)| r).collect();
-    emit_reports(&cfg, &results, out_dir)
+    emit_reports(&cfg, &results, learner_report.as_ref(), out_dir)
 }
 
 fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
@@ -217,7 +228,10 @@ fn optimize_nodes_serial(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f6
 /// forward per step and fans env transitions across cores. Per-lane
 /// rollouts are deterministic from their derived seeds; updates are
 /// amortized on the shared step counter (DESIGN.md §9).
-fn optimize_nodes_vec(cfg: &RunConfig, lanes: usize) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
+fn optimize_nodes_vec(
+    cfg: &RunConfig,
+    lanes: usize,
+) -> Result<(Vec<(u32, rl::NodeResult, f64)>, Option<rl::LearnerReport>)> {
     let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
     println!("backend: {}", be.describe());
     println!("kernels: {}", kernels::describe(cfg.kernels));
@@ -234,15 +248,17 @@ fn optimize_nodes_vec(cfg: &RunConfig, lanes: usize) -> Result<Vec<(u32, rl::Nod
         .enumerate()
         .map(|(i, &nm)| rl::LaneSpec { nm, seed: rl::multiseed::derive_seed(cfg.seed, i) })
         .collect();
-    let threads = cfg.eval_threads();
+    // off-loop learner modes hold one core back for the learner thread
+    let threads = cfg.rollout_threads();
     println!(
         "vec-env sweep: {} node lanes in waves of {lanes} (shared agent, {} eval \
-         thread(s))",
+         thread(s), learner={})",
         jobs.len(),
-        threads
+        threads,
+        cfg.rl.learner.name()
     );
     let t0 = std::time::Instant::now();
-    let results = rl::run_jobs(cfg, &jobs, lanes, &mut agent, threads)?;
+    let (results, learner) = rl::run_jobs_stats(cfg, &jobs, lanes, &mut agent, threads)?;
     let dt = t0.elapsed().as_secs_f64();
     let rs = rl::vecenv::reward_stats(&results);
     println!(
@@ -253,9 +269,13 @@ fn optimize_nodes_vec(cfg: &RunConfig, lanes: usize) -> Result<Vec<(u32, rl::Nod
         rs.mean(),
         rs.std()
     );
+    if let Some(rep) = &learner {
+        println!("{}", rep.banner());
+    }
     // wall-clock is shared across concurrently-stepped lanes; report the
     // sweep total per node
-    Ok(cfg.nodes_nm.iter().zip(results).map(|(&nm, r)| (nm, r, dt)).collect())
+    let rows = cfg.nodes_nm.iter().zip(results).map(|(&nm, r)| (nm, r, dt)).collect();
+    Ok((rows, learner))
 }
 
 fn optimize_nodes_parallel(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, f64)>> {
@@ -296,7 +316,12 @@ fn optimize_nodes_parallel(cfg: &RunConfig) -> Result<Vec<(u32, rl::NodeResult, 
     outcomes.into_iter().collect()
 }
 
-fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> Result<()> {
+fn emit_reports(
+    cfg: &RunConfig,
+    results: &[rl::NodeResult],
+    learner: Option<&rl::LearnerReport>,
+    out_dir: &Path,
+) -> Result<()> {
     let rows: Vec<NodeSummary> =
         results.iter().filter_map(NodeSummary::from_result).collect();
     if rows.is_empty() {
@@ -315,6 +340,7 @@ fn emit_reports(cfg: &RunConfig, results: &[rl::NodeResult], out_dir: &Path) -> 
                 cfg.mode.name,
                 &cfg.scenario(),
                 &kernels::describe(cfg.kernels),
+                learner,
             ),
         ),
         ("table20_industry.csv", report::industry_comparison(rows.first())),
@@ -450,14 +476,28 @@ fn run_multiseed(args: &[String]) -> Result<()> {
             let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
             println!("backend: {}", be.describe());
             println!("kernels: {}", kernels::describe(cfg.kernels));
-            println!("vec-env: {jobs} (node, seed) lanes in waves of {lanes}");
+            println!(
+                "vec-env: {jobs} (node, seed) lanes in waves of {lanes} \
+                 (learner={})",
+                cfg.rl.learner.name()
+            );
             println!(
                 "note: lanes share one agent (live learning), so per-seed results \
                  are correlated — CI columns are not independent-run variance"
             );
             let mut rng = Rng::new(cfg.seed);
             let mut agent = SacAgent::new(be, cfg.rl, &mut rng)?;
-            rl::multiseed::run_seeds_vec(&cfg, n_seeds, &mut agent, lanes, threads)?
+            let (rows, learner) = rl::multiseed::run_seeds_vec(
+                &cfg,
+                n_seeds,
+                &mut agent,
+                lanes,
+                cfg.rollout_threads(),
+            )?;
+            if let Some(rep) = &learner {
+                println!("{}", rep.banner());
+            }
+            rows
         }
         other => bail!("bad search {other} (random|sac)"),
     };

@@ -68,7 +68,12 @@ pub struct SacStepOut<'a> {
 /// inferred from slice lengths; the native backend accepts any batch,
 /// the PJRT backend only the batch sizes baked into the lowered HLO
 /// (1, `mpc_batch`, `batch`).
-pub trait Backend {
+///
+/// `Send` because the async actor-learner engine (`rl::learner`) moves a
+/// boxed backend into the dedicated learner thread; both implementations
+/// are plain owned data (manifests, scratch buffers, the stubbed PJRT
+/// client handle).
+pub trait Backend: Send {
     /// `"native"` or `"pjrt"`.
     fn kind(&self) -> &'static str;
 

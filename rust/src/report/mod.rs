@@ -443,8 +443,15 @@ pub fn convergence_csv(eps: &[EpisodeLog]) -> Table {
 /// is the kernel-path attribution string (requested mode + detected
 /// capability + resolved path — `nn::kernels::describe`), recorded so
 /// bench/report artifacts are attributable to the compute path that
-/// produced them.
-pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario, kernels: &str) -> Table {
+/// produced them. `learner` carries the actor-learner engine's counters
+/// when the run used `learner=pinned|async` (`None` = inline updates).
+pub fn run_stats(
+    results: &[NodeResult],
+    mode: &str,
+    scn: &Scenario,
+    kernels: &str,
+    learner: Option<&crate::rl::LearnerReport>,
+) -> Table {
     let mut t = Table::new("Table 14 — run statistics", &["metric", "value"]);
     let best = results
         .iter()
@@ -492,6 +499,25 @@ pub fn run_stats(results: &[NodeResult], mode: &str, scn: &Scenario, kernels: &s
         "candidates pruned (roofline)".into(),
         format!("{} of {}", es.pruned, es.pruned + es.evaluated),
     ]);
+
+    // actor-learner engine counters (DESIGN.md §11)
+    if let Some(lr) = learner {
+        t.row(vec!["learner mode".into(), lr.mode.name().into()]);
+        t.row(vec![
+            "learner updates (sac/wm/sur)".into(),
+            format!("{}/{}/{}", lr.sac_updates, lr.wm_updates, lr.sur_updates),
+        ]);
+        t.row(vec!["learner steps absorbed".into(), lr.steps.to_string()]);
+        t.row(vec!["snapshots published".into(), lr.snapshots.to_string()]);
+        t.row(vec![
+            "queue high-water (transitions)".into(),
+            lr.queue_highwater.to_string(),
+        ]);
+        t.row(vec![
+            "mean lanes-behind-latest (versions)".into(),
+            fnum(lr.mean_lanes_behind, 2),
+        ]);
+    }
     t
 }
 
@@ -607,7 +633,7 @@ mod tests {
     #[test]
     fn run_stats_surfaces_scenario() {
         let scn = Scenario { phase: crate::ir::Phase::Prefill, seq_len: 8192, batch: 2 };
-        let t = run_stats(&[], "test", &scn, "scalar (detected none, resolved scalar)");
+        let t = run_stats(&[], "test", &scn, "scalar (detected none, resolved scalar)", None);
         let txt = t.to_text();
         assert!(txt.contains("prefill"));
         assert!(txt.contains("8192"));
@@ -615,6 +641,38 @@ mod tests {
         assert_eq!(batch_row[1], "2");
         let kern_row = t.rows.iter().find(|r| r[0] == "kernel path").unwrap();
         assert!(kern_row[1].contains("resolved scalar"), "{}", kern_row[1]);
+        // inline runs carry no learner rows
+        assert!(!txt.contains("learner mode"));
+    }
+
+    #[test]
+    fn run_stats_surfaces_learner_counters() {
+        let scn = Scenario { phase: crate::ir::Phase::Decode, seq_len: 2048, batch: 1 };
+        let lr = crate::rl::LearnerReport {
+            mode: crate::rl::LearnerMode::Async,
+            steps: 120,
+            sac_updates: 96,
+            wm_updates: 48,
+            sur_updates: 24,
+            snapshots: 96,
+            queue_highwater: 32,
+            mean_lanes_behind: 1.5,
+        };
+        let t = run_stats(&[], "test", &scn, "scalar", Some(&lr));
+        let find = |k: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == k)
+                .unwrap_or_else(|| panic!("missing row {k}"))[1]
+                .clone()
+        };
+        assert_eq!(find("learner mode"), "async");
+        assert_eq!(find("learner updates (sac/wm/sur)"), "96/48/24");
+        assert_eq!(find("learner steps absorbed"), "120");
+        assert_eq!(find("snapshots published"), "96");
+        assert_eq!(find("queue high-water (transitions)"), "32");
+        assert_eq!(find("mean lanes-behind-latest (versions)"), "1.50");
+        assert!(lr.banner().contains("96 sac / 48 wm / 24 sur"));
     }
 
     #[test]

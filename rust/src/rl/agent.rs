@@ -8,6 +8,8 @@
 //! per-step heap traffic), RNG (noise tensors are inputs), priority
 //! bookkeeping and the MPC candidate search.
 
+use std::sync::Arc;
+
 use crate::arch::MeshConfig;
 use crate::config::RlConfig;
 use crate::env::state::subset_index;
@@ -69,7 +71,13 @@ impl BatchBufs {
 
 pub struct SacAgent {
     pub backend: Box<dyn Backend>,
-    pub store: Store,
+    /// Parameter store behind an `Arc` so the learner thread can publish
+    /// versioned snapshots as O(1) pointer swaps (`rl::learner`). On the
+    /// update paths `Arc::make_mut` mutates in place while the store is
+    /// uniquely owned — the inline path never pays a deep copy — and
+    /// copies-on-write only when a rollout side still holds the previous
+    /// snapshot. Reads auto-deref, so `&agent.store` keeps working.
+    pub store: Arc<Store>,
     pub buffer: PerBuffer,
     pub cfg: RlConfig,
     batch: usize,
@@ -93,7 +101,7 @@ pub struct SacAgent {
 
 impl SacAgent {
     pub fn new(backend: Box<dyn Backend>, cfg: RlConfig, rng: &mut Rng) -> Result<Self> {
-        let store = Store::from_manifest(backend.manifest(), rng)?;
+        let store = Arc::new(Store::from_manifest(backend.manifest(), rng)?);
         let batch = backend.manifest().hyper_or("batch", 256.0) as usize;
         let mpc_batch = backend.manifest().hyper_or("mpc_batch", 64.0) as usize;
         let buffer =
@@ -266,7 +274,7 @@ impl SacAgent {
                 eps_cur: &bb.eps_cur[..b * ACT_DIM],
                 eps_next: &bb.eps_next[..b * ACT_DIM],
             };
-            let out = self.backend.sac_update(&mut self.store, &batch)?;
+            let out = self.backend.sac_update(Arc::make_mut(&mut self.store), &batch)?;
             self.buffer.update_priorities(&idxs, out.td_abs);
             out.metrics
         };
@@ -284,7 +292,8 @@ impl SacAgent {
         let (idxs, _) = self.buffer.sample(b, rng);
         self.gather(&idxs, GatherSet::WorldModel);
         let bb = &self.bb;
-        let loss = self.backend.wm_update(&mut self.store, &bb.s, &bb.a, &bb.s2)?;
+        let loss =
+            self.backend.wm_update(Arc::make_mut(&mut self.store), &bb.s, &bb.a, &bb.s2)?;
         self.wm_trained = true;
         Ok(loss)
     }
@@ -298,7 +307,8 @@ impl SacAgent {
         let (idxs, _) = self.buffer.sample(b, rng);
         self.gather(&idxs, GatherSet::Surrogate);
         let bb = &self.bb;
-        let loss = self.backend.sur_update(&mut self.store, &bb.s, &bb.a, &bb.ppa)?;
+        let loss =
+            self.backend.sur_update(Arc::make_mut(&mut self.store), &bb.s, &bb.a, &bb.ppa)?;
         self.sur_trained = true;
         Ok(loss)
     }

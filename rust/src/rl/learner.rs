@@ -1,0 +1,841 @@
+//! Async actor-learner engine (DESIGN.md §11): decouple SAC / world-model
+//! / surrogate updates from the vec-env rollout lanes.
+//!
+//! The rollout side ([`crate::rl::vecenv`]) pushes each lockstep step's
+//! transitions into a bounded MPSC [`TransitionQueue`] feeding a
+//! dedicated learner thread. The learner owns the PER replay buffer and
+//! its own native [`Backend`] instance (built from the rollout agent's
+//! manifest, so parameters stay layout-compatible), runs the update
+//! schedule continuously, and publishes **versioned parameter snapshots**
+//! — `Arc<Store>` views behind a [`SnapshotSlot`] with a monotone version
+//! counter — which the lanes pick up at episode (lockstep-step)
+//! boundaries.
+//!
+//! ## Determinism contract
+//!
+//! * `learner=pinned` replays the exact inline schedule: the rollout
+//!   blocks at the top of step `t+1` until the learner has processed
+//!   every step sent so far (one [`update_tick`] per step, drawing from
+//!   the same `fork(0x0ECE)` update stream the inline driver owns), then
+//!   swaps in the latest snapshot. Store state at every action selection
+//!   is therefore bit-identical to the inline run — episode logs, replay
+//!   contents and Pareto frontiers match to the bit (`tests/learner.rs`).
+//! * `learner=async` free-runs: lanes never wait for updates (only for
+//!   queue backpressure) and act on whatever snapshot was last published;
+//!   the learner drains the queue and spends update credits accumulated
+//!   at `updates_per_step` per rollout step (`0` = uncapped free-run).
+//!   Throughput mode — seed-reproducibility is *not* guaranteed because
+//!   snapshot pickup depends on thread timing.
+//!
+//! The queue is bounded in **transitions** and never drops or reorders:
+//! a single producer (the lockstep rollout) pushes lane-major batches,
+//! FIFO pops feed the buffer in the exact inline insertion order.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::bail;
+use crate::config::{RlConfig, RunConfig};
+use crate::error::{Context, Result};
+use crate::nn::backend::Backend;
+use crate::nn::native::NativeBackend;
+use crate::nn::Store;
+use crate::rl::agent::SacAgent;
+use crate::rl::loop_::update_tick;
+use crate::rl::per::{PerBuffer, Transition};
+use crate::util::Rng;
+
+/// Tag of the dedicated update RNG stream (`Rng::new(seed).fork(TAG)`),
+/// shared with the inline driver in [`crate::rl::vecenv::run_jobs_stats`]
+/// so pinned mode replays the identical noise sequence.
+pub(crate) const UPDATE_STREAM_TAG: u64 = 0x0ECE;
+
+/// Where updates run (`learner=` config key).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LearnerMode {
+    /// Updates run inline on the rollout thread between lockstep steps
+    /// (the legacy engine; the determinism reference).
+    #[default]
+    Inline,
+    /// Dedicated learner thread replaying the exact inline schedule —
+    /// bit-identical to `inline`, pinned by `tests/learner.rs`.
+    Pinned,
+    /// Dedicated learner thread free-running for throughput; lanes adopt
+    /// snapshots at step boundaries without waiting.
+    Async,
+}
+
+impl LearnerMode {
+    pub fn parse(value: &str) -> std::result::Result<LearnerMode, String> {
+        match value {
+            "inline" => Ok(LearnerMode::Inline),
+            "pinned" => Ok(LearnerMode::Pinned),
+            "async" => Ok(LearnerMode::Async),
+            _ => Err(format!("bad learner {value} (inline|pinned|async)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            LearnerMode::Inline => "inline",
+            LearnerMode::Pinned => "pinned",
+            LearnerMode::Async => "async",
+        }
+    }
+
+    /// Updates run on a dedicated thread (a thread must be reserved in
+    /// the rollout worker budget).
+    pub fn off_loop(&self) -> bool {
+        !matches!(self, LearnerMode::Inline)
+    }
+}
+
+/// One lockstep step's transitions, lane-major — the queue's unit of
+/// transfer. `t` is the wave-local step index, which drives the wm/sur
+/// training cadences exactly like the inline driver's loop counter.
+struct StepMsg {
+    t: usize,
+    rows: Vec<Transition>,
+}
+
+/// Result of a queue pop.
+enum Popped {
+    Msg(StepMsg),
+    /// Nothing queued right now (only `try_pop` returns this).
+    Empty,
+    /// Closed *and* fully drained — the learner's termination signal.
+    Closed,
+}
+
+struct QueueState {
+    q: VecDeque<StepMsg>,
+    /// Queued transitions (the bound is in transitions, not messages).
+    len: usize,
+    highwater: usize,
+    closed: bool,
+}
+
+/// Bounded single-producer queue of step batches: FIFO, never drops,
+/// blocks the producer when full (backpressure) and the consumer when
+/// empty. `Mutex<VecDeque>` + two condvars — the std-only substitute for
+/// a crossbeam channel; one lock round-trip per *step* (not per
+/// transition), which is noise next to a lockstep step's env work.
+struct TransitionQueue {
+    cap: usize,
+    state: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl TransitionQueue {
+    fn new(cap: usize) -> TransitionQueue {
+        TransitionQueue {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState {
+                q: VecDeque::new(),
+                len: 0,
+                highwater: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking bounded push. A batch wider than the whole capacity is
+    /// admitted once the queue is empty, so an oversized lane count can
+    /// stall but never deadlock. Pushing after `close` is a no-op (the
+    /// run is being torn down).
+    fn push(&self, msg: StepMsg) {
+        let mut st = self.state.lock().unwrap();
+        while !st.closed && st.len > 0 && st.len + msg.rows.len() > self.cap {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return;
+        }
+        st.len += msg.rows.len();
+        st.highwater = st.highwater.max(st.len);
+        st.q.push_back(msg);
+        self.not_empty.notify_one();
+    }
+
+    fn pop_locked(&self, st: &mut QueueState) -> Option<StepMsg> {
+        let msg = st.q.pop_front()?;
+        st.len -= msg.rows.len();
+        self.not_full.notify_one();
+        Some(msg)
+    }
+
+    /// Non-blocking pop; `Closed` only after the queue is fully drained.
+    fn try_pop(&self) -> Popped {
+        let mut st = self.state.lock().unwrap();
+        match self.pop_locked(&mut st) {
+            Some(m) => Popped::Msg(m),
+            None if st.closed => Popped::Closed,
+            None => Popped::Empty,
+        }
+    }
+
+    /// Blocking pop: waits for a message or for close-and-drained.
+    fn pop(&self) -> Popped {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(m) = self.pop_locked(&mut st) {
+                return Popped::Msg(m);
+            }
+            if st.closed {
+                return Popped::Closed;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    fn highwater(&self) -> usize {
+        self.state.lock().unwrap().highwater
+    }
+}
+
+/// One published parameter view: the `Arc<Store>` plus the agent flags
+/// the rollout side needs to mirror (the MPC planner gates on
+/// `wm_trained` / `sur_trained`).
+#[derive(Clone)]
+pub struct Snapshot {
+    pub store: Arc<Store>,
+    pub version: u64,
+    pub wm_trained: bool,
+    pub sur_trained: bool,
+}
+
+/// Single-writer snapshot slot — the std-only arc-swap: a lock-free
+/// `AtomicU64` version fast-path over a mutexed `Arc` clone. The learner
+/// publishes with strictly increasing versions (monotonicity pinned by
+/// tests); readers pay an atomic load per step and a mutex + Arc bump
+/// only when something new was actually published.
+pub struct SnapshotSlot {
+    version: AtomicU64,
+    latest: Mutex<Snapshot>,
+}
+
+impl SnapshotSlot {
+    fn new(initial: Snapshot) -> SnapshotSlot {
+        let v = initial.version;
+        SnapshotSlot { version: AtomicU64::new(v), latest: Mutex::new(initial) }
+    }
+
+    /// Latest published version (0 = nothing newer than the initial
+    /// parameters).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    fn publish(&self, snap: Snapshot) {
+        debug_assert!(snap.version > self.version(), "snapshot versions are monotone");
+        let v = snap.version;
+        *self.latest.lock().unwrap() = snap;
+        self.version.store(v, Ordering::Release);
+    }
+
+    /// The latest snapshot if anything newer than `have` was published.
+    pub fn read_newer(&self, have: u64) -> Option<Snapshot> {
+        if self.version() <= have {
+            return None;
+        }
+        let snap = self.latest.lock().unwrap().clone();
+        if snap.version > have {
+            Some(snap)
+        } else {
+            None
+        }
+    }
+}
+
+/// Rollout ↔ learner coordination: the processed-steps ack counter that
+/// pinned mode's lockstep waits on, and the failure flag that releases
+/// those waits when the learner thread errors.
+struct Control {
+    acked: Mutex<u64>,
+    acked_cv: Condvar,
+    failed: AtomicBool,
+}
+
+impl Control {
+    fn new() -> Control {
+        Control { acked: Mutex::new(0), acked_cv: Condvar::new(), failed: AtomicBool::new(false) }
+    }
+
+    fn ack(&self) {
+        let mut a = self.acked.lock().unwrap();
+        *a += 1;
+        self.acked_cv.notify_all();
+    }
+
+    fn fail(&self) {
+        self.failed.store(true, Ordering::Release);
+        self.acked_cv.notify_all();
+    }
+
+    fn failed(&self) -> bool {
+        self.failed.load(Ordering::Acquire)
+    }
+
+    /// Block until `target` steps are processed; `false` on learner
+    /// failure.
+    fn wait_acked(&self, target: u64) -> bool {
+        let mut a = self.acked.lock().unwrap();
+        while *a < target && !self.failed() {
+            a = self.acked_cv.wait(a).unwrap();
+        }
+        !self.failed()
+    }
+}
+
+/// Learner-side counters folded into the [`LearnerReport`].
+#[derive(Debug, Clone, Copy, Default)]
+struct Counters {
+    steps: u64,
+    sac: u64,
+    wm: u64,
+    sur: u64,
+    snapshots: u64,
+    version: u64,
+}
+
+/// What the learner thread hands back on shutdown: its agent (final
+/// store, replay buffer and training flags, folded back into the
+/// caller's agent so wave boundaries and follow-up runs continue exactly
+/// as if the updates had run inline) plus the counters.
+struct LearnerOut {
+    agent: SacAgent,
+    c: Counters,
+}
+
+/// Observability counters for the run banner, Table 14 and
+/// `BENCH_learner.json`.
+#[derive(Debug, Clone, Default)]
+pub struct LearnerReport {
+    pub mode: LearnerMode,
+    /// Lockstep steps the learner absorbed into the replay buffer.
+    pub steps: u64,
+    pub sac_updates: u64,
+    pub wm_updates: u64,
+    pub sur_updates: u64,
+    /// Snapshot versions published (== the final version counter).
+    pub snapshots: u64,
+    /// Queue high-water mark, in transitions.
+    pub queue_highwater: usize,
+    /// Mean snapshot-version gap between the latest published parameters
+    /// and what the lanes were acting on, sampled at every pickup point
+    /// (0 = lanes always saw the newest snapshot; pinned mode hovers
+    /// near its one-step publish cadence).
+    pub mean_lanes_behind: f64,
+}
+
+impl LearnerReport {
+    /// One-line summary for run banners.
+    pub fn banner(&self) -> String {
+        format!(
+            "learner: {} — {} sac / {} wm / {} sur updates over {} steps, \
+             {} snapshots, queue high-water {} transitions, \
+             mean lanes-behind {:.2} versions",
+            self.mode.name(),
+            self.sac_updates,
+            self.wm_updates,
+            self.sur_updates,
+            self.steps,
+            self.snapshots,
+            self.queue_highwater,
+            self.mean_lanes_behind
+        )
+    }
+}
+
+/// Rollout-side handle onto the learner thread, owned by
+/// [`crate::rl::vecenv::run_jobs_stats`] for the whole job list (the
+/// update RNG stream and ack counter span waves, exactly like the inline
+/// driver's update RNG).
+pub struct LearnerClient {
+    mode: LearnerMode,
+    queue: Arc<TransitionQueue>,
+    slot: Arc<SnapshotSlot>,
+    ctrl: Arc<Control>,
+    handle: Option<JoinHandle<Result<LearnerOut>>>,
+    /// Steps sent so far — pinned mode's ack target.
+    sent: u64,
+    /// Snapshot version the rollout agent currently runs on.
+    have: u64,
+    staleness_sum: f64,
+    staleness_n: u64,
+}
+
+impl LearnerClient {
+    /// Spawn the learner thread for a run over waves of `lanes` lanes.
+    ///
+    /// The replay buffer **moves** out of `agent` into the learner (the
+    /// rollout side keeps a capacity-1 placeholder; it no longer pushes
+    /// transitions directly), the parameter store is shared via `Arc`
+    /// clone, and the learner gets its own [`NativeBackend`] built from
+    /// the rollout backend's manifest — same shapes and hyperparameters,
+    /// so stores stay interchangeable. Update randomness is
+    /// `Rng::new(cfg.seed).fork(0x0ECE)`, the inline driver's stream.
+    pub fn spawn(cfg: &RunConfig, agent: &mut SacAgent, lanes: usize) -> Result<LearnerClient> {
+        let mode = cfg.rl.learner;
+        debug_assert!(mode.off_loop(), "LearnerClient::spawn with learner=inline");
+        let rl = cfg.rl;
+        let seed = cfg.seed;
+
+        // learner backend: native, from the rollout agent's manifest —
+        // constructed on the caller thread so setup errors surface here
+        let be: Box<dyn Backend> = Box::new(NativeBackend::new(agent.backend.manifest().clone())?);
+        let mut larva = Rng::new(seed);
+        let mut lagent = SacAgent::new(be, rl, &mut larva)?;
+        lagent.store = agent.store.clone();
+        lagent.buffer = std::mem::replace(
+            &mut agent.buffer,
+            PerBuffer::new(1, rl.per_alpha, rl.per_beta0, rl.per_beta_step),
+        );
+        lagent.updates_done = agent.updates_done;
+        lagent.wm_trained = agent.wm_trained;
+        lagent.sur_trained = agent.sur_trained;
+
+        // queue bound: explicit `queue_cap=` in transitions, auto = 8
+        // lockstep steps of backlog
+        let cap = if rl.queue_cap == 0 { 8 * lanes.max(1) } else { rl.queue_cap };
+        let queue = Arc::new(TransitionQueue::new(cap));
+        let slot = Arc::new(SnapshotSlot::new(Snapshot {
+            store: agent.store.clone(),
+            version: 0,
+            wm_trained: agent.wm_trained,
+            sur_trained: agent.sur_trained,
+        }));
+        let ctrl = Arc::new(Control::new());
+
+        let (q, s, c) = (queue.clone(), slot.clone(), ctrl.clone());
+        let handle = std::thread::Builder::new()
+            .name("learner".into())
+            .spawn(move || learner_main(lagent, rl, seed, mode, q, s, c))
+            .context("spawning learner thread")?;
+
+        Ok(LearnerClient {
+            mode,
+            queue,
+            slot,
+            ctrl,
+            handle: Some(handle),
+            sent: 0,
+            have: 0,
+            staleness_sum: 0.0,
+            staleness_n: 0,
+        })
+    }
+
+    /// Called at the top of every lockstep step, before action selection:
+    /// pinned mode first waits until every step sent so far has been
+    /// processed (so step `t+1` acts on the store state the inline run
+    /// would have), then both modes adopt the newest published snapshot.
+    pub fn sync(&mut self, agent: &mut SacAgent) -> Result<()> {
+        if self.mode == LearnerMode::Pinned && !self.ctrl.wait_acked(self.sent) {
+            return self.learner_error();
+        }
+        if self.ctrl.failed() {
+            return self.learner_error();
+        }
+        let latest = self.slot.version();
+        self.staleness_sum += latest.saturating_sub(self.have) as f64;
+        self.staleness_n += 1;
+        if let Some(snap) = self.slot.read_newer(self.have) {
+            self.have = snap.version;
+            agent.store = snap.store;
+            agent.wm_trained = snap.wm_trained;
+            agent.sur_trained = snap.sur_trained;
+        }
+        Ok(())
+    }
+
+    /// Send one lockstep step's lane-major transitions (blocking on queue
+    /// backpressure).
+    pub fn send_step(&mut self, t: usize, rows: Vec<Transition>) -> Result<()> {
+        if self.ctrl.failed() {
+            return self.learner_error();
+        }
+        self.queue.push(StepMsg { t, rows });
+        self.sent += 1;
+        Ok(())
+    }
+
+    /// Drain the learner and fold its final state back into `agent`
+    /// (store, replay buffer, update counters, training flags), so
+    /// whatever runs next on this agent continues exactly as if the
+    /// updates had been inline. Returns the run's [`LearnerReport`].
+    pub fn finish(mut self, agent: &mut SacAgent) -> Result<LearnerReport> {
+        self.queue.close();
+        let handle = self.handle.take().expect("finish consumes the handle");
+        let out = match handle.join() {
+            Ok(r) => r?,
+            Err(_) => bail!("learner thread panicked"),
+        };
+        let LearnerOut { agent: lagent, c } = out;
+        agent.store = lagent.store;
+        agent.buffer = lagent.buffer;
+        agent.updates_done = lagent.updates_done;
+        agent.wm_trained = lagent.wm_trained;
+        agent.sur_trained = lagent.sur_trained;
+        Ok(LearnerReport {
+            mode: self.mode,
+            steps: c.steps,
+            sac_updates: c.sac,
+            wm_updates: c.wm,
+            sur_updates: c.sur,
+            snapshots: c.snapshots,
+            queue_highwater: self.queue.highwater(),
+            mean_lanes_behind: if self.staleness_n > 0 {
+                self.staleness_sum / self.staleness_n as f64
+            } else {
+                0.0
+            },
+        })
+    }
+
+    /// Tear down after a learner-side failure and surface its error.
+    fn learner_error(&mut self) -> Result<()> {
+        self.queue.close();
+        if let Some(h) = self.handle.take() {
+            if let Ok(Err(e)) = h.join() {
+                return Err(e);
+            }
+        }
+        bail!("learner thread failed")
+    }
+}
+
+impl Drop for LearnerClient {
+    /// Error-path teardown (e.g. the rollout side bailed mid-wave): close
+    /// the queue so the learner drains and exits, then join it. `finish`
+    /// takes the handle first on the normal path, making this a no-op.
+    fn drop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.queue.close();
+            let _ = h.join();
+        }
+    }
+}
+
+/// Learner thread body: run the mode's loop, flag the control block on
+/// error (so pinned waiters unblock), and hand the agent back.
+fn learner_main(
+    mut agent: SacAgent,
+    rl: RlConfig,
+    seed: u64,
+    mode: LearnerMode,
+    queue: Arc<TransitionQueue>,
+    slot: Arc<SnapshotSlot>,
+    ctrl: Arc<Control>,
+) -> Result<LearnerOut> {
+    let mut c = Counters::default();
+    let mut urng = Rng::new(seed).fork(UPDATE_STREAM_TAG);
+    let res = match mode {
+        LearnerMode::Pinned => pinned_loop(&mut agent, rl, &queue, &slot, &ctrl, &mut urng, &mut c),
+        LearnerMode::Async => async_loop(&mut agent, rl, &queue, &slot, &mut urng, &mut c),
+        LearnerMode::Inline => Ok(()), // unreachable by construction
+    };
+    match res {
+        Ok(()) => Ok(LearnerOut { agent, c }),
+        Err(e) => {
+            ctrl.fail();
+            Err(e)
+        }
+    }
+}
+
+/// Publish the agent's current parameters as the next snapshot version.
+fn publish(agent: &SacAgent, slot: &SnapshotSlot, c: &mut Counters) {
+    c.version += 1;
+    c.snapshots += 1;
+    slot.publish(Snapshot {
+        store: agent.store.clone(),
+        version: c.version,
+        wm_trained: agent.wm_trained,
+        sur_trained: agent.sur_trained,
+    });
+}
+
+/// Pinned mode: one [`update_tick`] per received step, acked so the
+/// rollout's lockstep can wait — the inline schedule, verbatim, on
+/// another thread.
+fn pinned_loop(
+    agent: &mut SacAgent,
+    rl: RlConfig,
+    queue: &TransitionQueue,
+    slot: &SnapshotSlot,
+    ctrl: &Control,
+    urng: &mut Rng,
+    c: &mut Counters,
+) -> Result<()> {
+    loop {
+        let msg = match queue.pop() {
+            Popped::Msg(m) => m,
+            Popped::Closed => return Ok(()),
+            Popped::Empty => continue, // pop() blocks; not reachable
+        };
+        c.steps += 1;
+        agent.buffer.push_batch(msg.rows);
+        let tick = update_tick(agent, rl, msg.t, urng)?;
+        if tick.ran {
+            c.sac += 1;
+            c.wm += u64::from(tick.wm);
+            c.sur += u64::from(tick.sur);
+            publish(agent, slot, c);
+        }
+        ctrl.ack();
+    }
+}
+
+/// Async mode: drain whatever is queued, then spend update credits
+/// (accumulated at `updates_per_step` per post-warmup step; `0` =
+/// uncapped free-run). The wm/sur cadences run on the learner's own
+/// update counter. Blocks only when there is neither queued data nor
+/// update work.
+fn async_loop(
+    agent: &mut SacAgent,
+    rl: RlConfig,
+    queue: &TransitionQueue,
+    slot: &SnapshotSlot,
+    urng: &mut Rng,
+    c: &mut Counters,
+) -> Result<()> {
+    let ups = rl.updates_per_step;
+    let uncapped = ups <= 0.0;
+    let mut credits = 0.0f64;
+    let gate = |agent: &SacAgent| agent.buffer.len() >= rl.warmup_steps.max(agent.batch());
+
+    let mut absorb = |agent: &mut SacAgent, m: StepMsg, credits: &mut f64, c: &mut Counters| {
+        c.steps += 1;
+        agent.buffer.push_batch(m.rows);
+        if gate(agent) {
+            *credits += ups;
+        }
+    };
+
+    let mut closed = false;
+    while !closed {
+        // 1) drain everything currently queued without blocking
+        loop {
+            match queue.try_pop() {
+                Popped::Msg(m) => absorb(agent, m, &mut credits, c),
+                Popped::Empty => break,
+                Popped::Closed => {
+                    closed = true;
+                    break;
+                }
+            }
+        }
+        if closed {
+            break;
+        }
+        // 2) one update round if allowed, else block for the next step
+        if gate(agent) && (uncapped || credits >= 1.0) {
+            if !uncapped {
+                credits -= 1.0;
+            }
+            update_round(agent, rl, slot, urng, c)?;
+        } else {
+            match queue.pop() {
+                Popped::Msg(m) => absorb(agent, m, &mut credits, c),
+                Popped::Closed => closed = true,
+                Popped::Empty => {}
+            }
+        }
+    }
+    // settle remaining credits after close (capped mode only — an
+    // uncapped learner would otherwise never terminate), so a capped
+    // async run performs the same update count as the inline schedule
+    if !uncapped {
+        while credits >= 1.0 && gate(agent) {
+            credits -= 1.0;
+            update_round(agent, rl, slot, urng, c)?;
+        }
+    }
+    Ok(())
+}
+
+/// One async update round: SAC update plus wm/sur at their cadences on
+/// the learner's update counter, then a snapshot publish.
+fn update_round(
+    agent: &mut SacAgent,
+    rl: RlConfig,
+    slot: &SnapshotSlot,
+    urng: &mut Rng,
+    c: &mut Counters,
+) -> Result<()> {
+    let t = c.sac as usize;
+    agent.update(urng)?;
+    c.sac += 1;
+    if t % rl.wm_train_every == 0 {
+        agent.train_world_model(urng)?;
+        c.wm += 1;
+    }
+    if t % rl.sur_train_every == 0 {
+        agent.train_surrogate(urng)?;
+        c.sur += 1;
+    }
+    publish(agent, slot, c);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::{ACT_DIM, SAC_STATE_DIM};
+
+    fn row(tag: f32) -> Transition {
+        Transition {
+            s: [tag; SAC_STATE_DIM],
+            a_cont: [0.0; ACT_DIM],
+            a_disc: [0.0; 20],
+            r: tag,
+            s2: [0.0; SAC_STATE_DIM],
+            done: 0.0,
+            ppa: [0.0; 3],
+        }
+    }
+
+    #[test]
+    fn queue_is_fifo_and_close_drains() {
+        let q = TransitionQueue::new(64);
+        for i in 0..5 {
+            q.push(StepMsg { t: i, rows: vec![row(i as f32); 2] });
+        }
+        q.close();
+        let mut seen = Vec::new();
+        loop {
+            match q.pop() {
+                Popped::Msg(m) => {
+                    assert_eq!(m.rows.len(), 2);
+                    assert_eq!(m.rows[0].r, m.t as f32);
+                    seen.push(m.t);
+                }
+                Popped::Closed => break,
+                Popped::Empty => unreachable!("blocking pop never returns Empty"),
+            }
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4], "FIFO order, nothing dropped");
+        assert_eq!(q.highwater(), 10);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_producer_without_loss() {
+        // capacity 6 transitions; 40 steps × 3 transitions forces the
+        // producer to block on backpressure repeatedly
+        let q = Arc::new(TransitionQueue::new(6));
+        let steps = 40usize;
+        let prod = {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..steps {
+                    q.push(StepMsg { t: i, rows: vec![row(i as f32); 3] });
+                }
+                q.close();
+            })
+        };
+        let mut got = Vec::new();
+        loop {
+            match q.pop() {
+                Popped::Msg(m) => {
+                    // consumer is slower than the producer
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    got.push(m.t);
+                }
+                Popped::Closed => break,
+                Popped::Empty => unreachable!(),
+            }
+        }
+        prod.join().unwrap();
+        assert_eq!(got, (0..steps).collect::<Vec<_>>(), "no drops, no reordering");
+        assert!(q.highwater() <= 6, "bound respected: {}", q.highwater());
+    }
+
+    #[test]
+    fn oversized_batch_is_admitted_when_empty() {
+        let q = TransitionQueue::new(2);
+        // 5 > cap: must not deadlock the (single-threaded) producer
+        q.push(StepMsg { t: 0, rows: vec![row(0.0); 5] });
+        match q.try_pop() {
+            Popped::Msg(m) => assert_eq!(m.rows.len(), 5),
+            _ => panic!("oversized batch lost"),
+        }
+    }
+
+    #[test]
+    fn push_after_close_is_dropped_quietly() {
+        let q = TransitionQueue::new(4);
+        q.close();
+        q.push(StepMsg { t: 0, rows: vec![row(1.0)] });
+        assert!(matches!(q.try_pop(), Popped::Closed));
+    }
+
+    #[test]
+    fn snapshot_slot_versions_are_monotone() {
+        let store = Arc::new(Store::default());
+        let snap = |v: u64| Snapshot {
+            store: store.clone(),
+            version: v,
+            wm_trained: false,
+            sur_trained: false,
+        };
+        let slot = SnapshotSlot::new(snap(0));
+        assert_eq!(slot.version(), 0);
+        assert!(slot.read_newer(0).is_none(), "nothing published yet");
+        let mut last = 0;
+        for v in 1..=9u64 {
+            slot.publish(snap(v));
+            assert!(slot.version() > last, "version must strictly increase");
+            last = slot.version();
+            assert_eq!(last, v);
+        }
+        // stale readers see the newest, current readers see nothing new
+        assert_eq!(slot.read_newer(3).unwrap().version, 9);
+        assert!(slot.read_newer(9).is_none());
+    }
+
+    #[test]
+    fn control_acks_release_waiters_and_failure_unblocks() {
+        let ctrl = Arc::new(Control::new());
+        assert!(ctrl.wait_acked(0), "zero target never blocks");
+        let waiter = {
+            let ctrl = ctrl.clone();
+            std::thread::spawn(move || ctrl.wait_acked(3))
+        };
+        ctrl.ack();
+        ctrl.ack();
+        ctrl.ack();
+        assert!(waiter.join().unwrap());
+        // failure releases even unreachable targets
+        let stuck = {
+            let ctrl = ctrl.clone();
+            std::thread::spawn(move || ctrl.wait_acked(1_000))
+        };
+        ctrl.fail();
+        assert!(!stuck.join().unwrap());
+    }
+
+    #[test]
+    fn learner_mode_parses_and_names() {
+        assert_eq!(LearnerMode::parse("inline").unwrap(), LearnerMode::Inline);
+        assert_eq!(LearnerMode::parse("pinned").unwrap(), LearnerMode::Pinned);
+        assert_eq!(LearnerMode::parse("async").unwrap(), LearnerMode::Async);
+        assert!(LearnerMode::parse("offline").is_err());
+        assert_eq!(LearnerMode::default(), LearnerMode::Inline);
+        assert!(!LearnerMode::Inline.off_loop());
+        assert!(LearnerMode::Pinned.off_loop() && LearnerMode::Async.off_loop());
+        assert_eq!(LearnerMode::Async.name(), "async");
+    }
+}

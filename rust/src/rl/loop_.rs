@@ -168,6 +168,49 @@ pub(crate) fn make_transition(
     }
 }
 
+/// What one [`update_tick`] actually ran — the pinned learner uses this
+/// to keep its counters and decide whether a new parameter snapshot must
+/// be published.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct TickOutcome {
+    /// The warmup gate was open: one SAC update ran.
+    pub ran: bool,
+    /// The world model trained this tick (`t % wm_train_every == 0`).
+    pub wm: bool,
+    /// The surrogate heads trained this tick (`t % sur_train_every == 0`).
+    pub sur: bool,
+}
+
+/// Algorithm 1's post-store learning gate, shared verbatim by the serial
+/// loop, the vec-env's inline driver and the pinned learner thread
+/// (DESIGN.md §11): once the replay buffer covers `max(warmup_steps,
+/// minibatch)`, one SAC update per step plus world-model / surrogate
+/// updates at their per-step cadences, all drawing from `rng` in this
+/// exact order. Keeping the schedule in one function is what makes the
+/// pinned-mode bit-identity contract a structural property instead of a
+/// convention.
+pub(crate) fn update_tick(
+    agent: &mut SacAgent,
+    rl: crate::config::RlConfig,
+    t: usize,
+    rng: &mut Rng,
+) -> Result<TickOutcome> {
+    if agent.buffer.len() < rl.warmup_steps.max(agent.batch()) {
+        return Ok(TickOutcome::default());
+    }
+    let mut tick = TickOutcome { ran: true, wm: false, sur: false };
+    agent.update(rng)?;
+    if t % rl.wm_train_every == 0 {
+        agent.train_world_model(rng)?;
+        tick.wm = true;
+    }
+    if t % rl.sur_train_every == 0 {
+        agent.train_surrogate(rng)?;
+        tick.sur = true;
+    }
+    Ok(tick)
+}
+
 /// Run Algorithm 1 for one node with the SAC agent.
 pub fn run_node(
     cfg: &RunConfig,
@@ -210,16 +253,9 @@ pub fn run_node(
         // ---- store transition
         agent.push_transition(make_transition(s, &action, &out, s2));
 
-        // ---- learning (after warmup)
-        if agent.buffer.len() >= rl.warmup_steps.max(agent_batch(agent)) {
-            agent.update(rng)?;
-            if t % rl.wm_train_every == 0 {
-                agent.train_world_model(rng)?;
-            }
-            if t % rl.sur_train_every == 0 {
-                agent.train_surrogate(rng)?;
-            }
-        }
+        // ---- learning (after warmup; schedule shared with the vec-env
+        // and the pinned learner)
+        update_tick(agent, *rl, t, rng)?;
 
         // ---- bookkeeping
         eps.step(tracker.feasible_count > 0 || out.reward.feasible);
@@ -233,10 +269,6 @@ pub fn run_node(
     result.eval_stats.absorb_scratch(&scratch);
     result.eval_stats.merge(&agent.take_eval_stats());
     Ok(result)
-}
-
-fn agent_batch(agent: &SacAgent) -> usize {
-    agent.batch()
 }
 
 #[cfg(test)]

@@ -1,13 +1,17 @@
 //! The RL optimizer (§3.11–§3.16, Algorithm 1): SAC driver over the
 //! AOT-compiled networks, prioritized replay, adaptive ε-greedy
 //! exploration, world-model MPC planning, the Pareto archive, the
-//! random/grid search baselines of §4.14, and the vectorized multi-env
+//! random/grid search baselines of §4.14, the vectorized multi-env
 //! rollout engine ([`vecenv`]) that steps (node, seed) lanes in lockstep
-//! through batched actor forwards (DESIGN.md §9).
+//! through batched actor forwards (DESIGN.md §9), and the async
+//! actor-learner engine ([`learner`]) that moves the update schedule
+//! onto a dedicated thread behind versioned parameter snapshots
+//! (DESIGN.md §11).
 
 pub mod agent;
 pub mod baselines;
 pub mod explore;
+pub mod learner;
 pub mod loop_;
 pub mod multiseed;
 pub mod pareto;
@@ -16,8 +20,9 @@ pub mod vecenv;
 
 pub use agent::{LaneDecision, SacAgent, UpdateMetrics};
 pub use explore::EpsSchedule;
+pub use learner::{LearnerMode, LearnerReport};
 pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
 pub use multiseed::{run_seeds, run_seeds_t, seeds_table, MultiSeedResult, SeedStat};
 pub use pareto::{ParetoArchive, ParetoPoint};
 pub use per::{PerBuffer, Transition};
-pub use vecenv::{run_jobs, run_vec, LaneSpec};
+pub use vecenv::{run_jobs, run_jobs_stats, run_vec, LaneSpec};

@@ -160,26 +160,30 @@ pub fn aggregate(nm: u32, seeds: Vec<u64>, results: &[NodeResult]) -> MultiSeedR
 /// learning, NOT independent-run variance, and are not comparable to the
 /// independent-seed `search=random` rows. For independent SAC runs, use
 /// `optimize seed=…` per seed (or disable updates with a large warmup).
+/// Returns one aggregate per configured node, plus the actor-learner
+/// engine's counters when `learner=pinned|async` (`None` for inline).
 pub fn run_seeds_vec(
     cfg: &RunConfig,
     n_seeds: usize,
     agent: &mut crate::rl::SacAgent,
     lanes: usize,
     threads: usize,
-) -> crate::error::Result<Vec<MultiSeedResult>> {
+) -> crate::error::Result<(Vec<MultiSeedResult>, Option<crate::rl::LearnerReport>)> {
     let seeds: Vec<u64> = (0..n_seeds).map(|i| derive_seed(cfg.seed, i)).collect();
     let jobs: Vec<crate::rl::LaneSpec> = cfg
         .nodes_nm
         .iter()
         .flat_map(|&nm| seeds.iter().map(move |&seed| crate::rl::LaneSpec { nm, seed }))
         .collect();
-    let results = crate::rl::vecenv::run_jobs(cfg, &jobs, lanes, agent, threads)?;
-    Ok(cfg
+    let (results, learner) =
+        crate::rl::vecenv::run_jobs_stats(cfg, &jobs, lanes, agent, threads)?;
+    let agg = cfg
         .nodes_nm
         .iter()
         .zip(results.chunks(n_seeds.max(1)))
         .map(|(&nm, chunk)| aggregate(nm, seeds.clone(), chunk))
-        .collect())
+        .collect();
+    Ok((agg, learner))
 }
 
 /// Render a multi-seed summary table (mean ± 95% CI).

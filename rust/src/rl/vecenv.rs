@@ -34,6 +34,16 @@
 //! streams stay serial-identical and the only cross-lane coupling is the
 //! (intended) shared learning through the store. A full vec run is still
 //! deterministic from `(cfg.seed, lane seeds)` for any worker count.
+//!
+//! ## Step sinks (DESIGN.md §11)
+//!
+//! Where each lockstep step's transitions — and the update schedule they
+//! trigger — go is abstracted behind [`StepSink`]: `Inline` runs
+//! [`update_tick`] on this thread exactly as described above, while
+//! `Learner` forwards the step to the dedicated learner thread
+//! ([`crate::rl::learner`]) and adopts its published parameter snapshots
+//! at the top of each step. `learner=pinned` reproduces the inline
+//! schedule bit-for-bit; `learner=async` trades that for throughput.
 
 use crate::config::RunConfig;
 use crate::env::{state, Action, SAC_STATE_DIM};
@@ -41,7 +51,8 @@ use crate::error::Result;
 use crate::eval::{parallel, EvalCache, EvalScratch, EvalStats, Evaluator};
 use crate::rl::agent::{LaneDecision, SacAgent};
 use crate::rl::explore::EpsSchedule;
-use crate::rl::loop_::{make_transition, EpisodeTracker};
+use crate::rl::learner::{LearnerClient, LearnerReport, UPDATE_STREAM_TAG};
+use crate::rl::loop_::{make_transition, update_tick, EpisodeTracker};
 use crate::rl::NodeResult;
 use crate::util::stats::RunningStat;
 use crate::util::Rng;
@@ -102,6 +113,18 @@ impl Lane {
     }
 }
 
+/// Where a lockstep step's transitions — and the updates they trigger —
+/// go: inline on this thread (the legacy engine, the determinism
+/// reference) or across the queue to the dedicated learner thread.
+pub(crate) enum StepSink<'a> {
+    /// Push into the agent's own buffer and run [`update_tick`] here,
+    /// drawing from the caller-owned update stream.
+    Inline { update_rng: &'a mut Rng },
+    /// Send each step to the learner thread and pick up published
+    /// parameter snapshots at step boundaries.
+    Learner(&'a mut LearnerClient),
+}
+
 /// Run Algorithm 1 for every lane of `specs` in lockstep: one batched
 /// actor forward per step, env transitions fanned out over up to
 /// `threads` workers, replay insertion in lane-major order, updates
@@ -120,6 +143,17 @@ pub fn run_vec(
     update_rng: &mut Rng,
     threads: usize,
 ) -> Result<Vec<NodeResult>> {
+    run_vec_driver(cfg, specs, agent, threads, &mut StepSink::Inline { update_rng })
+}
+
+/// The lockstep driver behind [`run_vec`], generic over the step sink.
+pub(crate) fn run_vec_driver(
+    cfg: &RunConfig,
+    specs: &[LaneSpec],
+    agent: &mut SacAgent,
+    threads: usize,
+    sink: &mut StepSink<'_>,
+) -> Result<Vec<NodeResult>> {
     if specs.is_empty() {
         return Ok(Vec::new());
     }
@@ -132,6 +166,14 @@ pub fn run_vec(
     let mut s2s = vec![[0.0f32; SAC_STATE_DIM]; b];
 
     for t in 0..rl.episodes_per_node {
+        // ---- parameter pickup: pinned mode first waits for the learner
+        // to process every step sent so far (so this step acts on the
+        // store state the inline schedule would produce), async adopts
+        // whatever snapshot is newest without waiting
+        if let StepSink::Learner(client) = sink {
+            client.sync(agent)?;
+        }
+
         // ---- ε coins + state gather, lane-major (Algorithm 1 line 6)
         for (i, lane) in lanes.iter().enumerate() {
             decisions[i].explore = rngs[i].uniform() < lane.eps.eps;
@@ -173,23 +215,19 @@ pub fn run_vec(
             *s2 = state::sac_subset(&out.full_state);
         }
 
-        // ---- replay insertion in fixed lane-major order
+        // ---- replay insertion in fixed lane-major order, then learning
+        // amortized on the shared step counter: one SAC update per
+        // vec-step (B serial runs would perform B), wm/sur at their
+        // per-step cadences — run here (inline) or on the learner thread
         let step_rows = lanes.iter().zip(actions).zip(&outs).zip(&s2s).map(
             |(((lane, action), out), s2)| make_transition(lane.s, action, out, *s2),
         );
-        agent.buffer.push_batch(step_rows);
-
-        // ---- learning, amortized on the shared step counter: one SAC
-        // update per vec-step (B serial runs would perform B), wm/sur at
-        // their per-step cadences, all drawing from the update stream
-        if agent.buffer.len() >= rl.warmup_steps.max(agent.batch()) {
-            agent.update(update_rng)?;
-            if t % rl.wm_train_every == 0 {
-                agent.train_world_model(update_rng)?;
+        match sink {
+            StepSink::Inline { update_rng } => {
+                agent.buffer.push_batch(step_rows);
+                update_tick(agent, *rl, t, update_rng)?;
             }
-            if t % rl.sur_train_every == 0 {
-                agent.train_surrogate(update_rng)?;
-            }
+            StepSink::Learner(client) => client.send_step(t, step_rows.collect())?,
         }
 
         // ---- bookkeeping, lane-major
@@ -219,6 +257,8 @@ pub fn run_vec(
 /// disabled the wave grouping is unobservable — every lane is
 /// self-contained — so `lanes=1` and `lanes=len(jobs)` produce
 /// bit-identical per-job results (pinned by `tests/vecenv.rs`).
+///
+/// [`run_jobs_stats`] with the learner report discarded.
 pub fn run_jobs(
     cfg: &RunConfig,
     jobs: &[LaneSpec],
@@ -226,14 +266,48 @@ pub fn run_jobs(
     agent: &mut SacAgent,
     threads: usize,
 ) -> Result<Vec<NodeResult>> {
-    // one update stream across all waves: wave boundaries must not reset
-    // the learning noise sequence
-    let mut update_rng = Rng::new(cfg.seed).fork(0x0ECE);
-    let mut results = Vec::with_capacity(jobs.len());
-    for wave in jobs.chunks(lanes.max(1)) {
-        results.extend(run_vec(cfg, wave, agent, &mut update_rng, threads)?);
+    Ok(run_jobs_stats(cfg, jobs, lanes, agent, threads)?.0)
+}
+
+/// [`run_jobs`] plus the learner-engine counters: with
+/// `learner=pinned|async` one [`LearnerClient`] spans the whole job list
+/// — the learner thread, its replay buffer, the update RNG stream and
+/// the ack counter all persist across wave boundaries, exactly like the
+/// inline driver's update stream — and the run's [`LearnerReport`] comes
+/// back alongside the results (`None` for `learner=inline`).
+pub fn run_jobs_stats(
+    cfg: &RunConfig,
+    jobs: &[LaneSpec],
+    lanes: usize,
+    agent: &mut SacAgent,
+    threads: usize,
+) -> Result<(Vec<NodeResult>, Option<LearnerReport>)> {
+    if jobs.is_empty() {
+        return Ok((Vec::new(), None));
     }
-    Ok(results)
+    let mut results = Vec::with_capacity(jobs.len());
+    if cfg.rl.learner.off_loop() {
+        let mut client = LearnerClient::spawn(cfg, agent, lanes.max(1).min(jobs.len()))?;
+        for wave in jobs.chunks(lanes.max(1)) {
+            results.extend(run_vec_driver(
+                cfg,
+                wave,
+                agent,
+                threads,
+                &mut StepSink::Learner(&mut client),
+            )?);
+        }
+        let report = client.finish(agent)?;
+        Ok((results, Some(report)))
+    } else {
+        // one update stream across all waves: wave boundaries must not
+        // reset the learning noise sequence
+        let mut update_rng = Rng::new(cfg.seed).fork(UPDATE_STREAM_TAG);
+        for wave in jobs.chunks(lanes.max(1)) {
+            results.extend(run_vec(cfg, wave, agent, &mut update_rng, threads)?);
+        }
+        Ok((results, None))
+    }
 }
 
 /// Cross-lane reward statistics over a vec run's episode logs, folded in
@@ -294,5 +368,32 @@ mod tests {
         let cfg = tiny_cfg();
         let mut ag = agent(&cfg);
         assert!(run_jobs(&cfg, &[], 4, &mut ag, 2).unwrap().is_empty());
+        // learner modes included — no thread is spawned for zero jobs
+        let mut cfg = tiny_cfg();
+        cfg.apply("learner", "async").unwrap();
+        let (r, rep) = run_jobs_stats(&cfg, &[], 4, &mut ag, 2).unwrap();
+        assert!(r.is_empty() && rep.is_none());
+    }
+
+    #[test]
+    fn learner_sink_keeps_shapes_and_restores_replay() {
+        // warmup 10_000 over 12 transitions: the learner absorbs every
+        // step but never updates — shapes, counters and the restored
+        // replay buffer are what's under test here (bit-identity and
+        // live-update behavior live in tests/learner.rs)
+        let mut cfg = tiny_cfg();
+        cfg.apply("learner", "pinned").unwrap();
+        let specs =
+            [LaneSpec { nm: 7, seed: 1 }, LaneSpec { nm: 28, seed: 2 }];
+        let mut ag = agent(&cfg);
+        let (results, report) = run_jobs_stats(&cfg, &specs, 2, &mut ag, 2).unwrap();
+        assert_eq!(results.len(), 2);
+        let report = report.expect("off-loop learner always reports");
+        assert_eq!(report.steps, 6, "one queue message per lockstep step");
+        assert_eq!(report.sac_updates, 0, "warmup gate stayed closed");
+        assert_eq!(report.snapshots, 0);
+        assert!(report.queue_highwater >= 2, "at least one 2-lane batch queued");
+        // the learner hands its replay buffer back on finish
+        assert_eq!(ag.buffer.len(), 12);
     }
 }

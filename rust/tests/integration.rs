@@ -44,6 +44,7 @@ fn random_search_two_nodes_generates_full_reports() {
             "test",
             &cfg.scenario(),
             &silicon_rl::nn::kernels::describe(silicon_rl::nn::KernelSel::Auto),
+            None,
         ),
         report::industry_comparison(rows.first()),
         report::cross_node_compare(r3, r28),
@@ -163,6 +164,7 @@ fn new_workload_scenario_runs_end_to_end_and_is_feasible() {
         "hp",
         &cfg.scenario(),
         &silicon_rl::nn::kernels::describe(silicon_rl::nn::KernelSel::Scalar),
+        None,
     );
     let txt = t.to_text();
     assert!(txt.contains("8192"), "{txt}");
