@@ -8,8 +8,9 @@
 //! Budget: SILICON_RL_BENCH_EPISODES (default 1000; paper used ~4,600).
 //! Sweep budget: SILICON_RL_BENCH_SWEEP_EPISODES (default 60/node/seed).
 //! `BENCH_SMOKE=1` shrinks every budget to a CI-sized short mode; the
-//! vec-env lane sweep always emits `out/bench/BENCH_vecenv.json` and the
-//! actor-learner mode sweep `out/bench/BENCH_learner.json`.
+//! vec-env lane sweep always emits `out/bench/BENCH_vecenv.json`, the
+//! actor-learner mode sweep `out/bench/BENCH_learner.json`, and the
+//! atlas reuse sweep `out/bench/BENCH_atlas.json`.
 
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -89,6 +90,7 @@ fn main() -> Result<()> {
     node_sweep_scaling(smoke)?;
     vecenv_lane_sweep(smoke)?;
     learner_mode_sweep(smoke)?;
+    atlas_sweep(smoke)?;
     Ok(())
 }
 
@@ -475,6 +477,114 @@ fn learner_mode_sweep(smoke: bool) -> Result<()> {
         assert!(
             best >= 1.05,
             "async learner gain {best:.2}x < 1.05x at lanes >= 8 on {total} cores"
+        );
+    }
+    Ok(())
+}
+
+/// Atlas sweep reuse case (DESIGN.md §12): a reduced scenario grid —
+/// 1 workload × 2 nodes × decode × 1 seq_len × batches {1, 2, 4, 8} —
+/// swept twice: the no-reuse baseline (`atlas_prune=off atlas_warm=off`,
+/// every point an independent cold search) against the full reuse stack
+/// (roofline dominance pruning + shared outcome/geometry caches + warm
+/// agents + wave scheduling). Emits `out/bench/BENCH_atlas.json` in both
+/// normal and `BENCH_SMOKE` modes; acceptance is ≥2× wall-clock with
+/// nonzero prune and cache-reuse counters.
+fn atlas_sweep(smoke: bool) -> Result<()> {
+    let episodes = if smoke { 8 } else { 24 };
+    let threads = parallel::num_threads();
+
+    println!(
+        "\n== bench_search: atlas sweep — reuse stack vs no-reuse baseline \
+         ({threads} workers) =="
+    );
+
+    let run = |prune: bool, warm: bool| -> Result<(rl::AtlasResult, f64)> {
+        let mut cfg = RunConfig::default();
+        cfg.backend = BackendSel::Native;
+        cfg.artifacts_dir = "/nonexistent-artifacts".into();
+        cfg.rl.episodes_per_node = episodes;
+        // rollout-only lanes: the bench measures search reuse, not
+        // update throughput
+        cfg.rl.warmup_steps = 10_000;
+        cfg.nodes_nm = vec![7, 22];
+        cfg.atlas.workloads = vec!["llama-3.2-1b".into()];
+        cfg.atlas.phases = vec![silicon_rl::ir::Phase::Decode];
+        cfg.atlas.seq_lens = vec![2048];
+        cfg.atlas.batches = vec![1, 2, 4, 8];
+        cfg.atlas.prune = prune;
+        cfg.atlas.warm = warm;
+        cfg.atlas.shrink = 0;
+        let t0 = Instant::now();
+        let res = rl::atlas::run(&cfg)?;
+        Ok((res, t0.elapsed().as_secs_f64()))
+    };
+
+    let (base, dt_base) = run(false, false)?;
+    let (reuse, dt_reuse) = run(true, true)?;
+    let speedup = dt_base / dt_reuse.max(1e-9);
+
+    let c = &reuse.counters;
+    println!(
+        "  baseline: {dt_base:>6.2}s ({} episodes over {} points)",
+        base.counters.episodes_run, base.counters.points
+    );
+    println!(
+        "  reuse:    {dt_reuse:>6.2}s ({} episodes, {} pruned: {} fast / {} \
+         amortized) -> {speedup:.2}x",
+        c.episodes_run,
+        c.pruned(),
+        c.prune_fast,
+        c.prune_amortized
+    );
+    println!(
+        "  shared state: {} cache hits / {} misses, {} geometry tables shared",
+        reuse.eval_stats.outcome_hits,
+        reuse.eval_stats.outcome_misses,
+        reuse.eval_stats.geom_shared
+    );
+
+    let frontier_points =
+        |r: &rl::AtlasResult| r.points.iter().map(|p| p.frontier.len() as f64).sum::<f64>();
+    let record = json::obj(vec![
+        ("bench", json::s("bench_atlas")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("workers", json::num(threads as f64)),
+        ("episodes_per_point", json::num(episodes as f64)),
+        ("grid_points", json::num(base.counters.points as f64)),
+        ("baseline_s", json::num(dt_base)),
+        ("reuse_s", json::num(dt_reuse)),
+        ("speedup", json::num(speedup)),
+        ("baseline_episodes", json::num(base.counters.episodes_run as f64)),
+        ("reuse_episodes", json::num(c.episodes_run as f64)),
+        ("pruned", json::num(c.pruned() as f64)),
+        ("prune_fast", json::num(c.prune_fast as f64)),
+        ("prune_amortized", json::num(c.prune_amortized as f64)),
+        ("cache_hits", json::num(reuse.eval_stats.outcome_hits as f64)),
+        ("cache_misses", json::num(reuse.eval_stats.outcome_misses as f64)),
+        ("geom_shared", json::num(reuse.eval_stats.geom_shared as f64)),
+        ("baseline_frontier_points", json::num(frontier_points(&base))),
+        ("reuse_frontier_points", json::num(frontier_points(&reuse))),
+    ]);
+    std::fs::create_dir_all("out/bench")?;
+    std::fs::write("out/bench/BENCH_atlas.json", record.to_string_pretty())?;
+    println!("record: out/bench/BENCH_atlas.json");
+
+    // acceptance gate: ≥2× wall-clock from the reuse stack with nonzero
+    // prune and cache-reuse counters. Checked after the record is written
+    // (the artifact survives a failure) and only in full-budget runs with
+    // parallel headroom — smoke budgets make wall-clock ratios noise (the
+    // JSON still records them).
+    if !smoke && threads >= 4 {
+        assert!(c.pruned() > 0, "atlas reuse run pruned no points");
+        assert!(
+            reuse.eval_stats.outcome_hits + reuse.eval_stats.geom_shared > 0,
+            "atlas reuse run shows no cache/geometry reuse"
+        );
+        assert!(
+            speedup >= 2.0,
+            "atlas reuse speedup {speedup:.2}x < 2x on {threads} workers \
+             (baseline {dt_base:.2}s vs reuse {dt_reuse:.2}s)"
         );
     }
     Ok(())

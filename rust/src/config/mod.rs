@@ -273,6 +273,59 @@ impl Default for RlConfig {
     }
 }
 
+/// Parse an `on|off` switch (also accepting the `true|false|1|0|yes|no`
+/// forms the boolean keys use).
+fn parse_switch(key: &str, value: &str) -> Result<bool, String> {
+    match value {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        _ => Err(format!("bad {key} {value}")),
+    }
+}
+
+/// Scenario-atlas sweep options (`silicon-rl atlas`, DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct AtlasOptions {
+    /// Cross-point roofline dominance pruning (`atlas_prune=on|off`).
+    /// `off` is the exact fallback: every grid point runs cold so the
+    /// pruned sweep's per-point frontiers can be checked bit-identical.
+    pub prune: bool,
+    /// Warm shared state (`atlas_warm=on|off`): one shared outcome memo
+    /// plus agent stores handed between neighboring points in curriculum
+    /// order. `off` gives each point a fresh agent and private caches —
+    /// the configuration the pruned≡exact contract is stated under.
+    pub warm: bool,
+    /// Budget shrink for dominated points (`atlas_shrink=N`): 0 skips
+    /// them outright, N ≥ 1 runs them at `episodes / N`.
+    pub shrink: u32,
+    /// Scenario axes of the grid (`atlas_seq_lens=` / `atlas_batches=` /
+    /// `atlas_phases=` comma lists).
+    pub seq_lens: Vec<u32>,
+    pub batches: Vec<u32>,
+    pub phases: Vec<Phase>,
+    /// Workloads to sweep (`atlas_workloads=` comma list of registry
+    /// names); empty = every registered workload.
+    pub workloads: Vec<String>,
+    /// Seeds per scenario point (`atlas_seeds=N`), aggregated with the
+    /// multiseed machinery when > 1.
+    pub n_seeds: usize,
+}
+
+impl Default for AtlasOptions {
+    fn default() -> Self {
+        AtlasOptions {
+            prune: true,
+            warm: true,
+            shrink: 0,
+            seq_lens: vec![512, 2048, 8192],
+            batches: vec![1, 4],
+            phases: vec![Phase::Decode, Phase::Prefill],
+            workloads: Vec::new(),
+            n_seeds: 1,
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Debug, Clone)]
 pub struct RunConfig {
@@ -312,6 +365,8 @@ pub struct RunConfig {
     /// or a config-file line) — the CLI's argmax-only commands default
     /// pruning on only when the user expressed no preference.
     pub prune_explicit: bool,
+    /// Scenario-atlas sweep options (`silicon-rl atlas`).
+    pub atlas: AtlasOptions,
 }
 
 impl Default for RunConfig {
@@ -333,6 +388,7 @@ impl Default for RunConfig {
             out_dir: "out".into(),
             parallel_nodes: false,
             prune_explicit: false,
+            atlas: AtlasOptions::default(),
         }
     }
 }
@@ -403,7 +459,12 @@ impl RunConfig {
     /// run), updates_per_step (async update budget, 0 = uncapped),
     /// queue_cap (rollout→learner bound in transitions, 0 = auto),
     /// candidate_batch, parallel_nodes (true|false),
-    /// prune (true|false — roofline admission pruning on argmax paths).
+    /// prune (true|false — roofline admission pruning on argmax paths),
+    /// and the atlas keys: atlas_prune / atlas_warm (on|off),
+    /// atlas_shrink (0 = skip dominated points, N ≥ 1 = episodes/N),
+    /// atlas_seq_lens / atlas_batches (comma u32 lists), atlas_phases
+    /// (comma prefill|decode list), atlas_workloads (comma registry
+    /// names, empty = all), atlas_seeds (seeds per point).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -502,6 +563,58 @@ impl RunConfig {
                 };
                 self.prune_explicit = true;
             }
+            "atlas_prune" => self.atlas.prune = parse_switch("atlas_prune", value)?,
+            "atlas_warm" => self.atlas.warm = parse_switch("atlas_warm", value)?,
+            "atlas_shrink" => {
+                self.atlas.shrink =
+                    value.parse().map_err(|_| format!("bad atlas_shrink {value}"))?
+            }
+            "atlas_seq_lens" => {
+                let lens: Vec<u32> = value
+                    .split(',')
+                    .map(|s| s.trim().parse::<u32>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| format!("bad atlas_seq_lens {value}"))?;
+                if lens.is_empty() || lens.contains(&0) {
+                    return Err("atlas_seq_lens needs values >= 1".to_string());
+                }
+                self.atlas.seq_lens = lens;
+            }
+            "atlas_batches" => {
+                let batches: Vec<u32> = value
+                    .split(',')
+                    .map(|s| s.trim().parse::<u32>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| format!("bad atlas_batches {value}"))?;
+                if batches.is_empty() || batches.contains(&0) {
+                    return Err("atlas_batches needs values >= 1".to_string());
+                }
+                self.atlas.batches = batches;
+            }
+            "atlas_phases" => {
+                self.atlas.phases = value
+                    .split(',')
+                    .map(|s| Phase::parse(s.trim()))
+                    .collect::<Result<_, _>>()?;
+                if self.atlas.phases.is_empty() {
+                    return Err("atlas_phases needs at least one phase".to_string());
+                }
+            }
+            "atlas_workloads" => {
+                self.atlas.workloads = value
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            }
+            "atlas_seeds" => {
+                let n: usize =
+                    value.parse().map_err(|_| format!("bad atlas_seeds {value}"))?;
+                if n == 0 {
+                    return Err("atlas_seeds must be >= 1".to_string());
+                }
+                self.atlas.n_seeds = n;
+            }
             "kv" => {
                 use crate::kv::KvStrategy::*;
                 self.kv_strategy = if value == "full" {
@@ -524,6 +637,16 @@ impl RunConfig {
             _ => return Err(format!("unknown config key {key}")),
         }
         Ok(())
+    }
+
+    /// The atlas sweep's workload list: the explicit `atlas_workloads=`
+    /// selection, or every registered workload when none was named.
+    pub fn atlas_grid_workloads(&self) -> Vec<String> {
+        if self.atlas.workloads.is_empty() {
+            crate::ir::registry::names().iter().map(|s| s.to_string()).collect()
+        } else {
+            self.atlas.workloads.clone()
+        }
     }
 
     /// Load `key = value` lines (comments with '#') from a file on top of
@@ -618,6 +741,37 @@ mod tests {
         c.apply("lanes", "4").unwrap();
         assert_eq!(c.rl.lanes, 4);
         assert!(c.apply("lanes", "many").is_err());
+    }
+
+    #[test]
+    fn atlas_keys_apply_and_validate() {
+        let mut c = RunConfig::default();
+        assert!(c.atlas.prune && c.atlas.warm);
+        assert_eq!(c.atlas.shrink, 0);
+        assert_eq!(c.atlas.n_seeds, 1);
+        assert!(c.atlas.workloads.is_empty());
+        // empty selection resolves to the full registry
+        assert_eq!(c.atlas_grid_workloads().len(), crate::ir::registry::all().len());
+        c.apply("atlas_prune", "off").unwrap();
+        c.apply("atlas_warm", "false").unwrap();
+        c.apply("atlas_shrink", "4").unwrap();
+        c.apply("atlas_seq_lens", "512, 2048").unwrap();
+        c.apply("atlas_batches", "1,4,8").unwrap();
+        c.apply("atlas_phases", "decode").unwrap();
+        c.apply("atlas_workloads", "llama-3.2-1b, qwen2-0.5b").unwrap();
+        c.apply("atlas_seeds", "3").unwrap();
+        assert!(!c.atlas.prune && !c.atlas.warm);
+        assert_eq!(c.atlas.shrink, 4);
+        assert_eq!(c.atlas.seq_lens, vec![512, 2048]);
+        assert_eq!(c.atlas.batches, vec![1, 4, 8]);
+        assert_eq!(c.atlas.phases, vec![Phase::Decode]);
+        assert_eq!(c.atlas_grid_workloads(), vec!["llama-3.2-1b", "qwen2-0.5b"]);
+        assert_eq!(c.atlas.n_seeds, 3);
+        assert!(c.apply("atlas_prune", "maybe").is_err());
+        assert!(c.apply("atlas_seq_lens", "0").is_err());
+        assert!(c.apply("atlas_batches", "").is_err());
+        assert!(c.apply("atlas_phases", "train").is_err());
+        assert!(c.apply("atlas_seeds", "0").is_err());
     }
 
     #[test]

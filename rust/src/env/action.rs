@@ -69,10 +69,19 @@ fn unit_to(u: f64, lo: f64, hi: f64) -> f64 {
 }
 
 /// Apply mesh deltas with bounds (mesh dims in [2,64], SC in [1,8]).
+/// Reachable mesh side bounds: the Algorithm-1 walk clamps every
+/// width/height delta into this range, so `[MESH_DIM_MIN, MESH_DIM_MAX]²`
+/// brackets every mesh any action sequence can reach (the global roofline
+/// envelope of `Evaluator::roofline_envelope` relies on this).
+pub const MESH_DIM_MIN: u32 = 2;
+pub const MESH_DIM_MAX: u32 = 64;
+
 pub fn apply_deltas(mesh: &MeshConfig, deltas: &[i32; N_DISC]) -> MeshConfig {
     MeshConfig {
-        width: (mesh.width as i32 + deltas[0]).clamp(2, 64) as u32,
-        height: (mesh.height as i32 + deltas[1]).clamp(2, 64) as u32,
+        width: (mesh.width as i32 + deltas[0]).clamp(MESH_DIM_MIN as i32, MESH_DIM_MAX as i32)
+            as u32,
+        height: (mesh.height as i32 + deltas[1])
+            .clamp(MESH_DIM_MIN as i32, MESH_DIM_MAX as i32) as u32,
         sc_x: (mesh.sc_x as i32 + deltas[2]).clamp(1, 8) as u32,
         sc_y: (mesh.sc_y as i32 + deltas[3]).clamp(1, 8) as u32,
     }

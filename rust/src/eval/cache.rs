@@ -26,6 +26,7 @@
 //! re-run only the cheap PPA + reward stages.
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use crate::arch::MeshConfig;
 use crate::config::{ModeConfig, NodeBudget};
@@ -212,6 +213,10 @@ pub fn place_key(salt: u64, mesh: &MeshConfig, knobs: &PartitionKnobs, mit: &Mit
 #[derive(Debug, Default)]
 pub struct EvalCache {
     map: HashMap<u64, EvalOutcome>,
+    /// Resident entries per [`Evaluator::eval_salt`] — the cross-scenario
+    /// occupancy ledger of a cache shared by the atlas sweep. Reset
+    /// together with `map` on the wholesale eviction.
+    per_salt: HashMap<u64, u64>,
     capacity: usize,
     pub hits: u64,
     pub misses: u64,
@@ -219,20 +224,81 @@ pub struct EvalCache {
     pub evictions: u64,
 }
 
+/// Cross-scenario occupancy snapshot of an [`EvalCache`]: how many
+/// outcomes each scenario salt keeps resident, plus lifetime hit/miss
+/// counters. Surfaced in Table 14 and the atlas summary so cache-sharing
+/// wins are measurable (DESIGN.md §12).
+#[derive(Debug, Clone, Default)]
+pub struct CacheOccupancy {
+    pub entries: usize,
+    /// `(eval_salt, resident entries)`, sorted by salt for determinism.
+    pub salts: Vec<(u64, u64)>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheOccupancy {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 impl EvalCache {
     /// `capacity` bounds resident outcomes (each holds per-tile vectors —
     /// tens of KB at large meshes). 0 disables caching entirely.
     pub fn new(capacity: usize) -> EvalCache {
-        EvalCache { map: HashMap::new(), capacity, hits: 0, misses: 0, evictions: 0 }
+        EvalCache {
+            map: HashMap::new(),
+            per_salt: HashMap::new(),
+            capacity,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Probe half of the memo: replay a stored outcome for `key`
+    /// ([`salted_input_key`]), counting the hit or miss. The split
+    /// probe/[`Self::admit`] pair lets [`SharedEvalCache`] drop its lock
+    /// while the real evaluation runs.
+    pub fn lookup(&mut self, key: u64) -> Option<EvalOutcome> {
+        if let Some(out) = self.map.get(&key) {
+            self.hits += 1;
+            return Some(out.clone());
+        }
+        self.misses += 1;
+        None
+    }
+
+    /// Store half of the memo: admit a freshly computed outcome under
+    /// `key`, whose salt must be the `salt` used to derive it. When full,
+    /// the cache resets wholesale — a deterministic eviction policy (no
+    /// clock, no access order) so cached and uncached runs stay
+    /// reproducible.
+    pub fn admit(&mut self, salt: u64, key: u64, out: EvalOutcome) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.map.len() >= self.capacity {
+            self.evictions += self.map.len() as u64;
+            self.map.clear();
+            self.per_salt.clear();
+        }
+        if self.map.insert(key, out).is_none() {
+            *self.per_salt.entry(salt).or_insert(0) += 1;
+        }
     }
 
     /// Evaluate through the cache: replay a stored outcome when the exact
     /// `(mesh, action)` input has been scored before *by an equivalent
     /// evaluator* (keys carry [`Evaluator::eval_salt`], so entries never
     /// leak across workloads, nodes, scenarios or KV strategies), else
-    /// compute and store. When full, the cache resets wholesale — a
-    /// deterministic eviction policy (no clock, no access order) so
-    /// cached and uncached runs stay reproducible.
+    /// compute and store.
     pub fn evaluate(
         &mut self,
         ev: &Evaluator,
@@ -243,19 +309,22 @@ impl EvalCache {
         if self.capacity == 0 {
             return ev.evaluate(mesh, a, scratch);
         }
-        let key = salted_input_key(ev.eval_salt(), mesh, a);
-        if let Some(out) = self.map.get(&key) {
-            self.hits += 1;
-            return out.clone();
+        let salt = ev.eval_salt();
+        let key = salted_input_key(salt, mesh, a);
+        if let Some(out) = self.lookup(key) {
+            return out;
         }
-        self.misses += 1;
         let out = ev.evaluate(mesh, a, scratch);
-        if self.map.len() >= self.capacity {
-            self.evictions += self.map.len() as u64;
-            self.map.clear();
-        }
-        self.map.insert(key, out.clone());
+        self.admit(salt, key, out.clone());
         out
+    }
+
+    /// Cross-scenario occupancy snapshot (entries per salt + counters).
+    pub fn occupancy(&self) -> CacheOccupancy {
+        let mut salts: Vec<(u64, u64)> =
+            self.per_salt.iter().map(|(&s, &n)| (s, n)).collect();
+        salts.sort_unstable();
+        CacheOccupancy { entries: self.map.len(), salts, hits: self.hits, misses: self.misses }
     }
 
     pub fn len(&self) -> usize {
@@ -273,6 +342,72 @@ impl EvalCache {
         } else {
             self.hits as f64 / total as f64
         }
+    }
+}
+
+/// One process-wide [`EvalCache`] shared by every lane and scenario point
+/// of an atlas sweep. Safe because keys carry [`Evaluator::eval_salt`]
+/// (no cross-scenario replay — pinned by
+/// `eval_cache_never_replays_across_scenarios`) and a replayed outcome is
+/// bit-identical to recomputation, so sharing never perturbs lane
+/// determinism. Locking is two-phase: probe under the lock, run the real
+/// evaluation *outside* it, admit under the lock — concurrent lanes never
+/// serialize on the expensive pipeline. A lost race means both lanes
+/// compute the same pure outcome and the second admit overwrites it with
+/// identical bits.
+#[derive(Debug, Clone)]
+pub struct SharedEvalCache(Arc<Mutex<EvalCache>>);
+
+impl SharedEvalCache {
+    pub fn new(capacity: usize) -> SharedEvalCache {
+        SharedEvalCache(Arc::new(Mutex::new(EvalCache::new(capacity))))
+    }
+
+    /// Evaluate through the shared memo (see type docs for the locking
+    /// discipline).
+    pub fn evaluate(
+        &self,
+        ev: &Evaluator,
+        mesh: &MeshConfig,
+        a: &Action,
+        scratch: &mut EvalScratch,
+    ) -> EvalOutcome {
+        let salt = ev.eval_salt();
+        let key = salted_input_key(salt, mesh, a);
+        {
+            let mut c = self.0.lock().unwrap();
+            if c.capacity == 0 {
+                drop(c);
+                return ev.evaluate(mesh, a, scratch);
+            }
+            if let Some(out) = c.lookup(key) {
+                return out;
+            }
+        }
+        let out = ev.evaluate(mesh, a, scratch);
+        self.0.lock().unwrap().admit(salt, key, out.clone());
+        out
+    }
+
+    /// Cross-scenario occupancy snapshot (entries per salt + counters).
+    pub fn occupancy(&self) -> CacheOccupancy {
+        self.0.lock().unwrap().occupancy()
+    }
+
+    /// Lifetime `(hits, misses)` — the atlas diffs consecutive snapshots
+    /// to attribute a hit rate to each scenario point.
+    pub fn counters(&self) -> (u64, u64) {
+        let c = self.0.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// Fold the shared counters into run stats (the shared cache outlives
+    /// every lane, so this runs once at the end of a sweep).
+    pub fn absorb_into(&self, stats: &mut EvalStats) {
+        let c = self.0.lock().unwrap();
+        stats.outcome_hits += c.hits;
+        stats.outcome_misses += c.misses;
+        stats.outcome_evictions += c.evictions;
     }
 }
 
@@ -369,6 +504,10 @@ pub struct EvalStats {
     pub place_evictions: u64,
     pub geom_hits: u64,
     pub geom_misses: u64,
+    /// Geometry tables served from the process-wide shared registry
+    /// instead of being rebuilt (one table per mesh-dims across all
+    /// lanes and scenario points).
+    pub geom_shared: u64,
     /// Candidates rejected by the roofline admission bound without a full
     /// evaluation.
     pub pruned: u64,
@@ -386,6 +525,7 @@ impl EvalStats {
         self.place_evictions += o.place_evictions;
         self.geom_hits += o.geom_hits;
         self.geom_misses += o.geom_misses;
+        self.geom_shared += o.geom_shared;
         self.pruned += o.pruned;
         self.evaluated += o.evaluated;
     }
@@ -404,6 +544,7 @@ impl EvalStats {
         self.place_evictions += s.stages.evictions;
         self.geom_hits += s.place.geom.hits;
         self.geom_misses += s.place.geom.misses;
+        self.geom_shared += s.place.geom.shared;
     }
 
     fn rate(hits: u64, misses: u64) -> f64 {
@@ -664,6 +805,76 @@ mod tests {
         ev.evaluate(&mesh, &Action::neutral(), &mut scratch);
         assert_eq!(scratch.stages.len(), 0);
         assert_eq!((scratch.stages.hits, scratch.stages.misses), (0, 0));
+    }
+
+    #[test]
+    fn occupancy_tracks_entries_per_salt() {
+        let base = {
+            let mut c = RunConfig::default();
+            c.granularity = Granularity::Group;
+            c
+        };
+        let mut batched = base.clone();
+        batched.batch = Some(4);
+        let ev_a = Evaluator::new(&base, 3);
+        let ev_b = Evaluator::new(&batched, 3);
+        let mesh = MeshConfig::new(8, 8);
+        let mut scratch = EvalScratch::default();
+        let mut cache = EvalCache::new(16);
+        for i in 0..3 {
+            let mut a = Action::neutral();
+            a.cont[0] = i as f64 * 0.1;
+            cache.evaluate(&ev_a, &mesh, &a, &mut scratch);
+        }
+        cache.evaluate(&ev_b, &mesh, &Action::neutral(), &mut scratch);
+        cache.evaluate(&ev_b, &mesh, &Action::neutral(), &mut scratch); // hit
+        let occ = cache.occupancy();
+        assert_eq!(occ.entries, 4);
+        assert_eq!(occ.salts.len(), 2);
+        let mut counts: Vec<u64> = occ.salts.iter().map(|&(_, n)| n).collect();
+        counts.sort_unstable();
+        assert_eq!(counts, vec![1, 3]);
+        assert_eq!((occ.hits, occ.misses), (1, 4));
+        assert!((occ.hit_rate() - 0.2).abs() < 1e-12);
+        // the wholesale reset clears the ledger with the map
+        let mut tiny = EvalCache::new(2);
+        for i in 0..5 {
+            let mut a = Action::neutral();
+            a.cont[0] = i as f64 * 0.1;
+            tiny.evaluate(&ev_a, &mesh, &a, &mut scratch);
+        }
+        let tocc = tiny.occupancy();
+        assert_eq!(
+            tocc.entries as u64,
+            tocc.salts.iter().map(|&(_, n)| n).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn shared_cache_replays_bit_identically() {
+        let ev = evaluator();
+        let mesh = ev.initial_mesh();
+        let mut scratch = EvalScratch::default();
+        let shared = SharedEvalCache::new(16);
+        let first = shared.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        let hit = shared.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        let fresh = ev.evaluate(&mesh, &Action::neutral(), &mut scratch);
+        for (a, b) in [(&first, &hit), (&hit, &fresh)] {
+            assert_eq!(a.reward.score.to_bits(), b.reward.score.to_bits());
+            assert_eq!(a.ppa.tokens_per_s.to_bits(), b.ppa.tokens_per_s.to_bits());
+            assert_eq!(a.decoded.mesh, b.decoded.mesh);
+        }
+        assert_eq!(shared.counters(), (1, 1));
+        let mut stats = EvalStats::default();
+        shared.absorb_into(&mut stats);
+        assert_eq!((stats.outcome_hits, stats.outcome_misses), (1, 1));
+        // a clone is the same cache, and zero capacity disables cleanly
+        let alias = shared.clone();
+        alias.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        assert_eq!(shared.counters(), (2, 1));
+        let off = SharedEvalCache::new(0);
+        off.evaluate(&ev, &mesh, &Action::neutral(), &mut scratch);
+        assert_eq!(off.counters(), (0, 0));
     }
 
     #[test]

@@ -37,7 +37,7 @@
 pub mod cache;
 pub mod parallel;
 
-pub use cache::{EvalCache, EvalStats, StageCache};
+pub use cache::{CacheOccupancy, EvalCache, EvalStats, SharedEvalCache, StageCache};
 
 use crate::arch::{self, MeshConfig, ParamRanges, TileConfig};
 use crate::config::{Granularity, ModeConfig, NodeBudget, RunConfig};
@@ -424,20 +424,7 @@ impl Evaluator {
     /// decoded design (soundness argument in DESIGN.md §5; pinned across
     /// nodes by `tests/eval_staged.rs`). O(1) — no placement.
     pub fn admission_bound(&self, decoded: &DecodedAction) -> f64 {
-        let kv_traffic = match self.graph.kv {
-            Some(kvc) => kv::bytes_per_token(&kvc)
-                / kv::compaction_factor(decoded.kv_strategy, self.scenario.seq_len),
-            None => 0.0,
-        };
-        let rb = ppa::roofline_bound(
-            decoded,
-            &self.node,
-            &self.ranges,
-            self.total_weights,
-            self.weight_traffic,
-            self.flops_per_token,
-            kv_traffic,
-        );
+        let rb = self.roofline_bound_for(decoded);
         let ranges = reward::ranges_from_budget(&self.budget);
         ppa::score::ppa_score(
             &self.mode.weights,
@@ -446,6 +433,116 @@ impl Evaluator {
             rb.power_mw,
             rb.area_mm2,
         )
+    }
+
+    /// Optimistic roofline bound for one decoded design (the raw PPA
+    /// envelope behind [`Self::admission_bound`]'s scalarized score).
+    pub fn roofline_bound_for(&self, decoded: &DecodedAction) -> ppa::RooflineBound {
+        let kv_traffic = match self.graph.kv {
+            Some(kvc) => kv::bytes_per_token(&kvc)
+                / kv::compaction_factor(decoded.kv_strategy, self.scenario.seq_len),
+            None => 0.0,
+        };
+        ppa::roofline_bound(
+            decoded,
+            &self.node,
+            &self.ranges,
+            self.total_weights,
+            self.weight_traffic,
+            self.flops_per_token,
+            kv_traffic,
+        )
+    }
+
+    /// Scenario-global optimistic envelope: component-wise best case over
+    /// *every* design the Algorithm-1 walk can reach at this scenario
+    /// point. Perf/tokens ceilings come from the all-max action corner on
+    /// the largest reachable mesh with the most aggressive achievable KV
+    /// compaction; power/area floors from the all-min corner on the
+    /// smallest mesh. Unprojected corners are sound — projection (Eq 68)
+    /// only shrinks the design space. The atlas sweep (`rl::atlas`,
+    /// DESIGN.md §12) compares this envelope against solved neighbors'
+    /// achieved frontiers to prune whole scenario points.
+    pub fn roofline_envelope(&self) -> ppa::RooflineBound {
+        let hi = Action { cont: [1.0; action::ACT_DIM], deltas: [0; action::N_DISC] };
+        let lo = Action { cont: [-1.0; action::ACT_DIM], deltas: [0; action::N_DISC] };
+        let mesh_hi = MeshConfig::new(action::MESH_DIM_MAX, action::MESH_DIM_MAX);
+        let mesh_lo = MeshConfig::new(action::MESH_DIM_MIN, action::MESH_DIM_MIN);
+        let d_hi = action::decode(
+            &hi,
+            &mesh_hi,
+            &self.node,
+            &self.mode,
+            &self.ranges,
+            self.kv_strategy,
+            self.scenario.seq_len,
+        );
+        let d_lo = action::decode(
+            &lo,
+            &mesh_lo,
+            &self.node,
+            &self.mode,
+            &self.ranges,
+            self.kv_strategy,
+            self.scenario.seq_len,
+        );
+        // KV traffic floor (for the perf ceiling): the strongest
+        // compaction decode() can actually select from the base strategy
+        // (only Full may be upgraded, to INT8 — see action::decode). The
+        // traffic ceiling (for the power floor) keeps base compaction.
+        let (kv_floor, kv_ceiling) = match self.graph.kv {
+            Some(kvc) => {
+                let bytes = kv::bytes_per_token(&kvc);
+                let base = kv::compaction_factor(self.kv_strategy, self.scenario.seq_len);
+                let best = match self.kv_strategy {
+                    KvStrategy::Full => base.max(kv::compaction_factor(
+                        KvStrategy::Quantized { bits: 8 },
+                        self.scenario.seq_len,
+                    )),
+                    _ => base,
+                };
+                (bytes / best, bytes / base)
+            }
+            None => (0.0, 0.0),
+        };
+        let hi_b = ppa::roofline_bound(
+            &d_hi,
+            &self.node,
+            &self.ranges,
+            self.total_weights,
+            self.weight_traffic,
+            self.flops_per_token,
+            kv_floor,
+        );
+        let lo_b = ppa::roofline_bound(
+            &d_lo,
+            &self.node,
+            &self.ranges,
+            self.total_weights,
+            self.weight_traffic,
+            self.flops_per_token,
+            kv_ceiling,
+        );
+        ppa::RooflineBound {
+            tokens_per_s: hi_b.tokens_per_s,
+            perf_gops: hi_b.perf_gops,
+            power_mw: lo_b.power_mw,
+            area_mm2: lo_b.area_mm2,
+        }
+    }
+
+    /// The per-token scenario constants the atlas comparability check
+    /// needs: `(flops_per_token, weight_traffic_per_token,
+    /// kv_traffic_per_token at the base strategy)`. Two scenario points
+    /// with equal constants and an identical unit graph expose the same
+    /// search space up to reward amortization (DESIGN.md §12).
+    pub fn scenario_constants(&self) -> (f64, f64, f64) {
+        let kv_traffic = match self.graph.kv {
+            Some(kvc) => kv::bytes_per_token(&kvc)
+                / kv::compaction_factor(self.kv_strategy, self.scenario.seq_len),
+            None => 0.0,
+        };
+        (self.flops_per_token, self.weight_traffic, kv_traffic)
     }
 
     /// Score a candidate set for its argmax under roofline admission
@@ -799,6 +896,65 @@ mod tests {
             "bound {bound} exceeds true score {}",
             out.reward.score
         );
+    }
+
+    #[test]
+    fn envelope_brackets_sampled_designs() {
+        // The scenario-global envelope must bound every reachable design:
+        // per-design roofline bounds and full evaluations alike stay
+        // inside (perf ≤ ceiling, power/area ≥ floors).
+        for nm in [3u32, 14] {
+            let ev = Evaluator::new(&small_cfg(), nm);
+            let env = ev.roofline_envelope();
+            let mut mesh = ev.initial_mesh();
+            let mut rng = Rng::new(0x0A71A5 + nm as u64);
+            let mut scratch = EvalScratch::default();
+            for i in 0..24 {
+                let a = random_action(&mut rng);
+                let (decoded, _) = ev.stage_decode(&mesh, &a);
+                let rb = ev.roofline_bound_for(&decoded);
+                assert!(
+                    rb.perf_gops <= env.perf_gops * (1.0 + 1e-12),
+                    "nm={nm} step {i}: design perf roof {} exceeds envelope {}",
+                    rb.perf_gops,
+                    env.perf_gops
+                );
+                assert!(
+                    rb.tokens_per_s <= env.tokens_per_s * (1.0 + 1e-12),
+                    "nm={nm} step {i}: tokens roof above envelope"
+                );
+                let out = ev.evaluate(&mesh, &a, &mut scratch);
+                assert!(
+                    out.ppa.perf_gops <= env.perf_gops * (1.0 + 1e-12),
+                    "nm={nm} step {i}: achieved perf above envelope"
+                );
+                assert!(
+                    out.ppa.power.total() >= env.power_mw * (1.0 - 1e-12),
+                    "nm={nm} step {i}: achieved power {} under floor {}",
+                    out.ppa.power.total(),
+                    env.power_mw
+                );
+                assert!(
+                    out.ppa.area.total() >= env.area_mm2 * (1.0 - 1e-12),
+                    "nm={nm} step {i}: achieved area under floor"
+                );
+                mesh = out.decoded.mesh;
+            }
+        }
+    }
+
+    #[test]
+    fn scenario_constants_track_batch_amortization() {
+        let base = small_cfg();
+        let mut batched = small_cfg();
+        batched.batch = Some(4);
+        let (f1, w1, k1) = Evaluator::new(&base, 7).scenario_constants();
+        let (f4, w4, k4) = Evaluator::new(&batched, 7).scenario_constants();
+        // batch leaves the graph (flops, kv) untouched and divides the
+        // per-token weight traffic — the atlas comparability invariant.
+        assert_eq!(f1.to_bits(), f4.to_bits());
+        assert_eq!(k1.to_bits(), k4.to_bits());
+        assert!((w1 / 4.0 - w4).abs() < 1e-9 * w1);
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //!                                nodes; emit per-node design artifacts,
 //!                                convergence traces and all report tables
 //!   baselines [key=value ...]  — SAC vs random vs grid (Table 21)
+//!   atlas     [key=value ...]  — dominance-pruned, cache-warm sweep over
+//!                                the full scenario grid (workloads ×
+//!                                nodes × phase × seq_len × batch); emits
+//!                                the merged Pareto atlas + reuse counters
 //!   report    [key=value ...]  — workload statistics (Tables 8/9)
 //!   workloads                  — registered workload specs (Table 8)
 //!   info                       — runtime/platform/manifest diagnostics
@@ -96,6 +100,7 @@ fn run(args: &[String]) -> Result<()> {
         "optimize" => optimize(&args[1..]),
         "baselines" => run_baselines(&args[1..]),
         "seeds" => run_multiseed(&args[1..]),
+        "atlas" => run_atlas(&args[1..]),
         "report" => workload_report(&args[1..]),
         "workloads" => {
             println!("{}", report::workload_registry(registry::all()).to_text());
@@ -105,7 +110,7 @@ fn run(args: &[String]) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "silicon-rl — RL-driven ASIC architecture exploration\n\n\
-                 usage: silicon-rl <optimize|baselines|seeds|report|workloads|info> [key=value ...]\n\
+                 usage: silicon-rl <optimize|baselines|seeds|atlas|report|workloads|info> [key=value ...]\n\
                  keys:  workload=<name> (see below) mode=hp|lp nodes=3,5,7 episodes=N\n\
                  \u{20}      phase=prefill|decode seq_len=N batch=N (scenario axes)\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
@@ -119,6 +124,12 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      updates_per_step=X (async update budget, 0 = uncapped)\n\
                  \u{20}      queue_cap=N (rollout->learner bound in transitions, 0 = auto)\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
+                 \u{20}      atlas keys: atlas_workloads=a,b (default: all registered)\n\
+                 \u{20}      atlas_phases=decode,prefill atlas_seq_lens=512,2048,8192\n\
+                 \u{20}      atlas_batches=1,4 atlas_seeds=N (seeds per grid point)\n\
+                 \u{20}      atlas_prune=on|off (roofline dominance pruning; off = exact\n\
+                 \u{20}      fallback) atlas_warm=on|off (shared caches + warm agents)\n\
+                 \u{20}      atlas_shrink=N (0 = skip dominated points, N = episodes/N)\n\
                  \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
                  \u{20}      kernels=scalar|simd|auto (scalar: bit-exact reference;\n\
                  \u{20}      simd: AVX2/NEON, auto-detected)\n\
@@ -505,6 +516,80 @@ fn run_multiseed(args: &[String]) -> Result<()> {
     println!("{}", t.to_text());
     std::fs::create_dir_all(&cfg.out_dir)?;
     t.write_csv(&Path::new(&cfg.out_dir).join("multiseed.csv"))?;
+    Ok(())
+}
+
+/// Dominance-pruned, cache-warm sweep over the full scenario grid
+/// (DESIGN.md §12): workloads × nodes × phase × seq_len × batch run as
+/// waves of vec-env lanes with three stacked reuse layers — cross-point
+/// roofline dominance pruning, warm shared state (one outcome memo +
+/// geometry registry + agents handed along the curriculum), and
+/// dominance-ordered wave scheduling. Emits the merged Pareto atlas
+/// (atlas.json + atlas.csv + per-workload tables) with prune/cache/reuse
+/// counters; `atlas_prune=off` is the exact fallback.
+fn run_atlas(args: &[String]) -> Result<()> {
+    let mut cfg = parse_config(args)?;
+    default_prune_on(&mut cfg);
+    let cfg = cfg;
+    let out_dir = Path::new(&cfg.out_dir);
+    std::fs::create_dir_all(out_dir)?;
+    let workloads = cfg.atlas_grid_workloads();
+    println!(
+        "atlas sweep: {} workloads x {} nodes x {} phases x {} seq_lens x {} batches \
+         (prune={}, warm={}, shrink={}, seeds={})",
+        workloads.len(),
+        cfg.nodes_nm.len(),
+        cfg.atlas.phases.len(),
+        cfg.atlas.seq_lens.len(),
+        cfg.atlas.batches.len(),
+        if cfg.atlas.prune { "on" } else { "off" },
+        if cfg.atlas.warm { "on" } else { "off" },
+        cfg.atlas.shrink,
+        cfg.atlas.n_seeds,
+    );
+    println!("kernels: {}", kernels::describe(cfg.kernels));
+
+    let res = rl::atlas::run(&cfg)?;
+
+    println!("\n{}", rl::atlas::atlas_table(&res).to_text());
+    for (_w, t) in rl::atlas::workload_tables(&res) {
+        println!("{}", t.to_text());
+    }
+    println!("{}", rl::atlas::summary_table(&res).to_text());
+
+    // Table 14 over every solved lane, carrying the shared-cache
+    // cross-scenario occupancy block
+    let t14 = report::run_stats_with_cache(
+        &res.node_results,
+        cfg.mode.name,
+        &cfg.scenario(),
+        &kernels::describe(cfg.kernels),
+        None,
+        res.occupancy.as_ref(),
+    );
+    println!("{}", t14.to_text());
+    t14.write_csv(&out_dir.join("table14_run_stats.csv"))?;
+
+    rl::atlas::atlas_table(&res).write_csv(&out_dir.join("atlas.csv"))?;
+    std::fs::write(
+        out_dir.join("atlas.json"),
+        rl::atlas::atlas_json(&res, &cfg).to_string_pretty(),
+    )?;
+
+    let c = &res.counters;
+    println!(
+        "atlas: {} points, solved: {}, pruned: {} (skipped: {}, shrunk: {}), \
+         episodes {} of {} budget, {:.1}s",
+        c.points,
+        c.solved,
+        c.pruned(),
+        c.skipped,
+        c.shrunk,
+        c.episodes_run,
+        c.episodes_budget,
+        res.elapsed_s
+    );
+    println!("atlas written to {}", out_dir.display());
     Ok(())
 }
 

@@ -3,6 +3,9 @@
 //! per-token cross-tile traffic accounting the partitioner feeds into the
 //! power and throughput models.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 use crate::arch::MeshConfig;
 use crate::nn::kernels::{self, KernelPath};
 
@@ -449,9 +452,29 @@ unsafe fn score_neon(
 /// is enough.
 #[derive(Debug, Default)]
 pub struct GeomCache {
-    geoms: Vec<MeshGeom>,
+    geoms: Vec<Arc<MeshGeom>>,
     pub hits: u64,
     pub misses: u64,
+    /// Local misses served from the process-wide registry instead of a
+    /// rebuild (the cross-lane/cross-scenario reuse counter).
+    pub shared: u64,
+}
+
+/// Process-wide registry of read-only geometry tables, one per mesh
+/// dims. [`MeshGeom::build`] is a pure function of the dims, so every
+/// lane, scenario point and worker thread can share one immutable table
+/// behind an `Arc` — a local [`GeomCache`] miss consults the registry
+/// before rebuilding, and publishes what it builds. Bounded: past
+/// [`GEOM_REGISTRY_CAP`] dims the registry stops admitting (lookups keep
+/// working), so a pathological sweep cannot pin unbounded memory.
+static GEOM_REGISTRY: OnceLock<Mutex<HashMap<(u32, u32), Arc<MeshGeom>>>> = OnceLock::new();
+
+/// Distinct mesh dims the shared registry keeps resident (a 64×64 table
+/// is ~100 KB; 64 tables stay well under 10 MB).
+pub const GEOM_REGISTRY_CAP: usize = 64;
+
+fn geom_registry() -> &'static Mutex<HashMap<(u32, u32), Arc<MeshGeom>>> {
+    GEOM_REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
 }
 
 impl GeomCache {
@@ -463,15 +486,31 @@ impl GeomCache {
         match pos {
             Some(i) => {
                 self.hits += 1;
-                &self.geoms[i]
+                self.geoms[i].as_ref()
             }
             None => {
                 self.misses += 1;
                 if self.geoms.len() >= Self::CAP {
                     self.geoms.clear();
                 }
-                self.geoms.push(MeshGeom::build(mesh));
-                self.geoms.last().unwrap()
+                let dims = (mesh.width, mesh.height);
+                let mut reg = geom_registry().lock().unwrap();
+                let table = match reg.get(&dims) {
+                    Some(shared) => {
+                        self.shared += 1;
+                        Arc::clone(shared)
+                    }
+                    None => {
+                        let built = Arc::new(MeshGeom::build(mesh));
+                        if reg.len() < GEOM_REGISTRY_CAP {
+                            reg.insert(dims, Arc::clone(&built));
+                        }
+                        built
+                    }
+                };
+                drop(reg);
+                self.geoms.push(table);
+                self.geoms.last().unwrap().as_ref()
             }
         }
     }
@@ -681,5 +720,24 @@ mod tests {
         m1_sc.sc_x = 4;
         c.get(&m1_sc);
         assert_eq!((c.hits, c.misses), (2, 2));
+    }
+
+    #[test]
+    fn geom_registry_shares_tables_across_caches() {
+        // distinctive dims so parallel tests can't have seeded them via
+        // another path before cache 1 publishes
+        let m = MeshConfig::new(37, 41);
+        let mut c1 = GeomCache::default();
+        let g1 = c1.get(&m).xy.clone();
+        // a *fresh* cache misses locally but is served from the shared
+        // registry instead of rebuilding
+        let mut c2 = GeomCache::default();
+        let g2 = c2.get(&m);
+        assert_eq!(c2.misses, 1);
+        assert!(c2.shared >= 1, "fresh cache rebuilt a published table");
+        assert_eq!(g1, g2.xy, "shared table diverged from the built one");
+        // local hits never touch the registry counter
+        c2.get(&m);
+        assert_eq!((c2.hits, c2.shared), (1, 1));
     }
 }

@@ -17,7 +17,7 @@
 //!   Fig 3         → [`convergence_csv`]
 
 use crate::arch::{region_of, MeshConfig, Region, TileConfig};
-use crate::eval::EvalStats;
+use crate::eval::{CacheOccupancy, EvalStats};
 use crate::ir::spec::{Scenario, WorkloadSpec};
 use crate::ir::Graph;
 use crate::ppa::PowerBreakdown;
@@ -452,6 +452,23 @@ pub fn run_stats(
     kernels: &str,
     learner: Option<&crate::rl::LearnerReport>,
 ) -> Table {
+    run_stats_with_cache(results, mode, scn, kernels, learner, None)
+}
+
+/// [`run_stats`] plus the shared-cache occupancy block: when an atlas
+/// sweep (or any run sharing one `SharedEvalCache` across scenario
+/// points) hands in its [`CacheOccupancy`], Table 14 also reports the
+/// cross-scenario residency — total entries, resident scenario salts,
+/// entries per salt, and the shared hit rate — alongside the per-lane
+/// counters.
+pub fn run_stats_with_cache(
+    results: &[NodeResult],
+    mode: &str,
+    scn: &Scenario,
+    kernels: &str,
+    learner: Option<&crate::rl::LearnerReport>,
+    occupancy: Option<&CacheOccupancy>,
+) -> Table {
     let mut t = Table::new("Table 14 — run statistics", &["metric", "value"]);
     let best = results
         .iter()
@@ -499,6 +516,31 @@ pub fn run_stats(
         "candidates pruned (roofline)".into(),
         format!("{} of {}", es.pruned, es.pruned + es.evaluated),
     ]);
+    if es.geom_shared > 0 {
+        t.row(vec![
+            "geometry tables shared (registry)".into(),
+            es.geom_shared.to_string(),
+        ]);
+    }
+
+    // shared-cache cross-scenario occupancy (DESIGN.md §12)
+    if let Some(occ) = occupancy {
+        t.row(vec!["shared cache entries".into(), occ.entries.to_string()]);
+        t.row(vec![
+            "shared cache scenario salts".into(),
+            occ.salts.len().to_string(),
+        ]);
+        let per = if occ.salts.is_empty() {
+            0.0
+        } else {
+            occ.entries as f64 / occ.salts.len() as f64
+        };
+        t.row(vec!["shared cache entries/salt".into(), fnum(per, 1)]);
+        t.row(vec![
+            "shared cache hit rate".into(),
+            format!("{:.1}%", occ.hit_rate() * 100.0),
+        ]);
+    }
 
     // actor-learner engine counters (DESIGN.md §11)
     if let Some(lr) = learner {
@@ -673,6 +715,32 @@ mod tests {
         assert_eq!(find("queue high-water (transitions)"), "32");
         assert_eq!(find("mean lanes-behind-latest (versions)"), "1.50");
         assert!(lr.banner().contains("96 sac / 48 wm / 24 sur"));
+    }
+
+    #[test]
+    fn run_stats_surfaces_shared_cache_occupancy() {
+        let scn = Scenario { phase: crate::ir::Phase::Decode, seq_len: 2048, batch: 1 };
+        let occ = CacheOccupancy {
+            entries: 12,
+            salts: vec![(0xA, 4), (0xB, 8)],
+            hits: 6,
+            misses: 18,
+        };
+        let t = run_stats_with_cache(&[], "test", &scn, "scalar", None, Some(&occ));
+        let find = |k: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0] == k)
+                .unwrap_or_else(|| panic!("missing row {k}"))[1]
+                .clone()
+        };
+        assert_eq!(find("shared cache entries"), "12");
+        assert_eq!(find("shared cache scenario salts"), "2");
+        assert_eq!(find("shared cache entries/salt"), "6.0");
+        assert_eq!(find("shared cache hit rate"), "25.0%");
+        // plain run_stats stays occupancy-free (bit-compatible Table 14)
+        let base = run_stats(&[], "test", &scn, "scalar", None);
+        assert!(!base.to_text().contains("shared cache"));
     }
 
     #[test]

@@ -1,0 +1,927 @@
+//! Scenario-atlas sweep engine (DESIGN.md §12): dominance-pruned,
+//! cache-warm search over the full scenario grid — workloads × process
+//! nodes × phase × seq_len × batch — run as waves of vec-env lanes.
+//!
+//! Sweeping the grid as N independent `optimize` runs costs N full cold
+//! searches. The atlas makes it superlinearly cheaper with three stacked
+//! reuse layers:
+//!
+//! 1. **Cross-point roofline dominance pruning.** Before a point runs,
+//!    its O(1) scenario-global envelope
+//!    ([`Evaluator::roofline_envelope`]) is compared against already
+//!    solved neighbors (same workload and node). Two prune paths:
+//!    the *fast path* skips a point whose entire envelope is dominated
+//!    by one achieved frontier point ([`RooflineBound::dominated_by`] —
+//!    sound for any solved neighbor, since the dominating point already
+//!    sits in the merged atlas); the *amortization path* skips a point
+//!    whose scenario is the same graph under strictly-harder per-token
+//!    traffic (same phase/seq_len, smaller batch — graph invariance is
+//!    pinned by `batch_does_not_change_the_graph`) when the solved
+//!    neighbor's envelope weakly dominates
+//!    ([`RooflineBound::dominates_envelope`]). Dominance is stated in
+//!    (perf ↑, energy mJ/token ↓, area ↓) space: raw power is not
+//!    monotone under batch amortization (the NoC term scales with
+//!    tokens/s) but energy per token is. `atlas_prune=off` is the exact
+//!    fallback — the pruned sweep emits bit-identical per-point
+//!    frontiers for every non-skipped point (pinned by
+//!    `tests/atlas.rs`).
+//! 2. **Warm shared state** (`atlas_warm=on`): one process-wide
+//!    [`SharedEvalCache`] spans every lane and scenario point (salted
+//!    keys make cross-scenario replay impossible), the read-only
+//!    geometry registry shares one `MeshGeom` per mesh-dims across the
+//!    whole process, and one SAC agent is handed between neighboring
+//!    points in curriculum order instead of per-point cold starts.
+//! 3. **Wave scheduling.** Points are ordered by the dominance graph:
+//!    within a (workload, phase, seq_len) slab the largest batch — the
+//!    easiest, most-amortized regime, whose envelope weakly dominates
+//!    every smaller batch — runs first, so pruning decisions always see
+//!    the freshest neighbor frontiers. Each runnable (workload,
+//!    scenario) group becomes one vec-env call with nodes × seeds as
+//!    lanes.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
+use crate::eval::{CacheOccupancy, EvalStats, Evaluator, SharedEvalCache};
+use crate::ir::registry;
+use crate::ir::spec::Scenario;
+use crate::nn::backend;
+use crate::ppa::RooflineBound;
+use crate::rl::multiseed::{self, derive_seed};
+use crate::rl::pareto::{ParetoArchive, ParetoPoint};
+use crate::rl::vecenv::{self, LaneSpec};
+use crate::rl::{NodeResult, SacAgent};
+use crate::util::csv::{fnum, Table};
+use crate::util::json::{self, Json};
+use crate::util::Rng;
+
+/// Which prune path justified skipping/shrinking a point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PruneKind {
+    /// A single achieved neighbor point dominates the whole envelope.
+    Fast,
+    /// Same graph, harder per-token traffic than a solved neighbor whose
+    /// envelope weakly dominates (the batch-amortization path).
+    Amortized,
+}
+
+impl PruneKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneKind::Fast => "fast",
+            PruneKind::Amortized => "amortized",
+        }
+    }
+}
+
+/// What happened to one grid point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PointStatus {
+    /// Ran at the full episode budget.
+    Solved,
+    /// Dominated, but `atlas_shrink=N` ran it at `episodes / N`.
+    Shrunk { by: usize, kind: PruneKind },
+    /// Dominated and skipped outright (`by` is the justifying point's
+    /// grid index).
+    Skipped { by: usize, kind: PruneKind },
+}
+
+impl PointStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PointStatus::Solved => "solved",
+            PointStatus::Shrunk { .. } => "shrunk",
+            PointStatus::Skipped { .. } => "skipped",
+        }
+    }
+}
+
+/// One scenario-grid point's record in the atlas.
+#[derive(Debug, Clone)]
+pub struct AtlasPoint {
+    /// Stable index in the canonical full-grid enumeration — identical
+    /// for `atlas_prune=on` and `off`. Seeds derive from its
+    /// batch-collapsed projection (the stream index), so they never move
+    /// with the prune setting either.
+    pub grid_index: usize,
+    pub workload: String,
+    pub nm: u32,
+    pub scenario: Scenario,
+    pub envelope: RooflineBound,
+    pub status: PointStatus,
+    /// Merged-across-seeds frontier; empty when skipped.
+    pub frontier: ParetoArchive,
+    /// Episodes actually spent (all seeds).
+    pub episodes: u64,
+    /// Shared-cache hit rate over this point's vec-env group (warm mode
+    /// attributes the group delta to each member point).
+    pub cache_hit_rate: f64,
+}
+
+/// Sweep-level counters (the prune/cache/reuse evidence).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AtlasCounters {
+    pub points: u64,
+    pub solved: u64,
+    pub skipped: u64,
+    pub shrunk: u64,
+    pub prune_fast: u64,
+    pub prune_amortized: u64,
+    /// Episodes actually run vs what a no-reuse sweep would spend.
+    pub episodes_run: u64,
+    pub episodes_budget: u64,
+}
+
+impl AtlasCounters {
+    pub fn pruned(&self) -> u64 {
+        self.skipped + self.shrunk
+    }
+}
+
+/// Result of one atlas sweep.
+pub struct AtlasResult {
+    /// Every grid point in canonical grid order.
+    pub points: Vec<AtlasPoint>,
+    pub counters: AtlasCounters,
+    /// Shared-cache occupancy (warm mode only).
+    pub occupancy: Option<CacheOccupancy>,
+    /// Evaluation-layer counters summed over every lane (plus the shared
+    /// cache, folded once).
+    pub eval_stats: EvalStats,
+    /// Raw per-lane results of the solved/shrunk points, in run order
+    /// (feeds Table 14).
+    pub node_results: Vec<NodeResult>,
+    /// Merged energy-space frontier per (workload, nm).
+    pub atlas: BTreeMap<(String, u32), Vec<ParetoPoint>>,
+    pub elapsed_s: f64,
+}
+
+/// One enumerated grid point (pre-run).
+#[derive(Debug, Clone)]
+struct GridPoint {
+    grid_index: usize,
+    /// Grid index with the batch axis collapsed: identical for every
+    /// batch of the same (workload, phase, seq_len, node). Seeds derive
+    /// from this, so batch-axis neighbors replay the *same* rollout
+    /// action stream — together with batch-invariant decode/projection,
+    /// this is what lets a larger-batch run provably visit every design
+    /// a smaller-batch run would have visited (the amortization prune
+    /// path's coverage argument).
+    stream_index: usize,
+    workload: String,
+    nm: u32,
+    scenario: Scenario,
+}
+
+/// A solved (or shrunk) point's dominance evidence.
+struct Solved {
+    grid_index: usize,
+    workload: String,
+    nm: u32,
+    scenario: Scenario,
+    envelope: RooflineBound,
+    /// `(flops_per_token, weight_traffic_per_token, kv_traffic_per_token)`.
+    constants: (f64, f64, f64),
+    frontier: ParetoArchive,
+}
+
+/// Enumerate the full grid in canonical nested order: workload → phase →
+/// seq_len → batch → node. The enumeration (and therefore every
+/// `grid_index`) is a pure function of the config — independent of
+/// pruning, warm state and curriculum order.
+fn enumerate_grid(cfg: &RunConfig) -> Result<Vec<GridPoint>> {
+    let mut grid = Vec::new();
+    let mut idx = 0usize;
+    let (n_phase, n_seq, n_node) =
+        (cfg.atlas.phases.len(), cfg.atlas.seq_lens.len(), cfg.nodes_nm.len());
+    for (wi, name) in cfg.atlas_grid_workloads().iter().enumerate() {
+        let spec = registry::get(name)
+            .ok_or_else(|| Error::msg(format!("unknown atlas workload {name}")))?;
+        for (pi, &phase) in cfg.atlas.phases.iter().enumerate() {
+            for (si, &seq_len) in cfg.atlas.seq_lens.iter().enumerate() {
+                for &batch in &cfg.atlas.batches {
+                    for (ni, &nm) in cfg.nodes_nm.iter().enumerate() {
+                        grid.push(GridPoint {
+                            grid_index: idx,
+                            stream_index: ((wi * n_phase + pi) * n_seq + si) * n_node + ni,
+                            workload: spec.name.to_string(),
+                            nm,
+                            scenario: Scenario { phase, seq_len, batch },
+                        });
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    Ok(grid)
+}
+
+/// Curriculum order: a stable sort of the canonical grid that runs the
+/// largest batch of each (workload, phase, seq_len) slab first — a
+/// topological order of the batch-amortization dominance edges (larger
+/// batch ⇒ weakly-dominating envelope), so dominators are always solved
+/// before the points they can prune.
+fn curriculum(grid: &[GridPoint]) -> Vec<usize> {
+    // one (workload, phase, seq_len) slab is a contiguous run of
+    // batches × nodes entries in the canonical enumeration; every slab
+    // shares that shape, so measure it once off the head of the grid
+    let first = &grid[0];
+    let nodes = grid
+        .iter()
+        .take_while(|g| {
+            g.workload == first.workload
+                && g.scenario.phase == first.scenario.phase
+                && g.scenario.seq_len == first.scenario.seq_len
+                && g.scenario.batch == first.scenario.batch
+        })
+        .count();
+    let slab = grid
+        .iter()
+        .take_while(|g| {
+            g.workload == first.workload
+                && g.scenario.phase == first.scenario.phase
+                && g.scenario.seq_len == first.scenario.seq_len
+        })
+        .count()
+        .max(nodes.max(1));
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (pa, pb) = (&grid[a], &grid[b]);
+        // slabs keep enumeration order; inside a slab the batch descends
+        (pa.grid_index / slab)
+            .cmp(&(pb.grid_index / slab))
+            .then(pb.scenario.batch.cmp(&pa.scenario.batch))
+            .then(pa.grid_index.cmp(&pb.grid_index))
+    });
+    order
+}
+
+/// Per-point config: the base config with the point's workload, scenario
+/// and node applied.
+fn point_cfg(cfg: &RunConfig, gp: &GridPoint) -> Result<RunConfig> {
+    let mut c = cfg.clone();
+    c.apply("workload", &gp.workload).map_err(Error::msg)?;
+    c.phase = gp.scenario.phase;
+    c.seq_len = Some(gp.scenario.seq_len);
+    c.batch = Some(gp.scenario.batch);
+    c.nodes_nm = vec![gp.nm];
+    Ok(c)
+}
+
+/// The point's per-lane seeds: derived from the canonical
+/// *batch-collapsed* stream index (never the curriculum position), so
+/// (a) a point's rollout streams are identical under `atlas_prune=on|off`
+/// — the precondition of the pruned≡exact frontier contract — and (b)
+/// batch-axis neighbors share one action stream, so a solved
+/// larger-batch point has evaluated every design its smaller-batch
+/// neighbors would reach (the amortization path's coverage argument).
+fn point_seeds(cfg: &RunConfig, gp: &GridPoint) -> Vec<u64> {
+    let point_seed = derive_seed(cfg.seed, gp.stream_index);
+    (0..cfg.atlas.n_seeds).map(|k| derive_seed(point_seed, k)).collect()
+}
+
+/// Try every solved neighbor (same workload and node) against `gp`'s
+/// envelope. Returns the justifying point's grid index and the path that
+/// fired.
+fn find_dominator(
+    gp: &GridPoint,
+    env: &RooflineBound,
+    constants: (f64, f64, f64),
+    solved: &[Solved],
+) -> Option<(usize, PruneKind)> {
+    for q in solved {
+        if q.workload != gp.workload || q.nm != gp.nm || q.frontier.is_empty() {
+            continue;
+        }
+        // fast path: one achieved point beats the whole envelope —
+        // scenario-agnostic (the dominating point is already in this
+        // (workload, nm) atlas slab, so nothing p could achieve would
+        // survive the merge)
+        if q.frontier.frontier().iter().any(|p| env.dominated_by(p)) {
+            return Some((q.grid_index, PruneKind::Fast));
+        }
+        // amortization path: identical graph (same phase/seq_len; batch
+        // never changes the graph), component-wise easier-or-equal
+        // per-token traffic at q, and q's envelope weakly dominates —
+        // every design reachable at p exists at q in a uniformly more
+        // favorable regime
+        if q.scenario.phase == gp.scenario.phase
+            && q.scenario.seq_len == gp.scenario.seq_len
+            && gp.scenario.batch <= q.scenario.batch
+            && constants.0.to_bits() == q.constants.0.to_bits()
+            && constants.2.to_bits() == q.constants.2.to_bits()
+            && constants.1 >= q.constants.1
+            && q.envelope.dominates_envelope(env)
+        {
+            return Some((q.grid_index, PruneKind::Amortized));
+        }
+    }
+    None
+}
+
+/// Insert into an energy-space frontier: reject anything covered
+/// (dominated or exactly tied) by a resident point, evict anything the
+/// newcomer covers. Deterministic in insertion order.
+fn energy_insert(front: &mut Vec<ParetoPoint>, p: ParetoPoint) {
+    if front.iter().any(|q| q.covers_energy(&p)) {
+        return;
+    }
+    front.retain(|q| !p.covers_energy(q));
+    front.push(p);
+}
+
+/// Run the atlas sweep. See the module doc for the three reuse layers;
+/// `cfg.atlas` carries the grid axes and the prune/warm/shrink switches.
+pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
+    let t0 = Instant::now();
+    let grid = enumerate_grid(cfg)?;
+    if grid.is_empty() {
+        return Err(Error::msg("atlas grid is empty"));
+    }
+    let order = curriculum(&grid);
+
+    let shared = if cfg.atlas.warm {
+        Some(SharedEvalCache::new(cfg.rl.eval_cache))
+    } else {
+        None
+    };
+    // warm mode: ONE agent spans the sweep — curriculum neighbors hand
+    // their policy/replay state forward instead of cold-starting
+    let mut warm_agent: Option<SacAgent> = if cfg.atlas.warm {
+        let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+        Some(SacAgent::new(be, cfg.rl, &mut Rng::new(cfg.seed))?)
+    } else {
+        None
+    };
+
+    let threads = cfg.rollout_threads();
+    let full_eps = cfg.rl.episodes_per_node as u64;
+    let shrink_eps = if cfg.atlas.shrink > 0 {
+        (cfg.rl.episodes_per_node / cfg.atlas.shrink as usize).max(1) as u64
+    } else {
+        0
+    };
+
+    let mut solved: Vec<Solved> = Vec::new();
+    let mut points: Vec<Option<AtlasPoint>> = vec![None; grid.len()];
+    let mut counters = AtlasCounters { points: grid.len() as u64, ..Default::default() };
+    let mut eval_stats = EvalStats::default();
+    let mut node_results: Vec<NodeResult> = Vec::new();
+
+    // walk the curriculum as (workload, scenario) groups: every node of a
+    // group that survives pruning becomes n_seeds lanes of one vec-env
+    // call, so pruning decisions at the next group always see this
+    // group's frontiers
+    let mut i = 0usize;
+    while i < order.len() {
+        // group = consecutive curriculum entries sharing (workload, scenario)
+        let head = &grid[order[i]];
+        let mut group = Vec::new();
+        while i < order.len() {
+            let gp = &grid[order[i]];
+            if gp.workload != head.workload || gp.scenario != head.scenario {
+                break;
+            }
+            group.push(order[i]);
+            i += 1;
+        }
+
+        // classify each member against the solved set
+        let mut runnable: Vec<(usize, u64)> = Vec::new(); // (grid idx, episodes)
+        for &gi in &group {
+            let gp = &grid[gi];
+            let pc = point_cfg(cfg, gp)?;
+            let ev = Evaluator::new(&pc, gp.nm);
+            let env = ev.roofline_envelope();
+            let constants = ev.scenario_constants();
+            let dominator = if cfg.atlas.prune {
+                find_dominator(gp, &env, constants, &solved)
+            } else {
+                None
+            };
+            match dominator {
+                Some((by, kind)) => {
+                    match kind {
+                        PruneKind::Fast => counters.prune_fast += 1,
+                        PruneKind::Amortized => counters.prune_amortized += 1,
+                    }
+                    if shrink_eps > 0 {
+                        counters.shrunk += 1;
+                        points[gi] = Some(AtlasPoint {
+                            grid_index: gi,
+                            workload: gp.workload.clone(),
+                            nm: gp.nm,
+                            scenario: gp.scenario,
+                            envelope: env,
+                            status: PointStatus::Shrunk { by, kind },
+                            frontier: ParetoArchive::new(),
+                            episodes: 0,
+                            cache_hit_rate: 0.0,
+                        });
+                        runnable.push((gi, shrink_eps));
+                    } else {
+                        counters.skipped += 1;
+                        points[gi] = Some(AtlasPoint {
+                            grid_index: gi,
+                            workload: gp.workload.clone(),
+                            nm: gp.nm,
+                            scenario: gp.scenario,
+                            envelope: env,
+                            status: PointStatus::Skipped { by, kind },
+                            frontier: ParetoArchive::new(),
+                            episodes: 0,
+                            cache_hit_rate: 0.0,
+                        });
+                    }
+                }
+                None => {
+                    counters.solved += 1;
+                    points[gi] = Some(AtlasPoint {
+                        grid_index: gi,
+                        workload: gp.workload.clone(),
+                        nm: gp.nm,
+                        scenario: gp.scenario,
+                        envelope: env,
+                        status: PointStatus::Solved,
+                        frontier: ParetoArchive::new(),
+                        episodes: 0,
+                        cache_hit_rate: 0.0,
+                    });
+                    runnable.push((gi, full_eps));
+                }
+            }
+            counters.episodes_budget += full_eps * cfg.atlas.n_seeds as u64;
+        }
+
+        // episode budgets are per vec-env call, so full and shrunk points
+        // go in separate calls. Warm mode fuses each budget class into
+        // one call with nodes × seeds as lanes (the wave); cold mode runs
+        // every point in its own call with an agent seeded from the
+        // point's batch-collapsed stream index — the precondition of the
+        // prune=on ≡ prune=off bit-identity contract
+        let mut calls: Vec<(Vec<usize>, u64)> = Vec::new();
+        let budgets: &[u64] =
+            if shrink_eps == full_eps { &[full_eps] } else { &[full_eps, shrink_eps] };
+        for &budget in budgets {
+            if budget == 0 {
+                continue;
+            }
+            let members: Vec<usize> = runnable
+                .iter()
+                .filter(|&&(_, b)| b == budget)
+                .map(|&(gi, _)| gi)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            if cfg.atlas.warm {
+                calls.push((members, budget));
+            } else {
+                calls.extend(members.into_iter().map(|gi| (vec![gi], budget)));
+            }
+        }
+        for (batch, budget) in calls {
+            let mut run_cfg = point_cfg(cfg, &grid[batch[0]])?;
+            run_cfg.rl.episodes_per_node = budget as usize;
+            let jobs: Vec<LaneSpec> = batch
+                .iter()
+                .flat_map(|&gi| {
+                    let gp = &grid[gi];
+                    point_seeds(cfg, gp)
+                        .into_iter()
+                        .map(move |seed| LaneSpec { nm: gp.nm, seed })
+                })
+                .collect();
+            let lanes = cfg.resolve_lanes(jobs.len());
+            let cache_before = shared.as_ref().map(|c| c.counters());
+
+            let results = match (&mut warm_agent, &shared) {
+                (Some(agent), sh) => {
+                    vecenv::run_jobs_stats_shared(
+                        &run_cfg, &jobs, lanes, agent, threads, sh.as_ref(),
+                    )?
+                    .0
+                }
+                (None, _) => {
+                    // cold: a fresh agent per point, seeded from the
+                    // batch-collapsed stream index so prune=on|off (and
+                    // batch-axis neighbors) replay the same stream
+                    let be = backend::load(&run_cfg.artifacts_dir, run_cfg.backend)?;
+                    let mut rng = Rng::new(derive_seed(cfg.seed, grid[batch[0]].stream_index));
+                    let mut agent = SacAgent::new(be, run_cfg.rl, &mut rng)?;
+                    vecenv::run_jobs_stats_shared(
+                        &run_cfg, &jobs, lanes, &mut agent, threads, None,
+                    )?
+                    .0
+                }
+            };
+
+            let hit_rate = match (&shared, cache_before) {
+                (Some(c), Some((h0, m0))) => {
+                    let (h1, m1) = c.counters();
+                    let total = (h1 - h0) + (m1 - m0);
+                    if total == 0 {
+                        0.0
+                    } else {
+                        (h1 - h0) as f64 / total as f64
+                    }
+                }
+                _ => {
+                    // cold: every lane memo is private; fold their rates
+                    let (h, m) = results.iter().fold((0, 0), |(h, m), r| {
+                        (h + r.eval_stats.outcome_hits, m + r.eval_stats.outcome_misses)
+                    });
+                    if h + m == 0 {
+                        0.0
+                    } else {
+                        h as f64 / (h + m) as f64
+                    }
+                }
+            };
+
+            // fold results back per point, in jobs order (results are
+            // consumed by value: NodeResult is move-only)
+            let n_seeds = cfg.atlas.n_seeds.max(1);
+            let mut rest = results;
+            for &gi in &batch {
+                let take = n_seeds.min(rest.len());
+                let chunk: Vec<NodeResult> = rest.drain(..take).collect();
+                let gp = &grid[gi];
+                let frontier = if n_seeds == 1 {
+                    chunk[0].pareto.clone()
+                } else {
+                    multiseed::aggregate(gp.nm, point_seeds(cfg, gp), &chunk).pareto
+                };
+                let pt = points[gi].as_mut().expect("classified above");
+                pt.frontier = frontier.clone();
+                pt.episodes = budget * chunk.len() as u64;
+                pt.cache_hit_rate = hit_rate;
+                counters.episodes_run += pt.episodes;
+                let pc = point_cfg(cfg, gp)?;
+                let ev = Evaluator::new(&pc, gp.nm);
+                solved.push(Solved {
+                    grid_index: gi,
+                    workload: gp.workload.clone(),
+                    nm: gp.nm,
+                    scenario: gp.scenario,
+                    envelope: ev.roofline_envelope(),
+                    constants: ev.scenario_constants(),
+                    frontier,
+                });
+                for r in &chunk {
+                    eval_stats.merge(&r.eval_stats);
+                }
+                node_results.extend(chunk);
+            }
+        }
+    }
+
+    if let Some(c) = &shared {
+        c.absorb_into(&mut eval_stats);
+    }
+
+    // merged energy-space atlas per (workload, nm), in grid order
+    let points: Vec<AtlasPoint> = points.into_iter().map(|p| p.expect("all visited")).collect();
+    let mut atlas: BTreeMap<(String, u32), Vec<ParetoPoint>> = BTreeMap::new();
+    for pt in &points {
+        let slab = atlas.entry((pt.workload.clone(), pt.nm)).or_default();
+        for p in pt.frontier.frontier() {
+            energy_insert(slab, p.clone());
+        }
+    }
+
+    Ok(AtlasResult {
+        points,
+        counters,
+        occupancy: shared.as_ref().map(|c| c.occupancy()),
+        eval_stats,
+        node_results,
+        atlas,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Per-point CSV/console table (one row per grid point, grid order).
+pub fn atlas_table(res: &AtlasResult) -> Table {
+    let mut t = Table::new(
+        "scenario atlas — per-point results",
+        &[
+            "idx", "workload", "node", "phase", "seq", "batch", "status", "by",
+            "frontier", "tok_s_best", "mj_per_tok_min", "episodes", "cache_hit",
+        ],
+    );
+    for p in &res.points {
+        let (by, _kind) = match p.status {
+            PointStatus::Skipped { by, kind } | PointStatus::Shrunk { by, kind } => {
+                (by as i64, Some(kind))
+            }
+            PointStatus::Solved => (-1, None),
+        };
+        let best_tok = p
+            .frontier
+            .frontier()
+            .iter()
+            .map(|q| q.tokens_per_s)
+            .fold(f64::NAN, f64::max);
+        let min_energy = p
+            .frontier
+            .frontier()
+            .iter()
+            .map(|q| q.energy_mj_per_token())
+            .fold(f64::NAN, f64::min);
+        t.row(vec![
+            p.grid_index.to_string(),
+            p.workload.clone(),
+            format!("{}nm", p.nm),
+            p.scenario.phase.name().to_string(),
+            p.scenario.seq_len.to_string(),
+            p.scenario.batch.to_string(),
+            p.status.name().to_string(),
+            if by < 0 { "-".to_string() } else { by.to_string() },
+            p.frontier.len().to_string(),
+            if best_tok.is_nan() { "-".into() } else { fnum(best_tok, 0) },
+            if min_energy.is_nan() { "-".into() } else { fnum(min_energy, 3) },
+            p.episodes.to_string(),
+            format!("{:.0}%", p.cache_hit_rate * 100.0),
+        ]);
+    }
+    t
+}
+
+/// Per-workload merged-atlas tables: the energy-space frontier of every
+/// (workload, nm) slab.
+pub fn workload_tables(res: &AtlasResult) -> Vec<(String, Table)> {
+    let mut by_workload: BTreeMap<&String, Vec<(&u32, &Vec<ParetoPoint>)>> = BTreeMap::new();
+    for ((w, nm), front) in &res.atlas {
+        by_workload.entry(w).or_default().push((nm, front));
+    }
+    by_workload
+        .into_iter()
+        .map(|(w, slabs)| {
+            let mut t = Table::new(
+                &format!("atlas — {w} merged energy frontier"),
+                &["node", "points", "tok_s_max", "mj_per_tok_min", "area_mm2_min"],
+            );
+            for (nm, front) in slabs {
+                let tok = front.iter().map(|p| p.tokens_per_s).fold(f64::NAN, f64::max);
+                let mj = front
+                    .iter()
+                    .map(|p| p.energy_mj_per_token())
+                    .fold(f64::NAN, f64::min);
+                let area = front.iter().map(|p| p.area_mm2).fold(f64::NAN, f64::min);
+                t.row(vec![
+                    format!("{nm}nm"),
+                    front.len().to_string(),
+                    if tok.is_nan() { "-".into() } else { fnum(tok, 0) },
+                    if mj.is_nan() { "-".into() } else { fnum(mj, 3) },
+                    if area.is_nan() { "-".into() } else { fnum(area, 1) },
+                ]);
+            }
+            (w.clone(), t)
+        })
+        .collect()
+}
+
+/// Sweep summary: counters, reuse evidence and shared-cache occupancy.
+pub fn summary_table(res: &AtlasResult) -> Table {
+    let c = &res.counters;
+    let mut t = Table::new("atlas summary", &["metric", "value"]);
+    let mut kv = |k: &str, v: String| {
+        t.row(vec![k.to_string(), v]);
+    };
+    kv("grid points", c.points.to_string());
+    kv("solved", c.solved.to_string());
+    kv("skipped (pruned)", c.skipped.to_string());
+    kv("shrunk (pruned)", c.shrunk.to_string());
+    kv("prune path: fast", c.prune_fast.to_string());
+    kv("prune path: amortized", c.prune_amortized.to_string());
+    kv("episodes run", c.episodes_run.to_string());
+    kv("episodes budget (no reuse)", c.episodes_budget.to_string());
+    kv(
+        "episodes saved",
+        c.episodes_budget.saturating_sub(c.episodes_run).to_string(),
+    );
+    kv(
+        "eval cache hits / misses",
+        format!("{} / {}", res.eval_stats.outcome_hits, res.eval_stats.outcome_misses),
+    );
+    kv(
+        "geometry tables shared",
+        res.eval_stats.geom_shared.to_string(),
+    );
+    if let Some(occ) = &res.occupancy {
+        kv("shared cache entries", occ.entries.to_string());
+        kv("shared cache resident salts", occ.salts.len().to_string());
+        let per = if occ.salts.is_empty() {
+            0.0
+        } else {
+            occ.entries as f64 / occ.salts.len() as f64
+        };
+        kv("shared cache entries/salt", fnum(per, 1));
+        kv("shared cache hit rate", format!("{:.1}%", occ.hit_rate() * 100.0));
+    }
+    kv("wall clock (s)", fnum(res.elapsed_s, 1));
+    t
+}
+
+/// The machine-readable atlas record (out/atlas.json).
+pub fn atlas_json(res: &AtlasResult, cfg: &RunConfig) -> Json {
+    let point_json = |p: &AtlasPoint| {
+        let frontier = p
+            .frontier
+            .frontier()
+            .iter()
+            .map(|q| {
+                json::obj(vec![
+                    ("perf_gops", json::num(q.perf_gops)),
+                    ("power_mw", json::num(q.power_mw)),
+                    ("area_mm2", json::num(q.area_mm2)),
+                    ("tokens_per_s", json::num(q.tokens_per_s)),
+                    ("mj_per_token", json::num(q.energy_mj_per_token())),
+                ])
+            })
+            .collect();
+        let (by, kind) = match p.status {
+            PointStatus::Skipped { by, kind } | PointStatus::Shrunk { by, kind } => {
+                (json::num(by as f64), json::s(kind.name()))
+            }
+            PointStatus::Solved => (Json::Null, Json::Null),
+        };
+        json::obj(vec![
+            ("grid_index", json::num(p.grid_index as f64)),
+            ("workload", json::s(&p.workload)),
+            ("nm", json::num(p.nm as f64)),
+            ("phase", json::s(p.scenario.phase.name())),
+            ("seq_len", json::num(p.scenario.seq_len as f64)),
+            ("batch", json::num(p.scenario.batch as f64)),
+            ("status", json::s(p.status.name())),
+            ("pruned_by", by),
+            ("prune_kind", kind),
+            ("episodes", json::num(p.episodes as f64)),
+            ("cache_hit_rate", json::num(p.cache_hit_rate)),
+            ("envelope_perf_gops", json::num(p.envelope.perf_gops)),
+            ("envelope_mj_per_token_lb", json::num(p.envelope.energy_lb_mj_per_token())),
+            ("envelope_area_mm2_lb", json::num(p.envelope.area_mm2)),
+            ("frontier", json::arr(frontier)),
+        ])
+    };
+    let c = &res.counters;
+    let counters = json::obj(vec![
+        ("points", json::num(c.points as f64)),
+        ("solved", json::num(c.solved as f64)),
+        ("skipped", json::num(c.skipped as f64)),
+        ("shrunk", json::num(c.shrunk as f64)),
+        ("prune_fast", json::num(c.prune_fast as f64)),
+        ("prune_amortized", json::num(c.prune_amortized as f64)),
+        ("episodes_run", json::num(c.episodes_run as f64)),
+        ("episodes_budget", json::num(c.episodes_budget as f64)),
+    ]);
+    let occupancy = match &res.occupancy {
+        Some(occ) => json::obj(vec![
+            ("entries", json::num(occ.entries as f64)),
+            ("salts", json::num(occ.salts.len() as f64)),
+            ("hits", json::num(occ.hits as f64)),
+            ("misses", json::num(occ.misses as f64)),
+            ("hit_rate", json::num(occ.hit_rate())),
+        ]),
+        None => Json::Null,
+    };
+    json::obj(vec![
+        ("workloads", json::arr(cfg.atlas_grid_workloads().iter().map(|w| json::s(w)).collect())),
+        ("nodes_nm", json::arr(cfg.nodes_nm.iter().map(|&n| json::num(n as f64)).collect())),
+        ("prune", json::s(if cfg.atlas.prune { "on" } else { "off" })),
+        ("warm", json::s(if cfg.atlas.warm { "on" } else { "off" })),
+        ("shrink", json::num(cfg.atlas.shrink as f64)),
+        ("n_seeds", json::num(cfg.atlas.n_seeds as f64)),
+        ("elapsed_s", json::num(res.elapsed_s)),
+        ("counters", counters),
+        ("occupancy", occupancy),
+        ("points", json::arr(res.points.iter().map(point_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Granularity;
+    use crate::ir::spec::Phase;
+
+    fn tiny_atlas_cfg() -> RunConfig {
+        let mut c = RunConfig::default();
+        c.granularity = Granularity::Group;
+        c.rl.episodes_per_node = 4;
+        c.rl.warmup_steps = 10_000;
+        c.backend = crate::nn::BackendSel::Native;
+        c.atlas.workloads = vec!["llama-3.2-1b".into()];
+        c.atlas.phases = vec![Phase::Decode];
+        c.atlas.seq_lens = vec![2048];
+        c.atlas.batches = vec![1, 4];
+        c.nodes_nm = vec![7];
+        c
+    }
+
+    #[test]
+    fn grid_enumeration_is_canonical_and_stable() {
+        let mut cfg = tiny_atlas_cfg();
+        cfg.atlas.batches = vec![1, 4];
+        cfg.nodes_nm = vec![7, 22];
+        let grid = enumerate_grid(&cfg).unwrap();
+        assert_eq!(grid.len(), 4);
+        // canonical order: batch-major over nodes
+        assert_eq!(
+            grid.iter().map(|g| (g.scenario.batch, g.nm)).collect::<Vec<_>>(),
+            vec![(1, 7), (1, 22), (4, 7), (4, 22)]
+        );
+        for (i, g) in grid.iter().enumerate() {
+            assert_eq!(g.grid_index, i);
+        }
+        // curriculum runs the largest batch first, nodes in config order
+        let order = curriculum(&grid);
+        assert_eq!(
+            order.iter().map(|&i| (grid[i].scenario.batch, grid[i].nm)).collect::<Vec<_>>(),
+            vec![(4, 7), (4, 22), (1, 7), (1, 22)]
+        );
+        // prune settings never move seeds: derived from stream_index only
+        let s_on = point_seeds(&cfg, &grid[2]);
+        let mut cfg_off = cfg.clone();
+        cfg_off.atlas.prune = false;
+        assert_eq!(s_on, point_seeds(&cfg_off, &grid[2]));
+        // the batch axis collapses out of the stream index: (1,7) and
+        // (4,7) replay one action stream, (1,22)/(4,22) another
+        assert_eq!(grid[0].stream_index, grid[2].stream_index);
+        assert_eq!(grid[1].stream_index, grid[3].stream_index);
+        assert_ne!(grid[0].stream_index, grid[1].stream_index);
+        assert_eq!(point_seeds(&cfg, &grid[0]), point_seeds(&cfg, &grid[2]));
+        assert_ne!(point_seeds(&cfg, &grid[0]), point_seeds(&cfg, &grid[1]));
+    }
+
+    #[test]
+    fn batch_axis_amortization_dominates() {
+        // the batch=4 point's envelope must weakly dominate batch=1 at
+        // the same (workload, node, phase, seq) — the edge the curriculum
+        // and the amortization prune path are built on
+        let cfg = tiny_atlas_cfg();
+        let grid = enumerate_grid(&cfg).unwrap();
+        let (p1, p4) = (&grid[0], &grid[1]);
+        assert_eq!((p1.scenario.batch, p4.scenario.batch), (1, 4));
+        let ev1 = Evaluator::new(&point_cfg(&cfg, p1).unwrap(), p1.nm);
+        let ev4 = Evaluator::new(&point_cfg(&cfg, p4).unwrap(), p4.nm);
+        let (e1, e4) = (ev1.roofline_envelope(), ev4.roofline_envelope());
+        assert!(e4.dominates_envelope(&e1));
+        let (c1, c4) = (ev1.scenario_constants(), ev4.scenario_constants());
+        assert_eq!(c1.0.to_bits(), c4.0.to_bits());
+        assert_eq!(c1.2.to_bits(), c4.2.to_bits());
+        assert!(c1.1 >= c4.1);
+        // so a solved batch=4 point prunes batch=1 via the amortized path
+        let solved = vec![Solved {
+            grid_index: p4.grid_index,
+            workload: p4.workload.clone(),
+            nm: p4.nm,
+            scenario: p4.scenario,
+            envelope: e4,
+            constants: c4,
+            frontier: {
+                let mut a = ParetoArchive::new();
+                a.insert(ParetoPoint {
+                    perf_gops: 1.0,
+                    power_mw: 1.0,
+                    area_mm2: 1.0,
+                    tokens_per_s: 1.0,
+                    episode: 0,
+                    tag: 0,
+                });
+                a
+            },
+        }];
+        let hit = find_dominator(p1, &e1, c1, &solved);
+        assert_eq!(hit, Some((p4.grid_index, PruneKind::Amortized)));
+        // but never across nodes
+        let mut other = grid[0].clone();
+        other.nm = 22;
+        assert!(find_dominator(&other, &e1, c1, &solved).is_none());
+    }
+
+    #[test]
+    fn energy_frontier_merge_is_deterministic() {
+        let p = |perf: f64, tok: f64, power: f64, area: f64| ParetoPoint {
+            perf_gops: perf,
+            power_mw: power,
+            area_mm2: area,
+            tokens_per_s: tok,
+            episode: 0,
+            tag: 0,
+        };
+        let mut front = Vec::new();
+        energy_insert(&mut front, p(100.0, 100.0, 50.0, 10.0)); // 0.5 mJ/tok
+        energy_insert(&mut front, p(100.0, 100.0, 50.0, 10.0)); // exact tie: rejected
+        assert_eq!(front.len(), 1);
+        energy_insert(&mut front, p(100.0, 200.0, 50.0, 10.0)); // 0.25 mJ/tok: evicts
+        assert_eq!(front.len(), 1);
+        assert!((front[0].energy_mj_per_token() - 0.25).abs() < 1e-12);
+        energy_insert(&mut front, p(50.0, 400.0, 50.0, 10.0)); // trade-off: kept
+        assert_eq!(front.len(), 2);
+    }
+}

@@ -9,6 +9,7 @@
 //! (DESIGN.md §11).
 
 pub mod agent;
+pub mod atlas;
 pub mod baselines;
 pub mod explore;
 pub mod learner;
@@ -19,10 +20,11 @@ pub mod per;
 pub mod vecenv;
 
 pub use agent::{LaneDecision, SacAgent, UpdateMetrics};
+pub use atlas::{AtlasCounters, AtlasPoint, AtlasResult, PointStatus, PruneKind};
 pub use explore::EpsSchedule;
 pub use learner::{LearnerMode, LearnerReport};
 pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
 pub use multiseed::{run_seeds, run_seeds_t, seeds_table, MultiSeedResult, SeedStat};
 pub use pareto::{ParetoArchive, ParetoPoint};
 pub use per::{PerBuffer, Transition};
-pub use vecenv::{run_jobs, run_jobs_stats, run_vec, LaneSpec};
+pub use vecenv::{run_jobs, run_jobs_stats, run_jobs_stats_shared, run_vec, LaneSpec};

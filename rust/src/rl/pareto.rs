@@ -33,6 +33,40 @@ impl ParetoPoint {
             || self.area_mm2 < other.area_mm2;
         ge && gt
     }
+
+    /// Energy per generated token in mJ (power_mw = mJ/s over tokens/s).
+    /// The scenario-robust efficiency objective of the atlas sweep: raw
+    /// power is NOT monotone under batch amortization (the NoC term
+    /// scales with tokens/s), but energy/token is — static power
+    /// amortizes over more tokens and NoC energy per token depends only
+    /// on the placement (DESIGN.md §12).
+    pub fn energy_mj_per_token(&self) -> f64 {
+        if self.tokens_per_s <= 0.0 {
+            f64::INFINITY
+        } else {
+            self.power_mw / self.tokens_per_s
+        }
+    }
+
+    /// Dominance in (perf ↑, energy/token ↓, area ↓) space — the merge
+    /// objective of the scenario atlas (DESIGN.md §12).
+    pub fn dominates_energy(&self, other: &ParetoPoint) -> bool {
+        let (se, oe) = (self.energy_mj_per_token(), other.energy_mj_per_token());
+        let ge = self.perf_gops >= other.perf_gops
+            && se <= oe
+            && self.area_mm2 <= other.area_mm2;
+        let gt = self.perf_gops > other.perf_gops || se < oe || self.area_mm2 < other.area_mm2;
+        ge && gt
+    }
+
+    /// Weak energy-space dominance: `dominates_energy` or an exact
+    /// component-wise tie. The atlas soundness test accepts a tie — a
+    /// neighbor that achieved the *identical* operating point covers it.
+    pub fn covers_energy(&self, other: &ParetoPoint) -> bool {
+        self.perf_gops >= other.perf_gops
+            && self.energy_mj_per_token() <= other.energy_mj_per_token()
+            && self.area_mm2 <= other.area_mm2
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -180,6 +214,32 @@ mod tests {
         }
         let sel = a.select(&PpaWeights::HIGH_PERF).unwrap().clone();
         assert!(!a.frontier().iter().any(|q| q.dominates(&sel)));
+    }
+
+    #[test]
+    fn energy_dominance_tracks_mj_per_token() {
+        // same raw power, but a dominates in tokens/s → lower mJ/token
+        let mut a = p(100.0, 50.0, 10.0, 0);
+        a.tokens_per_s = 1000.0;
+        let mut b = p(100.0, 50.0, 10.0, 1);
+        b.tokens_per_s = 500.0;
+        assert!(a.energy_mj_per_token() < b.energy_mj_per_token());
+        assert!(a.dominates_energy(&b));
+        assert!(!b.dominates_energy(&a));
+        // raw-power dominance sees them as tied on every axis
+        assert!(!a.dominates(&b));
+        // covers_energy admits the exact tie, dominates_energy does not
+        assert!(a.covers_energy(&a.clone()));
+        assert!(!a.dominates_energy(&a.clone()));
+    }
+
+    #[test]
+    fn zero_token_point_has_infinite_energy() {
+        let mut z = p(0.0, 10.0, 10.0, 0);
+        z.tokens_per_s = 0.0;
+        assert!(z.energy_mj_per_token().is_infinite());
+        let live = p(1.0, 10.0, 10.0, 1);
+        assert!(live.dominates_energy(&z));
     }
 
     #[test]

@@ -48,7 +48,7 @@
 use crate::config::RunConfig;
 use crate::env::{state, Action, SAC_STATE_DIM};
 use crate::error::Result;
-use crate::eval::{parallel, EvalCache, EvalScratch, EvalStats, Evaluator};
+use crate::eval::{parallel, EvalCache, EvalScratch, EvalStats, Evaluator, SharedEvalCache};
 use crate::rl::agent::{LaneDecision, SacAgent};
 use crate::rl::explore::EpsSchedule;
 use crate::rl::learner::{LearnerClient, LearnerReport, UPDATE_STREAM_TAG};
@@ -69,12 +69,39 @@ pub struct LaneSpec {
 /// The lane's RNG lives in a parallel `Vec<Rng>` owned by [`run_vec`] so
 /// the batched action selection can borrow all lane RNGs as one slice
 /// while the lanes themselves stay untouched.
+/// A lane's whole-outcome memo: private per lane (the default), or one
+/// process-wide [`SharedEvalCache`] spanning every lane and scenario
+/// point of an atlas sweep. Sharing is determinism-neutral — keys are
+/// salted per evaluator and a replayed outcome is bit-identical to
+/// recomputation — so the lane contract of the module doc holds either
+/// way; only the hit/miss *counters* move from the lane to the shared
+/// cache.
+enum LaneCache {
+    Local(EvalCache),
+    Shared(SharedEvalCache),
+}
+
+impl LaneCache {
+    fn evaluate(
+        &mut self,
+        ev: &Evaluator,
+        mesh: &crate::arch::MeshConfig,
+        a: &Action,
+        scratch: &mut EvalScratch,
+    ) -> crate::eval::EvalOutcome {
+        match self {
+            LaneCache::Local(c) => c.evaluate(ev, mesh, a, scratch),
+            LaneCache::Shared(c) => c.evaluate(ev, mesh, a, scratch),
+        }
+    }
+}
+
 struct Lane {
     nm: u32,
     eval: Evaluator,
     mesh: crate::arch::MeshConfig,
     scratch: EvalScratch,
-    cache: EvalCache,
+    cache: LaneCache,
     eps: EpsSchedule,
     tracker: EpisodeTracker,
     s: [f32; SAC_STATE_DIM],
@@ -89,11 +116,14 @@ struct Lane {
 }
 
 impl Lane {
-    fn new(cfg: &RunConfig, spec: &LaneSpec) -> Lane {
+    fn new(cfg: &RunConfig, spec: &LaneSpec, shared: Option<&SharedEvalCache>) -> Lane {
         let eval = Evaluator::new(cfg, spec.nm);
         let mesh0 = eval.initial_mesh();
         let mut scratch = EvalScratch::default();
-        let mut cache = EvalCache::new(cfg.rl.eval_cache);
+        let mut cache = match shared {
+            Some(c) => LaneCache::Shared(c.clone()),
+            None => LaneCache::Local(EvalCache::new(cfg.rl.eval_cache)),
+        };
         // bootstrap: evaluate the neutral action to get s₀ (no RNG)
         let prev = cache.evaluate(&eval, &mesh0, &Action::neutral(), &mut scratch);
         let mesh = prev.decoded.mesh;
@@ -143,23 +173,25 @@ pub fn run_vec(
     update_rng: &mut Rng,
     threads: usize,
 ) -> Result<Vec<NodeResult>> {
-    run_vec_driver(cfg, specs, agent, threads, &mut StepSink::Inline { update_rng })
+    run_vec_driver(cfg, specs, agent, threads, &mut StepSink::Inline { update_rng }, None)
 }
 
-/// The lockstep driver behind [`run_vec`], generic over the step sink.
+/// The lockstep driver behind [`run_vec`], generic over the step sink and
+/// the (optionally shared) whole-outcome memo.
 pub(crate) fn run_vec_driver(
     cfg: &RunConfig,
     specs: &[LaneSpec],
     agent: &mut SacAgent,
     threads: usize,
     sink: &mut StepSink<'_>,
+    shared: Option<&SharedEvalCache>,
 ) -> Result<Vec<NodeResult>> {
     if specs.is_empty() {
         return Ok(Vec::new());
     }
     let rl = &cfg.rl;
     let b = specs.len();
-    let mut lanes: Vec<Lane> = specs.iter().map(|sp| Lane::new(cfg, sp)).collect();
+    let mut lanes: Vec<Lane> = specs.iter().map(|sp| Lane::new(cfg, sp, shared)).collect();
     let mut rngs: Vec<Rng> = specs.iter().map(|sp| Rng::new(sp.seed)).collect();
     let mut states = vec![0.0f32; b * SAC_STATE_DIM];
     let mut decisions = vec![LaneDecision { explore: false }; b];
@@ -242,7 +274,11 @@ pub(crate) fn run_vec_driver(
         .into_iter()
         .map(|lane| {
             let mut r = lane.tracker.finish(lane.nm, rl.episodes_per_node);
-            r.eval_stats.absorb_outcome_cache(&lane.cache);
+            // a shared cache outlives the lane — its counters are absorbed
+            // once by the sweep driver, not per lane
+            if let LaneCache::Local(c) = &lane.cache {
+                r.eval_stats.absorb_outcome_cache(c);
+            }
             r.eval_stats.absorb_scratch(&lane.scratch);
             r.eval_stats.merge(&lane.stats);
             r
@@ -282,6 +318,20 @@ pub fn run_jobs_stats(
     agent: &mut SacAgent,
     threads: usize,
 ) -> Result<(Vec<NodeResult>, Option<LearnerReport>)> {
+    run_jobs_stats_shared(cfg, jobs, lanes, agent, threads, None)
+}
+
+/// [`run_jobs_stats`] with every lane's whole-outcome memo replaced by
+/// one process-wide [`SharedEvalCache`] — the atlas sweep's warm-state
+/// layer. Pass `None` to keep the default private-per-lane memos.
+pub fn run_jobs_stats_shared(
+    cfg: &RunConfig,
+    jobs: &[LaneSpec],
+    lanes: usize,
+    agent: &mut SacAgent,
+    threads: usize,
+    shared: Option<&SharedEvalCache>,
+) -> Result<(Vec<NodeResult>, Option<LearnerReport>)> {
     if jobs.is_empty() {
         return Ok((Vec::new(), None));
     }
@@ -295,6 +345,7 @@ pub fn run_jobs_stats(
                 agent,
                 threads,
                 &mut StepSink::Learner(&mut client),
+                shared,
             )?);
         }
         let report = client.finish(agent)?;
@@ -304,7 +355,14 @@ pub fn run_jobs_stats(
         // reset the learning noise sequence
         let mut update_rng = Rng::new(cfg.seed).fork(UPDATE_STREAM_TAG);
         for wave in jobs.chunks(lanes.max(1)) {
-            results.extend(run_vec(cfg, wave, agent, &mut update_rng, threads)?);
+            results.extend(run_vec_driver(
+                cfg,
+                wave,
+                agent,
+                threads,
+                &mut StepSink::Inline { update_rng: &mut update_rng },
+                shared,
+            )?);
         }
         Ok((results, None))
     }
@@ -373,6 +431,37 @@ mod tests {
         cfg.apply("learner", "async").unwrap();
         let (r, rep) = run_jobs_stats(&cfg, &[], 4, &mut ag, 2).unwrap();
         assert!(r.is_empty() && rep.is_none());
+    }
+
+    #[test]
+    fn shared_cache_preserves_lane_results() {
+        // the warm-state layer must be unobservable in the results: a
+        // rollout-only run against one shared memo is bit-identical to
+        // the private-per-lane default, and the shared counters land in
+        // the sweep-level cache, not the lanes
+        let cfg = tiny_cfg();
+        let specs = [LaneSpec { nm: 7, seed: 11 }, LaneSpec { nm: 22, seed: 12 }];
+        let base = run_jobs(&cfg, &specs, 2, &mut agent(&cfg), 2).unwrap();
+        let shared = SharedEvalCache::new(cfg.rl.eval_cache);
+        let (with_shared, _) =
+            run_jobs_stats_shared(&cfg, &specs, 2, &mut agent(&cfg), 2, Some(&shared))
+                .unwrap();
+        assert_eq!(base.len(), with_shared.len());
+        for (a, b) in base.iter().zip(&with_shared) {
+            assert_eq!(a.nm, b.nm);
+            assert_eq!(a.episodes.len(), b.episodes.len());
+            for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+                assert_eq!(ea.reward.to_bits(), eb.reward.to_bits());
+                assert_eq!(ea.score.to_bits(), eb.score.to_bits());
+            }
+            assert_eq!(a.pareto.len(), b.pareto.len());
+            assert_eq!(b.eval_stats.outcome_hits + b.eval_stats.outcome_misses, 0);
+        }
+        let (hits, misses) = shared.counters();
+        assert!(misses > 0, "shared cache saw no traffic");
+        let occ = shared.occupancy();
+        assert_eq!(occ.salts.len(), 2, "one salt per (node) evaluator");
+        assert_eq!(occ.hits, hits);
     }
 
     #[test]

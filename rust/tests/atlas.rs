@@ -1,0 +1,160 @@
+//! Atlas sweep contract suite (DESIGN.md §12).
+//!
+//! * `atlas_prune=on` is lossless for every point it does NOT skip: the
+//!   pruned sweep's per-point frontiers are bit-identical to the exact
+//!   (`atlas_prune=off`) sweep's.
+//! * Every skipped point is *verifiably* covered: each point of its
+//!   exact frontier is weakly dominated in (perf ↑, energy mJ/token ↓,
+//!   area ↓) space by the justifying neighbor's achieved frontier.
+//! * Warm mode populates the process-wide shared cache with per-salt
+//!   occupancy evidence.
+//!
+//! The power budget is raised far above any achievable design so power
+//! never binds: with batch-invariant decode/projection and shared
+//! batch-axis action streams, that makes feasibility — and therefore
+//! frontier coverage — provably transfer from a skipped small-batch
+//! point to its solved large-batch dominator (the NoC power term grows
+//! with tokens/s, so with a finite budget a design feasible at batch 1
+//! could in principle bust the budget at batch 4; see DESIGN.md §12).
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::ir::Phase;
+use silicon_rl::nn::backend::BackendSel;
+use silicon_rl::rl::atlas::{self, AtlasResult};
+use silicon_rl::rl::PointStatus;
+
+fn contract_cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = BackendSel::Native;
+    cfg.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.granularity = Granularity::Group;
+    cfg.rl.episodes_per_node = 10;
+    cfg.rl.warmup_steps = 10_000; // rollout-only: pure seeded action streams
+    cfg.atlas.workloads = vec!["llama-3.2-1b".into()];
+    cfg.atlas.phases = vec![Phase::Decode];
+    cfg.atlas.seq_lens = vec![2048];
+    cfg.atlas.batches = vec![1, 4];
+    cfg.atlas.n_seeds = 1;
+    cfg.atlas.warm = false;
+    cfg.atlas.shrink = 0; // dominated points are skipped outright
+    cfg.nodes_nm = vec![7];
+    // power never binds (see module doc); area/memory still enforced
+    for b in &mut cfg.mode.budgets {
+        b.power_budget_mw = 1e9;
+    }
+    cfg
+}
+
+fn run_with_prune(prune: bool) -> AtlasResult {
+    let mut cfg = contract_cfg();
+    cfg.atlas.prune = prune;
+    atlas::run(&cfg).unwrap()
+}
+
+/// The tentpole contract: pruning skips work, never changes answers.
+#[test]
+fn pruned_sweep_is_bit_identical_and_skips_are_covered() {
+    let exact = run_with_prune(false);
+    let pruned = run_with_prune(true);
+    assert_eq!(exact.points.len(), pruned.points.len());
+
+    // the exact sweep runs everything
+    assert_eq!(exact.counters.pruned(), 0);
+    for p in &exact.points {
+        assert_eq!(p.status, PointStatus::Solved, "exact point {}", p.grid_index);
+        assert!(
+            !p.frontier.is_empty(),
+            "exact point {} found no feasible design — the coverage \
+             assertion below would be vacuous; raise episodes",
+            p.grid_index
+        );
+    }
+
+    // pruning must actually fire on this grid (batch 4 solves first and
+    // dominates batch 1), or the contract is tested against nothing
+    assert!(pruned.counters.pruned() > 0, "no points pruned");
+    assert_eq!(
+        pruned.counters.prune_fast + pruned.counters.prune_amortized,
+        pruned.counters.pruned()
+    );
+    assert!(pruned.counters.episodes_run < pruned.counters.episodes_budget);
+
+    for (e, p) in exact.points.iter().zip(&pruned.points) {
+        assert_eq!(e.grid_index, p.grid_index);
+        match p.status {
+            // non-skipped points: bit-identical frontiers
+            PointStatus::Solved | PointStatus::Shrunk { .. } => {
+                let (fe, fp) = (e.frontier.frontier(), p.frontier.frontier());
+                assert_eq!(fe.len(), fp.len(), "point {}: frontier size", p.grid_index);
+                for (x, y) in fe.iter().zip(fp) {
+                    let i = p.grid_index;
+                    assert_eq!(x.perf_gops.to_bits(), y.perf_gops.to_bits(), "pt {i} perf");
+                    assert_eq!(x.power_mw.to_bits(), y.power_mw.to_bits(), "pt {i} power");
+                    assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "pt {i} area");
+                    assert_eq!(
+                        x.tokens_per_s.to_bits(),
+                        y.tokens_per_s.to_bits(),
+                        "pt {i} tokens/s"
+                    );
+                    assert_eq!(x.episode, y.episode, "pt {i} episode tag");
+                }
+            }
+            // skipped points: the justifying neighbor's achieved frontier
+            // must cover every point the exact sweep found here
+            PointStatus::Skipped { by, .. } => {
+                assert!(p.frontier.is_empty());
+                let justifier = &pruned.points[by];
+                assert_eq!(justifier.grid_index, by);
+                assert_eq!(justifier.status, PointStatus::Solved);
+                for x in e.frontier.frontier() {
+                    assert!(
+                        justifier.frontier.frontier().iter().any(|q| q.covers_energy(x)),
+                        "skipped point {} has exact frontier point \
+                         (perf {}, {} mJ/tok, {} mm2) not covered by justifier {}",
+                        p.grid_index,
+                        x.perf_gops,
+                        x.energy_mj_per_token(),
+                        x.area_mm2,
+                        by
+                    );
+                }
+            }
+        }
+    }
+
+    // the merged energy atlas loses nothing either: every exact merged
+    // point is covered by the pruned sweep's merged atlas
+    for (key, front) in &exact.atlas {
+        let got = pruned.atlas.get(key).expect("atlas slab present");
+        for x in front {
+            assert!(
+                got.iter().any(|q| q.covers_energy(x)),
+                "merged atlas point lost under pruning"
+            );
+        }
+    }
+}
+
+/// Warm mode: one shared cache spans the sweep, salted per scenario,
+/// with occupancy surfaced on the result.
+#[test]
+fn warm_sweep_shares_cache_across_scenarios() {
+    let mut cfg = contract_cfg();
+    cfg.atlas.prune = false; // run both scenarios so two salts populate
+    cfg.atlas.warm = true;
+    let res = atlas::run(&cfg).unwrap();
+    let occ = res.occupancy.expect("warm mode reports occupancy");
+    assert!(occ.entries > 0, "shared cache never populated");
+    // two scenario points (batch 1 and 4) → two distinct salts resident
+    assert!(
+        occ.salts.len() >= 2,
+        "expected per-salt occupancy for both scenario points, got {}",
+        occ.salts.len()
+    );
+    let per_salt_sum: u64 = occ.salts.iter().map(|&(_, n)| n).sum();
+    assert_eq!(per_salt_sum, occ.entries as u64);
+    for p in &res.points {
+        assert_eq!(p.status, PointStatus::Solved);
+        assert!(!p.frontier.is_empty(), "warm point {} empty", p.grid_index);
+    }
+}
