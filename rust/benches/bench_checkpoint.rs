@@ -1,0 +1,147 @@
+//! Checkpoint overhead and kill-and-resume timing (DESIGN.md §13).
+//!
+//! Runs the same 4-lane vec-env search three times — no checkpointing,
+//! `checkpoint_every=8`, and the pathological `checkpoint_every=1` — and
+//! records the wall-clock overhead of periodic snapshots, the on-disk
+//! generation size, and the cost of a resume (newest-generation load +
+//! replayed tail). Results land in `out/bench/BENCH_checkpoint.json` for
+//! the report pipeline; `BENCH_SMOKE=1` shrinks the budget to CI size.
+//!
+//! The bit-identity of the resumed results is asserted here too — the
+//! bench doubles as an end-to-end kill-and-resume smoke on a realistic
+//! episode budget (the fine-grained contract lives in
+//! `tests/checkpoint.rs`).
+
+use std::path::Path;
+use std::time::Instant;
+
+use silicon_rl::config::RunConfig;
+use silicon_rl::error::Result;
+use silicon_rl::nn::backend::{self, BackendSel};
+use silicon_rl::rl::checkpoint::INJECTED_CRASH_MSG;
+use silicon_rl::rl::{self, LaneSpec, NodeResult, SacAgent};
+use silicon_rl::util::{fsio, json, Rng};
+
+const SPECS: [LaneSpec; 4] = [
+    LaneSpec { nm: 7, seed: 7 },
+    LaneSpec { nm: 7, seed: 42 },
+    LaneSpec { nm: 28, seed: 7 },
+    LaneSpec { nm: 28, seed: 42 },
+];
+
+fn base_cfg(episodes: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = BackendSel::Native;
+    cfg.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.rl.episodes_per_node = episodes;
+    cfg.rl.warmup_steps = 8;
+    cfg
+}
+
+fn fresh_agent(cfg: &RunConfig) -> Result<SacAgent> {
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend)?;
+    SacAgent::new(be, cfg.rl, &mut Rng::new(42))
+}
+
+fn timed_run(cfg: &RunConfig) -> Result<(Vec<NodeResult>, SacAgent, f64)> {
+    let mut agent = fresh_agent(cfg)?;
+    let t0 = Instant::now();
+    let (results, _) = rl::run_jobs_stats(cfg, &SPECS, SPECS.len(), &mut agent, 2)?;
+    Ok((results, agent, t0.elapsed().as_secs_f64()))
+}
+
+fn main() -> Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").ok().as_deref() == Some("1");
+    let eps = std::env::var("SILICON_RL_BENCH_CKPT_EPISODES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 48 } else { 200 });
+    let scratch = "out/bench/ckpt_scratch";
+    let _ = std::fs::remove_dir_all(scratch);
+
+    println!("== bench_checkpoint: 4 lanes x {eps} episodes ==");
+
+    // baseline: no checkpointing
+    let cfg0 = base_cfg(eps);
+    let (base_results, base_agent, t_base) = timed_run(&cfg0)?;
+    println!("checkpoint_every=0: {t_base:.2}s");
+
+    // periodic snapshots at two cadences
+    let mut t_every = Vec::new();
+    for every in [8usize, 1] {
+        let mut cfg = cfg0.clone();
+        cfg.out_dir = format!("{scratch}/every{every}");
+        cfg.rl.checkpoint_every = every;
+        let (_, _, t) = timed_run(&cfg)?;
+        println!(
+            "checkpoint_every={every}: {t:.2}s ({:+.1}% vs baseline)",
+            (t / t_base - 1.0) * 100.0
+        );
+        t_every.push((every, t));
+    }
+
+    // generation size on disk (newest slot of the every=8 run)
+    let ckpt_bytes = ["ckpt-a.bin", "ckpt-b.bin"]
+        .iter()
+        .filter_map(|f| {
+            std::fs::metadata(Path::new(scratch).join("every8/ckpt").join(f)).ok()
+        })
+        .map(|m| m.len())
+        .max()
+        .unwrap_or(0);
+    println!("generation size: {:.1} KiB", ckpt_bytes as f64 / 1024.0);
+
+    // kill-and-resume: die on the last step's first probe, resume the tail
+    let mut ccfg = cfg0.clone();
+    ccfg.out_dir = format!("{scratch}/resume");
+    ccfg.rl.checkpoint_every = 8;
+    ccfg.rl.crash_after = (3 * (eps as u64 - 1)) + 1;
+    let crash = timed_run(&ccfg);
+    let err = crash.err().expect("injected crash did not fire");
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut rcfg = ccfg.clone();
+    rcfg.rl.crash_after = 0;
+    rcfg.resume = Some(ccfg.out_dir.clone());
+    let (res_results, res_agent, t_resume) = timed_run(&rcfg)?;
+    println!("resume (load + replayed tail): {t_resume:.2}s");
+
+    // the resumed end state must be bit-identical to the baseline's
+    for (lane, (a, b)) in base_results.iter().zip(&res_results).enumerate() {
+        assert_eq!(a.episodes.len(), b.episodes.len(), "lane {lane}: episode count");
+        for (x, y) in a.episodes.iter().zip(&b.episodes) {
+            assert_eq!(
+                x.reward.to_bits(),
+                y.reward.to_bits(),
+                "lane {lane} ep {}: resume diverged",
+                x.episode
+            );
+        }
+        assert_eq!(
+            a.pareto.frontier().len(),
+            b.pareto.frontier().len(),
+            "lane {lane}: frontier size"
+        );
+    }
+    assert_eq!(base_agent.buffer.len(), res_agent.buffer.len(), "replay length");
+    println!("resume bit-identity: OK");
+
+    let record = json::obj(vec![
+        ("bench", json::s("checkpoint")),
+        ("smoke", json::Json::Bool(smoke)),
+        ("episodes", json::num(eps as f64)),
+        ("lanes", json::num(SPECS.len() as f64)),
+        ("baseline_s", json::num(t_base)),
+        ("every8_s", json::num(t_every[0].1)),
+        ("every1_s", json::num(t_every[1].1)),
+        ("overhead_every8_pct", json::num((t_every[0].1 / t_base - 1.0) * 100.0)),
+        ("overhead_every1_pct", json::num((t_every[1].1 / t_base - 1.0) * 100.0)),
+        ("generation_bytes", json::num(ckpt_bytes as f64)),
+        ("resume_s", json::num(t_resume)),
+    ]);
+    std::fs::create_dir_all("out/bench")?;
+    fsio::atomic_write_str("out/bench/BENCH_checkpoint.json", &record.to_string_pretty())?;
+    println!("record: out/bench/BENCH_checkpoint.json");
+    let _ = std::fs::remove_dir_all(scratch);
+    Ok(())
+}

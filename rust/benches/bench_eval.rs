@@ -245,7 +245,10 @@ fn main() {
         ("batches", batches),
     ]);
     let _ = std::fs::create_dir_all("out/bench");
-    let _ = std::fs::write("out/bench/BENCH_eval.json", record.to_string_pretty());
+    let _ = silicon_rl::util::fsio::atomic_write_str(
+        "out/bench/BENCH_eval.json",
+        &record.to_string_pretty(),
+    );
     println!("json: out/bench/BENCH_eval.json");
 
     b.write_csv("out/bench/bench_eval.csv");

@@ -188,7 +188,10 @@ fn main() {
     if let Err(e) = std::fs::create_dir_all("out/bench") {
         eprintln!("out/bench: {e}");
     }
-    let _ = std::fs::write("out/bench/BENCH_kernels.json", record.to_string_pretty());
+    let _ = silicon_rl::util::fsio::atomic_write_str(
+        "out/bench/BENCH_kernels.json",
+        &record.to_string_pretty(),
+    );
     b.write_csv("out/bench/bench_kernels.csv");
     println!("records: out/bench/BENCH_kernels.json, out/bench/bench_kernels.csv");
 }

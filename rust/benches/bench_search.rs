@@ -338,7 +338,10 @@ fn vecenv_lane_sweep(smoke: bool) -> Result<()> {
     }
     let record = json::obj(fields);
     std::fs::create_dir_all("out/bench")?;
-    std::fs::write("out/bench/BENCH_vecenv.json", record.to_string_pretty())?;
+    silicon_rl::util::fsio::atomic_write_str(
+        "out/bench/BENCH_vecenv.json",
+        &record.to_string_pretty(),
+    )?;
     println!("record: out/bench/BENCH_vecenv.json");
 
     // acceptance gate: ≥2× lane-steps/sec at lanes=8 vs lanes=1 on the
@@ -461,7 +464,10 @@ fn learner_mode_sweep(smoke: bool) -> Result<()> {
     fields.extend(counter_fields);
     let record = json::obj(fields);
     std::fs::create_dir_all("out/bench")?;
-    std::fs::write("out/bench/BENCH_learner.json", record.to_string_pretty())?;
+    silicon_rl::util::fsio::atomic_write_str(
+        "out/bench/BENCH_learner.json",
+        &record.to_string_pretty(),
+    )?;
     println!("record: out/bench/BENCH_learner.json");
 
     // acceptance gate: a measurable async step-rate gain at lanes ≥ 8.
@@ -567,7 +573,10 @@ fn atlas_sweep(smoke: bool) -> Result<()> {
         ("reuse_frontier_points", json::num(frontier_points(&reuse))),
     ]);
     std::fs::create_dir_all("out/bench")?;
-    std::fs::write("out/bench/BENCH_atlas.json", record.to_string_pretty())?;
+    silicon_rl::util::fsio::atomic_write_str(
+        "out/bench/BENCH_atlas.json",
+        &record.to_string_pretty(),
+    )?;
     println!("record: out/bench/BENCH_atlas.json");
 
     // acceptance gate: ≥2× wall-clock from the reuse stack with nonzero

@@ -87,16 +87,20 @@ fn finite_or(v: f64, fallback: f64) -> f64 {
 }
 
 /// Write both artifacts for one optimized node into `dir`.
+///
+/// Both writes are atomic (temp + fsync + rename, DESIGN.md §13): a
+/// crash mid-emit leaves either the previous artifact or the new one on
+/// disk, never a torn JSON file.
 pub fn write_node_artifacts(dir: &Path, nm: u32, out: &EvalOutcome) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let tiles = tiles_to_json(&out.decoded.mesh, &out.tiles);
-    std::fs::write(
+    crate::util::fsio::atomic_write_str(
         dir.join(format!("tcc_config_{nm}nm.json")),
-        tiles.to_string_pretty(),
+        &tiles.to_string_pretty(),
     )?;
-    std::fs::write(
+    crate::util::fsio::atomic_write_str(
         dir.join(format!("run_{nm}nm.json")),
-        outcome_to_json(nm, out).to_string_pretty(),
+        &outcome_to_json(nm, out).to_string_pretty(),
     )?;
     Ok(())
 }

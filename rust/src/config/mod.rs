@@ -238,6 +238,18 @@ pub struct RlConfig {
     /// Rollout→learner queue bound, in transitions (`queue_cap=`);
     /// 0 = auto (8 lockstep steps of backlog, i.e. `8 × lanes`).
     pub queue_cap: usize,
+    /// Checkpoint cadence (`checkpoint_every=N`): snapshot the full run
+    /// state to `<out_dir>/ckpt` every N lockstep steps (plus wave and
+    /// atlas-group boundaries). 0 disables checkpointing (DESIGN.md §13).
+    pub checkpoint_every: usize,
+    /// Fault-injection hook (`crash_after=N`): abort the run at the N-th
+    /// crash probe (step/wave/queue boundaries). 0 disables. Test/CI
+    /// only — pins the kill-and-resume contract.
+    pub crash_after: u64,
+    /// Fault-injection hook (`learner_fail_after=N`): the dedicated
+    /// learner thread fails after absorbing N rollout steps, exercising
+    /// the graceful inline-fallback degradation path. 0 disables.
+    pub learner_fail_after: u64,
 }
 
 impl Default for RlConfig {
@@ -269,6 +281,9 @@ impl Default for RlConfig {
             learner: crate::rl::learner::LearnerMode::Inline,
             updates_per_step: 1.0,
             queue_cap: 0,
+            checkpoint_every: 0,
+            crash_after: 0,
+            learner_fail_after: 0,
         }
     }
 }
@@ -367,6 +382,10 @@ pub struct RunConfig {
     pub prune_explicit: bool,
     /// Scenario-atlas sweep options (`silicon-rl atlas`).
     pub atlas: AtlasOptions,
+    /// Resume from a checkpoint directory (`resume=<dir>`): `<dir>/ckpt`
+    /// when present (so `resume=` takes the previous run's `out_dir`),
+    /// else `<dir>` itself. `None` = fresh start.
+    pub resume: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -389,6 +408,7 @@ impl Default for RunConfig {
             parallel_nodes: false,
             prune_explicit: false,
             atlas: AtlasOptions::default(),
+            resume: None,
         }
     }
 }
@@ -464,7 +484,10 @@ impl RunConfig {
     /// atlas_shrink (0 = skip dominated points, N ≥ 1 = episodes/N),
     /// atlas_seq_lens / atlas_batches (comma u32 lists), atlas_phases
     /// (comma prefill|decode list), atlas_workloads (comma registry
-    /// names, empty = all), atlas_seeds (seeds per point).
+    /// names, empty = all), atlas_seeds (seeds per point),
+    /// and the robustness keys: checkpoint_every (snapshot cadence in
+    /// steps, 0 = off), resume (checkpoint dir or previous out_dir),
+    /// crash_after / learner_fail_after (fault-injection hooks, 0 = off).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
         match key {
             "episodes" => {
@@ -614,6 +637,26 @@ impl RunConfig {
                     return Err("atlas_seeds must be >= 1".to_string());
                 }
                 self.atlas.n_seeds = n;
+            }
+            "checkpoint_every" => {
+                self.rl.checkpoint_every = value
+                    .parse()
+                    .map_err(|_| format!("bad checkpoint_every {value}"))?
+            }
+            "resume" => {
+                if value.is_empty() {
+                    return Err("resume needs a checkpoint directory".to_string());
+                }
+                self.resume = Some(value.to_string());
+            }
+            "crash_after" => {
+                self.rl.crash_after =
+                    value.parse().map_err(|_| format!("bad crash_after {value}"))?
+            }
+            "learner_fail_after" => {
+                self.rl.learner_fail_after = value
+                    .parse()
+                    .map_err(|_| format!("bad learner_fail_after {value}"))?
             }
             "kv" => {
                 use crate::kv::KvStrategy::*;
@@ -798,6 +841,27 @@ mod tests {
         c.apply("queue_cap", "128").unwrap();
         assert_eq!(c.rl.queue_cap, 128);
         assert!(c.apply("queue_cap", "-3").is_err());
+    }
+
+    #[test]
+    fn checkpoint_keys_apply_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.rl.checkpoint_every, 0);
+        assert_eq!(c.rl.crash_after, 0);
+        assert_eq!(c.rl.learner_fail_after, 0);
+        assert!(c.resume.is_none());
+        c.apply("checkpoint_every", "16").unwrap();
+        assert_eq!(c.rl.checkpoint_every, 16);
+        c.apply("resume", "out/run1").unwrap();
+        assert_eq!(c.resume.as_deref(), Some("out/run1"));
+        c.apply("crash_after", "30").unwrap();
+        assert_eq!(c.rl.crash_after, 30);
+        c.apply("learner_fail_after", "10").unwrap();
+        assert_eq!(c.rl.learner_fail_after, 10);
+        assert!(c.apply("checkpoint_every", "often").is_err());
+        assert!(c.apply("resume", "").is_err());
+        assert!(c.apply("crash_after", "-1").is_err());
+        assert!(c.apply("learner_fail_after", "soon").is_err());
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! phase=prefill|decode, seq_len=N, batch=N, mode=hp|lp, nodes=3,5,...,
 //! episodes=N, warmup=N, seed=N, granularity=op|group, kv=...,
 //! backend=native|pjrt|auto, kernels=scalar|simd|auto,
+//! checkpoint_every=N, resume=DIR, crash_after=N (fault injection),
 //! out_dir=..., artifacts_dir=...
 //!
 //! (The image vendors no CLI crate; parsing is a ~40-line hand-rolled
@@ -124,6 +125,13 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      updates_per_step=X (async update budget, 0 = uncapped)\n\
                  \u{20}      queue_cap=N (rollout->learner bound in transitions, 0 = auto)\n\
                  \u{20}      prune=true|false (--no-prune = exact argmax fallback)\n\
+                 \u{20}      checkpoint_every=N (crash-safe snapshot every N steps,\n\
+                 \u{20}      0 = off; double-slot atomic generations in <out_dir>/ckpt)\n\
+                 \u{20}      resume=DIR (continue from the newest valid checkpoint in\n\
+                 \u{20}      DIR or DIR/ckpt; bit-identical to the uninterrupted run)\n\
+                 \u{20}      crash_after=N (fault injection: kill the run at the Nth\n\
+                 \u{20}      step-boundary probe) learner_fail_after=N (fault injection:\n\
+                 \u{20}      panic the learner thread; run degrades to inline updates)\n\
                  \u{20}      atlas keys: atlas_workloads=a,b (default: all registered)\n\
                  \u{20}      atlas_phases=decode,prefill atlas_seq_lens=512,2048,8192\n\
                  \u{20}      atlas_batches=1,4 atlas_seeds=N (seeds per grid point)\n\
@@ -171,9 +179,15 @@ fn optimize(args: &[String]) -> Result<()> {
     let mut learner_report = None;
     let results = if cfg.parallel_nodes {
         optimize_nodes_parallel(&cfg)?
-    } else if lanes > 1 || cfg.rl.learner.off_loop() {
+    } else if lanes > 1
+        || cfg.rl.learner.off_loop()
+        || cfg.rl.checkpoint_every > 0
+        || cfg.resume.is_some()
+    {
         // an off-loop learner always goes through the vec-env driver —
-        // it owns the rollout/learner split even at a single lane
+        // it owns the rollout/learner split even at a single lane — and
+        // so do checkpointed or resumed runs (the vec-env driver hosts
+        // the checkpoint sink, DESIGN.md §13)
         let (r, rep) = optimize_nodes_vec(&cfg, lanes)?;
         learner_report = rep;
         r
@@ -469,6 +483,13 @@ fn run_multiseed(args: &[String]) -> Result<()> {
     let threads = cfg.eval_threads();
     let results = match search.as_str() {
         "random" => {
+            if cfg.resume.is_some() || cfg.rl.checkpoint_every > 0 {
+                println!(
+                    "note: checkpoint/resume applies to the SAC paths only; \
+                     search=random re-runs from scratch (it is cheap and \
+                     stateless)"
+                );
+            }
             // seeds fan out across workers; each seed's search runs
             // serially so the machine is not oversubscribed
             let mut rows = Vec::new();
@@ -571,9 +592,10 @@ fn run_atlas(args: &[String]) -> Result<()> {
     t14.write_csv(&out_dir.join("table14_run_stats.csv"))?;
 
     rl::atlas::atlas_table(&res).write_csv(&out_dir.join("atlas.csv"))?;
-    std::fs::write(
+    // atomic: a crash mid-write must never leave a torn atlas.json
+    silicon_rl::util::fsio::atomic_write_str(
         out_dir.join("atlas.json"),
-        rl::atlas::atlas_json(&res, &cfg).to_string_pretty(),
+        &rl::atlas::atlas_json(&res, &cfg).to_string_pretty(),
     )?;
 
     let c = &res.counters;

@@ -99,6 +99,42 @@ impl Store {
         self.data.get(name).map(|v| v.as_slice())
     }
 
+    /// Serialize every entry (BTreeMap order, so the byte stream is
+    /// deterministic) into a checkpoint payload. Floats go through
+    /// `to_bits`, making the round-trip bit-exact — together with
+    /// [`Self::read_from`] this is the Store half of the resume-
+    /// determinism contract (DESIGN.md §13).
+    pub fn write_to(&self, w: &mut crate::util::fsio::ByteWriter) {
+        w.usize(self.data.len());
+        for (name, data) in &self.data {
+            w.str(name);
+            let shape = self.shapes.get(name).cloned().unwrap_or_default();
+            w.usize(shape.len());
+            for &d in &shape {
+                w.usize(d);
+            }
+            w.f32s(data);
+        }
+    }
+
+    /// Decode a store serialized by [`Self::write_to`].
+    pub fn read_from(r: &mut crate::util::fsio::ByteReader) -> std::io::Result<Store> {
+        let n = r.len(1)?;
+        let mut store = Store::default();
+        for _ in 0..n {
+            let name = r.str()?;
+            let rank = r.len(8)?;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(r.usize()?);
+            }
+            let data = r.f32s()?;
+            store.shapes.insert(name.clone(), shape);
+            store.data.insert(name, data);
+        }
+        Ok(store)
+    }
+
     /// Write back an updated array (size must match the existing entry).
     pub fn set(&mut self, name: &str, data: Vec<f32>) -> Result<()> {
         match self.data.get_mut(name) {

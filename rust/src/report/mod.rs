@@ -559,6 +559,14 @@ pub fn run_stats_with_cache(
             "mean lanes-behind-latest (versions)".into(),
             fnum(lr.mean_lanes_behind, 2),
         ]);
+        // graceful degradation (DESIGN.md §13): a learner-thread panic
+        // falls the run back to inline updates; surface it in the table
+        if let Some((at, err)) = &lr.degraded {
+            t.row(vec![
+                "learner DEGRADED to inline at step".into(),
+                format!("{at} ({err})"),
+            ]);
+        }
     }
     t
 }
@@ -699,6 +707,7 @@ mod tests {
             snapshots: 96,
             queue_highwater: 32,
             mean_lanes_behind: 1.5,
+            degraded: None,
         };
         let t = run_stats(&[], "test", &scn, "scalar", Some(&lr));
         let find = |k: &str| {
@@ -715,6 +724,34 @@ mod tests {
         assert_eq!(find("queue high-water (transitions)"), "32");
         assert_eq!(find("mean lanes-behind-latest (versions)"), "1.50");
         assert!(lr.banner().contains("96 sac / 48 wm / 24 sur"));
+        // no degradation: no DEGRADED row, banner stays clean
+        assert!(!t.to_text().contains("DEGRADED"));
+        assert!(!lr.banner().contains("DEGRADED"));
+    }
+
+    #[test]
+    fn run_stats_surfaces_learner_degradation() {
+        let scn = Scenario { phase: crate::ir::Phase::Decode, seq_len: 2048, batch: 1 };
+        let lr = crate::rl::LearnerReport {
+            mode: crate::rl::LearnerMode::Async,
+            steps: 120,
+            sac_updates: 96,
+            wm_updates: 48,
+            sur_updates: 24,
+            snapshots: 96,
+            queue_highwater: 32,
+            mean_lanes_behind: 1.5,
+            degraded: Some((17, "learner thread panicked".into())),
+        };
+        let t = run_stats(&[], "test", &scn, "scalar", Some(&lr));
+        let row = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "learner DEGRADED to inline at step")
+            .expect("missing degraded row");
+        assert!(row[1].contains("17"), "{}", row[1]);
+        assert!(row[1].contains("learner thread panicked"), "{}", row[1]);
+        assert!(lr.banner().contains("DEGRADED"), "{}", lr.banner());
     }
 
     #[test]

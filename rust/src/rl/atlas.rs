@@ -40,20 +40,23 @@
 //!    lanes.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 use crate::config::RunConfig;
 use crate::error::{Error, Result};
 use crate::eval::{CacheOccupancy, EvalStats, Evaluator, SharedEvalCache};
 use crate::ir::registry;
-use crate::ir::spec::Scenario;
+use crate::ir::spec::{Phase, Scenario};
 use crate::nn::backend;
 use crate::ppa::RooflineBound;
+use crate::rl::checkpoint::{self, CheckpointDir, FaultPlan, RunCtx, KIND_ATLAS};
 use crate::rl::multiseed::{self, derive_seed};
 use crate::rl::pareto::{ParetoArchive, ParetoPoint};
 use crate::rl::vecenv::{self, LaneSpec};
 use crate::rl::{NodeResult, SacAgent};
 use crate::util::csv::{fnum, Table};
+use crate::util::fsio::{self, ByteReader, ByteWriter};
 use crate::util::json::{self, Json};
 use crate::util::Rng;
 
@@ -333,8 +336,298 @@ fn energy_insert(front: &mut Vec<ParetoPoint>, p: ParetoPoint) {
     front.push(p);
 }
 
+// ---------------------------------------------------------------------------
+// sweep-level checkpointing (DESIGN.md §13)
+
+/// Fingerprint of everything an atlas checkpoint's validity depends on:
+/// the grid axes (and therefore the canonical enumeration), the seed
+/// derivation inputs and the reuse switches. Envelopes, constants and
+/// point metadata are deliberately *not* stored in the checkpoint — they
+/// are recomputed from the grid on resume, so the fingerprint only needs
+/// to pin the grid itself.
+fn fingerprint_atlas(cfg: &RunConfig) -> u64 {
+    let mut w = ByteWriter::new();
+    w.str("atlas");
+    w.u64(cfg.seed);
+    w.usize(cfg.rl.episodes_per_node);
+    w.usize(cfg.rl.warmup_steps);
+    w.usize(cfg.rl.buffer_capacity);
+    w.str(cfg.rl.learner.name());
+    w.usize(cfg.atlas.n_seeds);
+    w.bool(cfg.atlas.prune);
+    w.bool(cfg.atlas.warm);
+    w.u32(cfg.atlas.shrink);
+    let ws = cfg.atlas_grid_workloads();
+    w.usize(ws.len());
+    for name in &ws {
+        w.str(name);
+    }
+    w.usize(cfg.atlas.phases.len());
+    for &p in &cfg.atlas.phases {
+        w.u8(match p {
+            Phase::Prefill => 0,
+            Phase::Decode => 1,
+        });
+    }
+    w.usize(cfg.atlas.seq_lens.len());
+    for &s in &cfg.atlas.seq_lens {
+        w.u32(s);
+    }
+    w.usize(cfg.atlas.batches.len());
+    for &b in &cfg.atlas.batches {
+        w.u32(b);
+    }
+    w.usize(cfg.nodes_nm.len());
+    for &n in &cfg.nodes_nm {
+        w.u32(n);
+    }
+    fsio::fnv1a64(&w.buf)
+}
+
+fn write_status(w: &mut ByteWriter, st: &PointStatus) {
+    let kind_tag = |k: PruneKind| match k {
+        PruneKind::Fast => 0u8,
+        PruneKind::Amortized => 1,
+    };
+    match st {
+        PointStatus::Solved => w.u8(0),
+        PointStatus::Shrunk { by, kind } => {
+            w.u8(1);
+            w.usize(*by);
+            w.u8(kind_tag(*kind));
+        }
+        PointStatus::Skipped { by, kind } => {
+            w.u8(2);
+            w.usize(*by);
+            w.u8(kind_tag(*kind));
+        }
+    }
+}
+
+fn read_status(rd: &mut ByteReader) -> Result<PointStatus> {
+    let tag = rd.u8()?;
+    if tag == 0 {
+        return Ok(PointStatus::Solved);
+    }
+    let by = rd.usize()?;
+    let kind = match rd.u8()? {
+        0 => PruneKind::Fast,
+        1 => PruneKind::Amortized,
+        k => return Err(Error::msg(format!("unknown prune kind tag {k}"))),
+    };
+    match tag {
+        1 => Ok(PointStatus::Shrunk { by, kind }),
+        2 => Ok(PointStatus::Skipped { by, kind }),
+        k => Err(Error::msg(format!("unknown point status tag {k}"))),
+    }
+}
+
+fn write_frontier(w: &mut ByteWriter, a: &ParetoArchive) {
+    let f = a.frontier();
+    w.usize(f.len());
+    for p in f {
+        checkpoint::write_point(w, p);
+    }
+}
+
+fn read_frontier(rd: &mut ByteReader) -> Result<ParetoArchive> {
+    let n = rd.len(48)?; // 4×f64 + 2×u64 per serialized point
+    let mut pts = Vec::with_capacity(n);
+    for _ in 0..n {
+        pts.push(checkpoint::read_point(rd)?);
+    }
+    Ok(ParetoArchive::from_points(pts))
+}
+
+/// Borrowed view of the sweep state at a group boundary.
+struct SweepView<'a> {
+    cursor: usize,
+    counters: &'a AtlasCounters,
+    eval_stats: &'a EvalStats,
+    points: &'a [Option<AtlasPoint>],
+    solved: &'a [Solved],
+    node_results: &'a [NodeResult],
+    node_gis: &'a [usize],
+    warm_agent: Option<&'a SacAgent>,
+}
+
+/// Atlas checkpoint payload: the curriculum cursor, the sweep counters,
+/// per-point records (status + frontier only — metadata and envelopes are
+/// recomputed from the grid on resume), the dominance evidence, the raw
+/// per-lane results tagged with their grid index (so each best config
+/// re-evaluates under the right point config) and, in warm mode, the
+/// shared agent with its replay buffer.
+fn encode_atlas(v: &SweepView) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.usize(v.cursor);
+    let c = v.counters;
+    for x in [
+        c.points,
+        c.solved,
+        c.skipped,
+        c.shrunk,
+        c.prune_fast,
+        c.prune_amortized,
+        c.episodes_run,
+        c.episodes_budget,
+    ] {
+        w.u64(x);
+    }
+    checkpoint::write_stats(&mut w, v.eval_stats);
+    w.usize(v.points.len());
+    for p in v.points {
+        match p {
+            Some(pt) => {
+                w.bool(true);
+                write_status(&mut w, &pt.status);
+                write_frontier(&mut w, &pt.frontier);
+                w.u64(pt.episodes);
+                w.f64(pt.cache_hit_rate);
+            }
+            None => w.bool(false),
+        }
+    }
+    w.usize(v.solved.len());
+    for s in v.solved {
+        w.usize(s.grid_index);
+        write_frontier(&mut w, &s.frontier);
+    }
+    debug_assert_eq!(v.node_results.len(), v.node_gis.len());
+    w.usize(v.node_results.len());
+    for (nr, &gi) in v.node_results.iter().zip(v.node_gis) {
+        w.usize(gi);
+        checkpoint::write_node_result(&mut w, nr);
+    }
+    match v.warm_agent {
+        Some(a) => {
+            w.bool(true);
+            checkpoint::write_agent(&mut w, a, true);
+        }
+        None => w.bool(false),
+    }
+    w.buf
+}
+
+/// Owned restore image of [`encode_atlas`]'s payload; warm-agent state is
+/// applied to `warm_agent` in place during decode.
+struct SweepResume {
+    cursor: usize,
+    counters: AtlasCounters,
+    eval_stats: EvalStats,
+    points: Vec<Option<AtlasPoint>>,
+    solved: Vec<Solved>,
+    node_results: Vec<NodeResult>,
+    node_gis: Vec<usize>,
+}
+
+fn decode_atlas(
+    payload: &[u8],
+    cfg: &RunConfig,
+    grid: &[GridPoint],
+    warm_agent: &mut Option<SacAgent>,
+) -> Result<SweepResume> {
+    let mut rd = ByteReader::new(payload);
+    let cursor = rd.usize()?;
+    let counters = AtlasCounters {
+        points: rd.u64()?,
+        solved: rd.u64()?,
+        skipped: rd.u64()?,
+        shrunk: rd.u64()?,
+        prune_fast: rd.u64()?,
+        prune_amortized: rd.u64()?,
+        episodes_run: rd.u64()?,
+        episodes_budget: rd.u64()?,
+    };
+    let eval_stats = checkpoint::read_stats(&mut rd)?;
+    let np = rd.len(1)?;
+    if np != grid.len() {
+        return Err(Error::msg(format!(
+            "atlas checkpoint covers {np} grid points, config enumerates {}",
+            grid.len()
+        )));
+    }
+    let mut points: Vec<Option<AtlasPoint>> = Vec::with_capacity(np);
+    for (gi, gp) in grid.iter().enumerate() {
+        if !rd.bool()? {
+            points.push(None);
+            continue;
+        }
+        let status = read_status(&mut rd)?;
+        let frontier = read_frontier(&mut rd)?;
+        let episodes = rd.u64()?;
+        let cache_hit_rate = rd.f64()?;
+        let pc = point_cfg(cfg, gp)?;
+        let ev = Evaluator::new(&pc, gp.nm);
+        points.push(Some(AtlasPoint {
+            grid_index: gi,
+            workload: gp.workload.clone(),
+            nm: gp.nm,
+            scenario: gp.scenario,
+            envelope: ev.roofline_envelope(),
+            status,
+            frontier,
+            episodes,
+            cache_hit_rate,
+        }));
+    }
+    let ns = rd.len(8)?;
+    let mut solved = Vec::with_capacity(ns);
+    for _ in 0..ns {
+        let gi = rd.usize()?;
+        let frontier = read_frontier(&mut rd)?;
+        let gp = grid
+            .get(gi)
+            .ok_or_else(|| Error::msg("atlas checkpoint: solved grid index out of range"))?;
+        let pc = point_cfg(cfg, gp)?;
+        let ev = Evaluator::new(&pc, gp.nm);
+        solved.push(Solved {
+            grid_index: gi,
+            workload: gp.workload.clone(),
+            nm: gp.nm,
+            scenario: gp.scenario,
+            envelope: ev.roofline_envelope(),
+            constants: ev.scenario_constants(),
+            frontier,
+        });
+    }
+    let nr = rd.len(8)?;
+    let mut node_results = Vec::with_capacity(nr);
+    let mut node_gis = Vec::with_capacity(nr);
+    for _ in 0..nr {
+        let gi = rd.usize()?;
+        let gp = grid
+            .get(gi)
+            .ok_or_else(|| Error::msg("atlas checkpoint: result grid index out of range"))?;
+        let pc = point_cfg(cfg, gp)?;
+        node_results.push(checkpoint::read_node_result(&mut rd, &pc)?);
+        node_gis.push(gi);
+    }
+    if rd.bool()? {
+        match warm_agent {
+            Some(agent) => checkpoint::read_agent(&mut rd, cfg.rl, agent)?,
+            None => {
+                return Err(Error::msg(
+                    "atlas checkpoint carries a warm agent but atlas_warm=off",
+                ))
+            }
+        }
+    }
+    if rd.remaining() != 0 {
+        return Err(Error::msg("trailing bytes in atlas checkpoint payload"));
+    }
+    Ok(SweepResume { cursor, counters, eval_stats, points, solved, node_results, node_gis })
+}
+
 /// Run the atlas sweep. See the module doc for the three reuse layers;
 /// `cfg.atlas` carries the grid axes and the prune/warm/shrink switches.
+///
+/// Robustness (DESIGN.md §13): with `checkpoint_every > 0` the sweep
+/// commits one checkpoint generation per completed curriculum group —
+/// the natural quiesce point (no live lanes, learner drained, warm agent
+/// self-contained) — and `resume=<dir>` restores the newest valid
+/// generation, re-running at most one interrupted group. One cumulative
+/// fault-probe counter spans every inner vec-env call, so
+/// `crash_after=<N>` sweeps interruption points across the whole grid.
 pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
     let t0 = Instant::now();
     let grid = enumerate_grid(cfg)?;
@@ -342,6 +635,19 @@ pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
         return Err(Error::msg("atlas grid is empty"));
     }
     let order = curriculum(&grid);
+
+    let fp = fingerprint_atlas(cfg);
+    let mut ckpt_dir = if cfg.rl.checkpoint_every > 0 {
+        Some(CheckpointDir::create(Path::new(&cfg.out_dir).join("ckpt"))?)
+    } else {
+        None
+    };
+    // one fault-probe counter spans every inner vec-env call, so
+    // crash_after sweeps interruption points across the whole grid; the
+    // inner calls never open their own sink or resume — the sweep owns
+    // both at group granularity
+    let mut vec_ctx = RunCtx::passthrough();
+    vec_ctx.fault = FaultPlan::new(cfg.rl.crash_after);
 
     let shared = if cfg.atlas.warm {
         Some(SharedEvalCache::new(cfg.rl.eval_cache))
@@ -370,12 +676,39 @@ pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
     let mut counters = AtlasCounters { points: grid.len() as u64, ..Default::default() };
     let mut eval_stats = EvalStats::default();
     let mut node_results: Vec<NodeResult> = Vec::new();
+    let mut node_gis: Vec<usize> = Vec::new();
+    let mut start = 0usize;
+    if let Some(spec) = &cfg.resume {
+        let dir = checkpoint::resolve_resume_dir(spec);
+        match CheckpointDir::load(&dir, KIND_ATLAS, fp)? {
+            Some((seq, payload)) => {
+                eprintln!(
+                    "note: resuming atlas from checkpoint generation {seq} in {}",
+                    dir.display()
+                );
+                let r = decode_atlas(&payload, cfg, &grid, &mut warm_agent)?;
+                if r.cursor > order.len() {
+                    return Err(Error::msg("atlas checkpoint cursor out of range"));
+                }
+                start = r.cursor;
+                counters = r.counters;
+                eval_stats = r.eval_stats;
+                points = r.points;
+                solved = r.solved;
+                node_results = r.node_results;
+                node_gis = r.node_gis;
+            }
+            None => {
+                eprintln!("note: no usable atlas checkpoint in {}; starting fresh", dir.display());
+            }
+        }
+    }
 
     // walk the curriculum as (workload, scenario) groups: every node of a
     // group that survives pruning becomes n_seeds lanes of one vec-env
     // call, so pruning decisions at the next group always see this
     // group's frontiers
-    let mut i = 0usize;
+    let mut i = start;
     while i < order.len() {
         // group = consecutive curriculum entries sharing (workload, scenario)
         let head = &grid[order[i]];
@@ -500,8 +833,8 @@ pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
 
             let results = match (&mut warm_agent, &shared) {
                 (Some(agent), sh) => {
-                    vecenv::run_jobs_stats_shared(
-                        &run_cfg, &jobs, lanes, agent, threads, sh.as_ref(),
+                    vecenv::run_jobs_ckpt(
+                        &run_cfg, &jobs, lanes, agent, threads, sh.as_ref(), &mut vec_ctx,
                     )?
                     .0
                 }
@@ -512,8 +845,8 @@ pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
                     let be = backend::load(&run_cfg.artifacts_dir, run_cfg.backend)?;
                     let mut rng = Rng::new(derive_seed(cfg.seed, grid[batch[0]].stream_index));
                     let mut agent = SacAgent::new(be, run_cfg.rl, &mut rng)?;
-                    vecenv::run_jobs_stats_shared(
-                        &run_cfg, &jobs, lanes, &mut agent, threads, None,
+                    vecenv::run_jobs_ckpt(
+                        &run_cfg, &jobs, lanes, &mut agent, threads, None, &mut vec_ctx,
                     )?
                     .0
                 }
@@ -574,7 +907,25 @@ pub fn run(cfg: &RunConfig) -> Result<AtlasResult> {
                 for r in &chunk {
                     eval_stats.merge(&r.eval_stats);
                 }
+                node_gis.extend(std::iter::repeat(gi).take(chunk.len()));
                 node_results.extend(chunk);
+            }
+        }
+
+        // group boundary: one checkpoint generation per completed group
+        if let Some(dir) = &mut ckpt_dir {
+            let view = SweepView {
+                cursor: i,
+                counters: &counters,
+                eval_stats: &eval_stats,
+                points: &points,
+                solved: &solved,
+                node_results: &node_results,
+                node_gis: &node_gis,
+                warm_agent: warm_agent.as_ref(),
+            };
+            if let Err(e) = dir.save(KIND_ATLAS, fp, &encode_atlas(&view)) {
+                eprintln!("warning: atlas checkpoint save failed: {e} (run continues)");
             }
         }
     }

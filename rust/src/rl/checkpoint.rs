@@ -1,0 +1,1055 @@
+//! Crash-safe checkpoint/resume for long optimize and atlas runs
+//! (DESIGN.md §13).
+//!
+//! The subsystem periodically snapshots the *complete* search state —
+//! parameter [`Store`], PER buffer contents + priorities, Pareto
+//! frontiers, per-lane RNG stream positions, step/episode counters and
+//! (for the atlas) grid progress — so a run killed at an arbitrary step
+//! boundary resumes and produces episode logs and frontiers bit-identical
+//! to the uninterrupted run.
+//!
+//! Storage is a double-slot generation scheme in `<out_dir>/ckpt`:
+//! `ckpt-a.bin` / `ckpt-b.bin`, alternating by sequence number, each an
+//! atomically-committed sealed record ([`fsio::seal_record`]) whose
+//! payload opens with the sequence number and a run-configuration
+//! fingerprint. The loader picks the highest-sequence parseable slot; a
+//! torn or corrupted newest slot falls back to the previous generation,
+//! and a valid-but-foreign fingerprint is a hard error rather than a
+//! silent wrong-run resume.
+//!
+//! Fault injection rides alongside: `crash_after=<N>` arms a
+//! [`FaultPlan`] whose probes sit at the step boundaries a real crash
+//! would hit — top-of-step, mid-wave after the env fan-out, and after
+//! the replay insert/send (when the async learner queue is non-empty).
+
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::arch::MeshConfig;
+use crate::config::{RlConfig, RunConfig};
+use crate::env::Action;
+use crate::error::Result;
+use crate::eval::{EvalScratch, EvalStats, Evaluator};
+use crate::ir::spec::Phase;
+use crate::nn::Store;
+use crate::rl::agent::SacAgent;
+use crate::rl::explore::EpsSchedule;
+use crate::rl::loop_::{BestConfig, EpisodeLog, EpisodeTracker, NodeResult};
+use crate::rl::pareto::{ParetoArchive, ParetoPoint};
+use crate::rl::per::{PerBuffer, PerState, Transition};
+use crate::rl::vecenv::LaneSpec;
+use crate::util::fsio::{self, ByteReader, ByteWriter};
+use crate::util::rng::RngState;
+
+/// Record kind tag for vec-env (optimize / seeds) checkpoints.
+pub const KIND_VEC: u8 = 1;
+/// Record kind tag for atlas sweep checkpoints.
+pub const KIND_ATLAS: u8 = 2;
+
+/// Error-message prefix of an injected crash; the fault-injection tests
+/// and the CI kill-and-resume smoke match on it to tell a planned kill
+/// from a real failure.
+pub const INJECTED_CRASH_MSG: &str = "injected crash (crash_after)";
+
+// ---------------------------------------------------------------------------
+// fault injection
+
+/// Deterministic kill switch: `crash_after=<N>` trips the N-th probe.
+/// Probes are placed at the boundaries a real crash would hit and the
+/// counter is cumulative across waves and atlas points, so N sweeps the
+/// whole space of interruption points as it grows.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    crash_after: u64,
+    hits: u64,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn new(crash_after: u64) -> FaultPlan {
+        FaultPlan { crash_after, hits: 0 }
+    }
+
+    /// Count one crash site; error out when the plan says to die here.
+    pub fn probe(&mut self) -> Result<()> {
+        if self.crash_after == 0 {
+            return Ok(());
+        }
+        self.hits += 1;
+        if self.hits >= self.crash_after {
+            crate::bail!("{INJECTED_CRASH_MSG} at probe {}", self.hits);
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// double-slot generation store
+
+/// A checkpoint directory holding two alternating generation slots.
+pub struct CheckpointDir {
+    dir: PathBuf,
+    seq: u64,
+}
+
+impl CheckpointDir {
+    fn slot_paths(dir: &Path) -> [PathBuf; 2] {
+        [dir.join("ckpt-a.bin"), dir.join("ckpt-b.bin")]
+    }
+
+    /// Open (creating if needed) a checkpoint directory for writing; the
+    /// next sequence number continues past whatever valid generations are
+    /// already present, so an in-place resume never overwrites the
+    /// generation it was restored from on its first save.
+    pub fn create(dir: impl Into<PathBuf>) -> io::Result<CheckpointDir> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let mut seq = 0;
+        for p in Self::slot_paths(&dir) {
+            if let Ok(Some((s, ..))) = Self::read_slot(&p) {
+                seq = seq.max(s + 1);
+            }
+        }
+        Ok(CheckpointDir { dir, seq })
+    }
+
+    /// Parse one slot: `Ok(None)` when absent, `Err` when torn/corrupt,
+    /// else `(seq, fingerprint, kind, payload)`.
+    fn read_slot(path: &Path) -> io::Result<Option<(u64, u64, u8, Vec<u8>)>> {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e),
+        };
+        let (kind, payload) = fsio::open_record(&bytes)?;
+        let mut rd = ByteReader::new(payload);
+        let seq = rd.u64()?;
+        let fp = rd.u64()?;
+        Ok(Some((seq, fp, kind, payload[16..].to_vec())))
+    }
+
+    /// Commit one generation: seal `(seq, fingerprint, payload)` and
+    /// atomically replace the slot `seq` alternates onto. The previous
+    /// generation lives in the other slot until the *next* save, which is
+    /// what makes a crash mid-commit recoverable.
+    pub fn save(&mut self, kind: u8, fingerprint: u64, payload: &[u8]) -> io::Result<()> {
+        let mut w = ByteWriter::new();
+        w.u64(self.seq);
+        w.u64(fingerprint);
+        w.buf.extend_from_slice(payload);
+        let rec = fsio::seal_record(kind, &w.buf);
+        let slot = Self::slot_paths(&self.dir)[(self.seq % 2) as usize].clone();
+        fsio::atomic_write(&slot, &rec)?;
+        self.seq += 1;
+        Ok(())
+    }
+
+    /// Load the newest valid generation of `kind`. Corrupt or truncated
+    /// slots are skipped with a note (falling back to the previous
+    /// generation); a valid newest slot whose fingerprint does not match
+    /// is a hard error; no parseable slot at all is `Ok(None)` (fresh
+    /// start).
+    pub fn load(dir: &Path, kind: u8, fingerprint: u64) -> Result<Option<(u64, Vec<u8>)>> {
+        let mut newest: Option<(u64, u64, Vec<u8>)> = None;
+        for p in Self::slot_paths(dir) {
+            match Self::read_slot(&p) {
+                Ok(Some((seq, fp, k, payload))) if k == kind => {
+                    if newest.as_ref().map_or(true, |(s, ..)| seq > *s) {
+                        newest = Some((seq, fp, payload));
+                    }
+                }
+                Ok(_) => {}
+                Err(e) => {
+                    eprintln!("note: skipping corrupt checkpoint slot {}: {e}", p.display());
+                }
+            }
+        }
+        match newest {
+            Some((seq, fp, payload)) => {
+                if fp != fingerprint {
+                    crate::bail!(
+                        "checkpoint in {} was written by a different run configuration \
+                         (fingerprint {fp:#018x}, expected {fingerprint:#018x}); \
+                         refusing to resume",
+                        dir.display()
+                    );
+                }
+                Ok(Some((seq, payload)))
+            }
+            None => Ok(None),
+        }
+    }
+}
+
+/// `resume=<dir>` accepts either the run's out dir or its `ckpt` subdir.
+pub fn resolve_resume_dir(spec: &str) -> PathBuf {
+    let p = Path::new(spec);
+    let c = p.join("ckpt");
+    if c.is_dir() {
+        c
+    } else {
+        p.to_path_buf()
+    }
+}
+
+/// Fingerprint of everything a vec-env checkpoint's validity depends on:
+/// seed, episode/warmup/replay shape, scenario, learner mode, lane width
+/// and the exact job list. Two runs agree on the fingerprint iff a
+/// checkpoint of one is a semantically valid resume point for the other.
+pub(crate) fn fingerprint_vec(cfg: &RunConfig, jobs: &[LaneSpec], lanes: usize) -> u64 {
+    let mut w = ByteWriter::new();
+    w.str("vec");
+    w.u64(cfg.seed);
+    w.usize(cfg.rl.episodes_per_node);
+    w.usize(cfg.rl.warmup_steps);
+    w.usize(cfg.rl.buffer_capacity);
+    w.str(cfg.workload.name());
+    let scn = cfg.scenario();
+    w.u8(match scn.phase {
+        Phase::Prefill => 0,
+        Phase::Decode => 1,
+    });
+    w.u32(scn.seq_len);
+    w.u32(scn.batch);
+    w.str(cfg.rl.learner.name());
+    w.usize(lanes);
+    w.usize(jobs.len());
+    for j in jobs {
+        w.u32(j.nm);
+        w.u64(j.seed);
+    }
+    fsio::fnv1a64(&w.buf)
+}
+
+// ---------------------------------------------------------------------------
+// run context threaded through the drivers
+
+/// Periodic-save half of a [`RunCtx`].
+pub(crate) struct CheckpointSink {
+    dir: CheckpointDir,
+    pub every: usize,
+    fingerprint: u64,
+}
+
+/// Everything the robustness layer threads through a driver: the fault
+/// plan (shared across waves and atlas points so probe counts are
+/// cumulative), the optional periodic-save sink, and the decoded-pending
+/// resume payload.
+pub(crate) struct RunCtx {
+    pub fault: FaultPlan,
+    pub sink: Option<CheckpointSink>,
+    pub resume: Option<Vec<u8>>,
+    skip_noted: bool,
+}
+
+impl RunCtx {
+    /// A context that neither checkpoints nor injects faults — the
+    /// default for short runs and for callers that manage their own
+    /// checkpointing (the atlas passes this to its inner vec-env calls).
+    pub fn passthrough() -> RunCtx {
+        RunCtx { fault: FaultPlan::none(), sink: None, resume: None, skip_noted: false }
+    }
+
+    /// Build the context for a vec-env run from the config's robustness
+    /// keys: arm `crash_after`, open the save sink when
+    /// `checkpoint_every > 0`, and load the newest valid generation when
+    /// `resume=` is set (a missing/unusable checkpoint starts fresh with
+    /// a note; a fingerprint mismatch is a hard error).
+    pub fn for_vec(cfg: &RunConfig, jobs: &[LaneSpec], lanes: usize) -> Result<RunCtx> {
+        let fp = fingerprint_vec(cfg, jobs, lanes);
+        let mut ctx = RunCtx::passthrough();
+        ctx.fault = FaultPlan::new(cfg.rl.crash_after);
+        if let Some(spec) = &cfg.resume {
+            let dir = resolve_resume_dir(spec);
+            match CheckpointDir::load(&dir, KIND_VEC, fp)? {
+                Some((seq, payload)) => {
+                    eprintln!(
+                        "note: resuming from checkpoint generation {seq} in {}",
+                        dir.display()
+                    );
+                    ctx.resume = Some(payload);
+                }
+                None => {
+                    eprintln!("note: no usable checkpoint in {}; starting fresh", dir.display());
+                }
+            }
+        }
+        if cfg.rl.checkpoint_every > 0 {
+            let dir = Path::new(&cfg.out_dir).join("ckpt");
+            ctx.sink = Some(CheckpointSink {
+                dir: CheckpointDir::create(dir)?,
+                every: cfg.rl.checkpoint_every,
+                fingerprint: fp,
+            });
+        }
+        Ok(ctx)
+    }
+
+    /// Periodic-save predicate. Skips `t == t0`: the step a resume
+    /// restarts on was already saved by the interrupted run, and saving
+    /// it again would shift the generation parity between the resumed and
+    /// uninterrupted timelines.
+    pub fn should_save(&self, t: usize, t0: usize) -> bool {
+        self.sink.as_ref().is_some_and(|s| t > 0 && t != t0 && t % s.every == 0)
+    }
+
+    /// Commit one generation through the sink. Save failures (disk full,
+    /// permissions) warn and keep running — losing checkpoint coverage is
+    /// strictly better than losing the search.
+    pub fn save(&mut self, kind: u8, payload: &[u8]) {
+        if let Some(s) = &mut self.sink {
+            if let Err(e) = s.dir.save(kind, s.fingerprint, payload) {
+                eprintln!("warning: checkpoint save failed: {e} (run continues)");
+            }
+        }
+    }
+
+    /// One-time note that checkpointing stopped (degraded learner: the
+    /// thread that owned the quiesceable state is gone).
+    pub fn note_skip(&mut self) {
+        if !self.skip_noted {
+            eprintln!(
+                "note: learner state unavailable; checkpointing disabled for the rest of the run"
+            );
+            self.skip_noted = true;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// primitive codecs
+
+fn badfmt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("checkpoint payload: {msg}"))
+}
+
+fn arr<const N: usize>(rd: &mut ByteReader) -> io::Result<[f32; N]> {
+    rd.f32s()?.try_into().map_err(|_| badfmt("fixed array length mismatch"))
+}
+
+pub(crate) fn write_rng(w: &mut ByteWriter, st: &RngState) {
+    for &x in &st.s {
+        w.u64(x);
+    }
+    w.opt_f64(st.gauss_spare);
+}
+
+pub(crate) fn read_rng(rd: &mut ByteReader) -> io::Result<RngState> {
+    let mut s = [0u64; 4];
+    for x in &mut s {
+        *x = rd.u64()?;
+    }
+    Ok(RngState { s, gauss_spare: rd.opt_f64()? })
+}
+
+fn write_mesh(w: &mut ByteWriter, m: &MeshConfig) {
+    w.u32(m.width);
+    w.u32(m.height);
+    w.u32(m.sc_x);
+    w.u32(m.sc_y);
+}
+
+fn read_mesh(rd: &mut ByteReader) -> io::Result<MeshConfig> {
+    Ok(MeshConfig { width: rd.u32()?, height: rd.u32()?, sc_x: rd.u32()?, sc_y: rd.u32()? })
+}
+
+fn write_action(w: &mut ByteWriter, a: &Action) {
+    w.f64s(&a.cont);
+    w.usize(a.deltas.len());
+    for &d in &a.deltas {
+        w.i64(d as i64);
+    }
+}
+
+fn read_action(rd: &mut ByteReader) -> io::Result<Action> {
+    let cont = rd.f64s()?;
+    let mut a = Action::neutral();
+    if cont.len() != a.cont.len() {
+        return Err(badfmt("action cont length"));
+    }
+    a.cont.copy_from_slice(&cont);
+    let n = rd.len(8)?;
+    if n != a.deltas.len() {
+        return Err(badfmt("action deltas length"));
+    }
+    for d in a.deltas.iter_mut() {
+        *d = rd.i64()? as i32;
+    }
+    Ok(a)
+}
+
+fn write_eps(w: &mut ByteWriter, e: &EpsSchedule) {
+    w.f64(e.eps);
+    w.f64(e.eps_min);
+    w.f64(e.d);
+}
+
+fn read_eps(rd: &mut ByteReader) -> io::Result<EpsSchedule> {
+    Ok(EpsSchedule { eps: rd.f64()?, eps_min: rd.f64()?, d: rd.f64()? })
+}
+
+pub(crate) fn write_stats(w: &mut ByteWriter, s: &EvalStats) {
+    for v in [
+        s.outcome_hits,
+        s.outcome_misses,
+        s.outcome_evictions,
+        s.place_hits,
+        s.place_misses,
+        s.place_evictions,
+        s.geom_hits,
+        s.geom_misses,
+        s.geom_shared,
+        s.pruned,
+        s.evaluated,
+    ] {
+        w.u64(v);
+    }
+}
+
+pub(crate) fn read_stats(rd: &mut ByteReader) -> io::Result<EvalStats> {
+    Ok(EvalStats {
+        outcome_hits: rd.u64()?,
+        outcome_misses: rd.u64()?,
+        outcome_evictions: rd.u64()?,
+        place_hits: rd.u64()?,
+        place_misses: rd.u64()?,
+        place_evictions: rd.u64()?,
+        geom_hits: rd.u64()?,
+        geom_misses: rd.u64()?,
+        geom_shared: rd.u64()?,
+        pruned: rd.u64()?,
+        evaluated: rd.u64()?,
+    })
+}
+
+pub(crate) fn write_point(w: &mut ByteWriter, p: &ParetoPoint) {
+    w.f64(p.perf_gops);
+    w.f64(p.power_mw);
+    w.f64(p.area_mm2);
+    w.f64(p.tokens_per_s);
+    w.usize(p.episode);
+    w.usize(p.tag);
+}
+
+pub(crate) fn read_point(rd: &mut ByteReader) -> io::Result<ParetoPoint> {
+    Ok(ParetoPoint {
+        perf_gops: rd.f64()?,
+        power_mw: rd.f64()?,
+        area_mm2: rd.f64()?,
+        tokens_per_s: rd.f64()?,
+        episode: rd.usize()?,
+        tag: rd.usize()?,
+    })
+}
+
+fn write_episode(w: &mut ByteWriter, e: &EpisodeLog) {
+    w.usize(e.episode);
+    w.f64(e.reward);
+    w.f64(e.score);
+    w.f64(e.best_score);
+    w.bool(e.feasible);
+    w.f64(e.tokens_per_s);
+    w.f64(e.power_mw);
+    w.f64(e.perf_gops);
+    w.f64(e.area_mm2);
+    w.u32(e.mesh_w);
+    w.u32(e.mesh_h);
+    w.f64(e.eps);
+    w.f64(e.entropy);
+    w.usize(e.unique_configs);
+}
+
+fn read_episode(rd: &mut ByteReader) -> io::Result<EpisodeLog> {
+    Ok(EpisodeLog {
+        episode: rd.usize()?,
+        reward: rd.f64()?,
+        score: rd.f64()?,
+        best_score: rd.f64()?,
+        feasible: rd.bool()?,
+        tokens_per_s: rd.f64()?,
+        power_mw: rd.f64()?,
+        perf_gops: rd.f64()?,
+        area_mm2: rd.f64()?,
+        mesh_w: rd.u32()?,
+        mesh_h: rd.u32()?,
+        eps: rd.f64()?,
+        entropy: rd.f64()?,
+        unique_configs: rd.usize()?,
+    })
+}
+
+fn write_transition(w: &mut ByteWriter, t: &Transition) {
+    w.f32s(&t.s);
+    w.f32s(&t.a_cont);
+    w.f32s(&t.a_disc);
+    w.f32(t.r);
+    w.f32s(&t.s2);
+    w.f32(t.done);
+    w.f32s(&t.ppa);
+}
+
+fn read_transition(rd: &mut ByteReader) -> io::Result<Transition> {
+    Ok(Transition {
+        s: arr(rd)?,
+        a_cont: arr(rd)?,
+        a_disc: arr(rd)?,
+        r: rd.f32()?,
+        s2: arr(rd)?,
+        done: rd.f32()?,
+        ppa: arr(rd)?,
+    })
+}
+
+pub(crate) fn write_per(w: &mut ByteWriter, st: &PerState) {
+    w.usize(st.data.len());
+    for t in &st.data {
+        write_transition(w, t);
+    }
+    w.usize(st.write);
+    w.f64s(&st.priorities);
+    w.f64(st.max_priority);
+    w.f64(st.beta);
+}
+
+pub(crate) fn read_per(rd: &mut ByteReader) -> io::Result<PerState> {
+    let n = rd.len(16)?;
+    let mut data = Vec::with_capacity(n);
+    for _ in 0..n {
+        data.push(read_transition(rd)?);
+    }
+    Ok(PerState {
+        data,
+        write: rd.usize()?,
+        priorities: rd.f64s()?,
+        max_priority: rd.f64()?,
+        beta: rd.f64()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// composite codecs: tracker, node result, agent, learner state
+
+/// The tracker serializes its best configuration as a *reproduction
+/// recipe* — `(episode, pre-step mesh, action)` — rather than the full
+/// [`EvalOutcome`]. The evaluator is pure, so re-evaluating the recipe on
+/// decode rebuilds the outcome bit-identically at a fraction of the
+/// snapshot size.
+fn write_tracker(w: &mut ByteWriter, tr: &EpisodeTracker) {
+    w.usize(tr.episodes.len());
+    for e in &tr.episodes {
+        write_episode(w, e);
+    }
+    w.usize(tr.pareto.frontier().len());
+    for p in tr.pareto.frontier() {
+        write_point(w, p);
+    }
+    w.f64(tr.best_score);
+    w.usize(tr.feasible_count);
+    let mut seen: Vec<u64> = tr.seen.iter().copied().collect();
+    seen.sort_unstable();
+    w.usize(seen.len());
+    for k in seen {
+        w.u64(k);
+    }
+    debug_assert_eq!(tr.best.is_some(), tr.best_repro.is_some());
+    match (&tr.best, &tr.best_repro) {
+        (Some(b), Some((mesh, action))) => {
+            w.bool(true);
+            w.usize(b.episode);
+            write_mesh(w, mesh);
+            write_action(w, action);
+        }
+        _ => w.bool(false),
+    }
+}
+
+fn read_tracker(rd: &mut ByteReader, cfg: &RunConfig, nm: u32) -> Result<EpisodeTracker> {
+    let ne = rd.len(1)?;
+    let mut episodes = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        episodes.push(read_episode(rd)?);
+    }
+    let np = rd.len(1)?;
+    let mut points = Vec::with_capacity(np);
+    for _ in 0..np {
+        points.push(read_point(rd)?);
+    }
+    let best_score = rd.f64()?;
+    let feasible_count = rd.usize()?;
+    let ns = rd.len(8)?;
+    let mut seen = std::collections::HashSet::with_capacity(ns);
+    for _ in 0..ns {
+        seen.insert(rd.u64()?);
+    }
+    let (best, best_repro) = if rd.bool()? {
+        let episode = rd.usize()?;
+        let mesh = read_mesh(rd)?;
+        let action = read_action(rd)?;
+        let ev = Evaluator::new(cfg, nm);
+        let outcome = ev.evaluate(&mesh, &action, &mut EvalScratch::default());
+        (Some(BestConfig { episode, outcome }), Some((mesh, action)))
+    } else {
+        (None, None)
+    };
+    Ok(EpisodeTracker {
+        pareto: ParetoArchive::from_points(points),
+        episodes,
+        best,
+        best_score,
+        feasible_count,
+        seen,
+        best_repro,
+    })
+}
+
+pub(crate) fn write_node_result(w: &mut ByteWriter, nr: &NodeResult) {
+    w.u32(nr.nm);
+    w.usize(nr.total_episodes);
+    w.usize(nr.feasible_count);
+    write_stats(w, &nr.eval_stats);
+    w.usize(nr.episodes.len());
+    for e in &nr.episodes {
+        write_episode(w, e);
+    }
+    w.usize(nr.pareto.frontier().len());
+    for p in nr.pareto.frontier() {
+        write_point(w, p);
+    }
+    debug_assert_eq!(nr.best.is_some(), nr.best_repro.is_some());
+    match (&nr.best, &nr.best_repro) {
+        (Some(b), Some((mesh, action))) => {
+            w.bool(true);
+            w.usize(b.episode);
+            write_mesh(w, mesh);
+            write_action(w, action);
+        }
+        _ => w.bool(false),
+    }
+}
+
+pub(crate) fn read_node_result(rd: &mut ByteReader, cfg: &RunConfig) -> Result<NodeResult> {
+    let nm = rd.u32()?;
+    let total_episodes = rd.usize()?;
+    let feasible_count = rd.usize()?;
+    let eval_stats = read_stats(rd)?;
+    let ne = rd.len(1)?;
+    let mut episodes = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        episodes.push(read_episode(rd)?);
+    }
+    let np = rd.len(1)?;
+    let mut points = Vec::with_capacity(np);
+    for _ in 0..np {
+        points.push(read_point(rd)?);
+    }
+    let (best, best_repro) = if rd.bool()? {
+        let episode = rd.usize()?;
+        let mesh = read_mesh(rd)?;
+        let action = read_action(rd)?;
+        let ev = Evaluator::new(cfg, nm);
+        let outcome = ev.evaluate(&mesh, &action, &mut EvalScratch::default());
+        (Some(BestConfig { episode, outcome }), Some((mesh, action)))
+    } else {
+        (None, None)
+    };
+    Ok(NodeResult {
+        nm,
+        best,
+        episodes,
+        pareto: ParetoArchive::from_points(points),
+        feasible_count,
+        total_episodes,
+        eval_stats,
+        best_repro,
+    })
+}
+
+/// Rollout-agent snapshot: parameters, entropy trace, update counters and
+/// (inline mode only) the replay buffer. Off-loop modes keep the buffer
+/// inside [`LearnerState`] instead — the rollout copy is a placeholder.
+pub(crate) fn write_agent(w: &mut ByteWriter, agent: &SacAgent, with_buffer: bool) {
+    agent.store.write_to(w);
+    w.f64(agent.last_entropy);
+    w.usize(agent.updates_done);
+    w.bool(agent.wm_trained);
+    w.bool(agent.sur_trained);
+    w.bool(with_buffer);
+    if with_buffer {
+        write_per(w, &agent.buffer.export_state());
+    }
+}
+
+pub(crate) fn read_agent(rd: &mut ByteReader, rl: RlConfig, agent: &mut SacAgent) -> Result<()> {
+    let store = Store::read_from(rd)?;
+    agent.store = std::sync::Arc::new(store);
+    agent.last_entropy = rd.f64()?;
+    agent.updates_done = rd.usize()?;
+    agent.wm_trained = rd.bool()?;
+    agent.sur_trained = rd.bool()?;
+    if rd.bool()? {
+        let st = read_per(rd)?;
+        agent.buffer = PerBuffer::from_state(rl.buffer_capacity, rl.per_alpha, rl.per_beta_step, st);
+    }
+    Ok(())
+}
+
+/// The learner thread's complete quiesced state, captured through the
+/// FIFO transition queue so every step sent before the capture request is
+/// reflected (see `rl::learner`).
+pub struct LearnerState {
+    pub store: Store,
+    pub per: PerState,
+    pub rng: RngState,
+    pub updates_done: usize,
+    pub wm_trained: bool,
+    pub sur_trained: bool,
+    pub steps: u64,
+    pub sac: u64,
+    pub wm: u64,
+    pub sur: u64,
+    pub snapshots: u64,
+    pub version: u64,
+}
+
+fn write_learner_state(w: &mut ByteWriter, st: &LearnerState) {
+    st.store.write_to(w);
+    write_per(w, &st.per);
+    write_rng(w, &st.rng);
+    w.usize(st.updates_done);
+    w.bool(st.wm_trained);
+    w.bool(st.sur_trained);
+    for v in [st.steps, st.sac, st.wm, st.sur, st.snapshots, st.version] {
+        w.u64(v);
+    }
+}
+
+fn read_learner_state(rd: &mut ByteReader) -> io::Result<LearnerState> {
+    Ok(LearnerState {
+        store: Store::read_from(rd)?,
+        per: read_per(rd)?,
+        rng: read_rng(rd)?,
+        updates_done: rd.usize()?,
+        wm_trained: rd.bool()?,
+        sur_trained: rd.bool()?,
+        steps: rd.u64()?,
+        sac: rd.u64()?,
+        wm: rd.u64()?,
+        sur: rd.u64()?,
+        snapshots: rd.u64()?,
+        version: rd.u64()?,
+    })
+}
+
+/// Update-side state of a vec-env checkpoint: the inline update stream
+/// position, or the full quiesced learner-thread state.
+pub(crate) enum SinkCkpt {
+    Inline { rng: RngState },
+    Learner(Box<LearnerState>),
+}
+
+fn write_sink(w: &mut ByteWriter, s: &SinkCkpt) {
+    match s {
+        SinkCkpt::Inline { rng } => {
+            w.u8(0);
+            write_rng(w, rng);
+        }
+        SinkCkpt::Learner(st) => {
+            w.u8(1);
+            write_learner_state(w, st);
+        }
+    }
+}
+
+fn read_sink(rd: &mut ByteReader) -> io::Result<SinkCkpt> {
+    match rd.u8()? {
+        0 => Ok(SinkCkpt::Inline { rng: read_rng(rd)? }),
+        1 => Ok(SinkCkpt::Learner(Box::new(read_learner_state(rd)?))),
+        _ => Err(badfmt("unknown sink tag")),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// vec-env checkpoint payload
+
+/// Borrowed view of one live lane at a checkpoint boundary.
+pub(crate) struct LaneView<'a> {
+    pub nm: u32,
+    pub mesh: MeshConfig,
+    pub s: &'a [f32; crate::env::SAC_STATE_DIM],
+    pub last_entropy: f64,
+    pub eps: &'a EpsSchedule,
+    pub tracker: &'a EpisodeTracker,
+    pub stats: EvalStats,
+    pub rng: RngState,
+}
+
+/// Owned restore image of one lane.
+pub(crate) struct LaneCkpt {
+    pub nm: u32,
+    pub mesh: MeshConfig,
+    pub s: [f32; crate::env::SAC_STATE_DIM],
+    pub last_entropy: f64,
+    pub eps: EpsSchedule,
+    pub tracker: EpisodeTracker,
+    pub stats: EvalStats,
+    pub rng: RngState,
+}
+
+fn write_lane(w: &mut ByteWriter, lv: &LaneView) {
+    w.u32(lv.nm);
+    write_mesh(w, &lv.mesh);
+    w.f32s(lv.s);
+    w.f64(lv.last_entropy);
+    write_eps(w, lv.eps);
+    write_stats(w, &lv.stats);
+    write_rng(w, &lv.rng);
+    write_tracker(w, lv.tracker);
+}
+
+fn read_lane(rd: &mut ByteReader, cfg: &RunConfig) -> Result<LaneCkpt> {
+    let nm = rd.u32()?;
+    let mesh = read_mesh(rd)?;
+    let s = arr(rd)?;
+    let last_entropy = rd.f64()?;
+    let eps = read_eps(rd)?;
+    let stats = read_stats(rd)?;
+    let rng = read_rng(rd)?;
+    let tracker = read_tracker(rd, cfg, nm)?;
+    Ok(LaneCkpt { nm, mesh, s, last_entropy, eps, tracker, stats, rng })
+}
+
+/// Decoded vec-env checkpoint: wave/step cursor, completed-wave results,
+/// mid-wave lane images and the update-side state. The agent restore
+/// (parameters, counters, inline replay buffer) is applied to `agent` by
+/// [`decode_vec`] directly.
+pub(crate) struct VecCkpt {
+    pub wave: usize,
+    pub step: usize,
+    pub done: Vec<NodeResult>,
+    pub lanes: Vec<LaneCkpt>,
+    pub sink: SinkCkpt,
+}
+
+pub(crate) fn encode_vec(
+    wave: usize,
+    step: usize,
+    agent: &SacAgent,
+    with_buffer: bool,
+    sink: &SinkCkpt,
+    done: &[NodeResult],
+    lanes: &[LaneView],
+) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    write_sink(&mut w, sink);
+    write_agent(&mut w, agent, with_buffer);
+    w.usize(wave);
+    w.usize(step);
+    w.usize(done.len());
+    for nr in done {
+        write_node_result(&mut w, nr);
+    }
+    w.usize(lanes.len());
+    for lv in lanes {
+        write_lane(&mut w, lv);
+    }
+    w.buf
+}
+
+pub(crate) fn decode_vec(payload: &[u8], cfg: &RunConfig, agent: &mut SacAgent) -> Result<VecCkpt> {
+    let mut rd = ByteReader::new(payload);
+    let sink = read_sink(&mut rd)?;
+    read_agent(&mut rd, cfg.rl, agent)?;
+    let wave = rd.usize()?;
+    let step = rd.usize()?;
+    let nd = rd.len(1)?;
+    let mut done = Vec::with_capacity(nd);
+    for _ in 0..nd {
+        done.push(read_node_result(&mut rd, cfg)?);
+    }
+    let nl = rd.len(1)?;
+    let mut lanes = Vec::with_capacity(nl);
+    for _ in 0..nl {
+        lanes.push(read_lane(&mut rd, cfg)?);
+    }
+    if rd.remaining() != 0 {
+        crate::bail!("trailing bytes in vec checkpoint payload");
+    }
+    Ok(VecCkpt { wave, step, done, lanes, sink })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("silckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn generations_alternate_and_newest_wins() {
+        let dir = tmp_dir("gen");
+        let mut cd = CheckpointDir::create(&dir).unwrap();
+        cd.save(KIND_VEC, 99, b"gen-0").unwrap();
+        cd.save(KIND_VEC, 99, b"gen-1").unwrap();
+        cd.save(KIND_VEC, 99, b"gen-2").unwrap();
+        // two slot files only, newest generation loads
+        let entries = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(entries, 2);
+        let (seq, payload) = CheckpointDir::load(&dir, KIND_VEC, 99).unwrap().unwrap();
+        assert_eq!(seq, 2);
+        assert_eq!(payload, b"gen-2");
+        // a fresh writer continues the sequence past existing generations
+        let mut cd2 = CheckpointDir::create(&dir).unwrap();
+        cd2.save(KIND_VEC, 99, b"gen-3").unwrap();
+        let (seq, payload) = CheckpointDir::load(&dir, KIND_VEC, 99).unwrap().unwrap();
+        assert_eq!(seq, 3);
+        assert_eq!(payload, b"gen-3");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_to_previous_generation() {
+        let dir = tmp_dir("corrupt");
+        let mut cd = CheckpointDir::create(&dir).unwrap();
+        cd.save(KIND_VEC, 7, b"old").unwrap(); // slot a, seq 0
+        cd.save(KIND_VEC, 7, b"new").unwrap(); // slot b, seq 1
+        let slot_b = dir.join("ckpt-b.bin");
+
+        // truncated newest → previous generation loads
+        let full = std::fs::read(&slot_b).unwrap();
+        std::fs::write(&slot_b, &full[..full.len() / 2]).unwrap();
+        let (seq, payload) = CheckpointDir::load(&dir, KIND_VEC, 7).unwrap().unwrap();
+        assert_eq!((seq, payload.as_slice()), (0, &b"old"[..]));
+
+        // bit-flipped newest → previous generation loads
+        let mut flipped = full.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&slot_b, &flipped).unwrap();
+        let (seq, _) = CheckpointDir::load(&dir, KIND_VEC, 7).unwrap().unwrap();
+        assert_eq!(seq, 0);
+
+        // both corrupt → fresh start, not an error
+        let a = dir.join("ckpt-a.bin");
+        let abytes = std::fs::read(&a).unwrap();
+        std::fs::write(&a, &abytes[..10]).unwrap();
+        assert!(CheckpointDir::load(&dir, KIND_VEC, 7).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_hard_error() {
+        let dir = tmp_dir("fp");
+        let mut cd = CheckpointDir::create(&dir).unwrap();
+        cd.save(KIND_VEC, 1234, b"payload").unwrap();
+        let err = CheckpointDir::load(&dir, KIND_VEC, 5678).unwrap_err();
+        assert!(err.to_string().contains("different run configuration"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn kind_tag_separates_vec_and_atlas_records() {
+        let dir = tmp_dir("kind");
+        let mut cd = CheckpointDir::create(&dir).unwrap();
+        cd.save(KIND_ATLAS, 3, b"atlas").unwrap();
+        assert!(CheckpointDir::load(&dir, KIND_VEC, 3).unwrap().is_none());
+        let (_, p) = CheckpointDir::load(&dir, KIND_ATLAS, 3).unwrap().unwrap();
+        assert_eq!(p, b"atlas");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fault_plan_trips_at_exactly_n() {
+        let mut f = FaultPlan::new(3);
+        assert!(f.probe().is_ok());
+        assert!(f.probe().is_ok());
+        let err = f.probe().unwrap_err();
+        assert!(err.to_string().contains(INJECTED_CRASH_MSG), "{err}");
+        // disarmed plan never trips
+        let mut none = FaultPlan::none();
+        for _ in 0..1000 {
+            assert!(none.probe().is_ok());
+        }
+    }
+
+    #[test]
+    fn primitive_codecs_round_trip() {
+        let mut w = ByteWriter::new();
+        let rng_st = RngState { s: [1, 2, u64::MAX, 4], gauss_spare: Some(-0.5) };
+        write_rng(&mut w, &rng_st);
+        let mesh = MeshConfig { width: 6, height: 7, sc_x: 3, sc_y: 2 };
+        write_mesh(&mut w, &mesh);
+        let mut a = Action::neutral();
+        a.cont[0] = -1.25;
+        a.deltas[1] = -2;
+        write_action(&mut w, &a);
+        let eps = EpsSchedule { eps: 0.31, eps_min: 0.05, d: 0.998 };
+        write_eps(&mut w, &eps);
+        let stats = EvalStats { pruned: 11, geom_shared: 5, ..Default::default() };
+        write_stats(&mut w, &stats);
+
+        let mut rd = ByteReader::new(&w.buf);
+        assert_eq!(read_rng(&mut rd).unwrap(), rng_st);
+        let m2 = read_mesh(&mut rd).unwrap();
+        assert_eq!((m2.width, m2.height, m2.sc_x, m2.sc_y), (6, 7, 3, 2));
+        let a2 = read_action(&mut rd).unwrap();
+        assert_eq!(a2.cont, a.cont);
+        assert_eq!(a2.deltas, a.deltas);
+        let e2 = read_eps(&mut rd).unwrap();
+        assert_eq!((e2.eps, e2.eps_min, e2.d), (0.31, 0.05, 0.998));
+        let s2 = read_stats(&mut rd).unwrap();
+        assert_eq!((s2.pruned, s2.geom_shared), (11, 5));
+        assert_eq!(rd.remaining(), 0);
+    }
+
+    #[test]
+    fn per_state_codec_round_trips() {
+        let mut b = PerBuffer::new(8, 0.6, 0.4, 0.001);
+        for i in 0..5 {
+            let mut t = Transition {
+                s: [0.0; crate::env::SAC_STATE_DIM],
+                a_cont: [0.0; crate::env::ACT_DIM],
+                a_disc: [0.0; 20],
+                r: i as f32,
+                s2: [0.0; crate::env::SAC_STATE_DIM],
+                done: 0.0,
+                ppa: [0.1, 0.2, 0.3],
+            };
+            t.s[0] = i as f32 * 0.5;
+            b.push(t);
+        }
+        b.update_priorities(&[1, 3], &[2.5, 0.125]);
+        let st = b.export_state();
+        let mut w = ByteWriter::new();
+        write_per(&mut w, &st);
+        let mut rd = ByteReader::new(&w.buf);
+        let st2 = read_per(&mut rd).unwrap();
+        assert_eq!(st2.data.len(), 5);
+        assert_eq!(st2.write, st.write);
+        assert_eq!(st2.priorities, st.priorities);
+        assert_eq!(st2.max_priority, st.max_priority);
+        assert_eq!(st2.beta, st.beta);
+        assert_eq!(st2.data[3].r, 3.0);
+        let b2 = PerBuffer::from_state(8, 0.6, 0.001, st2);
+        assert_eq!(b2.len(), 5);
+        assert_eq!(b2.priority_total(), b.priority_total());
+    }
+
+    #[test]
+    fn resume_dir_resolution_prefers_ckpt_subdir() {
+        let dir = tmp_dir("resolve");
+        std::fs::create_dir_all(dir.join("ckpt")).unwrap();
+        let spec = dir.to_str().unwrap();
+        assert_eq!(resolve_resume_dir(spec), dir.join("ckpt"));
+        assert_eq!(
+            resolve_resume_dir(dir.join("ckpt").to_str().unwrap()),
+            dir.join("ckpt")
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

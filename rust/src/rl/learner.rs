@@ -43,14 +43,22 @@ use crate::nn::backend::Backend;
 use crate::nn::native::NativeBackend;
 use crate::nn::Store;
 use crate::rl::agent::SacAgent;
+use crate::rl::checkpoint::LearnerState;
 use crate::rl::loop_::update_tick;
 use crate::rl::per::{PerBuffer, Transition};
+use crate::util::rng::RngState;
 use crate::util::Rng;
 
 /// Tag of the dedicated update RNG stream (`Rng::new(seed).fork(TAG)`),
 /// shared with the inline driver in [`crate::rl::vecenv::run_jobs_stats`]
 /// so pinned mode replays the identical noise sequence.
 pub(crate) const UPDATE_STREAM_TAG: u64 = 0x0ECE;
+
+/// Tag of the update stream a degraded run falls back onto after a
+/// learner-thread failure: the original stream position died with the
+/// thread, so the inline tail forks a fresh, deterministic stream that
+/// overlaps neither the rollout nor the learner streams.
+pub(crate) const DEGRADE_STREAM_TAG: u64 = 0x0DE6;
 
 /// Where updates run (`learner=` config key).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -100,9 +108,29 @@ struct StepMsg {
     rows: Vec<Transition>,
 }
 
+/// Unit of queue transfer: a step batch, or a checkpoint quiesce marker.
+enum QueueMsg {
+    /// One lockstep step's transitions.
+    Step(StepMsg),
+    /// Checkpoint quiesce request. The queue is FIFO, so when the
+    /// learner pops this marker every step sent before it has been
+    /// absorbed — it captures its complete state into the [`StateSlot`].
+    /// Not acked and not counted as a step.
+    StateReq,
+}
+
+impl QueueMsg {
+    fn rows_len(&self) -> usize {
+        match self {
+            QueueMsg::Step(m) => m.rows.len(),
+            QueueMsg::StateReq => 0,
+        }
+    }
+}
+
 /// Result of a queue pop.
 enum Popped {
-    Msg(StepMsg),
+    Msg(QueueMsg),
     /// Nothing queued right now (only `try_pop` returns this).
     Empty,
     /// Closed *and* fully drained — the learner's termination signal.
@@ -110,7 +138,7 @@ enum Popped {
 }
 
 struct QueueState {
-    q: VecDeque<StepMsg>,
+    q: VecDeque<QueueMsg>,
     /// Queued transitions (the bound is in transitions, not messages).
     len: usize,
     highwater: usize,
@@ -148,23 +176,23 @@ impl TransitionQueue {
     /// admitted once the queue is empty, so an oversized lane count can
     /// stall but never deadlock. Pushing after `close` is a no-op (the
     /// run is being torn down).
-    fn push(&self, msg: StepMsg) {
+    fn push(&self, msg: QueueMsg) {
         let mut st = self.state.lock().unwrap();
-        while !st.closed && st.len > 0 && st.len + msg.rows.len() > self.cap {
+        while !st.closed && st.len > 0 && st.len + msg.rows_len() > self.cap {
             st = self.not_full.wait(st).unwrap();
         }
         if st.closed {
             return;
         }
-        st.len += msg.rows.len();
+        st.len += msg.rows_len();
         st.highwater = st.highwater.max(st.len);
         st.q.push_back(msg);
         self.not_empty.notify_one();
     }
 
-    fn pop_locked(&self, st: &mut QueueState) -> Option<StepMsg> {
+    fn pop_locked(&self, st: &mut QueueState) -> Option<QueueMsg> {
         let msg = st.q.pop_front()?;
-        st.len -= msg.rows.len();
+        st.len -= msg.rows_len();
         self.not_full.notify_one();
         Some(msg)
     }
@@ -299,6 +327,60 @@ impl Control {
     }
 }
 
+/// Rendezvous for checkpoint state capture: the learner publishes its
+/// quiesced [`LearnerState`] here in response to a
+/// [`QueueMsg::StateReq`]; the rollout side waits with a timeout loop so
+/// a learner death mid-capture degrades instead of deadlocking.
+struct StateSlot {
+    m: Mutex<Option<Box<LearnerState>>>,
+    cv: Condvar,
+}
+
+impl StateSlot {
+    fn new() -> StateSlot {
+        StateSlot { m: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    fn publish(&self, st: Box<LearnerState>) {
+        *self.m.lock().unwrap() = Some(st);
+        self.cv.notify_all();
+    }
+
+    fn take_wait(&self, ctrl: &Control) -> Option<Box<LearnerState>> {
+        let mut g = self.m.lock().unwrap();
+        loop {
+            if let Some(st) = g.take() {
+                return Some(st);
+            }
+            if ctrl.failed() {
+                return None;
+            }
+            let (ng, _) =
+                self.cv.wait_timeout(g, std::time::Duration::from_millis(50)).unwrap();
+            g = ng;
+        }
+    }
+}
+
+/// Snapshot the learner's complete state for a checkpoint: parameters,
+/// replay buffer, update-stream position and counters.
+fn capture_state(agent: &SacAgent, urng: &Rng, c: &Counters) -> Box<LearnerState> {
+    Box::new(LearnerState {
+        store: (*agent.store).clone(),
+        per: agent.buffer.export_state(),
+        rng: urng.state(),
+        updates_done: agent.updates_done,
+        wm_trained: agent.wm_trained,
+        sur_trained: agent.sur_trained,
+        steps: c.steps,
+        sac: c.sac,
+        wm: c.wm,
+        sur: c.sur,
+        snapshots: c.snapshots,
+        version: c.version,
+    })
+}
+
 /// Learner-side counters folded into the [`LearnerReport`].
 #[derive(Debug, Clone, Copy, Default)]
 struct Counters {
@@ -338,12 +420,17 @@ pub struct LearnerReport {
     /// (0 = lanes always saw the newest snapshot; pinned mode hovers
     /// near its one-step publish cadence).
     pub mean_lanes_behind: f64,
+    /// `Some((sent_steps_at_failure, error))` when the learner thread
+    /// died mid-run and the client fell back to inline updates for the
+    /// remainder (graceful degradation). Surfaced in the run banner and
+    /// Table 14.
+    pub degraded: Option<(u64, String)>,
 }
 
 impl LearnerReport {
     /// One-line summary for run banners.
     pub fn banner(&self) -> String {
-        format!(
+        let mut s = format!(
             "learner: {} — {} sac / {} wm / {} sur updates over {} steps, \
              {} snapshots, queue high-water {} transitions, \
              mean lanes-behind {:.2} versions",
@@ -355,8 +442,28 @@ impl LearnerReport {
             self.snapshots,
             self.queue_highwater,
             self.mean_lanes_behind
-        )
+        );
+        if let Some((at, err)) = &self.degraded {
+            s.push_str(&format!(" — DEGRADED to inline after step {at}: {err}"));
+        }
+        s
     }
+}
+
+/// Inline-fallback state after a learner-thread failure: the client
+/// absorbs every subsequent step on the rollout thread, drawing update
+/// noise from a fresh deterministic stream (the learner's stream
+/// position died with the thread).
+struct DegradedTail {
+    update_rng: Rng,
+    error: String,
+    /// Steps that had been sent to the learner when it failed.
+    at_step: u64,
+    /// Steps absorbed inline since the failure.
+    steps: u64,
+    sac: u64,
+    wm: u64,
+    sur: u64,
 }
 
 /// Rollout-side handle onto the learner thread, owned by
@@ -365,8 +472,11 @@ impl LearnerReport {
 /// driver's update RNG).
 pub struct LearnerClient {
     mode: LearnerMode,
+    rl: RlConfig,
+    seed: u64,
     queue: Arc<TransitionQueue>,
     slot: Arc<SnapshotSlot>,
+    state: Arc<StateSlot>,
     ctrl: Arc<Control>,
     handle: Option<JoinHandle<Result<LearnerOut>>>,
     /// Steps sent so far — pinned mode's ack target.
@@ -375,6 +485,7 @@ pub struct LearnerClient {
     have: u64,
     staleness_sum: f64,
     staleness_n: u64,
+    degraded: Option<DegradedTail>,
 }
 
 impl LearnerClient {
@@ -387,7 +498,17 @@ impl LearnerClient {
     /// the rollout backend's manifest — same shapes and hyperparameters,
     /// so stores stay interchangeable. Update randomness is
     /// `Rng::new(cfg.seed).fork(0x0ECE)`, the inline driver's stream.
-    pub fn spawn(cfg: &RunConfig, agent: &mut SacAgent, lanes: usize) -> Result<LearnerClient> {
+    ///
+    /// `resume` transplants a checkpointed [`LearnerState`] into the
+    /// learner before it starts: parameters, replay buffer, update-stream
+    /// position and counters all continue from the snapshot, so a pinned
+    /// resume replays the uninterrupted run's update schedule exactly.
+    pub fn spawn(
+        cfg: &RunConfig,
+        agent: &mut SacAgent,
+        lanes: usize,
+        resume: Option<Box<LearnerState>>,
+    ) -> Result<LearnerClient> {
         let mode = cfg.rl.learner;
         debug_assert!(mode.off_loop(), "LearnerClient::spawn with learner=inline");
         let rl = cfg.rl;
@@ -406,35 +527,78 @@ impl LearnerClient {
         lagent.updates_done = agent.updates_done;
         lagent.wm_trained = agent.wm_trained;
         lagent.sur_trained = agent.sur_trained;
+        let mut init: Option<(RngState, Counters)> = None;
+        if let Some(st) = resume {
+            let st = *st;
+            lagent.store = Arc::new(st.store);
+            lagent.buffer =
+                PerBuffer::from_state(rl.buffer_capacity, rl.per_alpha, rl.per_beta_step, st.per);
+            lagent.updates_done = st.updates_done;
+            lagent.wm_trained = st.wm_trained;
+            lagent.sur_trained = st.sur_trained;
+            init = Some((
+                st.rng,
+                Counters {
+                    steps: st.steps,
+                    sac: st.sac,
+                    wm: st.wm,
+                    sur: st.sur,
+                    snapshots: st.snapshots,
+                    version: st.version,
+                },
+            ));
+        }
 
         // queue bound: explicit `queue_cap=` in transitions, auto = 8
         // lockstep steps of backlog
         let cap = if rl.queue_cap == 0 { 8 * lanes.max(1) } else { rl.queue_cap };
         let queue = Arc::new(TransitionQueue::new(cap));
         let slot = Arc::new(SnapshotSlot::new(Snapshot {
-            store: agent.store.clone(),
+            store: lagent.store.clone(),
             version: 0,
-            wm_trained: agent.wm_trained,
-            sur_trained: agent.sur_trained,
+            wm_trained: lagent.wm_trained,
+            sur_trained: lagent.sur_trained,
         }));
+        let state = Arc::new(StateSlot::new());
         let ctrl = Arc::new(Control::new());
 
-        let (q, s, c) = (queue.clone(), slot.clone(), ctrl.clone());
+        let sh = LearnerShared {
+            queue: queue.clone(),
+            slot: slot.clone(),
+            state: state.clone(),
+            ctrl: ctrl.clone(),
+        };
         let handle = std::thread::Builder::new()
             .name("learner".into())
-            .spawn(move || learner_main(lagent, rl, seed, mode, q, s, c))
+            .spawn(move || {
+                // A panic in the update math must degrade, not abort the
+                // whole search: catch it, flag the control block (so
+                // pinned waiters unblock) and surface it as an error.
+                let flag = sh.ctrl.clone();
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                    learner_main(lagent, rl, seed, mode, init, sh)
+                }));
+                res.unwrap_or_else(|_| {
+                    flag.fail();
+                    Err(crate::error::Error::msg("learner thread panicked"))
+                })
+            })
             .context("spawning learner thread")?;
 
         Ok(LearnerClient {
             mode,
+            rl,
+            seed,
             queue,
             slot,
+            state,
             ctrl,
             handle: Some(handle),
             sent: 0,
             have: 0,
             staleness_sum: 0.0,
             staleness_n: 0,
+            degraded: None,
         })
     }
 
@@ -442,12 +606,16 @@ impl LearnerClient {
     /// pinned mode first waits until every step sent so far has been
     /// processed (so step `t+1` acts on the store state the inline run
     /// would have), then both modes adopt the newest published snapshot.
+    /// A learner-side failure degrades to inline instead of erroring.
     pub fn sync(&mut self, agent: &mut SacAgent) -> Result<()> {
-        if self.mode == LearnerMode::Pinned && !self.ctrl.wait_acked(self.sent) {
-            return self.learner_error();
+        if self.degraded.is_some() {
+            return Ok(());
         }
-        if self.ctrl.failed() {
-            return self.learner_error();
+        let failed = (self.mode == LearnerMode::Pinned && !self.ctrl.wait_acked(self.sent))
+            || self.ctrl.failed();
+        if failed {
+            self.degrade(agent);
+            return Ok(());
         }
         let latest = self.slot.version();
         self.staleness_sum += latest.saturating_sub(self.have) as f64;
@@ -462,14 +630,47 @@ impl LearnerClient {
     }
 
     /// Send one lockstep step's lane-major transitions (blocking on queue
-    /// backpressure).
-    pub fn send_step(&mut self, t: usize, rows: Vec<Transition>) -> Result<()> {
-        if self.ctrl.failed() {
-            return self.learner_error();
+    /// backpressure). After a learner failure the step is absorbed inline
+    /// on the rollout thread instead: push into the rebuilt replay buffer
+    /// and run the shared [`update_tick`] schedule.
+    pub fn send_step(&mut self, agent: &mut SacAgent, t: usize, rows: Vec<Transition>) -> Result<()> {
+        if self.degraded.is_none() && self.ctrl.failed() {
+            self.degrade(agent);
         }
-        self.queue.push(StepMsg { t, rows });
+        if self.degraded.is_some() {
+            let rl = self.rl;
+            let tail = self.degraded.as_mut().expect("just checked");
+            agent.buffer.push_batch(rows);
+            let tick = update_tick(agent, rl, t, &mut tail.update_rng)?;
+            tail.steps += 1;
+            if tick.ran {
+                tail.sac += 1;
+                tail.wm += u64::from(tick.wm);
+                tail.sur += u64::from(tick.sur);
+            }
+            return Ok(());
+        }
+        self.queue.push(QueueMsg::Step(StepMsg { t, rows }));
         self.sent += 1;
         Ok(())
+    }
+
+    /// True once the client has fallen back to inline updates.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.is_some()
+    }
+
+    /// Quiesce the learner and capture its complete state for a
+    /// checkpoint: enqueue a [`QueueMsg::StateReq`] (FIFO ⇒ the captured
+    /// state reflects every step sent so far) and wait for the slot.
+    /// `None` when the learner has failed or the client is degraded —
+    /// the caller skips that checkpoint.
+    pub(crate) fn request_state(&mut self) -> Option<Box<LearnerState>> {
+        if self.degraded.is_some() || self.ctrl.failed() {
+            return None;
+        }
+        self.queue.push(QueueMsg::StateReq);
+        self.state.take_wait(&self.ctrl)
     }
 
     /// Drain the learner and fold its final state back into `agent`
@@ -477,6 +678,24 @@ impl LearnerClient {
     /// whatever runs next on this agent continues exactly as if the
     /// updates had been inline. Returns the run's [`LearnerReport`].
     pub fn finish(mut self, agent: &mut SacAgent) -> Result<LearnerReport> {
+        let behind = if self.staleness_n > 0 {
+            self.staleness_sum / self.staleness_n as f64
+        } else {
+            0.0
+        };
+        if let Some(tail) = self.degraded.take() {
+            return Ok(LearnerReport {
+                mode: self.mode,
+                steps: tail.at_step + tail.steps,
+                sac_updates: tail.sac,
+                wm_updates: tail.wm,
+                sur_updates: tail.sur,
+                snapshots: 0,
+                queue_highwater: self.queue.highwater(),
+                mean_lanes_behind: behind,
+                degraded: Some((tail.at_step, tail.error)),
+            });
+        }
         self.queue.close();
         let handle = self.handle.take().expect("finish consumes the handle");
         let out = match handle.join() {
@@ -497,23 +716,54 @@ impl LearnerClient {
             sur_updates: c.sur,
             snapshots: c.snapshots,
             queue_highwater: self.queue.highwater(),
-            mean_lanes_behind: if self.staleness_n > 0 {
-                self.staleness_sum / self.staleness_n as f64
-            } else {
-                0.0
-            },
+            mean_lanes_behind: behind,
+            degraded: None,
         })
     }
 
-    /// Tear down after a learner-side failure and surface its error.
-    fn learner_error(&mut self) -> Result<()> {
+    /// Graceful degradation after a learner-thread failure: join the
+    /// thread to capture its error, rebuild a config-shaped replay
+    /// buffer on the rollout agent (the learner-held contents died with
+    /// the thread), drain whatever steps were still queued into it (FIFO
+    /// — no sent step is silently lost), and switch to inline updates
+    /// for the remainder of the run.
+    fn degrade(&mut self, agent: &mut SacAgent) {
         self.queue.close();
+        let mut err = "learner thread failed".to_string();
         if let Some(h) = self.handle.take() {
-            if let Ok(Err(e)) = h.join() {
-                return Err(e);
+            match h.join() {
+                Ok(Err(e)) => err = e.to_string(),
+                Ok(Ok(_)) => {}
+                Err(_) => err = "learner thread panicked".to_string(),
             }
         }
-        bail!("learner thread failed")
+        agent.buffer = PerBuffer::new(
+            self.rl.buffer_capacity,
+            self.rl.per_alpha,
+            self.rl.per_beta0,
+            self.rl.per_beta_step,
+        );
+        loop {
+            match self.queue.try_pop() {
+                Popped::Msg(QueueMsg::Step(m)) => agent.buffer.push_batch(m.rows),
+                Popped::Msg(QueueMsg::StateReq) => {}
+                Popped::Empty | Popped::Closed => break,
+            }
+        }
+        let at_step = self.sent;
+        eprintln!(
+            "warning: learner thread failed after {at_step} sent steps ({err}); \
+             falling back to learner=inline for the remainder of the run"
+        );
+        self.degraded = Some(DegradedTail {
+            update_rng: Rng::new(self.seed).fork(DEGRADE_STREAM_TAG),
+            error: err,
+            at_step,
+            steps: 0,
+            sac: 0,
+            wm: 0,
+            sur: 0,
+        });
     }
 }
 
@@ -529,28 +779,38 @@ impl Drop for LearnerClient {
     }
 }
 
+/// The shared-state bundle handed to the learner thread.
+struct LearnerShared {
+    queue: Arc<TransitionQueue>,
+    slot: Arc<SnapshotSlot>,
+    state: Arc<StateSlot>,
+    ctrl: Arc<Control>,
+}
+
 /// Learner thread body: run the mode's loop, flag the control block on
-/// error (so pinned waiters unblock), and hand the agent back.
+/// error (so pinned waiters unblock), and hand the agent back. `init`
+/// resumes the update-stream position and counters from a checkpoint.
 fn learner_main(
     mut agent: SacAgent,
     rl: RlConfig,
     seed: u64,
     mode: LearnerMode,
-    queue: Arc<TransitionQueue>,
-    slot: Arc<SnapshotSlot>,
-    ctrl: Arc<Control>,
+    init: Option<(RngState, Counters)>,
+    sh: LearnerShared,
 ) -> Result<LearnerOut> {
-    let mut c = Counters::default();
-    let mut urng = Rng::new(seed).fork(UPDATE_STREAM_TAG);
+    let (mut urng, mut c) = match init {
+        Some((rng_st, counters)) => (Rng::from_state(rng_st), counters),
+        None => (Rng::new(seed).fork(UPDATE_STREAM_TAG), Counters::default()),
+    };
     let res = match mode {
-        LearnerMode::Pinned => pinned_loop(&mut agent, rl, &queue, &slot, &ctrl, &mut urng, &mut c),
-        LearnerMode::Async => async_loop(&mut agent, rl, &queue, &slot, &mut urng, &mut c),
+        LearnerMode::Pinned => pinned_loop(&mut agent, rl, &sh, &mut urng, &mut c),
+        LearnerMode::Async => async_loop(&mut agent, rl, &sh, &mut urng, &mut c),
         LearnerMode::Inline => Ok(()), // unreachable by construction
     };
     match res {
         Ok(()) => Ok(LearnerOut { agent, c }),
         Err(e) => {
-            ctrl.fail();
+            sh.ctrl.fail();
             Err(e)
         }
     }
@@ -570,22 +830,30 @@ fn publish(agent: &SacAgent, slot: &SnapshotSlot, c: &mut Counters) {
 
 /// Pinned mode: one [`update_tick`] per received step, acked so the
 /// rollout's lockstep can wait — the inline schedule, verbatim, on
-/// another thread.
+/// another thread. [`QueueMsg::StateReq`] markers publish a quiesced
+/// state capture without counting or acking.
 fn pinned_loop(
     agent: &mut SacAgent,
     rl: RlConfig,
-    queue: &TransitionQueue,
-    slot: &SnapshotSlot,
-    ctrl: &Control,
+    sh: &LearnerShared,
     urng: &mut Rng,
     c: &mut Counters,
 ) -> Result<()> {
+    let mut seen = 0u64;
     loop {
-        let msg = match queue.pop() {
-            Popped::Msg(m) => m,
+        let msg = match sh.queue.pop() {
+            Popped::Msg(QueueMsg::Step(m)) => m,
+            Popped::Msg(QueueMsg::StateReq) => {
+                sh.state.publish(capture_state(agent, urng, c));
+                continue;
+            }
             Popped::Closed => return Ok(()),
             Popped::Empty => continue, // pop() blocks; not reachable
         };
+        seen += 1;
+        if rl.learner_fail_after > 0 && seen >= rl.learner_fail_after {
+            bail!("injected learner failure (learner_fail_after={})", rl.learner_fail_after);
+        }
         c.steps += 1;
         agent.buffer.push_batch(msg.rows);
         let tick = update_tick(agent, rl, msg.t, urng)?;
@@ -593,9 +861,9 @@ fn pinned_loop(
             c.sac += 1;
             c.wm += u64::from(tick.wm);
             c.sur += u64::from(tick.sur);
-            publish(agent, slot, c);
+            publish(agent, &sh.slot, c);
         }
-        ctrl.ack();
+        sh.ctrl.ack();
     }
 }
 
@@ -607,30 +875,43 @@ fn pinned_loop(
 fn async_loop(
     agent: &mut SacAgent,
     rl: RlConfig,
-    queue: &TransitionQueue,
-    slot: &SnapshotSlot,
+    sh: &LearnerShared,
     urng: &mut Rng,
     c: &mut Counters,
 ) -> Result<()> {
     let ups = rl.updates_per_step;
     let uncapped = ups <= 0.0;
     let mut credits = 0.0f64;
+    let mut seen = 0u64;
     let gate = |agent: &SacAgent| agent.buffer.len() >= rl.warmup_steps.max(agent.batch());
 
-    let mut absorb = |agent: &mut SacAgent, m: StepMsg, credits: &mut f64, c: &mut Counters| {
+    let mut absorb = |agent: &mut SacAgent,
+                      m: StepMsg,
+                      credits: &mut f64,
+                      c: &mut Counters,
+                      seen: &mut u64|
+     -> Result<()> {
+        *seen += 1;
+        if rl.learner_fail_after > 0 && *seen >= rl.learner_fail_after {
+            bail!("injected learner failure (learner_fail_after={})", rl.learner_fail_after);
+        }
         c.steps += 1;
         agent.buffer.push_batch(m.rows);
         if gate(agent) {
             *credits += ups;
         }
+        Ok(())
     };
 
     let mut closed = false;
     while !closed {
         // 1) drain everything currently queued without blocking
         loop {
-            match queue.try_pop() {
-                Popped::Msg(m) => absorb(agent, m, &mut credits, c),
+            match sh.queue.try_pop() {
+                Popped::Msg(QueueMsg::Step(m)) => absorb(agent, m, &mut credits, c, &mut seen)?,
+                Popped::Msg(QueueMsg::StateReq) => {
+                    sh.state.publish(capture_state(agent, urng, c));
+                }
                 Popped::Empty => break,
                 Popped::Closed => {
                     closed = true;
@@ -646,10 +927,13 @@ fn async_loop(
             if !uncapped {
                 credits -= 1.0;
             }
-            update_round(agent, rl, slot, urng, c)?;
+            update_round(agent, rl, &sh.slot, urng, c)?;
         } else {
-            match queue.pop() {
-                Popped::Msg(m) => absorb(agent, m, &mut credits, c),
+            match sh.queue.pop() {
+                Popped::Msg(QueueMsg::Step(m)) => absorb(agent, m, &mut credits, c, &mut seen)?,
+                Popped::Msg(QueueMsg::StateReq) => {
+                    sh.state.publish(capture_state(agent, urng, c));
+                }
                 Popped::Closed => closed = true,
                 Popped::Empty => {}
             }
@@ -661,7 +945,7 @@ fn async_loop(
     if !uncapped {
         while credits >= 1.0 && gate(agent) {
             credits -= 1.0;
-            update_round(agent, rl, slot, urng, c)?;
+            update_round(agent, rl, &sh.slot, urng, c)?;
         }
     }
     Ok(())
@@ -712,23 +996,39 @@ mod tests {
     fn queue_is_fifo_and_close_drains() {
         let q = TransitionQueue::new(64);
         for i in 0..5 {
-            q.push(StepMsg { t: i, rows: vec![row(i as f32); 2] });
+            q.push(QueueMsg::Step(StepMsg { t: i, rows: vec![row(i as f32); 2] }));
         }
         q.close();
         let mut seen = Vec::new();
         loop {
             match q.pop() {
-                Popped::Msg(m) => {
+                Popped::Msg(QueueMsg::Step(m)) => {
                     assert_eq!(m.rows.len(), 2);
                     assert_eq!(m.rows[0].r, m.t as f32);
                     seen.push(m.t);
                 }
+                Popped::Msg(QueueMsg::StateReq) => panic!("no state request queued"),
                 Popped::Closed => break,
                 Popped::Empty => unreachable!("blocking pop never returns Empty"),
             }
         }
         assert_eq!(seen, vec![0, 1, 2, 3, 4], "FIFO order, nothing dropped");
         assert_eq!(q.highwater(), 10);
+    }
+
+    #[test]
+    fn state_requests_keep_fifo_position_and_cost_no_capacity() {
+        let q = TransitionQueue::new(4);
+        q.push(QueueMsg::Step(StepMsg { t: 0, rows: vec![row(0.0); 2] }));
+        q.push(QueueMsg::StateReq);
+        q.push(QueueMsg::Step(StepMsg { t: 1, rows: vec![row(1.0); 2] }));
+        q.close();
+        // the marker sits between the two steps and adds no transitions
+        assert!(matches!(q.pop(), Popped::Msg(QueueMsg::Step(m)) if m.t == 0));
+        assert!(matches!(q.pop(), Popped::Msg(QueueMsg::StateReq)));
+        assert!(matches!(q.pop(), Popped::Msg(QueueMsg::Step(m)) if m.t == 1));
+        assert!(matches!(q.pop(), Popped::Closed));
+        assert_eq!(q.highwater(), 4, "StateReq contributes zero transitions");
     }
 
     #[test]
@@ -741,7 +1041,7 @@ mod tests {
             let q = q.clone();
             std::thread::spawn(move || {
                 for i in 0..steps {
-                    q.push(StepMsg { t: i, rows: vec![row(i as f32); 3] });
+                    q.push(QueueMsg::Step(StepMsg { t: i, rows: vec![row(i as f32); 3] }));
                 }
                 q.close();
             })
@@ -749,11 +1049,12 @@ mod tests {
         let mut got = Vec::new();
         loop {
             match q.pop() {
-                Popped::Msg(m) => {
+                Popped::Msg(QueueMsg::Step(m)) => {
                     // consumer is slower than the producer
                     std::thread::sleep(std::time::Duration::from_micros(200));
                     got.push(m.t);
                 }
+                Popped::Msg(QueueMsg::StateReq) => unreachable!(),
                 Popped::Closed => break,
                 Popped::Empty => unreachable!(),
             }
@@ -767,9 +1068,9 @@ mod tests {
     fn oversized_batch_is_admitted_when_empty() {
         let q = TransitionQueue::new(2);
         // 5 > cap: must not deadlock the (single-threaded) producer
-        q.push(StepMsg { t: 0, rows: vec![row(0.0); 5] });
+        q.push(QueueMsg::Step(StepMsg { t: 0, rows: vec![row(0.0); 5] }));
         match q.try_pop() {
-            Popped::Msg(m) => assert_eq!(m.rows.len(), 5),
+            Popped::Msg(QueueMsg::Step(m)) => assert_eq!(m.rows.len(), 5),
             _ => panic!("oversized batch lost"),
         }
     }
@@ -778,7 +1079,7 @@ mod tests {
     fn push_after_close_is_dropped_quietly() {
         let q = TransitionQueue::new(4);
         q.close();
-        q.push(StepMsg { t: 0, rows: vec![row(1.0)] });
+        q.push(QueueMsg::Step(StepMsg { t: 0, rows: vec![row(1.0)] }));
         assert!(matches!(q.try_pop(), Popped::Closed));
     }
 

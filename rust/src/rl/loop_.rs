@@ -59,6 +59,12 @@ pub struct NodeResult {
     /// Evaluation-layer counters (memo caches + admission pruning) for
     /// the run report.
     pub eval_stats: EvalStats,
+    /// Reproduction recipe for `best`: the pre-step mesh and the action
+    /// that produced it. The checkpoint codec serializes this instead of
+    /// the full [`EvalOutcome`] and re-evaluates on resume — the
+    /// evaluator is pure, so the recomputed outcome is bit-identical
+    /// (`None` for the baseline searches, which never checkpoint).
+    pub best_repro: Option<(crate::arch::MeshConfig, Action)>,
 }
 
 impl NodeResult {
@@ -78,6 +84,9 @@ pub(crate) struct EpisodeTracker {
     pub best_score: f64,
     pub feasible_count: usize,
     pub seen: std::collections::HashSet<u64>,
+    /// (pre-step mesh, action) behind `best` — set by drivers that
+    /// checkpoint (see [`NodeResult::best_repro`]).
+    pub best_repro: Option<(crate::arch::MeshConfig, Action)>,
 }
 
 impl EpisodeTracker {
@@ -89,12 +98,16 @@ impl EpisodeTracker {
             best_score: f64::INFINITY,
             feasible_count: 0,
             seen: std::collections::HashSet::new(),
+            best_repro: None,
         }
     }
 
     /// Record one evaluated episode; `eps`/`entropy` are the exploration
-    /// trace values for the log row.
-    pub fn record(&mut self, t: usize, out: &EvalOutcome, eps: f64, entropy: f64) {
+    /// trace values for the log row. Returns true when this episode
+    /// became the new best (so checkpointing drivers can stash the
+    /// (mesh, action) reproduction recipe alongside).
+    pub fn record(&mut self, t: usize, out: &EvalOutcome, eps: f64, entropy: f64) -> bool {
+        let mut became_best = false;
         if out.reward.feasible {
             self.feasible_count += 1;
             self.pareto.insert(ParetoPoint {
@@ -108,6 +121,7 @@ impl EpisodeTracker {
             if out.reward.score < self.best_score {
                 self.best_score = out.reward.score;
                 self.best = Some(BestConfig { episode: t, outcome: out.clone() });
+                became_best = true;
             }
         }
         self.seen.insert(config_key(out));
@@ -127,6 +141,7 @@ impl EpisodeTracker {
             entropy,
             unique_configs: self.seen.len(),
         });
+        became_best
     }
 
     pub fn finish(self, nm: u32, total_episodes: usize) -> NodeResult {
@@ -138,6 +153,7 @@ impl EpisodeTracker {
             feasible_count: self.feasible_count,
             total_episodes,
             eval_stats: EvalStats::default(),
+            best_repro: self.best_repro,
         }
     }
 }
@@ -246,6 +262,7 @@ pub fn run_node(
         };
 
         // ---- evaluate (projection Π + partition + PPA + reward), walk
+        let mesh_before = mesh;
         let out = cache.evaluate(&eval, &mesh, &action, &mut scratch);
         mesh = out.decoded.mesh;
         let s2 = state::sac_subset(&out.full_state);
@@ -259,7 +276,9 @@ pub fn run_node(
 
         // ---- bookkeeping
         eps.step(tracker.feasible_count > 0 || out.reward.feasible);
-        tracker.record(t, &out, eps.eps, agent.last_entropy);
+        if tracker.record(t, &out, eps.eps, agent.last_entropy) {
+            tracker.best_repro = Some((mesh_before, action.clone()));
+        }
 
         s = s2;
     }

@@ -6,11 +6,13 @@
 //! through batched actor forwards (DESIGN.md §9), and the async
 //! actor-learner engine ([`learner`]) that moves the update schedule
 //! onto a dedicated thread behind versioned parameter snapshots
-//! (DESIGN.md §11).
+//! (DESIGN.md §11), and the crash-safe checkpoint/resume subsystem
+//! ([`checkpoint`]) with its fault-injection harness (DESIGN.md §13).
 
 pub mod agent;
 pub mod atlas;
 pub mod baselines;
+pub mod checkpoint;
 pub mod explore;
 pub mod learner;
 pub mod loop_;

@@ -162,6 +162,12 @@ pub fn aggregate(nm: u32, seeds: Vec<u64>, results: &[NodeResult]) -> MultiSeedR
 /// `optimize seed=…` per seed (or disable updates with a large warmup).
 /// Returns one aggregate per configured node, plus the actor-learner
 /// engine's counters when `learner=pinned|async` (`None` for inline).
+///
+/// Checkpoint/resume (DESIGN.md §13): `checkpoint_every=` and `resume=`
+/// flow through [`run_jobs_stats`](crate::rl::vecenv::run_jobs_stats)
+/// unchanged — the vec-env driver fingerprints the (cfg, jobs, lanes)
+/// triple, so a `seeds search=sac` checkpoint can only resume a run with
+/// the same node × seed lane layout.
 pub fn run_seeds_vec(
     cfg: &RunConfig,
     n_seeds: usize,

@@ -94,6 +94,14 @@ impl ParetoArchive {
         &self.points
     }
 
+    /// Rebuild an archive from a serialized frontier, preserving storage
+    /// order verbatim (no re-insertion): `frontier()` of the restored
+    /// archive is bit-identical to the snapshot, which the checkpoint
+    /// resume-determinism contract relies on.
+    pub fn from_points(points: Vec<ParetoPoint>) -> ParetoArchive {
+        ParetoArchive { points }
+    }
+
     /// Merge another archive into this one by re-inserting its frontier
     /// in storage order. Insertion order only affects internal layout,
     /// never frontier membership, but keeping it fixed makes parallel

@@ -63,6 +63,20 @@ impl SumTree {
     }
 }
 
+/// Serializable snapshot of a [`PerBuffer`]'s full sampling state:
+/// contents in storage order, the ring-write cursor, every leaf priority
+/// and the annealing position. Restoring through
+/// [`PerBuffer::from_state`] rebuilds the sum-tree exactly, so the next
+/// stochastic sample draws the same indices as the uninterrupted run.
+#[derive(Debug, Clone)]
+pub struct PerState {
+    pub data: Vec<Transition>,
+    pub write: usize,
+    pub priorities: Vec<f64>,
+    pub max_priority: f64,
+    pub beta: f64,
+}
+
 pub struct PerBuffer {
     capacity: usize,
     data: Vec<Transition>,
@@ -172,6 +186,33 @@ impl PerBuffer {
 
     pub fn get(&self, i: usize) -> &Transition {
         &self.data[i]
+    }
+
+    /// Capture the full sampling state for checkpointing.
+    pub fn export_state(&self) -> PerState {
+        PerState {
+            data: self.data.clone(),
+            write: self.write,
+            priorities: (0..self.data.len()).map(|i| self.tree.get(i)).collect(),
+            max_priority: self.max_priority,
+            beta: self.beta,
+        }
+    }
+
+    /// Rebuild a buffer from [`Self::export_state`]. `capacity`, `alpha`
+    /// and `beta_step` come from the run config (they are not part of the
+    /// snapshot); the sum-tree is reconstructed leaf by leaf.
+    pub fn from_state(capacity: usize, alpha: f64, beta_step: f64, st: PerState) -> PerBuffer {
+        let mut b = PerBuffer::new(capacity, alpha, st.beta, beta_step);
+        let n = st.data.len().min(capacity);
+        b.data = st.data;
+        b.data.truncate(n);
+        b.write = st.write.min(capacity.saturating_sub(1));
+        for (i, &p) in st.priorities.iter().take(n).enumerate() {
+            b.tree.set(i, p);
+        }
+        b.max_priority = st.max_priority;
+        b
     }
 }
 

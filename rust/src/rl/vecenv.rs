@@ -44,12 +44,27 @@
 //! ([`crate::rl::learner`]) and adopts its published parameter snapshots
 //! at the top of each step. `learner=pinned` reproduces the inline
 //! schedule bit-for-bit; `learner=async` trades that for throughput.
+//!
+//! ## Checkpoint/resume and fault injection (DESIGN.md §13)
+//!
+//! [`run_jobs_ckpt`] threads a [`RunCtx`] through the wave loop:
+//! `checkpoint_every=N` snapshots the complete search state every N
+//! lockstep steps (top-of-step, after the learner sync and before any RNG
+//! draw, so the resumed step replays exactly) and at every wave boundary;
+//! `resume=<dir>` restores the newest valid generation and continues from
+//! its wave/step cursor. `crash_after=<N>` trips the N-th fault probe —
+//! probes sit top-of-step, mid-wave after the env fan-out, and after the
+//! replay insert/send — so the kill-and-resume tests sweep every
+//! interruption class. Resumed runs are bit-identical to uninterrupted
+//! ones in episode logs, frontiers and replay contents; only eval-cache
+//! hit/miss counters differ (resumed lanes restart with cold memos).
 
 use crate::config::RunConfig;
 use crate::env::{state, Action, SAC_STATE_DIM};
 use crate::error::Result;
 use crate::eval::{parallel, EvalCache, EvalScratch, EvalStats, Evaluator, SharedEvalCache};
 use crate::rl::agent::{LaneDecision, SacAgent};
+use crate::rl::checkpoint::{self, LaneCkpt, LaneView, RunCtx, SinkCkpt, KIND_VEC};
 use crate::rl::explore::EpsSchedule;
 use crate::rl::learner::{LearnerClient, LearnerReport, UPDATE_STREAM_TAG};
 use crate::rl::loop_::{make_transition, update_tick, EpisodeTracker};
@@ -141,6 +156,19 @@ impl Lane {
             stats: EvalStats::default(),
         }
     }
+
+    /// Overwrite the bootstrapped lane with a checkpointed image. The
+    /// outcome memo and worker scratch deliberately stay cold: they are
+    /// pure memos, so the resumed trajectory is bit-identical — only the
+    /// hit/miss counters differ from the uninterrupted run.
+    fn restore(&mut self, lc: LaneCkpt) {
+        self.mesh = lc.mesh;
+        self.s = lc.s;
+        self.last_entropy = lc.last_entropy;
+        self.eps = lc.eps;
+        self.tracker = lc.tracker;
+        self.stats = lc.stats;
+    }
 }
 
 /// Where a lockstep step's transitions — and the updates they trigger —
@@ -153,6 +181,62 @@ pub(crate) enum StepSink<'a> {
     /// Send each step to the learner thread and pick up published
     /// parameter snapshots at step boundaries.
     Learner(&'a mut LearnerClient),
+}
+
+impl StepSink<'_> {
+    /// Snapshot the update-side state for a checkpoint: the inline update
+    /// stream's position, or the quiesced learner-thread state (captured
+    /// through the FIFO queue). `None` when the learner has failed — the
+    /// caller skips that checkpoint rather than write a torn image.
+    fn capture(&mut self) -> Option<SinkCkpt> {
+        match self {
+            StepSink::Inline { update_rng } => {
+                Some(SinkCkpt::Inline { rng: update_rng.state() })
+            }
+            StepSink::Learner(client) => client.request_state().map(SinkCkpt::Learner),
+        }
+    }
+}
+
+/// Commit one checkpoint generation at cursor `(wave, step)`: capture the
+/// update-side state, snapshot every live lane (empty at wave
+/// boundaries) and the completed-wave results, and hand the sealed
+/// payload to the [`RunCtx`] sink. The replay buffer rides inside the
+/// lane/agent image for inline runs and inside the learner state
+/// otherwise.
+fn step_save(
+    ctx: &mut RunCtx,
+    sink: &mut StepSink<'_>,
+    agent: &SacAgent,
+    cursor: (usize, usize),
+    done: &[NodeResult],
+    lanes: &[Lane],
+    rngs: &[Rng],
+) {
+    let sc = match sink.capture() {
+        Some(sc) => sc,
+        None => {
+            ctx.note_skip();
+            return;
+        }
+    };
+    let views: Vec<LaneView> = lanes
+        .iter()
+        .zip(rngs)
+        .map(|(lane, rng)| LaneView {
+            nm: lane.nm,
+            mesh: lane.mesh,
+            s: &lane.s,
+            last_entropy: lane.last_entropy,
+            eps: &lane.eps,
+            tracker: &lane.tracker,
+            stats: lane.stats,
+            rng: rng.state(),
+        })
+        .collect();
+    let with_buffer = matches!(sc, SinkCkpt::Inline { .. });
+    let payload = checkpoint::encode_vec(cursor.0, cursor.1, agent, with_buffer, &sc, done, &views);
+    ctx.save(KIND_VEC, &payload);
 }
 
 /// Run Algorithm 1 for every lane of `specs` in lockstep: one batched
@@ -176,8 +260,10 @@ pub fn run_vec(
     run_vec_driver(cfg, specs, agent, threads, &mut StepSink::Inline { update_rng }, None)
 }
 
-/// The lockstep driver behind [`run_vec`], generic over the step sink and
-/// the (optionally shared) whole-outcome memo.
+/// The single-wave lockstep driver behind [`run_vec`], generic over the
+/// step sink and the (optionally shared) whole-outcome memo. No
+/// checkpointing, no fault injection — [`run_jobs_ckpt`] is the
+/// robustness-aware entry point.
 pub(crate) fn run_vec_driver(
     cfg: &RunConfig,
     specs: &[LaneSpec],
@@ -186,18 +272,57 @@ pub(crate) fn run_vec_driver(
     sink: &mut StepSink<'_>,
     shared: Option<&SharedEvalCache>,
 ) -> Result<Vec<NodeResult>> {
+    let mut ctx = RunCtx::passthrough();
+    let wr = WaveRun { shared, wave: 0, t0: 0, restore: None, done: &[] };
+    run_wave(cfg, specs, agent, threads, sink, &mut ctx, wr)
+}
+
+/// Per-wave inputs of [`run_wave`] beyond the always-present driver
+/// state: the shared memo, the wave's position in the job list, the
+/// resume cursor (`t0 > 0` only on the wave a mid-wave checkpoint
+/// restored), the restored lane images, and the results of completed
+/// waves (checkpoints must carry them).
+struct WaveRun<'a> {
+    shared: Option<&'a SharedEvalCache>,
+    wave: usize,
+    t0: usize,
+    restore: Option<Vec<LaneCkpt>>,
+    done: &'a [NodeResult],
+}
+
+fn run_wave(
+    cfg: &RunConfig,
+    specs: &[LaneSpec],
+    agent: &mut SacAgent,
+    threads: usize,
+    sink: &mut StepSink<'_>,
+    ctx: &mut RunCtx,
+    wr: WaveRun<'_>,
+) -> Result<Vec<NodeResult>> {
     if specs.is_empty() {
         return Ok(Vec::new());
     }
     let rl = &cfg.rl;
     let b = specs.len();
-    let mut lanes: Vec<Lane> = specs.iter().map(|sp| Lane::new(cfg, sp, shared)).collect();
+    let mut lanes: Vec<Lane> = specs.iter().map(|sp| Lane::new(cfg, sp, wr.shared)).collect();
     let mut rngs: Vec<Rng> = specs.iter().map(|sp| Rng::new(sp.seed)).collect();
+    if let Some(lcs) = wr.restore {
+        if lcs.len() != b {
+            crate::bail!("checkpoint lane count {} does not match wave width {b}", lcs.len());
+        }
+        for ((lane, rng), lc) in lanes.iter_mut().zip(rngs.iter_mut()).zip(lcs) {
+            if lc.nm != lane.nm {
+                crate::bail!("checkpoint lane node {}nm does not match job {}nm", lc.nm, lane.nm);
+            }
+            *rng = Rng::from_state(lc.rng);
+            lane.restore(lc);
+        }
+    }
     let mut states = vec![0.0f32; b * SAC_STATE_DIM];
     let mut decisions = vec![LaneDecision { explore: false }; b];
     let mut s2s = vec![[0.0f32; SAC_STATE_DIM]; b];
 
-    for t in 0..rl.episodes_per_node {
+    for t in wr.t0..rl.episodes_per_node {
         // ---- parameter pickup: pinned mode first waits for the learner
         // to process every step sent so far (so this step acts on the
         // store state the inline schedule would produce), async adopts
@@ -205,6 +330,15 @@ pub(crate) fn run_vec_driver(
         if let StepSink::Learner(client) = sink {
             client.sync(agent)?;
         }
+
+        // ---- periodic snapshot, top-of-step: after the learner sync
+        // (the rollout store equals the learner's published state) and
+        // before any RNG draw, so the resumed run replays this step
+        // exactly
+        if ctx.should_save(t, wr.t0) {
+            step_save(ctx, sink, agent, (wr.wave, t), wr.done, &lanes, &rngs);
+        }
+        ctx.fault.probe()?; // crash site A: step boundary
 
         // ---- ε coins + state gather, lane-major (Algorithm 1 line 6)
         for (i, lane) in lanes.iter().enumerate() {
@@ -223,8 +357,8 @@ pub(crate) fn run_vec_driver(
                 lane.last_entropy = e;
             }
             let action = if entropy.is_some() && lane.eps.eps < rl.mpc_eps_gate {
-                let ctx = Some((&lane.eval, &lane.mesh));
-                let refined = agent.mpc_refine(&lane.s, &action, ctx, &mut rngs[i])?;
+                let mpc_ctx = Some((&lane.eval, &lane.mesh));
+                let refined = agent.mpc_refine(&lane.s, &action, mpc_ctx, &mut rngs[i])?;
                 // drain the rerank counters this call produced into the
                 // lane so per-node attribution stays exact
                 lane.stats.merge(&agent.take_eval_stats());
@@ -235,6 +369,10 @@ pub(crate) fn run_vec_driver(
             actions.push(action);
         }
 
+        // the best-config reproduction recipe a checkpoint stores is
+        // (pre-step mesh, action) — capture the meshes before the walk
+        let pre_meshes: Vec<crate::arch::MeshConfig> = lanes.iter().map(|l| l.mesh).collect();
+
         // ---- env transitions: pure per-lane work fanned out by index
         let actions = &actions;
         let step_lane = |i: usize, lane: &mut Lane| {
@@ -243,6 +381,7 @@ pub(crate) fn run_vec_driver(
             out
         };
         let outs = parallel::scoped_chunk_map_mut(&mut lanes, threads, step_lane);
+        ctx.fault.probe()?; // crash site B: mid-wave, after the env fan-out
         for (s2, out) in s2s.iter_mut().zip(&outs) {
             *s2 = state::sac_subset(&out.full_state);
         }
@@ -259,13 +398,16 @@ pub(crate) fn run_vec_driver(
                 agent.buffer.push_batch(step_rows);
                 update_tick(agent, *rl, t, update_rng)?;
             }
-            StepSink::Learner(client) => client.send_step(t, step_rows.collect())?,
+            StepSink::Learner(client) => client.send_step(agent, t, step_rows.collect())?,
         }
+        ctx.fault.probe()?; // crash site C: replay inserted / queue non-empty
 
         // ---- bookkeeping, lane-major
-        for ((lane, out), s2) in lanes.iter_mut().zip(&outs).zip(&s2s) {
+        for (i, ((lane, out), s2)) in lanes.iter_mut().zip(&outs).zip(&s2s).enumerate() {
             lane.eps.step(lane.tracker.feasible_count > 0 || out.reward.feasible);
-            lane.tracker.record(t, out, lane.eps.eps, lane.last_entropy);
+            if lane.tracker.record(t, out, lane.eps.eps, lane.last_entropy) {
+                lane.tracker.best_repro = Some((pre_meshes[i], actions[i].clone()));
+            }
             lane.s = *s2;
         }
     }
@@ -324,6 +466,11 @@ pub fn run_jobs_stats(
 /// [`run_jobs_stats`] with every lane's whole-outcome memo replaced by
 /// one process-wide [`SharedEvalCache`] — the atlas sweep's warm-state
 /// layer. Pass `None` to keep the default private-per-lane memos.
+///
+/// This is where the config's robustness keys take effect: a [`RunCtx`]
+/// built from `checkpoint_every=` / `resume=` / `crash_after=` wraps the
+/// wave loop (the atlas sweep instead threads its own sweep-level context
+/// through [`run_jobs_ckpt`] directly).
 pub fn run_jobs_stats_shared(
     cfg: &RunConfig,
     jobs: &[LaneSpec],
@@ -335,34 +482,109 @@ pub fn run_jobs_stats_shared(
     if jobs.is_empty() {
         return Ok((Vec::new(), None));
     }
-    let mut results = Vec::with_capacity(jobs.len());
+    let mut ctx = RunCtx::for_vec(cfg, jobs, lanes)?;
+    run_jobs_ckpt(cfg, jobs, lanes, agent, threads, shared, &mut ctx)
+}
+
+/// The wave loop behind [`run_jobs_stats_shared`], explicit about its
+/// robustness context so the atlas sweep can share one [`RunCtx`] (and
+/// one cumulative fault-probe counter) across every scenario point while
+/// managing its own sweep-level checkpoints.
+pub(crate) fn run_jobs_ckpt(
+    cfg: &RunConfig,
+    jobs: &[LaneSpec],
+    lanes: usize,
+    agent: &mut SacAgent,
+    threads: usize,
+    shared: Option<&SharedEvalCache>,
+    ctx: &mut RunCtx,
+) -> Result<(Vec<NodeResult>, Option<LearnerReport>)> {
+    if jobs.is_empty() {
+        return Ok((Vec::new(), None));
+    }
+    let width = lanes.max(1);
+    let chunks: Vec<&[LaneSpec]> = jobs.chunks(width).collect();
+
+    // ---- resume: decode the checkpoint (restoring the rollout agent in
+    // place) and position the wave/step cursor on the interrupted step
+    let mut results: Vec<NodeResult> = Vec::with_capacity(jobs.len());
+    let mut start_wave = 0usize;
+    let mut start_step = 0usize;
+    let mut lane_restore: Option<Vec<LaneCkpt>> = None;
+    let mut sink_restore: Option<SinkCkpt> = None;
+    if let Some(payload) = ctx.resume.take() {
+        let v = checkpoint::decode_vec(&payload, cfg, agent)?;
+        if v.wave >= chunks.len() {
+            crate::bail!("checkpoint wave {} out of range ({} waves)", v.wave, chunks.len());
+        }
+        let done_expect: usize = chunks[..v.wave].iter().map(|c| c.len()).sum();
+        if v.done.len() != done_expect {
+            crate::bail!(
+                "checkpoint carries {} completed results, wave {} expects {done_expect}",
+                v.done.len(),
+                v.wave
+            );
+        }
+        start_wave = v.wave;
+        start_step = v.step;
+        results = v.done;
+        if v.step > 0 {
+            lane_restore = Some(v.lanes);
+        }
+        sink_restore = Some(v.sink);
+    }
+
     if cfg.rl.learner.off_loop() {
-        let mut client = LearnerClient::spawn(cfg, agent, lanes.max(1).min(jobs.len()))?;
-        for wave in jobs.chunks(lanes.max(1)) {
-            results.extend(run_vec_driver(
-                cfg,
-                wave,
-                agent,
-                threads,
-                &mut StepSink::Learner(&mut client),
-                shared,
-            )?);
+        let learner_resume = match sink_restore {
+            Some(SinkCkpt::Learner(st)) => Some(st),
+            Some(SinkCkpt::Inline { .. }) => crate::bail!(
+                "checkpoint was written by learner=inline; cannot resume with learner={}",
+                cfg.rl.learner.name()
+            ),
+            None => None,
+        };
+        let mut client = LearnerClient::spawn(cfg, agent, width.min(jobs.len()), learner_resume)?;
+        for (w, wave) in chunks.iter().enumerate() {
+            if w < start_wave {
+                continue;
+            }
+            let t0 = if w == start_wave { start_step } else { 0 };
+            let restore = if w == start_wave { lane_restore.take() } else { None };
+            let mut sink = StepSink::Learner(&mut client);
+            let wr = WaveRun { shared, wave: w, t0, restore, done: &results };
+            let wave_results = run_wave(cfg, wave, agent, threads, &mut sink, ctx, wr)?;
+            results.extend(wave_results);
+            // wave-boundary generation: a resume from here lands on the
+            // next wave with no mid-wave lane state to rebuild
+            if w + 1 < chunks.len() && ctx.sink.is_some() {
+                step_save(ctx, &mut sink, agent, (w + 1, 0), &results, &[], &[]);
+            }
         }
         let report = client.finish(agent)?;
         Ok((results, Some(report)))
     } else {
         // one update stream across all waves: wave boundaries must not
         // reset the learning noise sequence
-        let mut update_rng = Rng::new(cfg.seed).fork(UPDATE_STREAM_TAG);
-        for wave in jobs.chunks(lanes.max(1)) {
-            results.extend(run_vec_driver(
-                cfg,
-                wave,
-                agent,
-                threads,
-                &mut StepSink::Inline { update_rng: &mut update_rng },
-                shared,
-            )?);
+        let mut update_rng = match sink_restore {
+            Some(SinkCkpt::Inline { rng }) => Rng::from_state(rng),
+            Some(SinkCkpt::Learner(_)) => crate::bail!(
+                "checkpoint was written by an off-loop learner; cannot resume with learner=inline"
+            ),
+            None => Rng::new(cfg.seed).fork(UPDATE_STREAM_TAG),
+        };
+        for (w, wave) in chunks.iter().enumerate() {
+            if w < start_wave {
+                continue;
+            }
+            let t0 = if w == start_wave { start_step } else { 0 };
+            let restore = if w == start_wave { lane_restore.take() } else { None };
+            let mut sink = StepSink::Inline { update_rng: &mut update_rng };
+            let wr = WaveRun { shared, wave: w, t0, restore, done: &results };
+            let wave_results = run_wave(cfg, wave, agent, threads, &mut sink, ctx, wr)?;
+            results.extend(wave_results);
+            if w + 1 < chunks.len() && ctx.sink.is_some() {
+                step_save(ctx, &mut sink, agent, (w + 1, 0), &results, &[], &[]);
+            }
         }
         Ok((results, None))
     }
@@ -484,5 +706,45 @@ mod tests {
         assert!(report.queue_highwater >= 2, "at least one 2-lane batch queued");
         // the learner hands its replay buffer back on finish
         assert_eq!(ag.buffer.len(), 12);
+    }
+
+    #[test]
+    fn fault_probe_kills_mid_wave_and_checkpoint_resumes() {
+        // crash_after lands inside a wave (3 probes per step); the resumed
+        // run must reproduce the uninterrupted episode logs bit-for-bit.
+        // Full-matrix coverage (learner modes, corrupt slots, randomized
+        // crash points) lives in tests/checkpoint.rs.
+        let dir = std::env::temp_dir()
+            .join(format!("silckpt-vecenv-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = tiny_cfg();
+        cfg.out_dir = dir.to_str().unwrap().to_string();
+        cfg.rl.checkpoint_every = 2;
+        let specs = [LaneSpec { nm: 7, seed: 1 }, LaneSpec { nm: 28, seed: 2 }];
+
+        let mut ref_agent = agent(&cfg);
+        let (reference, _) = run_jobs_stats(&cfg, &specs, 2, &mut ref_agent, 2).unwrap();
+
+        cfg.rl.crash_after = 11; // step 3, mid-step (probe B of t=3)
+        let err = run_jobs_stats(&cfg, &specs, 2, &mut agent(&cfg), 2).unwrap_err();
+        assert!(err.to_string().contains(checkpoint::INJECTED_CRASH_MSG), "{err}");
+
+        cfg.rl.crash_after = 0;
+        cfg.resume = Some(cfg.out_dir.clone());
+        let mut ag = agent(&cfg);
+        let (resumed, _) = run_jobs_stats(&cfg, &specs, 2, &mut ag, 2).unwrap();
+        assert_eq!(reference.len(), resumed.len());
+        for (a, b) in reference.iter().zip(&resumed) {
+            assert_eq!(a.episodes.len(), b.episodes.len());
+            for (ea, eb) in a.episodes.iter().zip(&b.episodes) {
+                assert_eq!(ea.reward.to_bits(), eb.reward.to_bits());
+                assert_eq!(ea.score.to_bits(), eb.score.to_bits());
+                assert_eq!(ea.entropy.to_bits(), eb.entropy.to_bits());
+            }
+            assert_eq!(a.pareto.frontier().len(), b.pareto.frontier().len());
+        }
+        // replay contents restored + regenerated identically
+        assert_eq!(ref_agent.buffer.len(), ag.buffer.len());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

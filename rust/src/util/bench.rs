@@ -118,7 +118,9 @@ impl Bencher {
         if let Some(dir) = std::path::Path::new(path).parent() {
             let _ = std::fs::create_dir_all(dir);
         }
-        let _ = std::fs::write(path, self.to_csv());
+        // atomic: bench CSVs feed the report pipeline; never leave a
+        // half-written file behind
+        let _ = crate::util::fsio::atomic_write_str(path, &self.to_csv());
     }
 }
 

@@ -92,7 +92,9 @@ impl Table {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, self.to_csv())
+        // atomic (temp + fsync + rename): a crash mid-emit must never
+        // leave a torn report table on disk (DESIGN.md §13)
+        crate::util::fsio::atomic_write_str(path, &self.to_csv())
     }
 }
 

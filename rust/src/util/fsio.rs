@@ -1,0 +1,402 @@
+//! Crash-safe file IO primitives shared by the checkpoint subsystem
+//! (`rl::checkpoint`, DESIGN.md §13) and every artifact emitter.
+//!
+//! Three layers:
+//!
+//! * [`atomic_write`] — write-temp/fsync/rename commits. A reader never
+//!   observes a torn file: it sees either the previous contents or the
+//!   complete new contents, even across a crash mid-write.
+//! * [`ByteWriter`] / [`ByteReader`] — a hand-rolled little-endian
+//!   binary codec (no external serialization crates; the repo is
+//!   std-only). Floats are encoded via `to_bits`, so a round-trip is
+//!   bit-exact including NaN payloads and signed zeros — the property
+//!   the resume-determinism contract rests on.
+//! * [`seal_record`] / [`open_record`] — a checksummed envelope (magic,
+//!   format version, kind tag, payload length, FNV-1a-64 checksum) so
+//!   truncated or corrupted checkpoint slots are *detected* rather than
+//!   half-parsed.
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// FNV-1a 64-bit over a byte slice (same constants as the eval-cache
+/// hasher; duplicated here so `util` stays dependency-free).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Atomically replace `path` with `bytes`: write a sibling `<name>.tmp`,
+/// fsync it, then `rename` over the target (atomic on POSIX). Parent
+/// directories are created as needed; after the rename the parent
+/// directory is fsynced best-effort so the new directory entry is
+/// durable too.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            fs::create_dir_all(dir)?;
+        }
+    }
+    let mut tmp_name = path
+        .file_name()
+        .ok_or_else(|| {
+            io::Error::new(io::ErrorKind::InvalidInput, "atomic_write: path has no file name")
+        })?
+        .to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    fs::rename(&tmp, path)?;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            // Directory fsync is not supported everywhere; the rename
+            // itself is already atomic, so failure here is non-fatal.
+            let _ = File::open(dir).and_then(|d| d.sync_all());
+        }
+    }
+    Ok(())
+}
+
+/// [`atomic_write`] for text artifacts (CSV tables, JSON records).
+pub fn atomic_write_str(path: impl AsRef<Path>, text: &str) -> io::Result<()> {
+    atomic_write(path.as_ref(), text.as_bytes())
+}
+
+/// Little-endian binary encoder. Collection lengths are written as u64
+/// so the format is identical across platforms.
+#[derive(Default)]
+pub struct ByteWriter {
+    pub buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.bool(true);
+                self.f64(x);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f32(x);
+        }
+    }
+
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.f64(x);
+        }
+    }
+}
+
+fn eof(what: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::UnexpectedEof, format!("checkpoint payload truncated at {what}"))
+}
+
+/// Little-endian binary decoder over a borrowed payload. Every accessor
+/// returns `UnexpectedEof` on truncation instead of panicking, so a
+/// torn slot degrades to "corrupt, fall back" rather than aborting.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(eof("field"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> io::Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> io::Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "length overflows usize"))
+    }
+
+    pub fn bool(&mut self) -> io::Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn f32(&mut self) -> io::Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn opt_f64(&mut self) -> io::Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    /// Read a length prefix that is about to drive a `Vec` preallocation
+    /// or an element loop; bounded by the remaining payload so corrupt
+    /// lengths cannot trigger huge allocations.
+    pub fn len(&mut self, elem_size: usize) -> io::Result<usize> {
+        let n = self.usize()?;
+        if n.saturating_mul(elem_size.max(1)) > self.remaining() {
+            return Err(eof("collection"));
+        }
+        Ok(n)
+    }
+
+    pub fn bytes(&mut self) -> io::Result<&'a [u8]> {
+        let n = self.len(1)?;
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> io::Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "invalid utf-8 string"))
+    }
+
+    pub fn f32s(&mut self) -> io::Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn f64s(&mut self) -> io::Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+}
+
+/// Magic prefix of every sealed record (`SIL`icon `CKPT` format `1`).
+pub const RECORD_MAGIC: [u8; 8] = *b"SILCKPT1";
+/// Bumped on any incompatible payload-layout change.
+pub const RECORD_VERSION: u32 = 1;
+
+const RECORD_HEADER_LEN: usize = 8 + 4 + 1 + 8 + 8;
+
+/// Wrap `payload` in a checksummed envelope: magic, version, kind tag,
+/// payload length, FNV-1a-64 of the payload, then the payload itself.
+pub fn seal_record(kind: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(RECORD_HEADER_LEN + payload.len());
+    out.extend_from_slice(&RECORD_MAGIC);
+    out.extend_from_slice(&RECORD_VERSION.to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+/// Verify a sealed record end to end (magic, version, declared length,
+/// checksum) and return `(kind, payload)`. Truncation surfaces as
+/// `UnexpectedEof`, any header/checksum mismatch as `InvalidData` — the
+/// checkpoint loader treats both as "this slot is corrupt".
+pub fn open_record(bytes: &[u8]) -> io::Result<(u8, &[u8])> {
+    if bytes.len() < RECORD_HEADER_LEN {
+        return Err(eof("record header"));
+    }
+    if bytes[..8] != RECORD_MAGIC {
+        return Err(bad("bad record magic"));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != RECORD_VERSION {
+        return Err(bad("unsupported record version"));
+    }
+    let kind = bytes[12];
+    let plen = u64::from_le_bytes(bytes[13..21].try_into().unwrap());
+    let sum = u64::from_le_bytes(bytes[21..29].try_into().unwrap());
+    let payload = &bytes[RECORD_HEADER_LEN..];
+    if plen != payload.len() as u64 {
+        return Err(eof("record payload"));
+    }
+    if fnv1a64(payload) != sum {
+        return Err(bad("record checksum mismatch"));
+    }
+    Ok((kind, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX);
+        w.i64(-42);
+        w.usize(12345);
+        w.bool(true);
+        w.f32(-0.0);
+        w.f64(f64::NAN);
+        w.opt_f64(Some(1.5));
+        w.opt_f64(None);
+        w.str("hello σ");
+        w.f32s(&[1.0, f32::INFINITY, -3.25]);
+        w.f64s(&[2.0, -0.0]);
+        let mut r = ByteReader::new(&w.buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.opt_f64().unwrap(), Some(1.5));
+        assert_eq!(r.opt_f64().unwrap(), None);
+        assert_eq!(r.str().unwrap(), "hello σ");
+        let xs = r.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1], f32::INFINITY);
+        assert_eq!(r.f64s().unwrap()[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn reader_reports_truncation_not_panic() {
+        let mut w = ByteWriter::new();
+        w.u64(1);
+        let mut r = ByteReader::new(&w.buf[..5]);
+        assert_eq!(r.u64().unwrap_err().kind(), io::ErrorKind::UnexpectedEof);
+        // corrupt collection length can't drive a huge allocation
+        let mut w2 = ByteWriter::new();
+        w2.usize(usize::MAX / 2);
+        let mut r2 = ByteReader::new(&w2.buf);
+        assert!(r2.f32s().is_err());
+    }
+
+    #[test]
+    fn sealed_record_detects_corruption() {
+        let rec = seal_record(3, b"payload-bytes");
+        let (kind, payload) = open_record(&rec).unwrap();
+        assert_eq!(kind, 3);
+        assert_eq!(payload, b"payload-bytes");
+
+        // truncated → UnexpectedEof
+        let err = open_record(&rec[..rec.len() - 1]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+        // flipped payload byte → checksum mismatch
+        let mut bad = rec.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        assert_eq!(open_record(&bad).unwrap_err().kind(), io::ErrorKind::InvalidData);
+        // flipped magic byte → rejected
+        let mut badm = rec.clone();
+        badm[0] ^= 1;
+        assert_eq!(open_record(&badm).unwrap_err().kind(), io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join(format!("fsio-test-{}", std::process::id()));
+        let path = dir.join("nested").join("artifact.multi.dot.json");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(fs::read(&path).unwrap(), b"second");
+        // the temp sibling must not linger
+        let entries: Vec<_> = fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        assert_eq!(entries, vec!["artifact.multi.dot.json".to_string()]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod csv;
+pub mod fsio;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,452 @@
+//! Crash-safe checkpoint/resume golden suite: the robustness contract of
+//! DESIGN.md §13.
+//!
+//! * Kill-and-resume **bit-identity**: a run interrupted by the
+//!   fault-injection harness (`crash_after=N`) and resumed from its
+//!   newest checkpoint produces episode logs, Pareto frontiers and replay
+//!   contents bit-identical to the uninterrupted run — per required seeds
+//!   {7, 42} at 7nm, at randomized crash points, through the live-update
+//!   region, and under the pinned off-loop learner.
+//! * Corruption fallback: a torn newest generation falls back to the
+//!   previous one (still bit-identical — any valid generation is a
+//!   correct resume point); two torn slots start fresh (also identical);
+//!   a foreign fingerprint is a hard error, never a silent wrong resume.
+//! * Graceful learner degradation: an injected learner-thread failure
+//!   (`learner_fail_after=N`) falls the run back to inline updates and
+//!   surfaces in the report instead of killing the search.
+//! * The atlas sweep checkpoints at group boundaries and resumes
+//!   bit-identically on a reduced grid.
+//!
+//! Codec round-trip and slot-scheme unit tests live in `rl::checkpoint`'s
+//! own `#[cfg(test)]` module; the mid-wave vec-env kill lives in
+//! `rl::vecenv`'s.
+
+use std::path::{Path, PathBuf};
+
+use silicon_rl::config::{Granularity, RunConfig};
+use silicon_rl::env::{ACT_DIM, SAC_STATE_DIM};
+use silicon_rl::nn::backend::{self, BackendSel};
+use silicon_rl::rl::checkpoint::INJECTED_CRASH_MSG;
+use silicon_rl::rl::{self, LaneSpec, NodeResult, SacAgent};
+use silicon_rl::util::fsio::{self, ByteReader};
+use silicon_rl::util::Rng;
+
+/// The acceptance lanes: required seeds {7, 42} at 7nm.
+const SPECS7: [LaneSpec; 2] = [LaneSpec { nm: 7, seed: 7 }, LaneSpec { nm: 7, seed: 42 }];
+
+/// Wider lane set whose buffer crosses the minibatch gate (256) at step
+/// 63 of a 66-episode run — the last steps exercise live SAC updates, so
+/// checkpoints in that window carry mid-training parameter state.
+const SPECS4: [LaneSpec; 4] = [
+    LaneSpec { nm: 7, seed: 7 },
+    LaneSpec { nm: 7, seed: 42 },
+    LaneSpec { nm: 28, seed: 7 },
+    LaneSpec { nm: 28, seed: 42 },
+];
+
+fn base_cfg(episodes: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.backend = BackendSel::Native;
+    cfg.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.granularity = Granularity::Group;
+    cfg.rl.episodes_per_node = episodes;
+    cfg.rl.warmup_steps = 8;
+    cfg
+}
+
+/// Fresh agent with the pinned seed-42 store init (same init for the
+/// reference, the crashed run and the resume — the resume overwrites it
+/// from the checkpoint; a crash-before-first-save resume must re-derive
+/// it identically).
+fn fresh_agent(cfg: &RunConfig) -> SacAgent {
+    let be = backend::load(&cfg.artifacts_dir, cfg.backend).unwrap();
+    SacAgent::new(be, cfg.rl, &mut Rng::new(42)).unwrap()
+}
+
+type Run = (Vec<NodeResult>, SacAgent, Option<rl::LearnerReport>);
+
+fn run(
+    cfg: &RunConfig,
+    specs: &[LaneSpec],
+    lanes: usize,
+    threads: usize,
+) -> silicon_rl::error::Result<Run> {
+    let mut agent = fresh_agent(cfg);
+    let (results, report) = rl::run_jobs_stats(cfg, specs, lanes, &mut agent, threads)?;
+    Ok((results, agent, report))
+}
+
+/// Fresh scratch out_dir for one test (checkpoints land in `<dir>/ckpt`).
+fn tmp_out(name: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("silckpt-it-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn assert_logs_identical(a: &NodeResult, b: &NodeResult, what: &str) {
+    assert_eq!(a.episodes.len(), b.episodes.len(), "{what}: episode count");
+    for (x, y) in a.episodes.iter().zip(&b.episodes) {
+        let ep = x.episode;
+        assert_eq!(x.reward.to_bits(), y.reward.to_bits(), "{what} ep {ep}: reward");
+        assert_eq!(x.score.to_bits(), y.score.to_bits(), "{what} ep {ep}: score");
+        assert_eq!(
+            x.best_score.to_bits(),
+            y.best_score.to_bits(),
+            "{what} ep {ep}: best_score"
+        );
+        assert_eq!(x.feasible, y.feasible, "{what} ep {ep}: feasible");
+        assert_eq!(x.eps.to_bits(), y.eps.to_bits(), "{what} ep {ep}: eps");
+        assert_eq!(x.entropy.to_bits(), y.entropy.to_bits(), "{what} ep {ep}: entropy");
+        assert_eq!((x.mesh_w, x.mesh_h), (y.mesh_w, y.mesh_h), "{what} ep {ep}: mesh");
+        assert_eq!(x.unique_configs, y.unique_configs, "{what} ep {ep}: unique");
+    }
+    assert_eq!(a.feasible_count, b.feasible_count, "{what}: feasible_count");
+}
+
+fn assert_frontiers_identical(a: &NodeResult, b: &NodeResult, what: &str) {
+    let (fa, fb) = (a.pareto.frontier(), b.pareto.frontier());
+    assert_eq!(fa.len(), fb.len(), "{what}: frontier size");
+    for (p, q) in fa.iter().zip(fb) {
+        assert_eq!(p.perf_gops.to_bits(), q.perf_gops.to_bits(), "{what}: perf");
+        assert_eq!(p.power_mw.to_bits(), q.power_mw.to_bits(), "{what}: power");
+        assert_eq!(p.area_mm2.to_bits(), q.area_mm2.to_bits(), "{what}: area");
+        assert_eq!(p.episode, q.episode, "{what}: episode tag");
+    }
+}
+
+fn assert_buffers_identical(a: &SacAgent, b: &SacAgent, what: &str) {
+    assert_eq!(a.buffer.len(), b.buffer.len(), "{what}: buffer length");
+    for t in 0..a.buffer.len() {
+        let (x, y) = (a.buffer.get(t), b.buffer.get(t));
+        assert_eq!(x.r.to_bits(), y.r.to_bits(), "{what} slot {t}: reward");
+        assert_eq!(x.done.to_bits(), y.done.to_bits(), "{what} slot {t}: done");
+        for j in 0..SAC_STATE_DIM {
+            assert_eq!(x.s[j].to_bits(), y.s[j].to_bits(), "{what} slot {t}: s[{j}]");
+            assert_eq!(x.s2[j].to_bits(), y.s2[j].to_bits(), "{what} slot {t}: s2[{j}]");
+        }
+        for j in 0..ACT_DIM {
+            assert_eq!(
+                x.a_cont[j].to_bits(),
+                y.a_cont[j].to_bits(),
+                "{what} slot {t}: a[{j}]"
+            );
+        }
+        assert_eq!(x.a_disc, y.a_disc, "{what} slot {t}: a_disc");
+        for j in 0..3 {
+            assert_eq!(x.ppa[j].to_bits(), y.ppa[j].to_bits(), "{what} slot {t}: ppa[{j}]");
+        }
+    }
+}
+
+fn assert_run_matches(reference: &Run, resumed: &Run, what: &str) {
+    for (lane, (a, b)) in reference.0.iter().zip(&resumed.0).enumerate() {
+        assert_logs_identical(a, b, &format!("{what} lane {lane}"));
+        assert_frontiers_identical(a, b, &format!("{what} lane {lane}"));
+    }
+    assert_buffers_identical(&reference.1, &resumed.1, what);
+    assert_eq!(
+        reference.1.updates_done, resumed.1.updates_done,
+        "{what}: update count diverged"
+    );
+}
+
+/// Parse a slot file's generation sequence number (layout: sealed record
+/// whose payload opens with `seq: u64`).
+fn slot_seq(path: &Path) -> Option<u64> {
+    let bytes = std::fs::read(path).ok()?;
+    let (_kind, payload) = fsio::open_record(&bytes).ok()?;
+    ByteReader::new(payload).u64().ok()
+}
+
+/// Truncate a slot file to half its length — a torn write.
+fn tear_slot(path: &Path) {
+    let bytes = std::fs::read(path).unwrap();
+    std::fs::write(path, &bytes[..bytes.len() / 2]).unwrap();
+}
+
+/// Acceptance core: seeds {7, 42} at 7nm, killed at a step boundary
+/// after two checkpoint generations, resumed — episode logs, frontiers
+/// and replay contents bit-identical to the uninterrupted run. The
+/// resumed run keeps checkpointing, so generation numbering also
+/// continues past the restored one.
+#[test]
+fn crash_resume_bit_identical_seeds_7_42_at_7nm() {
+    let cfg = base_cfg(66);
+    let reference = run(&cfg, &SPECS7, 2, 1).unwrap();
+
+    let out = tmp_out("accept");
+    let mut ccfg = cfg.clone();
+    ccfg.out_dir = out.to_string_lossy().into_owned();
+    ccfg.rl.checkpoint_every = 16;
+    // probe A of step 33 (3·33+1): right after the t=32 save committed
+    ccfg.rl.crash_after = 100;
+    let err = run(&ccfg, &SPECS7, 2, 1).unwrap_err();
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut rcfg = ccfg.clone();
+    rcfg.rl.crash_after = 0;
+    rcfg.resume = Some(ccfg.out_dir.clone());
+    let resumed = run(&rcfg, &SPECS7, 2, 1).unwrap();
+    assert_run_matches(&reference, &resumed, "accept resume");
+
+    // the resume appended generations past the two it restored from
+    let newest = [out.join("ckpt/ckpt-a.bin"), out.join("ckpt/ckpt-b.bin")]
+        .iter()
+        .filter_map(|p| slot_seq(p))
+        .max()
+        .unwrap();
+    assert!(newest >= 3, "resume did not continue the generation sequence: {newest}");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// The same contract through the live-update region: with 4 lanes the
+/// minibatch gate opens at step 63, so the t=64 checkpoint carries
+/// mid-training parameters, PER priorities and the update-stream RNG
+/// position — and the kill lands mid-wave after the env fan-out.
+#[test]
+fn crash_resume_bit_identical_through_live_updates() {
+    let cfg = base_cfg(66);
+    let reference = run(&cfg, &SPECS4, 4, 2).unwrap();
+    assert!(reference.1.updates_done > 0, "updates never fired");
+
+    let out = tmp_out("live");
+    let mut ccfg = cfg.clone();
+    ccfg.out_dir = out.to_string_lossy().into_owned();
+    ccfg.rl.checkpoint_every = 16;
+    // probe B of step 64 (3·64+2): after the t=64 save, after the env
+    // fan-out, one step into the live-update window
+    ccfg.rl.crash_after = 194;
+    let err = run(&ccfg, &SPECS4, 4, 2).unwrap_err();
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut rcfg = ccfg.clone();
+    rcfg.rl.crash_after = 0;
+    rcfg.resume = Some(ccfg.out_dir.clone());
+    let resumed = run(&rcfg, &SPECS4, 4, 2).unwrap();
+    assert_run_matches(&reference, &resumed, "live resume");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// Randomized crash points: `crash_after` drawn from the whole probe
+/// range (3 probes per step), including points before the first
+/// checkpoint exists (resume then starts fresh — and must still match).
+#[test]
+fn randomized_crash_points_resume_identical() {
+    let cfg = base_cfg(40);
+    let reference = run(&cfg, &SPECS7, 2, 1).unwrap();
+
+    let mut rng = Rng::new(0xC0FFEE);
+    for k in 0..3 {
+        // 40 steps × 3 probes = 120 probes; stay below so every draw kills
+        let crash_after = 1 + rng.below(115) as u64;
+        let out = tmp_out(&format!("rand{k}"));
+        let mut ccfg = cfg.clone();
+        ccfg.out_dir = out.to_string_lossy().into_owned();
+        ccfg.rl.checkpoint_every = 8;
+        ccfg.rl.crash_after = crash_after;
+        let err = run(&ccfg, &SPECS7, 2, 1).unwrap_err();
+        assert!(
+            format!("{err:#}").contains(INJECTED_CRASH_MSG),
+            "crash_after={crash_after}: {err:#}"
+        );
+
+        let mut rcfg = ccfg.clone();
+        rcfg.rl.crash_after = 0;
+        rcfg.resume = Some(ccfg.out_dir.clone());
+        let resumed = run(&rcfg, &SPECS7, 2, 1).unwrap();
+        assert_run_matches(&reference, &resumed, &format!("crash_after={crash_after}"));
+        let _ = std::fs::remove_dir_all(&out);
+    }
+}
+
+/// Corruption ladder: tear the newest generation → resume falls back to
+/// the previous one (bit-identical — any valid generation is a correct
+/// resume point); tear both → resume starts fresh (still identical);
+/// a checkpoint from a different run configuration → hard error.
+#[test]
+fn corrupt_checkpoint_falls_back_then_fresh_then_rejects_foreign() {
+    let cfg = base_cfg(66);
+    let reference = run(&cfg, &SPECS7, 2, 1).unwrap();
+
+    // an uninterrupted checkpointing run: generations at t=16/32/48/64
+    let out = tmp_out("corrupt");
+    let mut wcfg = cfg.clone();
+    wcfg.out_dir = out.to_string_lossy().into_owned();
+    wcfg.rl.checkpoint_every = 16;
+    run(&wcfg, &SPECS7, 2, 1).unwrap();
+
+    let slots = [out.join("ckpt/ckpt-a.bin"), out.join("ckpt/ckpt-b.bin")];
+    let seqs = [slot_seq(&slots[0]).unwrap(), slot_seq(&slots[1]).unwrap()];
+    let (newest, oldest) = if seqs[0] > seqs[1] { (0, 1) } else { (1, 0) };
+
+    // 1) torn newest → previous generation, still bit-identical
+    tear_slot(&slots[newest]);
+    let mut rcfg = cfg.clone();
+    rcfg.resume = Some(wcfg.out_dir.clone());
+    let resumed = run(&rcfg, &SPECS7, 2, 1).unwrap();
+    assert_run_matches(&reference, &resumed, "fallback generation");
+
+    // 2) both torn → fresh start, still bit-identical
+    tear_slot(&slots[oldest]);
+    let fresh = run(&rcfg, &SPECS7, 2, 1).unwrap();
+    assert_run_matches(&reference, &fresh, "fresh after double corruption");
+
+    // 3) foreign fingerprint (different base seed) → refuse, don't guess
+    let out2 = tmp_out("foreign");
+    let mut w2 = cfg.clone();
+    w2.out_dir = out2.to_string_lossy().into_owned();
+    w2.rl.checkpoint_every = 16;
+    run(&w2, &SPECS7, 2, 1).unwrap();
+    let mut f2 = cfg.clone();
+    f2.seed = cfg.seed + 1;
+    f2.resume = Some(w2.out_dir.clone());
+    let err = run(&f2, &SPECS7, 2, 1).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("different run configuration"),
+        "{err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&out);
+    let _ = std::fs::remove_dir_all(&out2);
+}
+
+/// Kill-and-resume under the pinned off-loop learner: the checkpoint
+/// quiesces the learner thread (its replay buffer, update-stream RNG and
+/// counters), the kill lands after a send while the queue is non-empty,
+/// and the resumed pinned run is bit-identical to the plain inline
+/// reference — the §11 identity contract surviving a crash.
+#[test]
+fn pinned_learner_crash_resume_bit_identical_to_inline() {
+    let cfg = base_cfg(66);
+    let reference = run(&cfg, &SPECS4, 4, 2).unwrap();
+
+    let out = tmp_out("pinned");
+    let mut ccfg = cfg.clone();
+    ccfg.apply("learner", "pinned").unwrap();
+    ccfg.out_dir = out.to_string_lossy().into_owned();
+    ccfg.rl.checkpoint_every = 16;
+    // probe C of step 64 (3·64+3): right after the step's transitions
+    // were queued to the learner and before it necessarily drained them
+    ccfg.rl.crash_after = 195;
+    let err = run(&ccfg, &SPECS4, 4, 2).unwrap_err();
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut rcfg = ccfg.clone();
+    rcfg.rl.crash_after = 0;
+    rcfg.resume = Some(ccfg.out_dir.clone());
+    let resumed = run(&rcfg, &SPECS4, 4, 2).unwrap();
+    assert_run_matches(&reference, &resumed, "pinned resume");
+    let rep = resumed.2.expect("off-loop learner always reports");
+    assert_eq!(rep.steps, 66, "restored learner counters continue the step count");
+    assert!(rep.degraded.is_none());
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// Graceful degradation: an injected learner-thread failure mid-run
+/// falls back to inline updates — the run completes, the failure is
+/// surfaced in the report/banner, and checkpointing quietly stops (the
+/// quiesceable state died with the thread) instead of erroring.
+#[test]
+fn learner_failure_degrades_to_inline_and_is_surfaced() {
+    let out = tmp_out("degrade");
+    let mut cfg = base_cfg(66);
+    cfg.apply("learner", "pinned").unwrap();
+    cfg.apply("learner_fail_after", "10").unwrap();
+    cfg.out_dir = out.to_string_lossy().into_owned();
+    cfg.rl.checkpoint_every = 16; // post-failure saves are skipped, not fatal
+
+    let (results, _agent, report) = run(&cfg, &SPECS4, 4, 2).unwrap();
+    for r in &results {
+        assert_eq!(r.episodes.len(), 66, "run did not complete after degradation");
+        assert!(r.episodes.iter().all(|e| e.reward.is_finite()));
+    }
+    let rep = report.expect("off-loop learner always reports");
+    let (at, why) = rep.degraded.clone().expect("degradation not surfaced");
+    assert!((10..=12).contains(&at), "degraded at step {at}");
+    assert!(why.contains("injected learner failure"), "{why}");
+    assert!(rep.banner().contains("DEGRADED"), "{}", rep.banner());
+    assert_eq!(rep.steps, 66, "every step absorbed (learner then inline tail)");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+/// Atlas kill-and-resume on a reduced grid: checkpoints land at group
+/// boundaries; a kill inside the second group resumes from the
+/// first-group generation and reproduces statuses, per-point frontiers,
+/// episode spend, the merged atlas and every lane's episode log
+/// bit-identically. (Cache hit-rate counters are excluded — caches
+/// restart cold by design and only their hit/miss tallies differ.)
+#[test]
+fn atlas_crash_resume_bit_identical_on_reduced_grid() {
+    let mut cfg = RunConfig::default();
+    cfg.backend = BackendSel::Native;
+    cfg.artifacts_dir = "/nonexistent-artifacts".into();
+    cfg.granularity = Granularity::Group;
+    cfg.apply("nodes", "7").unwrap();
+    cfg.apply("episodes", "10").unwrap();
+    cfg.apply("warmup", "4").unwrap();
+    cfg.apply("atlas_workloads", "smolvlm").unwrap();
+    cfg.apply("atlas_phases", "decode").unwrap();
+    cfg.apply("atlas_seq_lens", "512,2048").unwrap();
+    cfg.apply("atlas_batches", "1").unwrap();
+    cfg.apply("atlas_seeds", "1").unwrap();
+    cfg.apply("atlas_prune", "off").unwrap(); // both points run in full
+    let reference = rl::atlas::run(&cfg).unwrap();
+    assert_eq!(reference.points.len(), 2);
+
+    let out = tmp_out("atlas");
+    let mut ccfg = cfg.clone();
+    ccfg.out_dir = out.to_string_lossy().into_owned();
+    ccfg.rl.checkpoint_every = 1; // any cadence >0 arms group-boundary saves
+    // 10 steps × 3 probes per group: probe 35 is inside the second group,
+    // after the first group's boundary checkpoint committed
+    ccfg.rl.crash_after = 35;
+    let err = rl::atlas::run(&ccfg).unwrap_err();
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut rcfg = ccfg.clone();
+    rcfg.rl.crash_after = 0;
+    rcfg.resume = Some(ccfg.out_dir.clone());
+    let resumed = rl::atlas::run(&rcfg).unwrap();
+
+    assert_eq!(reference.points.len(), resumed.points.len());
+    for (p, q) in reference.points.iter().zip(&resumed.points) {
+        let gi = p.grid_index;
+        assert_eq!(gi, q.grid_index);
+        assert_eq!(p.status.name(), q.status.name(), "point {gi}: status");
+        assert_eq!(p.episodes, q.episodes, "point {gi}: episodes");
+        let (fa, fb) = (p.frontier.frontier(), q.frontier.frontier());
+        assert_eq!(fa.len(), fb.len(), "point {gi}: frontier size");
+        for (x, y) in fa.iter().zip(fb) {
+            assert_eq!(x.perf_gops.to_bits(), y.perf_gops.to_bits(), "point {gi}: perf");
+            assert_eq!(x.power_mw.to_bits(), y.power_mw.to_bits(), "point {gi}: power");
+            assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "point {gi}: area");
+            assert_eq!(x.episode, y.episode, "point {gi}: episode tag");
+        }
+    }
+    let (rc, sc) = (&reference.counters, &resumed.counters);
+    assert_eq!(rc.points, sc.points);
+    assert_eq!(rc.solved, sc.solved);
+    assert_eq!(rc.skipped, sc.skipped);
+    assert_eq!(rc.shrunk, sc.shrunk);
+    assert_eq!(rc.episodes_run, sc.episodes_run);
+    assert_eq!(rc.episodes_budget, sc.episodes_budget);
+
+    assert_eq!(reference.atlas.len(), resumed.atlas.len());
+    for ((ka, va), (kb, vb)) in reference.atlas.iter().zip(&resumed.atlas) {
+        assert_eq!(ka, kb);
+        assert_eq!(va.len(), vb.len(), "merged atlas {ka:?}");
+        for (x, y) in va.iter().zip(vb) {
+            assert_eq!(x.perf_gops.to_bits(), y.perf_gops.to_bits(), "{ka:?}: perf");
+            assert_eq!(x.power_mw.to_bits(), y.power_mw.to_bits(), "{ka:?}: power");
+            assert_eq!(x.area_mm2.to_bits(), y.area_mm2.to_bits(), "{ka:?}: area");
+        }
+    }
+
+    assert_eq!(reference.node_results.len(), resumed.node_results.len());
+    for (lane, (a, b)) in
+        reference.node_results.iter().zip(&resumed.node_results).enumerate()
+    {
+        assert_logs_identical(a, b, &format!("atlas lane {lane}"));
+        assert_frontiers_identical(a, b, &format!("atlas lane {lane}"));
+    }
+    let _ = std::fs::remove_dir_all(&out);
+}
