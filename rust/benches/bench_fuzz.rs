@@ -1,0 +1,79 @@
+//! Fuzz-harness throughput (DESIGN.md §14).
+//!
+//! Times the randomized equivalence sweep per oracle class — cases per
+//! second of generate → pair-execute → compare — so regressions in the
+//! paired-execution cost (an evaluator slowdown, an accidental
+//! quadratic in the diff walk) show up in the perf record. Only the
+//! evaluator-layer classes are timed: the engine classes (vec-serial,
+//! crash-resume, pinned-inline) run full searches and belong to the
+//! checkpoint/runtime benches; `simd-scalar` flips process-global
+//! kernel dispatch and is CLI-only by repo convention.
+//!
+//! Every timed case must also come back clean, so the bench doubles as
+//! a larger randomized sweep than the tier-1 smoke. Results land in
+//! `out/bench/BENCH_fuzz.json`; `BENCH_SMOKE=1` shrinks the budget to
+//! CI size.
+
+use std::time::Instant;
+
+use silicon_rl::error::Result;
+use silicon_rl::rl::fuzz::{self, CaseGen};
+use silicon_rl::util::{fsio, json};
+
+const CLASSES: [&str; 4] =
+    ["serial-parallel", "staged-fresh", "pruned-exact", "cache-nocache"];
+
+fn main() -> Result<()> {
+    let smoke = std::env::var("BENCH_SMOKE").ok().as_deref() == Some("1");
+    let iters: usize = std::env::var("SILICON_RL_BENCH_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 4 } else { 16 });
+
+    println!("== bench_fuzz: {iters} cases per class ==");
+
+    let mut fields = vec![
+        ("bench", json::s("fuzz")),
+        ("smoke", json::Json::Bool(smoke)),
+        ("iters_per_class", json::num(iters as f64)),
+    ];
+
+    let mut total_cases = 0usize;
+    let mut total_s = 0.0f64;
+    for class in CLASSES {
+        let mut casegen = CaseGen::new(42, &[class])?;
+        let t0 = Instant::now();
+        for i in 0..iters {
+            let case = casegen.next_case();
+            if let Some(m) = fuzz::run_case(&case)? {
+                panic!("case {i} ({}) violated its contract: {m}", case.cmd_line());
+            }
+        }
+        let t = t0.elapsed().as_secs_f64();
+        let rate = iters as f64 / t.max(1e-9);
+        println!("{class:>16}: {t:.2}s ({rate:.1} cases/s)");
+        // json keys want '_' over '-' for downstream tooling
+        let key: &'static str = match class {
+            "serial-parallel" => "serial_parallel_s",
+            "staged-fresh" => "staged_fresh_s",
+            "pruned-exact" => "pruned_exact_s",
+            _ => "cache_nocache_s",
+        };
+        fields.push((key, json::num(t)));
+        total_cases += iters;
+        total_s += t;
+    }
+
+    println!(
+        "total: {total_cases} cases in {total_s:.2}s ({:.1} cases/s)",
+        total_cases as f64 / total_s.max(1e-9)
+    );
+    fields.push(("total_s", json::num(total_s)));
+    fields.push(("cases_per_s", json::num(total_cases as f64 / total_s.max(1e-9))));
+
+    let record = json::obj(fields);
+    std::fs::create_dir_all("out/bench")?;
+    fsio::atomic_write_str("out/bench/BENCH_fuzz.json", &record.to_string_pretty())?;
+    println!("record: out/bench/BENCH_fuzz.json");
+    Ok(())
+}

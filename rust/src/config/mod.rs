@@ -475,6 +475,7 @@ impl RunConfig {
     /// (native|pjrt|auto), kernels (scalar|simd|auto),
     /// kv (full|int8|int4|window:N|int8win:N),
     /// threads (0 = auto), lanes (vec-env width, 0 = auto),
+    /// eval_cache (episode-loop memo capacity in design points, 0 = off),
     /// learner (inline|pinned|async — where SAC/WM/surrogate updates
     /// run), updates_per_step (async update budget, 0 = uncapped),
     /// queue_cap (rollout→learner bound in transitions, 0 = auto),
@@ -548,6 +549,10 @@ impl RunConfig {
             "lanes" => {
                 self.rl.lanes =
                     value.parse().map_err(|_| format!("bad lanes {value}"))?
+            }
+            "eval_cache" => {
+                self.rl.eval_cache =
+                    value.parse().map_err(|_| format!("bad eval_cache {value}"))?
             }
             "learner" => self.rl.learner = crate::rl::learner::LearnerMode::parse(value)?,
             "updates_per_step" => {
@@ -784,6 +789,12 @@ mod tests {
         c.apply("lanes", "4").unwrap();
         assert_eq!(c.rl.lanes, 4);
         assert!(c.apply("lanes", "many").is_err());
+        assert_eq!(c.rl.eval_cache, 256);
+        c.apply("eval_cache", "0").unwrap();
+        assert_eq!(c.rl.eval_cache, 0);
+        c.apply("eval_cache", "1024").unwrap();
+        assert_eq!(c.rl.eval_cache, 1024);
+        assert!(c.apply("eval_cache", "big").is_err());
     }
 
     #[test]

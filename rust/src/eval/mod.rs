@@ -115,6 +115,49 @@ pub fn select_best(outs: &[Option<EvalOutcome>]) -> usize {
     best.expect("at least one evaluated outcome in the batch")
 }
 
+/// First diverging field of two outcomes under bit comparison, as
+/// `(field, left, right)` — `None` when every compared field is
+/// bit-identical. This is the comparator behind the equivalence fuzz
+/// harness (`rl::fuzz`, DESIGN.md §14): it checks the reward terms, the
+/// realized PPA, the decoded mesh, the projection count, and finally
+/// every element of the full state vector, in that order, so a report
+/// always names the semantically earliest difference.
+pub fn diff_outcomes(a: &EvalOutcome, b: &EvalOutcome) -> Option<(String, f64, f64)> {
+    let scalars: [(&str, f64, f64); 12] = [
+        ("reward.total", a.reward.total, b.reward.total),
+        ("reward.score", a.reward.score, b.reward.score),
+        (
+            "reward.feasible",
+            f64::from(u8::from(a.reward.feasible)),
+            f64::from(u8::from(b.reward.feasible)),
+        ),
+        ("reward.p_norm", a.reward.p_norm, b.reward.p_norm),
+        ("reward.p_power", a.reward.p_power, b.reward.p_power),
+        ("reward.a_norm", a.reward.a_norm, b.reward.a_norm),
+        ("ppa.tokens_per_s", a.ppa.tokens_per_s, b.ppa.tokens_per_s),
+        ("ppa.perf_gops", a.ppa.perf_gops, b.ppa.perf_gops),
+        ("mesh.width", f64::from(a.decoded.mesh.width), f64::from(b.decoded.mesh.width)),
+        (
+            "mesh.height",
+            f64::from(a.decoded.mesh.height),
+            f64::from(b.decoded.mesh.height),
+        ),
+        ("proj_steps", f64::from(a.proj_steps), f64::from(b.proj_steps)),
+        ("tiles.len", a.tiles.len() as f64, b.tiles.len() as f64),
+    ];
+    for (field, l, r) in scalars {
+        if l.to_bits() != r.to_bits() {
+            return Some((field.to_string(), l, r));
+        }
+    }
+    for (i, (l, r)) in a.full_state.iter().zip(&b.full_state).enumerate() {
+        if l.to_bits() != r.to_bits() {
+            return Some((format!("full_state[{i}]"), *l, *r));
+        }
+    }
+    None
+}
+
 /// Reusable per-thread working buffers for the evaluation hot path, plus
 /// the per-worker stage memo.
 #[derive(Debug, Default)]

@@ -9,6 +9,11 @@
 //!                                the full scenario grid (workloads ×
 //!                                nodes × phase × seq_len × batch); emits
 //!                                the merged Pareto atlas + reuse counters
+//!   fuzz      [key=value ...]  — randomized differential equivalence
+//!                                harness (DESIGN.md §14): generate valid
+//!                                configs, run each equivalence-class
+//!                                oracle as paired executions, shrink any
+//!                                counterexample to a minimal reproducer
 //!   report    [key=value ...]  — workload statistics (Tables 8/9)
 //!   workloads                  — registered workload specs (Table 8)
 //!   info                       — runtime/platform/manifest diagnostics
@@ -102,6 +107,7 @@ fn run(args: &[String]) -> Result<()> {
         "baselines" => run_baselines(&args[1..]),
         "seeds" => run_multiseed(&args[1..]),
         "atlas" => run_atlas(&args[1..]),
+        "fuzz" => run_fuzz(&args[1..]),
         "report" => workload_report(&args[1..]),
         "workloads" => {
             println!("{}", report::workload_registry(registry::all()).to_text());
@@ -111,7 +117,7 @@ fn run(args: &[String]) -> Result<()> {
         "help" | "--help" | "-h" => {
             println!(
                 "silicon-rl — RL-driven ASIC architecture exploration\n\n\
-                 usage: silicon-rl <optimize|baselines|seeds|atlas|report|workloads|info> [key=value ...]\n\
+                 usage: silicon-rl <optimize|baselines|seeds|atlas|fuzz|report|workloads|info> [key=value ...]\n\
                  keys:  workload=<name> (see below) mode=hp|lp nodes=3,5,7 episodes=N\n\
                  \u{20}      phase=prefill|decode seq_len=N batch=N (scenario axes)\n\
                  \u{20}      warmup=N seed=N granularity=op|group kv=full|int8|int4|...\n\
@@ -138,6 +144,11 @@ fn run(args: &[String]) -> Result<()> {
                  \u{20}      atlas_prune=on|off (roofline dominance pruning; off = exact\n\
                  \u{20}      fallback) atlas_warm=on|off (shared caches + warm agents)\n\
                  \u{20}      atlas_shrink=N (0 = skip dominated points, N = episodes/N)\n\
+                 \u{20}      fuzz keys: iters=N (cases, default 25) seed=N (generator\n\
+                 \u{20}      seed, default 42) classes=a,b (default: all equivalence\n\
+                 \u{20}      classes) shrink=on|off budget=N (shrink attempts)\n\
+                 \u{20}      out_dir=DIR (repro files) repro=FILE (re-run a saved\n\
+                 \u{20}      reproducer) oracle=NAME [key=value ...] (one explicit case)\n\
                  \u{20}      backend=native|pjrt|auto (auto: pjrt when artifacts exist)\n\
                  \u{20}      kernels=scalar|simd|auto (scalar: bit-exact reference;\n\
                  \u{20}      simd: AVX2/NEON, auto-detected)\n\
@@ -613,6 +624,173 @@ fn run_atlas(args: &[String]) -> Result<()> {
     );
     println!("atlas written to {}", out_dir.display());
     Ok(())
+}
+
+/// Randomized differential equivalence harness (`rl::fuzz`,
+/// DESIGN.md §14): generate `iters` valid configs with the seeded
+/// generator, run each case's equivalence-class oracle as paired
+/// executions, and on the first contract violation delta-debug the case
+/// to a minimal reproducer — printed as a ready-to-paste command line
+/// and saved as a `key = value` repro file under `out_dir`.
+fn run_fuzz(args: &[String]) -> Result<()> {
+    use silicon_rl::rl::fuzz::{self, FuzzCase};
+
+    let mut iters = 25usize;
+    let mut seed = 42u64;
+    let mut classes: Vec<String> =
+        fuzz::class_names().iter().map(|s| s.to_string()).collect();
+    let mut shrink = true;
+    let mut budget = 64usize;
+    let mut out_dir = "out/fuzz".to_string();
+    let mut repro: Option<String> = None;
+    let mut oracle: Option<String> = None;
+    let mut extra: Vec<(String, String)> = Vec::new();
+    for a in args {
+        let (k, v) = a
+            .split_once('=')
+            .with_context(|| format!("expected key=value, got {a}"))?;
+        match k {
+            "iters" => {
+                iters = v.parse().map_err(|_| Error::msg(format!("bad iters {v}")))?
+            }
+            "seed" => {
+                seed = v.parse().map_err(|_| Error::msg(format!("bad seed {v}")))?
+            }
+            "classes" => {
+                classes = v
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            }
+            "shrink" => {
+                shrink = match v {
+                    "on" | "true" => true,
+                    "off" | "false" => false,
+                    _ => bail!("bad shrink {v} (on|off)"),
+                }
+            }
+            "budget" => {
+                budget = v.parse().map_err(|_| Error::msg(format!("bad budget {v}")))?
+            }
+            "out_dir" => out_dir = v.to_string(),
+            "repro" => repro = Some(v.to_string()),
+            "oracle" => oracle = Some(v.to_string()),
+            _ => extra.push((k.to_string(), v.to_string())),
+        }
+    }
+    // every bit-exact oracle pairs against the scalar reference kernels;
+    // the simd-scalar oracle flips the process-global path itself and
+    // restores scalar afterwards
+    kernels::set_global(silicon_rl::nn::KernelSel::Scalar);
+
+    // re-run a saved reproducer
+    if let Some(path) = repro {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading repro file {path}"))?;
+        let case = FuzzCase::from_repro(&text)?;
+        println!("repro case: {}", case.cmd_line());
+        return match fuzz::run_case(&case)? {
+            None => {
+                println!("contract holds — the reproducer no longer fails");
+                Ok(())
+            }
+            Some(m) => {
+                println!("{m}");
+                bail!("reproducer still violates the {} contract", m.oracle)
+            }
+        };
+    }
+
+    // one explicit case from the command line
+    if let Some(name) = oracle {
+        let case = FuzzCase::from_kv(&name, &extra)?;
+        println!("case: {}", case.cmd_line());
+        return match fuzz::run_case(&case)? {
+            None => {
+                println!("contract holds at this case");
+                Ok(())
+            }
+            Some(m) => fuzz_failure(&case, m, shrink, budget, &out_dir, 0),
+        };
+    }
+    if let Some((k, _)) = extra.first() {
+        bail!("config key {k} needs oracle=NAME (or use repro=FILE)");
+    }
+
+    // the randomized sweep
+    let class_refs: Vec<&str> = classes.iter().map(String::as_str).collect();
+    let mut casegen = fuzz::CaseGen::new(seed, &class_refs)?;
+    let mut counts: Vec<(&str, usize)> = class_refs.iter().map(|c| (*c, 0)).collect();
+    println!(
+        "fuzz: {iters} cases, seed {seed}, classes [{}]",
+        class_refs.join(", ")
+    );
+    for i in 0..iters {
+        let case = casegen.next_case();
+        let verdict = fuzz::run_case(&case)
+            .with_context(|| format!("case {i} errored: {}", case.cmd_line()))?;
+        match verdict {
+            None => {
+                if let Some(c) = counts.iter_mut().find(|(n, _)| *n == case.oracle) {
+                    c.1 += 1;
+                }
+            }
+            Some(m) => {
+                println!("case {i} FAILED: {}", case.cmd_line());
+                return fuzz_failure(&case, m, shrink, budget, &out_dir, i);
+            }
+        }
+    }
+    for (name, n) in &counts {
+        println!("  {name:>16}: {n} cases, contract held");
+    }
+    println!("fuzz: all {iters} cases clean");
+    Ok(())
+}
+
+/// Report a contract violation: shrink the case (unless `shrink=off`),
+/// save the minimal reproducer under `out_dir`, print the ready-to-paste
+/// command line, and exit non-zero.
+fn fuzz_failure(
+    case: &silicon_rl::rl::fuzz::FuzzCase,
+    mismatch: silicon_rl::rl::Mismatch,
+    shrink: bool,
+    budget: usize,
+    out_dir: &str,
+    iter: usize,
+) -> Result<()> {
+    use silicon_rl::rl::fuzz;
+    use silicon_rl::util::fsio;
+
+    println!("{mismatch}");
+    let (minimal, final_mismatch) = if shrink {
+        match fuzz::shrink(case, budget.max(2))? {
+            Some(out) => {
+                println!(
+                    "shrunk after {} attempts ({} accepted): {}",
+                    out.attempts, out.accepted, out.mismatch
+                );
+                (out.case, out.mismatch)
+            }
+            // the case passed on re-run (flaky environment); keep the
+            // original as the reproducer rather than claiming a minimum
+            None => {
+                println!("warning: case passed on re-check; saving it unshrunk");
+                (case.clone(), mismatch)
+            }
+        }
+    } else {
+        (case.clone(), mismatch)
+    };
+    std::fs::create_dir_all(out_dir)?;
+    let path = format!("{out_dir}/repro-{}-{iter}.txt", minimal.oracle);
+    fsio::atomic_write_str(&path, &minimal.to_repro())?;
+    println!("minimal reproducer saved to {path}");
+    println!("re-run with either of:");
+    println!("  {}", minimal.cmd_line());
+    println!("  silicon-rl fuzz repro={path}");
+    bail!("equivalence violation in class {} ({})", minimal.oracle, final_mismatch.artifact)
 }
 
 /// Tables 8/9 from the spec-driven builder at the configured scenario

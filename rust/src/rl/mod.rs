@@ -6,14 +6,18 @@
 //! through batched actor forwards (DESIGN.md §9), and the async
 //! actor-learner engine ([`learner`]) that moves the update schedule
 //! onto a dedicated thread behind versioned parameter snapshots
-//! (DESIGN.md §11), and the crash-safe checkpoint/resume subsystem
-//! ([`checkpoint`]) with its fault-injection harness (DESIGN.md §13).
+//! (DESIGN.md §11), the crash-safe checkpoint/resume subsystem
+//! ([`checkpoint`]) with its fault-injection harness (DESIGN.md §13),
+//! and the randomized equivalence fuzz harness ([`fuzz`]) that checks
+//! the stack's bit-identity contracts at arbitrary points of the
+//! config space with counterexample shrinking (DESIGN.md §14).
 
 pub mod agent;
 pub mod atlas;
 pub mod baselines;
 pub mod checkpoint;
 pub mod explore;
+pub mod fuzz;
 pub mod learner;
 pub mod loop_;
 pub mod multiseed;
@@ -24,6 +28,7 @@ pub mod vecenv;
 pub use agent::{LaneDecision, SacAgent, UpdateMetrics};
 pub use atlas::{AtlasCounters, AtlasPoint, AtlasResult, PointStatus, PruneKind};
 pub use explore::EpsSchedule;
+pub use fuzz::{CaseGen, FuzzCase, Mismatch, ShrinkOutcome};
 pub use learner::{LearnerMode, LearnerReport};
 pub use loop_::{run_node, BestConfig, EpisodeLog, NodeResult};
 pub use multiseed::{run_seeds, run_seeds_t, seeds_table, MultiSeedResult, SeedStat};

@@ -368,6 +368,63 @@ fn learner_failure_degrades_to_inline_and_is_surfaced() {
     let _ = std::fs::remove_dir_all(&out);
 }
 
+/// Fault-probe accounting (ISSUE 10 audit): the vec driver fires
+/// EXACTLY three probes per lockstep step — A at the step boundary,
+/// B after the env fan-out, C after the replay insert/queue send — so
+/// 12 episodes × 1 wave = 36 probes. `crash_after=36` must still kill
+/// the run (the last probe is not skipped) and `crash_after=37` must
+/// never fire (no probe site double-counts), completing bit-identical
+/// to a reference run with fault injection disarmed.
+#[test]
+fn probe_count_is_exactly_three_per_step() {
+    let cfg = base_cfg(12);
+    let reference = run(&cfg, &SPECS7, 2, 1).unwrap();
+
+    let mut last = cfg.clone();
+    last.rl.crash_after = 36;
+    let err = run(&last, &SPECS7, 2, 1).unwrap_err();
+    assert!(format!("{err:#}").contains(INJECTED_CRASH_MSG), "{err:#}");
+
+    let mut past = cfg.clone();
+    past.rl.crash_after = 37;
+    let survived = run(&past, &SPECS7, 2, 1).unwrap();
+    assert_run_matches(&reference, &survived, "armed-but-unfired fault counter");
+}
+
+/// The `Rng::{state, from_state}` round-trip carries the cached
+/// Box-Muller spare: a generator restored mid-Gaussian-pair continues
+/// the stream bit-identically, and a snapshot that dropped the spare
+/// would demonstrably diverge — the skew a checkpoint codec bug would
+/// introduce into every resumed exploration stream.
+#[test]
+fn rng_state_round_trip_carries_gaussian_spare() {
+    use silicon_rl::util::rng::RngState;
+
+    let mut a = Rng::new(0x5EED);
+    let _ = a.gaussian(); // populate the spare (first of the pair)
+    let snap = a.state();
+    assert!(snap.gauss_spare.is_some(), "mid-pair snapshot lost the spare");
+
+    let mut b = Rng::from_state(snap);
+    for _ in 0..8 {
+        assert_eq!(a.gaussian().to_bits(), b.gaussian().to_bits());
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    // dropping the spare is NOT equivalent: from the same snapshot, the
+    // true restore serves the cached value while a spare-less restore
+    // burns two fresh uniforms — both the value and the stream position
+    // skew, which is exactly what a lossy checkpoint codec would cause
+    let mut full = Rng::from_state(snap);
+    let mut lossy = Rng::from_state(RngState { gauss_spare: None, ..snap });
+    assert_ne!(full.gaussian().to_bits(), lossy.gaussian().to_bits());
+    assert_ne!(
+        full.next_u64(),
+        lossy.next_u64(),
+        "a spare-less restore should skew the stream; the codec must keep it"
+    );
+}
+
 /// Atlas kill-and-resume on a reduced grid: checkpoints land at group
 /// boundaries; a kill inside the second group resumes from the
 /// first-group generation and reproduces statuses, per-point frontiers,

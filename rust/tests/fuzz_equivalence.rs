@@ -1,0 +1,167 @@
+//! Integration suite for the randomized equivalence fuzz harness
+//! (`rl::fuzz`, DESIGN.md §14): generator determinism, a budgeted
+//! randomized sweep over the evaluator-layer oracles (the named CI
+//! smoke), explicit engine-class cases, and the mutation smoke that
+//! pins the shrinker — an intentionally-broken oracle must yield a
+//! minimal reproducer that still fails.
+//!
+//! The `simd-scalar` class is deliberately absent: it flips the
+//! process-global kernel dispatch, and by repo convention only
+//! `tests/kernel_parity.rs` may do that among test binaries. That class
+//! runs from the `silicon-rl fuzz` CLI (its own process) instead.
+
+use silicon_rl::error::Result;
+use silicon_rl::rl::fuzz::{self, Artifact, CaseGen, FuzzCase, Mismatch};
+
+/// Oracles cheap enough for a per-commit randomized sweep: the
+/// evaluator-layer classes (paired batch evaluations / two short
+/// `run_node` runs), not the multi-run engine classes.
+const CHEAP_CLASSES: [&str; 4] =
+    ["serial-parallel", "staged-fresh", "pruned-exact", "cache-nocache"];
+
+fn kv(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+#[test]
+fn fuzz_generator_is_seed_stable() {
+    let classes = fuzz::class_names();
+    let fps = |seed: u64| -> Vec<String> {
+        let mut g = CaseGen::new(seed, &classes).unwrap();
+        (0..16).map(|_| g.next_case().fingerprint()).collect()
+    };
+    assert_eq!(fps(42), fps(42), "same seed must replay the same case stream");
+    assert_ne!(fps(42), fps(43), "different seeds should diverge");
+}
+
+#[test]
+fn unknown_class_and_oracle_are_rejected() {
+    assert!(CaseGen::new(1, &["no-such-class"]).is_err());
+    assert!(CaseGen::new(1, &[]).is_err());
+    assert!(FuzzCase::from_kv("no-such-oracle", &[]).is_err());
+    assert!(FuzzCase::from_repro("episodes = 4\n").is_err(), "missing oracle line");
+}
+
+/// The named tier-1 smoke (referenced by CI): a short randomized sweep
+/// over the evaluator-layer equivalence classes must come back clean.
+#[test]
+fn fuzz_randomized_equivalence_smoke() {
+    let mut g = CaseGen::new(42, &CHEAP_CLASSES).unwrap();
+    for i in 0..6 {
+        let case = g.next_case();
+        if let Some(m) = fuzz::run_case(&case).unwrap() {
+            panic!("case {i} ({}) violated its contract: {m}", case.cmd_line());
+        }
+    }
+}
+
+/// The engine-layer oracles at explicit small cases: B-lane vec-env vs
+/// B serial runs, kill→resume vs uninterrupted, pinned vs inline.
+#[test]
+fn engine_class_oracles_hold_at_explicit_cases() {
+    let cases = [
+        FuzzCase::from_kv(
+            "vec-serial",
+            &kv(&[
+                ("nodes", "7"),
+                ("seed", "7"),
+                ("episodes", "6"),
+                ("lanes", "2"),
+                ("fuzz_action_seed", "11"),
+            ]),
+        )
+        .unwrap(),
+        FuzzCase::from_kv(
+            "crash-resume",
+            &kv(&[
+                ("nodes", "7"),
+                ("seed", "9"),
+                ("episodes", "8"),
+                ("lanes", "2"),
+                ("checkpoint_every", "2"),
+                ("crash_after", "10"),
+                ("fuzz_action_seed", "13"),
+            ]),
+        )
+        .unwrap(),
+        FuzzCase::from_kv(
+            "pinned-inline",
+            &kv(&[
+                ("nodes", "7"),
+                ("seed", "5"),
+                ("episodes", "8"),
+                ("lanes", "2"),
+                ("fuzz_action_seed", "17"),
+            ]),
+        )
+        .unwrap(),
+    ];
+    for case in &cases {
+        if let Some(m) = fuzz::run_case(case).unwrap() {
+            panic!("{} violated its contract: {m}", case.cmd_line());
+        }
+    }
+}
+
+/// Mutation smoke: against an intentionally-broken oracle (fails
+/// whenever episodes ≥ 3 and lanes ≥ 2), the shrinker must reach the
+/// axis minima, push every knob back to its default, and hand back a
+/// reproducer that still fails and round-trips through the repro file.
+#[test]
+fn shrinker_minimizes_and_output_still_fails() {
+    let case = FuzzCase::from_kv(
+        "vec-serial",
+        &kv(&[
+            ("nodes", "7,28"),
+            ("seed", "3"),
+            ("episodes", "24"),
+            ("lanes", "4"),
+            ("seq_len", "2048"),
+            ("mode", "lp"),
+            ("fuzz_batch", "9"),
+        ]),
+    )
+    .unwrap();
+
+    let broken = |c: &FuzzCase| -> Result<Option<Mismatch>> {
+        Ok((c.cfg.rl.episodes_per_node >= 3 && c.cfg.rl.lanes >= 2).then(|| Mismatch {
+            oracle: "vec-serial",
+            artifact: Artifact::Scalar { name: "synthetic".into() },
+            left: "left".into(),
+            right: "right".into(),
+        }))
+    };
+
+    let out = fuzz::shrink_with(&case, &broken, 10_000)
+        .unwrap()
+        .expect("the inflated case must fail the broken oracle");
+    assert_eq!(out.case.cfg.rl.episodes_per_node, 3, "episodes not at the minimum");
+    assert_eq!(out.case.cfg.rl.lanes, 2, "lanes not at the minimum");
+    assert_eq!(out.case.batch, 1, "fuzz batch not at the minimum");
+    assert_eq!(out.case.rounds, 1, "fuzz rounds not at the minimum");
+    assert_eq!(out.case.cfg.nodes_nm, vec![7], "node list not reduced");
+    assert_eq!(out.case.cfg.seq_len, None, "seq_len not reset to default");
+    assert_eq!(out.case.cfg.mode.name, "high-performance", "mode not reset");
+    assert!(out.accepted > 0 && out.attempts > out.accepted);
+
+    // the shrunk case still fails the oracle that produced it
+    assert!(
+        broken(&out.case).unwrap().is_some(),
+        "shrinker returned a config that no longer fails"
+    );
+
+    // and it round-trips: file → case → identical fingerprint/CLI
+    let text = out.case.to_repro();
+    let back = FuzzCase::from_repro(&text).unwrap();
+    assert_eq!(back.fingerprint(), out.case.fingerprint(), "repro drift:\n{text}");
+    assert!(out.case.cmd_line().starts_with("silicon-rl fuzz oracle=vec-serial"));
+}
+
+/// A passing case must not be "shrunk" — the shrinker only engages on a
+/// confirmed failure.
+#[test]
+fn shrinker_ignores_passing_cases() {
+    let case = FuzzCase::from_kv("vec-serial", &kv(&[("episodes", "4")])).unwrap();
+    let pass = |_: &FuzzCase| -> Result<Option<Mismatch>> { Ok(None) };
+    assert!(fuzz::shrink_with(&case, &pass, 100).unwrap().is_none());
+}
